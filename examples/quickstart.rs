@@ -1,0 +1,57 @@
+//! Quickstart: one attention head, dense vs vAttention.
+//!
+//! Shows the core API in ~30 lines: build a KV cache, pick a tolerance
+//! (ε, δ), let vAttention choose its adaptive budget, and compare the
+//! sparse estimate against full attention.
+//!
+//! Run: cargo run --release --example quickstart
+
+use vattn::attention::{dense_sdpa, sparse_sdpa};
+use vattn::policies::{IndexPolicy, PolicyCtx, VAttentionConfig, VAttentionPolicy};
+use vattn::tensor::rel_l2_error;
+use vattn::util::Rng;
+use vattn::workloads::{synthesize_head, ScoreProfile};
+
+fn main() {
+    let mut rng = Rng::new(42);
+
+    // A 16K-token synthetic head with a realistic mixed score profile.
+    let head = synthesize_head(
+        16_384,
+        64,
+        ScoreProfile::Mixed { heavy: 16, boost: 6.0, alpha: 0.9 },
+        &mut rng,
+    );
+
+    // Ground truth: full attention.
+    let exact = dense_sdpa(&head.k, &head.v, &head.q_scaled).out;
+
+    // vAttention with a user-specified tolerance: eps = delta = 0.05.
+    let cfg = VAttentionConfig {
+        eps: 0.05,
+        delta: 0.05,
+        verify: vattn::budget::Verify::Denominator,
+        ..Default::default()
+    };
+    let mut policy = VAttentionPolicy::oracle(cfg);
+    let mut ctx = PolicyCtx {
+        k: &head.k,
+        v: &head.v,
+        q_scaled: &head.q_scaled,
+        rng: &mut rng,
+        step: 0,
+    };
+    let selection = policy.select(&mut ctx);
+    let approx = sparse_sdpa(&head.k, &head.v, &head.q_scaled, &selection);
+
+    let decision = policy.last.as_ref().unwrap();
+    println!("vAttention quickstart");
+    println!("  cache size n          : {}", head.k.rows);
+    println!("  deterministic tokens  : {}", decision.n_fixed);
+    println!("  adaptive sample budget: {}", decision.budget);
+    println!("  density               : {:.3}", selection.density(head.k.rows));
+    println!("  certificate           : (eps=0.05, delta=0.05) on the denominator");
+    println!("  observed rel L2 error : {:.5}", rel_l2_error(&approx, &exact));
+    assert!(rel_l2_error(&approx, &exact) < 0.15, "error far outside certificate");
+    println!("OK");
+}

@@ -1,0 +1,55 @@
+//! The verification dial: sweep ε and watch density fall and error rise
+//! in lock-step — the user-controlled quality/efficiency trade-off of
+//! Fig. 1 (right), in miniature.
+//!
+//! Run: cargo run --release --example verified_tradeoff
+
+use vattn::attention::{dense_sdpa, sparse_sdpa};
+use vattn::metrics::pearson;
+use vattn::policies::{IndexPolicy, PolicyCtx, VAttentionPolicy};
+use vattn::tensor::rel_l2_error;
+use vattn::util::Rng;
+use vattn::workloads::{synthesize_head, ScoreProfile};
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let head = synthesize_head(
+        8_192,
+        48,
+        ScoreProfile::PowerLaw { alpha: 1.0 },
+        &mut rng,
+    );
+    let exact = dense_sdpa(&head.k, &head.v, &head.q_scaled).out;
+
+    println!("{:>8} {:>10} {:>12}", "eps", "density", "rel-error");
+    let eps_grid = [0.01, 0.025, 0.05, 0.1, 0.2, 0.4];
+    let mut errs = Vec::new();
+    for &eps in &eps_grid {
+        let mut cfg = vattn::experiments::common::vcfg(eps);
+        cfg.floor_at_base = false;
+        let mut policy = VAttentionPolicy::oracle(cfg);
+        // average over a few random selections
+        let (mut den, mut err) = (0.0, 0.0);
+        let trials = 5;
+        for t in 0..trials {
+            let mut fork = rng.fork(t);
+            let mut ctx = PolicyCtx {
+                k: &head.k,
+                v: &head.v,
+                q_scaled: &head.q_scaled,
+                rng: &mut fork,
+                step: 0,
+            };
+            let sel = policy.select(&mut ctx);
+            den += sel.density(head.k.rows) / trials as f64;
+            err += rel_l2_error(&sparse_sdpa(&head.k, &head.v, &head.q_scaled, &sel), &exact)
+                / trials as f64;
+        }
+        println!("{eps:>8.3} {den:>10.3} {err:>12.5}");
+        errs.push(err);
+    }
+    let r = pearson(&eps_grid.to_vec(), &errs);
+    println!("\nPearson r(eps, observed error) = {r:.3}  (paper: near-perfect correlation)");
+    assert!(r > 0.8, "tolerance dial broken: r={r}");
+    println!("OK");
+}

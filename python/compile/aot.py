@@ -1,0 +1,145 @@
+"""AOT pipeline: lower the L2 blocks to HLO *text* under artifacts/.
+
+Run once via `make artifacts` (no-op when inputs are unchanged); the rust
+runtime (`rust/src/runtime/`) loads these with
+`HloModuleProto::from_text_file`, compiles them on the PJRT CPU client,
+and executes them on the request path. Python never runs at serve time.
+
+HLO text — NOT `lowered.compiler_ir("hlo").as_hlo_module().serialize()` —
+is the interchange format: jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Emitted artifacts (shapes in the manifest artifacts/manifest.txt):
+
+    qkv.hlo.txt          rmsnorm + QKV + RoPE
+    attn_b{B}.hlo.txt    gathered sparse SDPA + O-proj, B in BUDGET_BUCKETS
+    ffn.hlo.txt          rmsnorm + SwiGLU
+    logits.hlo.txt       final norm + LM head
+    smoke.hlo.txt        tiny matmul used by runtime self-tests
+"""
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile import model as M  # noqa: E402
+
+# Budget buckets: rust rounds every adaptive budget up to one of these so
+# each bucket compiles to one static-shape executable.
+BUDGET_BUCKETS = [128, 256, 512, 1024, 2048]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_qkv(cfg: M.ModelConfig) -> str:
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+
+    def fn(x, w_ln, wq, wk, wv, cos, sin):
+        return M.qkv_block(x, w_ln, wq, wk, wv, cos, sin, cfg)
+
+    lowered = jax.jit(fn).lower(
+        f32(1, d), f32(d), f32(d, d), f32(d, d), f32(d, d), f32(dh // 2), f32(dh // 2)
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_attn(cfg: M.ModelConfig, budget: int) -> str:
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+
+    def fn(q, kg, vg, log_invp, mask, wo):
+        return (M.attn_block(q, kg, vg, log_invp, mask, wo, cfg),)
+
+    lowered = jax.jit(fn).lower(
+        f32(h, dh), f32(h, budget, dh), f32(h, budget, dh), f32(h, budget), f32(h, budget), f32(d, d)
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_ffn(cfg: M.ModelConfig) -> str:
+    d, f = cfg.d_model, cfg.d_ff
+
+    def fn(x, w_ln, w_gate, w_up, w_down):
+        return (M.ffn_block(x, w_ln, w_gate, w_up, w_down),)
+
+    lowered = jax.jit(fn).lower(f32(1, d), f32(d), f32(d, f), f32(d, f), f32(f, d))
+    return to_hlo_text(lowered)
+
+
+def lower_logits(cfg: M.ModelConfig) -> str:
+    d, v = cfg.d_model, cfg.vocab
+
+    def fn(x, w_ln, w_emb):
+        return (M.logits_block(x, w_ln, w_emb),)
+
+    lowered = jax.jit(fn).lower(f32(1, d), f32(d), f32(v, d))
+    return to_hlo_text(lowered)
+
+
+def lower_smoke() -> str:
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = f32(2, 2)
+    return to_hlo_text(jax.jit(fn).lower(spec, spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))), "artifacts"))
+    ap.add_argument("--config", default="small", choices=["tiny", "small"])
+    args = ap.parse_args()
+
+    cfg = M.ModelConfig.tiny() if args.config == "tiny" else M.ModelConfig.small()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+
+    artifacts = {
+        "qkv.hlo.txt": lower_qkv(cfg),
+        "ffn.hlo.txt": lower_ffn(cfg),
+        "logits.hlo.txt": lower_logits(cfg),
+        "smoke.hlo.txt": lower_smoke(),
+    }
+    for b in BUDGET_BUCKETS:
+        artifacts[f"attn_b{b}.hlo.txt"] = lower_attn(cfg, b)
+
+    manifest = [
+        f"config={args.config}",
+        f"d_model={cfg.d_model} n_heads={cfg.n_heads} d_head={cfg.d_head} "
+        f"d_ff={cfg.d_ff} vocab={cfg.vocab} n_layers={cfg.n_layers}",
+        f"budget_buckets={','.join(str(b) for b in BUDGET_BUCKETS)}",
+    ]
+    for name, text in sorted(artifacts.items()):
+        path = os.path.join(out, name)
+        with open(path, "w") as fh:
+            fh.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest.append(f"{name} bytes={len(text)} sha256={digest}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(out, "manifest.txt"), "w") as fh:
+        fh.write("\n".join(manifest) + "\n")
+    print(f"wrote {os.path.join(out, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: base-sample moment accumulation for Algorithm 2.
+
+Computes, over the base-sample rows (kb, vb) and the query q:
+
+    w_i        = exp(<kb_i, q> - m_ref)
+    sum_w      = sum_i w_i
+    sum_w2     = sum_i w_i^2
+    sum_wv[c]  = sum_i w_i vb_i[c]
+    sum_w2v2[c]= sum_i (w_i vb_i[c])^2
+
+which are exactly the raw moments the rust budget module combines into
+sigma^2 (denominator), Tr(Sigma) (numerator), D-hat and ||N-hat||_2. One
+fused pass over the sample keeps the base-sample traffic HBM->VMEM once.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_B = 128
+
+
+def _stats_kernel(q_ref, kb_ref, vb_ref, mref_ref, s_ref, sv_ref, *, tiles):
+    q = q_ref[...]
+    m_ref = mref_ref[0]
+
+    def tile_step(t, carry):
+        s_w, s_w2, s_wv, s_w2v2 = carry
+        kt = kb_ref[pl.dslice(t * TILE_B, TILE_B), :]
+        vt = vb_ref[pl.dslice(t * TILE_B, TILE_B), :]
+        w = jnp.exp(kt @ q - m_ref)  # [TB]
+        wv = w[:, None] * vt          # [TB, dh]
+        return (
+            s_w + jnp.sum(w),
+            s_w2 + jnp.sum(w * w),
+            s_wv + jnp.sum(wv, axis=0),
+            s_w2v2 + jnp.sum(wv * wv, axis=0),
+        )
+
+    dh = q.shape[-1]
+    zeros = jnp.zeros((dh,), jnp.float32)
+    s_w, s_w2, s_wv, s_w2v2 = jax.lax.fori_loop(
+        0, tiles, tile_step, (jnp.float32(0.0), jnp.float32(0.0), zeros, zeros)
+    )
+    s_ref[0] = s_w
+    s_ref[1] = s_w2
+    sv_ref[0, :] = s_wv
+    sv_ref[1, :] = s_w2v2
+
+
+def budget_stats(q, kb, vb, m_ref):
+    """Pallas moment kernel.
+
+    Args: q [dh], kb/vb [B0, dh] (B0 multiple of TILE_B), m_ref scalar [1].
+    Returns: (scalars [2] = (sum_w, sum_w2), vectors [2, dh]).
+    """
+    b0, dh = kb.shape
+    if b0 % TILE_B != 0:
+        raise ValueError(f"base sample {b0} must be a multiple of {TILE_B}")
+    kernel = functools.partial(_stats_kernel, tiles=b0 // TILE_B)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((2,), jnp.float32),
+            jax.ShapeDtypeStruct((2, dh), jnp.float32),
+        ),
+        interpret=True,
+    )(q, kb, vb, m_ref)

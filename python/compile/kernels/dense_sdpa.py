@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: blockwise dense SDPA (Eq. 1) for single-query decode.
+
+The dense baseline the serving engine runs when sparsity is off; also the
+numerical oracle at the kernel level. Flash-style: tile the context into
+TILE_N-sized VMEM blocks, keep a running (m, l, acc) triple.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 128
+
+
+def _dense_kernel(q_ref, k_ref, v_ref, o_ref, *, tiles):
+    q = q_ref[0, :]
+
+    def tile_step(t, carry):
+        m_run, l_run, acc = carry
+        kt = k_ref[0, pl.dslice(t * TILE_N, TILE_N), :]
+        vt = v_ref[0, pl.dslice(t * TILE_N, TILE_N), :]
+        logits = kt @ q
+        m_new = jnp.maximum(m_run, jnp.max(logits))
+        scale = jnp.where(jnp.isfinite(m_run), jnp.exp(m_run - m_new), 0.0)
+        w = jnp.exp(logits - m_new)
+        l_new = l_run * scale + jnp.sum(w)
+        acc_new = acc * scale + w @ vt
+        return m_new, l_new, acc_new
+
+    dh = q.shape[-1]
+    init = (-jnp.inf, jnp.float32(0.0), jnp.zeros((dh,), jnp.float32))
+    _, l_fin, acc = jax.lax.fori_loop(0, tiles, tile_step, init)
+    o_ref[0, :] = acc / jnp.maximum(l_fin, 1e-30)
+
+
+def dense_sdpa(q, k, v):
+    """Pallas dense SDPA: q [H, dh], k/v [H, n, dh] -> [H, dh].
+
+    n must be a multiple of TILE_N (the engine pads the cache bucket).
+    """
+    h, n, dh = k.shape
+    if n % TILE_N != 0:
+        raise ValueError(f"context {n} must be a multiple of {TILE_N}")
+    kernel = functools.partial(_dense_kernel, tiles=n // TILE_N)
+    return pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, dh), lambda i: (i, 0)),
+            pl.BlockSpec((1, n, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, dh), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dh), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every kernel in this package has a reference implementation here written
+with plain jax.numpy ops only; pytest asserts allclose between the two
+across shape/dtype/budget sweeps (see python/tests/).
+"""
+
+import jax.numpy as jnp
+
+
+def sparse_sdpa_ref(q, kg, vg, log_invp, mask):
+    """Importance-weighted sparse SDPA (Eq. 3 of the paper), per head.
+
+    Args:
+      q:        [H, dh]    query vectors (already scaled by 1/sqrt(dh)).
+      kg:       [H, B, dh] gathered keys for the selected indices.
+      vg:       [H, B, dh] gathered values.
+      log_invp: [H, B]     log(1/p_i) importance weights (0 for p=1).
+      mask:     [H, B]     1.0 for valid slots, 0.0 for padding.
+
+    Returns:
+      [H, dh] attention outputs.
+    """
+    logits = jnp.einsum("hbd,hd->hb", kg, q) + log_invp
+    logits = jnp.where(mask > 0, logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    # All-masked head guard: exp(-inf - -inf) would be NaN; shift by 0
+    # instead (the weights all end up 0 anyway).
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    w = jnp.exp(logits - m)
+    denom = jnp.sum(w, axis=-1, keepdims=True)
+    out = jnp.einsum("hb,hbd->hd", w, vg)
+    return out / jnp.maximum(denom, 1e-30)
+
+
+def dense_sdpa_ref(q, k, v):
+    """Full SDPA (Eq. 1) for a single query per head.
+
+    Args:
+      q: [H, dh] scaled queries; k, v: [H, n, dh].
+    Returns: [H, dh].
+    """
+    logits = jnp.einsum("hnd,hd->hn", k, q)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    w = jnp.exp(logits - m)
+    return jnp.einsum("hn,hnd->hd", w, v) / jnp.sum(w, axis=-1, keepdims=True)
+
+
+def budget_stats_ref(q, kb, vb, m_ref):
+    """Base-sample moments for the verified budget (Algorithm 2's stats).
+
+    Args:
+      q:     [dh]      scaled query.
+      kb:    [B0, dh]  base-sample keys.
+      vb:    [B0, dh]  base-sample values.
+      m_ref: []        reference logit for stabilized exponentials.
+
+    Returns:
+      (sum_w, sum_w2, sum_wv, sum_w2v2) with shapes ([], [], [dh], [dh]):
+      the raw moments rust needs to finish sigma^2, Tr(Sigma), D-hat, N-hat.
+    """
+    w = jnp.exp(kb @ q - m_ref)  # [B0]
+    sum_w = jnp.sum(w)
+    sum_w2 = jnp.sum(w * w)
+    wv = w[:, None] * vb  # [B0, dh]
+    sum_wv = jnp.sum(wv, axis=0)
+    sum_w2v2 = jnp.sum(wv * wv, axis=0)
+    return sum_w, sum_w2, sum_wv, sum_w2v2

@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: importance-weighted sparse SDPA (Eq. 3).
+
+The paper's sparse attention computes, over selected indices with
+selection probabilities p_i,
+
+    out = sum_i (1/p_i) exp<k_i, q> v_i  /  sum_i (1/p_i) exp<k_i, q>.
+
+GPU implementations gather selected KV rows from HBM with warp-level
+loads; the TPU/Pallas re-expression (DESIGN.md §4 "Hardware adaptation")
+stages the gathered rows through VMEM in `TILE_B`-sized blocks and fuses
+the importance weights into the max-stabilized softmax as additive
+log(1/p) terms, keeping one running (m, l, acc) triple per head —
+flash-attention structure with the estimator folded in.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so lowering must stay in plain-HLO land. Real-TPU VMEM and
+MXU estimates for this kernel are in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Budget tile staged into VMEM per step. 128 matches the MXU lane width;
+# at dh=64 one (K, V) tile pair is 2*128*64*4 = 64 KiB — double-buffered
+# comfortably inside the ~16 MiB VMEM budget.
+TILE_B = 128
+
+
+def _sparse_sdpa_kernel(q_ref, kg_ref, vg_ref, logp_ref, mask_ref, o_ref, *, tiles):
+    """One grid step handles one head; loops over budget tiles in VMEM."""
+    q = q_ref[0, :]  # [dh]
+
+    def tile_step(t, carry):
+        m_run, l_run, acc = carry
+        kt = kg_ref[0, pl.dslice(t * TILE_B, TILE_B), :]      # [TB, dh]
+        vt = vg_ref[0, pl.dslice(t * TILE_B, TILE_B), :]      # [TB, dh]
+        lp = logp_ref[0, pl.dslice(t * TILE_B, TILE_B)]       # [TB]
+        mk = mask_ref[0, pl.dslice(t * TILE_B, TILE_B)]       # [TB]
+        logits = kt @ q + lp                                   # [TB]
+        logits = jnp.where(mk > 0, logits, -jnp.inf)
+        m_new = jnp.maximum(m_run, jnp.max(logits))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        # Rescale the running accumulator to the new max.
+        scale = jnp.where(jnp.isfinite(m_run), jnp.exp(m_run - m_safe), 0.0)
+        w = jnp.exp(logits - m_safe)                           # [TB]
+        w = jnp.where(mk > 0, w, 0.0)
+        l_new = l_run * scale + jnp.sum(w)
+        acc_new = acc * scale + w @ vt                         # [dh]
+        return m_new, l_new, acc_new
+
+    dh = q.shape[-1]
+    init = (-jnp.inf, jnp.float32(0.0), jnp.zeros((dh,), jnp.float32))
+    m_fin, l_fin, acc = jax.lax.fori_loop(0, tiles, tile_step, init)
+    del m_fin
+    o_ref[0, :] = acc / jnp.maximum(l_fin, 1e-30)
+
+
+def sparse_sdpa(q, kg, vg, log_invp, mask):
+    """Pallas sparse SDPA. Shapes as in `ref.sparse_sdpa_ref`.
+
+    Requires the budget dimension B to be a multiple of TILE_B (the AOT
+    pipeline buckets budgets to {128, 256, 512, 1024, 2048}); pad with
+    mask=0 slots to reach a bucket.
+    """
+    h, b, dh = kg.shape
+    if b % TILE_B != 0:
+        raise ValueError(f"budget {b} must be a multiple of {TILE_B}")
+    tiles = b // TILE_B
+    kernel = functools.partial(_sparse_sdpa_kernel, tiles=tiles)
+    return pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, dh), lambda i: (i, 0)),
+            pl.BlockSpec((1, b, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, b, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, b), lambda i: (i, 0)),
+            pl.BlockSpec((1, b), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dh), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, dh), jnp.float32),
+        interpret=True,
+    )(q, kg, vg, log_invp, mask)

@@ -1,0 +1,114 @@
+"""L2: JAX transformer decode-step blocks, built on the L1 Pallas kernels.
+
+These functions define the compute graph the rust engine executes via
+PJRT. They are *build-time only*: `aot.py` lowers each block once to HLO
+text under artifacts/, and rust never imports python again.
+
+Block decomposition (see DESIGN.md §2): the KV cache lives in rust host
+memory so the coordinator can run vAttention index selection over it;
+only the *gathered* KV rows cross into the attention artifact. Hence the
+decode step is split into
+
+    qkv     : rmsnorm + QKV projection + RoPE            (tiny tensors)
+    attn_bB : gathered sparse SDPA (Pallas) + O-proj     (B = budget bucket)
+    ffn     : rmsnorm + SwiGLU MLP
+    logits  : final rmsnorm + LM head
+
+Weights are runtime *inputs* (uploaded once as device-resident PJRT
+buffers), not baked constants — one artifact serves all layers.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.sparse_sdpa import sparse_sdpa
+
+
+# ── Model configuration (mirrors rust/src/model/config.rs) ──────────────
+
+class ModelConfig:
+    """Static decode-step shapes. Must match rust::model::ModelConfig."""
+
+    def __init__(self, d_model=256, n_heads=4, n_layers=4, d_ff=704, vocab=2048):
+        self.d_model = d_model
+        self.n_heads = n_heads
+        self.n_layers = n_layers
+        self.d_ff = d_ff
+        self.vocab = vocab
+        assert d_model % n_heads == 0
+        self.d_head = d_model // n_heads
+
+    @classmethod
+    def tiny(cls):
+        """Test-sized model (fast pytest + rust integration tests)."""
+        return cls(d_model=64, n_heads=2, n_layers=2, d_ff=128, vocab=256)
+
+    @classmethod
+    def small(cls):
+        """The end-to-end serving example (~26M params at vocab 8192)."""
+        return cls(d_model=512, n_heads=8, n_layers=8, d_ff=1408, vocab=8192)
+
+
+# ── Blocks ───────────────────────────────────────────────────────────────
+
+def rmsnorm(x, w, eps=1e-5):
+    """RMSNorm over the last dim. x [*, D], w [D]."""
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(var + eps)) * w
+
+
+def apply_rope(x, cos, sin):
+    """Rotary embedding for one position. x [H, dh], cos/sin [dh/2]."""
+    h, dh = x.shape
+    x1 = x[:, : dh // 2]
+    x2 = x[:, dh // 2 :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def qkv_block(x, w_ln, wq, wk, wv, cos, sin, cfg: ModelConfig):
+    """rmsnorm + QKV projection + RoPE on q and k.
+
+    Args:
+      x:    [1, D] residual-stream input.
+      w_ln: [D]    norm weight.
+      wq/wk/wv: [D, D] projections.
+      cos/sin: [dh/2] rotary phases for the current position.
+    Returns: q [H, dh] (scaled by 1/sqrt(dh)), k [H, dh], v [H, dh].
+    """
+    h, dh = cfg.n_heads, cfg.d_head
+    xn = rmsnorm(x, w_ln)
+    q = (xn @ wq).reshape(h, dh)
+    k = (xn @ wk).reshape(h, dh)
+    v = (xn @ wv).reshape(h, dh)
+    q = apply_rope(q, cos, sin) * (1.0 / jnp.sqrt(jnp.float32(dh)))
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def attn_block(q, kg, vg, log_invp, mask, wo, cfg: ModelConfig):
+    """Gathered sparse attention (Pallas kernel) + output projection.
+
+    Args:
+      q:        [H, dh]   scaled, rotated query.
+      kg/vg:    [H, B, dh] gathered KV rows (B = budget bucket).
+      log_invp: [H, B]    log(1/p) importance weights.
+      mask:     [H, B]    validity mask (0 = padding).
+      wo:       [D, D]    output projection.
+    Returns: [1, D] attention output (pre-residual).
+    """
+    out = sparse_sdpa(q, kg, vg, log_invp, mask)  # [H, dh]
+    return out.reshape(1, cfg.d_model) @ wo
+
+
+def ffn_block(x, w_ln, w_gate, w_up, w_down):
+    """rmsnorm + SwiGLU MLP. x [1, D]; returns [1, D] (pre-residual)."""
+    xn = rmsnorm(x, w_ln)
+    g = xn @ w_gate  # [1, F]
+    u = xn @ w_up    # [1, F]
+    act = g * (1.0 / (1.0 + jnp.exp(-g)))  # SiLU
+    return (act * u) @ w_down
+
+
+def logits_block(x, w_ln, w_emb):
+    """Final norm + tied LM head. x [1, D], w_emb [V, D] -> [1, V]."""
+    xn = rmsnorm(x, w_ln)
+    return xn @ w_emb.T

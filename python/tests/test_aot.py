@@ -1,0 +1,48 @@
+"""AOT pipeline tests: each block lowers to parseable HLO text with the
+expected parameter arity, and lowering is deterministic (stable hashes).
+Uses the tiny config to stay fast."""
+
+import hashlib
+
+from compile import aot
+from compile import model as M
+
+CFG = M.ModelConfig.tiny()
+
+
+def test_qkv_lowers_to_hlo_text():
+    text = aot.lower_qkv(CFG)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # 7 parameters: x, w_ln, wq, wk, wv, cos, sin
+    assert text.count("parameter(") >= 7  # entry params (+ fused-computation params)
+
+
+def test_attn_lowers_with_budget():
+    text = aot.lower_attn(CFG, 128)
+    assert "HloModule" in text
+    # gathered keys shape must appear: [h, 128, dh]
+    assert f"f32[{CFG.n_heads},128,{CFG.d_head}]" in text
+    assert text.count("parameter(") >= 6
+
+
+def test_ffn_and_logits_lower():
+    assert "HloModule" in aot.lower_ffn(CFG)
+    text = aot.lower_logits(CFG)
+    assert f"f32[{CFG.vocab},{CFG.d_model}]" in text
+
+
+def test_smoke_lowering():
+    text = aot.lower_smoke()
+    assert "HloModule" in text
+
+
+def test_lowering_is_deterministic():
+    a = hashlib.sha256(aot.lower_ffn(CFG).encode()).hexdigest()
+    b = hashlib.sha256(aot.lower_ffn(CFG).encode()).hexdigest()
+    assert a == b
+
+
+def test_budget_buckets_sane():
+    assert aot.BUDGET_BUCKETS == sorted(aot.BUDGET_BUCKETS)
+    assert all(b % 128 == 0 for b in aot.BUDGET_BUCKETS)

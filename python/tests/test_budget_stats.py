@@ -1,0 +1,69 @@
+"""L1 correctness: Pallas budget_stats moment kernel vs the jnp oracle,
+plus semantic checks that the moments reconstruct the Algorithm-2
+statistics correctly."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.budget_stats import TILE_B, budget_stats
+from compile.kernels.ref import budget_stats_ref
+
+
+def make_inputs(b0, dh, seed, m_ref=0.5):
+    rng = np.random.default_rng(seed)
+    q = rng.normal(0, 1, (dh,)).astype(np.float32) / np.sqrt(dh)
+    kb = rng.normal(0, 1, (b0, dh)).astype(np.float32)
+    vb = rng.normal(0, 1, (b0, dh)).astype(np.float32)
+    return q, kb, vb, np.array([m_ref], np.float32)
+
+
+def run_both(q, kb, vb, m_ref):
+    s, sv = budget_stats(q, kb, vb, m_ref)
+    s = np.asarray(s)
+    sv = np.asarray(sv)
+    rs = budget_stats_ref(q, kb, vb, m_ref[0])
+    return (s[0], s[1], sv[0], sv[1]), tuple(np.asarray(x) for x in rs)
+
+
+def test_matches_ref_single_tile():
+    got, want = run_both(*make_inputs(TILE_B, 32, 0))
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=2e-4, atol=2e-5)
+
+
+def test_matches_ref_multi_tile():
+    got, want = run_both(*make_inputs(4 * TILE_B, 64, 1))
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=2e-4, atol=1e-4)
+
+
+def test_variance_reconstruction():
+    """sigma^2 from the moments == np.var of the exp weights."""
+    q, kb, vb, m_ref = make_inputs(2 * TILE_B, 32, 2)
+    (sum_w, sum_w2, _, _), _ = run_both(q, kb, vb, m_ref)
+    b0 = kb.shape[0]
+    mean = sum_w / b0
+    var_hat = (sum_w2 - b0 * mean * mean) / (b0 - 1)
+    w = np.exp(kb @ q - m_ref[0])
+    np.testing.assert_allclose(var_hat, np.var(w, ddof=1), rtol=1e-3)
+
+
+def test_m_ref_shift_scales_weights():
+    """Shifting m_ref by c multiplies sum_w by exp(-c)."""
+    q, kb, vb, _ = make_inputs(TILE_B, 16, 3)
+    (s0, _, _, _), _ = run_both(q, kb, vb, np.array([0.0], np.float32))
+    (s1, _, _, _), _ = run_both(q, kb, vb, np.array([1.0], np.float32))
+    np.testing.assert_allclose(s1 * np.e, s0, rtol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    tiles=st.integers(1, 4),
+    dh=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**16),
+    m_ref=st.floats(-1.0, 2.0),
+)
+def test_hypothesis_sweep(tiles, dh, seed, m_ref):
+    got, want = run_both(*make_inputs(tiles * TILE_B, dh, seed, m_ref))
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=3e-4, atol=1e-4)

@@ -1,0 +1,58 @@
+"""L1 correctness: Pallas dense_sdpa kernel vs the pure-jnp oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.dense_sdpa import TILE_N, dense_sdpa
+from compile.kernels.ref import dense_sdpa_ref
+
+
+def make_inputs(h, n, dh, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.normal(0, 1, (h, dh)).astype(np.float32) / np.sqrt(dh)
+    k = rng.normal(0, 1, (h, n, dh)).astype(np.float32)
+    v = rng.normal(0, 1, (h, n, dh)).astype(np.float32)
+    return q, k, v
+
+
+def test_single_tile():
+    q, k, v = make_inputs(2, TILE_N, 32, 0)
+    np.testing.assert_allclose(
+        np.asarray(dense_sdpa(q, k, v)), np.asarray(dense_sdpa_ref(q, k, v)), rtol=2e-4, atol=2e-5
+    )
+
+
+def test_many_tiles():
+    q, k, v = make_inputs(3, 8 * TILE_N, 64, 1)
+    np.testing.assert_allclose(
+        np.asarray(dense_sdpa(q, k, v)), np.asarray(dense_sdpa_ref(q, k, v)), rtol=2e-4, atol=2e-5
+    )
+
+
+def test_unaligned_context_rejected():
+    q, k, v = make_inputs(1, TILE_N, 16, 2)
+    with pytest.raises(ValueError):
+        dense_sdpa(q, k[:, :100], v[:, :100])
+
+
+def test_softmax_weights_dominated_by_planted_key():
+    """Plant a huge-logit key: output converges to its value."""
+    q, k, v = make_inputs(1, 2 * TILE_N, 16, 3)
+    k[0, 37] = q[0] * 1e3
+    out = np.asarray(dense_sdpa(q, k, v))
+    np.testing.assert_allclose(out[0], v[0, 37], rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    h=st.integers(1, 4),
+    tiles=st.integers(1, 4),
+    dh=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_sweep(h, tiles, dh, seed):
+    q, k, v = make_inputs(h, tiles * TILE_N, dh, seed)
+    np.testing.assert_allclose(
+        np.asarray(dense_sdpa(q, k, v)), np.asarray(dense_sdpa_ref(q, k, v)), rtol=2e-4, atol=2e-5
+    )

@@ -1,0 +1,124 @@
+"""L2 correctness: model blocks — shapes, RoPE/RMSNorm semantics, and the
+attention block's agreement with a hand-rolled numpy decode step."""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.kernels.ref import sparse_sdpa_ref
+
+
+CFG = M.ModelConfig.tiny()
+
+
+def rand_weights(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    w = {
+        "w_ln": rng.normal(1.0, 0.02, (d,)).astype(np.float32),
+        "wq": rng.normal(0, 0.05, (d, d)).astype(np.float32),
+        "wk": rng.normal(0, 0.05, (d, d)).astype(np.float32),
+        "wv": rng.normal(0, 0.05, (d, d)).astype(np.float32),
+        "wo": rng.normal(0, 0.05, (d, d)).astype(np.float32),
+        "w_gate": rng.normal(0, 0.05, (d, f)).astype(np.float32),
+        "w_up": rng.normal(0, 0.05, (d, f)).astype(np.float32),
+        "w_down": rng.normal(0, 0.05, (f, d)).astype(np.float32),
+        "w_emb": rng.normal(0, 0.05, (v, d)).astype(np.float32),
+    }
+    return w
+
+
+def rope_phases(pos, dh, base=10000.0):
+    half = dh // 2
+    inv = 1.0 / base ** (np.arange(half) / half)
+    ang = pos * inv
+    return np.cos(ang).astype(np.float32), np.sin(ang).astype(np.float32)
+
+
+class TestShapes:
+    def test_qkv_shapes(self):
+        w = rand_weights(CFG)
+        x = np.ones((1, CFG.d_model), np.float32)
+        cos, sin = rope_phases(3, CFG.d_head)
+        q, k, v = M.qkv_block(x, w["w_ln"], w["wq"], w["wk"], w["wv"], cos, sin, CFG)
+        assert q.shape == (CFG.n_heads, CFG.d_head)
+        assert k.shape == (CFG.n_heads, CFG.d_head)
+        assert v.shape == (CFG.n_heads, CFG.d_head)
+
+    def test_ffn_shape(self):
+        w = rand_weights(CFG)
+        x = np.ones((1, CFG.d_model), np.float32)
+        out = M.ffn_block(x, w["w_ln"], w["w_gate"], w["w_up"], w["w_down"])
+        assert out.shape == (1, CFG.d_model)
+
+    def test_logits_shape(self):
+        w = rand_weights(CFG)
+        x = np.ones((1, CFG.d_model), np.float32)
+        out = M.logits_block(x, w["w_ln"], w["w_emb"])
+        assert out.shape == (1, CFG.vocab)
+
+
+class TestSemantics:
+    def test_rmsnorm_unit_scale(self):
+        x = np.array([[3.0, -4.0]], np.float32)
+        out = np.asarray(M.rmsnorm(x, np.ones(2, np.float32)))
+        # rms of [3,-4] is sqrt(12.5); normalized vector has rms 1
+        rms = np.sqrt(np.mean(out**2))
+        np.testing.assert_allclose(rms, 1.0, rtol=1e-4)
+
+    def test_rope_preserves_norm(self):
+        dh = CFG.d_head
+        x = np.random.default_rng(1).normal(0, 1, (CFG.n_heads, dh)).astype(np.float32)
+        cos, sin = rope_phases(17, dh)
+        y = np.asarray(M.apply_rope(x, cos, sin))
+        np.testing.assert_allclose(
+            np.linalg.norm(y, axis=-1), np.linalg.norm(x, axis=-1), rtol=1e-5
+        )
+
+    def test_rope_position_zero_is_identity(self):
+        dh = CFG.d_head
+        x = np.random.default_rng(2).normal(0, 1, (2, dh)).astype(np.float32)
+        cos, sin = rope_phases(0, dh)
+        np.testing.assert_allclose(np.asarray(M.apply_rope(x, cos, sin)), x, rtol=1e-6)
+
+    def test_rope_relative_property(self):
+        """<rope(q,m), rope(k,n)> depends only on m-n (per 2-dim plane)."""
+        dh = CFG.d_head
+        rng = np.random.default_rng(3)
+        q = rng.normal(0, 1, (1, dh)).astype(np.float32)
+        k = rng.normal(0, 1, (1, dh)).astype(np.float32)
+        def ip(m, n):
+            cq, sq = rope_phases(m, dh)
+            ck, sk = rope_phases(n, dh)
+            prod = np.asarray(M.apply_rope(q, cq, sq)) @ np.asarray(M.apply_rope(k, ck, sk)).T
+            return float(prod[0, 0])
+        np.testing.assert_allclose(ip(5, 3), ip(9, 7), rtol=1e-4)
+
+    def test_attn_block_matches_manual(self):
+        w = rand_weights(CFG)
+        h, dh, d = CFG.n_heads, CFG.d_head, CFG.d_model
+        b = 128
+        rng = np.random.default_rng(4)
+        q = rng.normal(0, 1, (h, dh)).astype(np.float32)
+        kg = rng.normal(0, 1, (h, b, dh)).astype(np.float32)
+        vg = rng.normal(0, 1, (h, b, dh)).astype(np.float32)
+        lp = np.zeros((h, b), np.float32)
+        mask = np.ones((h, b), np.float32)
+        got = np.asarray(M.attn_block(q, kg, vg, lp, mask, w["wo"], CFG))
+        want = np.asarray(sparse_sdpa_ref(q, kg, vg, lp, mask)).reshape(1, d) @ w["wo"]
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+    def test_ffn_swiglu_zero_gate_is_zero(self):
+        w = rand_weights(CFG)
+        x = np.zeros((1, CFG.d_model), np.float32)
+        out = np.asarray(M.ffn_block(x, w["w_ln"], w["w_gate"], w["w_up"], w["w_down"]))
+        np.testing.assert_allclose(out, 0.0, atol=1e-6)
+
+    def test_logits_tied_head(self):
+        """Logit of token t == <norm(x), emb[t]>."""
+        w = rand_weights(CFG)
+        x = np.random.default_rng(5).normal(0, 1, (1, CFG.d_model)).astype(np.float32)
+        logits = np.asarray(M.logits_block(x, w["w_ln"], w["w_emb"]))
+        xn = np.asarray(M.rmsnorm(jnp.asarray(x), w["w_ln"]))
+        np.testing.assert_allclose(logits[0, 7], float((xn @ w["w_emb"][7]).item()), rtol=1e-4)

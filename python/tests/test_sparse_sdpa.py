@@ -1,0 +1,127 @@
+"""L1 correctness: Pallas sparse_sdpa kernel vs the pure-jnp oracle.
+
+This is the core kernel-level correctness signal: the estimator of Eq. 3
+(importance-weighted, masked, max-stabilized) must match ref.py to float
+tolerance across shapes, budgets, masks and weight patterns.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.ref import dense_sdpa_ref, sparse_sdpa_ref
+from compile.kernels.sparse_sdpa import TILE_B, sparse_sdpa
+
+
+def make_inputs(h, b, dh, seed, p_det=0.5, mask_frac=1.0):
+    rng = np.random.default_rng(seed)
+    q = rng.normal(0, 1, (h, dh)).astype(np.float32) / np.sqrt(dh)
+    kg = rng.normal(0, 1, (h, b, dh)).astype(np.float32)
+    vg = rng.normal(0, 1, (h, b, dh)).astype(np.float32)
+    # importance weights: some deterministic (log 1/p = 0), some sampled
+    probs = np.where(
+        rng.random((h, b)) < p_det, 1.0, rng.uniform(0.05, 0.9, (h, b))
+    ).astype(np.float32)
+    log_invp = -np.log(probs)
+    n_valid = max(1, int(b * mask_frac))
+    mask = np.zeros((h, b), np.float32)
+    mask[:, :n_valid] = 1.0
+    return q, kg, vg, log_invp.astype(np.float32), mask
+
+
+def assert_matches_ref(q, kg, vg, log_invp, mask, atol=2e-5):
+    got = np.asarray(sparse_sdpa(q, kg, vg, log_invp, mask))
+    want = np.asarray(sparse_sdpa_ref(q, kg, vg, log_invp, mask))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=atol)
+
+
+class TestBasic:
+    def test_single_head_single_tile(self):
+        assert_matches_ref(*make_inputs(1, TILE_B, 32, seed=0))
+
+    def test_multi_head(self):
+        assert_matches_ref(*make_inputs(4, TILE_B, 64, seed=1))
+
+    def test_multi_tile(self):
+        assert_matches_ref(*make_inputs(2, 4 * TILE_B, 32, seed=2))
+
+    def test_large_budget(self):
+        assert_matches_ref(*make_inputs(2, 16 * TILE_B, 64, seed=3))
+
+    def test_rejects_unaligned_budget(self):
+        q, kg, vg, lp, mk = make_inputs(1, TILE_B, 16, seed=4)
+        with pytest.raises(ValueError):
+            sparse_sdpa(q, kg[:, :100], vg[:, :100], lp[:, :100], mk[:, :100])
+
+
+class TestMasking:
+    def test_half_masked(self):
+        assert_matches_ref(*make_inputs(2, 2 * TILE_B, 32, seed=5, mask_frac=0.5))
+
+    def test_single_valid_slot(self):
+        q, kg, vg, lp, mk = make_inputs(1, TILE_B, 16, seed=6)
+        mk[:] = 0.0
+        mk[:, 0] = 1.0
+        # with one valid deterministic slot the output is exactly v[0]
+        lp[:] = 0.0
+        got = np.asarray(sparse_sdpa(q, kg, vg, lp, mk))
+        np.testing.assert_allclose(got, kg[:, 0] * 0 + vg[:, 0], rtol=1e-5, atol=1e-5)
+
+    def test_padding_values_are_ignored(self):
+        q, kg, vg, lp, mk = make_inputs(2, 2 * TILE_B, 32, seed=7, mask_frac=0.75)
+        out1 = np.asarray(sparse_sdpa(q, kg, vg, lp, mk))
+        # poison the padded slots: result must not change
+        kg2 = kg.copy()
+        vg2 = vg.copy()
+        kg2[mk == 0] = 1e6
+        vg2[mk == 0] = -1e6
+        out2 = np.asarray(sparse_sdpa(q, kg2, vg2, lp, mk))
+        np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-5)
+
+
+class TestEstimatorSemantics:
+    def test_all_deterministic_equals_dense(self):
+        """log_invp = 0, full mask -> plain dense attention over the rows."""
+        h, b, dh = 2, 2 * TILE_B, 32
+        q, kg, vg, _, mask = make_inputs(h, b, dh, seed=8)
+        zero = np.zeros((h, b), np.float32)
+        got = np.asarray(sparse_sdpa(q, kg, vg, zero, mask))
+        want = np.asarray(dense_sdpa_ref(q, kg, vg))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+    def test_importance_weights_shift_output(self):
+        q, kg, vg, lp, mk = make_inputs(1, TILE_B, 16, seed=9, p_det=0.0)
+        out_w = np.asarray(sparse_sdpa(q, kg, vg, lp, mk))
+        out_nw = np.asarray(sparse_sdpa(q, kg, vg, np.zeros_like(lp), mk))
+        assert not np.allclose(out_w, out_nw)
+
+    def test_uniform_invp_is_noop(self):
+        """A constant 1/p multiplies N and D equally -> same output."""
+        q, kg, vg, _, mk = make_inputs(2, TILE_B, 32, seed=10)
+        const = np.full((2, TILE_B), np.log(4.0), np.float32)
+        a = np.asarray(sparse_sdpa(q, kg, vg, const, mk))
+        b = np.asarray(sparse_sdpa(q, kg, vg, np.zeros_like(const), mk))
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-5)
+
+    def test_huge_logits_stable(self):
+        q, kg, vg, lp, mk = make_inputs(1, TILE_B, 16, seed=11)
+        kg = kg * 60.0  # exp would overflow unstabilized f32
+        out = np.asarray(sparse_sdpa(q, kg, vg, lp, mk))
+        assert np.all(np.isfinite(out))
+        want = np.asarray(sparse_sdpa_ref(q, kg, vg, lp, mk))
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    h=st.integers(1, 4),
+    tiles=st.integers(1, 4),
+    dh=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**16),
+    mask_frac=st.floats(0.1, 1.0),
+)
+def test_hypothesis_sweep(h, tiles, dh, seed, mask_frac):
+    """Property: kernel == oracle over random shape/mask/weight configs."""
+    assert_matches_ref(*make_inputs(h, tiles * TILE_B, dh, seed, mask_frac=mask_frac))

@@ -1,0 +1,45 @@
+//! Attention hot-path benchmarks: dense SDPA, sparse SDPA at several
+//! densities, and the raw logit scan. These are the L3 numbers behind
+//! Fig. 5 (measured pane) and EXPERIMENTS.md §Perf.
+//!
+//! Run: cargo bench --bench bench_attention
+
+use std::time::Duration;
+
+use vattn::attention::{dense_sdpa, logits_all, sparse_sdpa, Selection};
+use vattn::util::timer::bench;
+use vattn::util::Rng;
+use vattn::workloads::{synthesize_head, ScoreProfile};
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    let mut rng = Rng::new(42);
+    println!("== attention kernels ==");
+
+    for &(n, d) in &[(8_192usize, 128usize), (32_768, 128), (131_072, 128)] {
+        let head = synthesize_head(n, d, ScoreProfile::PowerLaw { alpha: 1.0 }, &mut rng);
+        let s = bench(&format!("logits_all n={n} d={d}"), 1, budget, 3, || {
+            logits_all(&head.k, &head.q_scaled)
+        });
+        println!("{}", s.report());
+        let gb = (n * d * 4) as f64 / s.p50_s / 1e9;
+        println!("{:>60}", format!("-> K-scan bandwidth {gb:.2} GB/s"));
+
+        let s_dense = bench(&format!("dense_sdpa n={n} d={d}"), 1, budget, 3, || {
+            dense_sdpa(&head.k, &head.v, &head.q_scaled)
+        });
+        println!("{}", s_dense.report());
+
+        for rho in [0.05f64, 0.10, 0.20] {
+            let b = (n as f64 * rho) as usize;
+            let mut fork = rng.fork(b as u64);
+            let s = bench(&format!("sparse_sdpa n={n} rho={rho}"), 1, budget, 3, || {
+                let idx = fork.sample_distinct(n, b);
+                let sel = Selection::sampled(idx, rho as f32);
+                sparse_sdpa(&head.k, &head.v, &head.q_scaled, &sel)
+            });
+            println!("{}   speedup {:.2}x", s.report(), s_dense.p50_s / s.p50_s);
+        }
+        println!();
+    }
+}

@@ -1,0 +1,55 @@
+//! Verified-budget machinery micro-benchmarks: Φ⁻¹, stats estimation
+//! from the base sample, and the Theorem-4.3 split search. Budget math
+//! must be O(base sample), not O(n) (§Perf target).
+//!
+//! Run: cargo bench --bench bench_budget
+
+use std::time::Duration;
+
+use vattn::budget::{self, BaseStats, Bound, Verify};
+use vattn::util::timer::bench;
+use vattn::util::{inv_normal_cdf, Rng};
+use vattn::workloads::{synthesize_head, ScoreProfile};
+
+fn main() {
+    let dur = Duration::from_millis(300);
+    let mut rng = Rng::new(42);
+
+    println!("== budget machinery ==");
+    let s = bench("inv_normal_cdf", 10, dur, 10, || inv_normal_cdf(0.975));
+    println!("{}", s.report());
+
+    let n = 32_768;
+    let d = 128;
+    let head = synthesize_head(n, d, ScoreProfile::PowerLaw { alpha: 1.0 }, &mut rng);
+    let i_f = vattn::policies::sink_window_indices(n, 128, 128);
+    for rate in [0.01f64, 0.025, 0.05] {
+        let base = budget::draw_base_sample(n, &i_f, rate, &mut rng);
+        let blen = base.len();
+        let s = bench(&format!("estimate_stats rate={rate} (b0={blen})"), 1, dur, 3, || {
+            budget::estimate_stats(&head.k, &head.v, &head.q_scaled, &i_f, &base, 5.0)
+        });
+        println!("{}", s.report());
+    }
+
+    let stats = BaseStats {
+        n_s: 32_000,
+        sigma2_d: 0.8,
+        trace_sigma_n: 40.0,
+        d_hat: 30_000.0,
+        n_hat_norm: 50_000.0,
+        range_d: 4.0,
+        range_n: 12.0,
+        base_size: 800,
+    };
+    for (label, verify) in [
+        ("budget_denominator", Verify::Denominator),
+        ("budget_numerator", Verify::Numerator),
+        ("budget_sdpa (Thm 4.3 grid)", Verify::Sdpa),
+    ] {
+        let s = bench(label, 10, dur, 10, || {
+            budget::budget_for(&stats, verify, 0.05, 0.05, Bound::Clt)
+        });
+        println!("{}", s.report());
+    }
+}

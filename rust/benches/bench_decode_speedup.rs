@@ -1,0 +1,53 @@
+//! Fig. 5 end-to-end bench: full decode step (selection + gather +
+//! weighted attention) at several densities over long host-resident
+//! caches, per-layer-slice at Llama-8B head shape; reports the measured
+//! speedup curve that EXPERIMENTS.md compares against the paper's.
+//!
+//! Run: cargo bench --bench bench_decode_speedup
+
+use std::time::Duration;
+
+use vattn::attention::{dense_sdpa, sparse_sdpa};
+use vattn::policies::{IndexPolicy, PolicyCtx, VAttentionPolicy};
+use vattn::util::timer::bench;
+use vattn::util::Rng;
+use vattn::workloads::{synthesize_head, ScoreProfile};
+
+fn main() {
+    let budget = Duration::from_millis(500);
+    let mut rng = Rng::new(42);
+    let d = 128; // llama-8b head dim
+
+    println!("== Fig 5: decode hot path at llama head shape (d=128) ==");
+    for &n in &[16_384usize, 65_536, 131_072] {
+        let head = synthesize_head(n, d, ScoreProfile::Mixed { heavy: 16, boost: 6.0, alpha: 0.9 }, &mut rng);
+        let s_dense = bench(&format!("dense decode n={n}"), 1, budget, 3, || {
+            dense_sdpa(&head.k, &head.v, &head.q_scaled)
+        });
+        println!("{}", s_dense.report());
+
+        for eps in [0.05f64, 0.1, 0.2] {
+            let mut cfg = vattn::experiments::common::vcfg(eps);
+            cfg.floor_at_base = false;
+            let mut pol = VAttentionPolicy::oracle(cfg);
+            let mut fork = rng.fork(n as u64 ^ (eps * 1000.0) as u64);
+            let mut density = 0.0f64;
+            let mut iters = 0usize;
+            let s = bench(&format!("vattention decode n={n} eps={eps}"), 1, budget, 3, || {
+                let mut ctx = PolicyCtx { k: &head.k, v: &head.v, q_scaled: &head.q_scaled, rng: &mut fork, step: 0 };
+                let sel = pol.select(&mut ctx);
+                density += sel.density(n);
+                iters += 1;
+                sparse_sdpa(&head.k, &head.v, &head.q_scaled, &sel)
+            });
+            println!(
+                "{}   density {:.3}  speedup {:.2}x",
+                s.report(),
+                density / iters as f64,
+                s_dense.p50_s / s.p50_s
+            );
+        }
+        println!();
+    }
+    println!("paper Fig 5: near-linear speedup with density on CPU-hosted KV.");
+}

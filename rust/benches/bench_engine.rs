@@ -1,0 +1,49 @@
+//! Serving-engine throughput bench (rust-native backend): dense vs
+//! vAttention decode over a batched trace. The L3 coordinator numbers
+//! for EXPERIMENTS.md §Perf.
+//!
+//! Run: cargo bench --bench bench_engine
+
+use std::time::Instant;
+
+use vattn::model::{Model, ModelConfig, Sampler};
+use vattn::policies::{SizeSpec, VAttentionPolicy};
+use vattn::server::{AttentionMode, Engine, EngineConfig, Request};
+
+fn run(engine: &Engine<Model>, mode: &AttentionMode, label: &str) {
+    let requests: Vec<Request> = (0..6u64)
+        .map(|i| {
+            let ctx = 256 + 64 * i as usize;
+            Request::new(i, (0..ctx as u32).map(|t| t % 250).collect(), 24)
+        })
+        .collect();
+    let t0 = Instant::now();
+    let out = engine.serve(requests, mode).expect("serve");
+    let wall = t0.elapsed().as_secs_f64();
+    let tokens: usize = out.iter().map(|r| r.tokens.len()).sum();
+    let decode_s: f64 = out.iter().map(|r| r.decode_s).sum();
+    let density: f64 = out.iter().map(|r| r.mean_density).sum::<f64>() / out.len() as f64;
+    let bytes: usize = out.iter().map(|r| r.kv_bytes_read).sum();
+    println!(
+        "{label:<22} wall {wall:>6.2}s  decode-tok/s {:>8.1}  density {density:>6.3}  kv-read {bytes:>12}",
+        tokens as f64 / decode_s,
+    );
+}
+
+fn main() {
+    println!("== serving engine (tiny model, rust-native backend) ==");
+    let engine = Engine::new(
+        Model::new(ModelConfig::tiny(), 42),
+        EngineConfig { max_batch: 3, sampler: Sampler::Greedy, seed: 1 },
+    );
+    run(&engine, &AttentionMode::Dense, "dense");
+    for eps in [0.05, 0.1, 0.2] {
+        let mode = AttentionMode::Sparse(Box::new(move |_l, _h| {
+            let mut c = vattn::experiments::common::vcfg(eps);
+            c.sink = SizeSpec::Abs(16);
+            c.window = SizeSpec::Abs(32);
+            Box::new(VAttentionPolicy::oracle(c))
+        }));
+        run(&engine, &mode, &format!("vattention eps={eps}"));
+    }
+}

@@ -1,0 +1,52 @@
+//! Index-selection latency per policy — the coordinator-side overhead a
+//! deployment pays per (head, query). vAttention's selection must stay a
+//! small fraction of the dense read it replaces (§Perf target).
+//!
+//! Run: cargo bench --bench bench_policies
+
+use std::time::Duration;
+
+use vattn::experiments::common::{knob_sweep, make_policy};
+use vattn::policies::PolicyCtx;
+use vattn::util::timer::bench;
+use vattn::util::Rng;
+use vattn::workloads::{synthesize_head, ScoreProfile};
+
+fn main() {
+    let budget = Duration::from_millis(300);
+    let mut rng = Rng::new(42);
+    let n = 32_768;
+    let d = 128;
+    let head = synthesize_head(n, d, ScoreProfile::Mixed { heavy: 16, boost: 6.0, alpha: 0.9 }, &mut rng);
+
+    println!("== index-selection policies (n={n}, d={d}) ==");
+    for m in [
+        "oracle-top-k",
+        "oracle-top-p",
+        "random-sample",
+        "hashattention",
+        "double-sparsity",
+        "quest",
+        "pqcache",
+        "infllm",
+        "magicpig",
+        "vattention-oracle",
+        "vattention-hat",
+    ] {
+        let knob = knob_sweep(m)[2.min(knob_sweep(m).len() - 1)];
+        let mut pol = make_policy(m, knob, 7);
+        // Warm any auxiliary caches (signatures, codebooks, LSH tables)
+        // outside the timed region — they amortize over a generation.
+        {
+            let mut fork = rng.fork(0);
+            let mut ctx = PolicyCtx { k: &head.k, v: &head.v, q_scaled: &head.q_scaled, rng: &mut fork, step: 0 };
+            let _ = pol.select(&mut ctx);
+        }
+        let mut fork = rng.fork(1);
+        let s = bench(&format!("select {m}"), 1, budget, 3, || {
+            let mut ctx = PolicyCtx { k: &head.k, v: &head.v, q_scaled: &head.q_scaled, rng: &mut fork, step: 1 };
+            pol.select(&mut ctx)
+        });
+        println!("{}", s.report());
+    }
+}

@@ -1,0 +1,331 @@
+//! Attention computations from §3 of the paper:
+//!
+//! * Eq. 1 — full SDPA over the whole KV cache (the oracle everything is
+//!   measured against);
+//! * Eq. 2 — sparse attention over a deterministic index set (renormalized
+//!   softmax over the subset);
+//! * Eq. 3 — sparse attention with randomized index selection and
+//!   importance weights `1/p_i` (subsumes Eq. 2 when all p_i = 1).
+//!
+//! All computations are max-logit stabilized. Attention ratios are
+//! invariant to a shared logit shift, so every N/D pair in the repo is
+//! expressed relative to a caller-chosen reference logit `m_ref`.
+
+pub mod selection;
+
+pub use selection::Selection;
+
+use crate::tensor::{dot, Mat};
+
+/// Raw query–key logits ⟨K[i], q·scale⟩ for all i. `scale` is typically
+/// 1/√d (callers pre-scale q once instead of scaling every logit).
+pub fn logits_all(k: &Mat, q_scaled: &[f32]) -> Vec<f32> {
+    (0..k.rows).map(|i| dot(k.row(i), q_scaled)).collect()
+}
+
+/// Logits for a subset of rows.
+pub fn logits_for(k: &Mat, q_scaled: &[f32], idx: &[usize]) -> Vec<f32> {
+    idx.iter().map(|&i| dot(k.row(i), q_scaled)).collect()
+}
+
+/// Output of a full-attention computation plus the stabilized pieces the
+/// budget machinery wants to reuse.
+#[derive(Clone, Debug)]
+pub struct DenseOut {
+    /// Attention output Σ a_i v_i (length d).
+    pub out: Vec<f32>,
+    /// Max logit used for stabilization.
+    pub m: f32,
+    /// Stabilized denominator D = Σ exp(l_i - m).
+    pub denom: f64,
+}
+
+/// Row-count threshold above which dense SDPA fans out across threads
+/// (flash-style chunk merge). Below it, threading overhead dominates.
+const PARALLEL_THRESHOLD: usize = 16_384;
+
+/// Eq. 1: full SDPA for a single head/query.
+///
+/// Large caches are processed in parallel row chunks, each keeping a
+/// stabilized (m, denom, acc) triple, merged with the standard
+/// flash-attention rescaling — bitwise order-independent up to f32
+/// rounding. This takes the 32K-row scan from single-core DRAM bandwidth
+/// to multi-channel bandwidth (EXPERIMENTS.md §Perf iteration 3).
+pub fn dense_sdpa(k: &Mat, v: &Mat, q_scaled: &[f32]) -> DenseOut {
+    if k.rows >= PARALLEL_THRESHOLD {
+        return dense_sdpa_parallel(k, v, q_scaled);
+    }
+    dense_sdpa_chunk(k, v, q_scaled, 0, k.rows)
+}
+
+/// Single-threaded SDPA over rows [lo, hi). Logits are buffered so K is
+/// scanned exactly once (recomputing the dot in the weight pass costs
+/// ~1.5× — measured in §Perf iteration 3a).
+fn dense_sdpa_chunk(k: &Mat, v: &Mat, q_scaled: &[f32], lo: usize, hi: usize) -> DenseOut {
+    let d = v.cols;
+    let mut logits = Vec::with_capacity(hi - lo);
+    let mut m = f32::NEG_INFINITY;
+    for i in lo..hi {
+        let l = dot(k.row(i), q_scaled);
+        if l > m {
+            m = l;
+        }
+        logits.push(l);
+    }
+    let mut out = vec![0.0f32; d];
+    let mut denom = 0.0f64;
+    for (j, &l) in logits.iter().enumerate() {
+        let w = (l - m).exp();
+        denom += w as f64;
+        crate::tensor::axpy(w, v.row(lo + j), &mut out);
+    }
+    let inv = (1.0 / denom) as f32;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+    DenseOut { out, m, denom }
+}
+
+/// Parallel chunked SDPA with flash-merge.
+fn dense_sdpa_parallel(k: &Mat, v: &Mat, q_scaled: &[f32]) -> DenseOut {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+    let n = k.rows;
+    let chunk = n.div_ceil(threads);
+    let parts: Vec<DenseOut> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(n);
+                s.spawn(move || {
+                    if lo < hi {
+                        Some(dense_sdpa_chunk(k, v, q_scaled, lo, hi))
+                    } else {
+                        None
+                    }
+                })
+            })
+            .collect();
+        handles.into_iter().filter_map(|h| h.join().unwrap()).collect()
+    });
+    // Merge: rescale every chunk's (denom, out·denom) to the global max.
+    let m = parts.iter().fold(f32::NEG_INFINITY, |a, p| a.max(p.m));
+    let d = v.cols;
+    let mut out = vec![0.0f32; d];
+    let mut denom = 0.0f64;
+    for p in &parts {
+        let scale = ((p.m - m) as f64).exp();
+        denom += p.denom * scale;
+        // p.out is already normalized by p.denom; un-normalize + rescale.
+        let w = (p.denom * scale) as f32;
+        crate::tensor::axpy(w, &p.out, &mut out);
+    }
+    let inv = (1.0 / denom) as f32;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+    DenseOut { out, m, denom }
+}
+
+/// Eq. 2 / Eq. 3: sparse SDPA over `sel` with importance weights. Each
+/// selected index i contributes (1/p_i)·exp(l_i - m) where m is the max
+/// logit *within the selection* (self-stabilizing; the ratio N/D is
+/// shift-invariant so this matches the unstabilized Eq. 3 exactly in
+/// exact arithmetic).
+pub fn sparse_sdpa(k: &Mat, v: &Mat, q_scaled: &[f32], sel: &Selection) -> Vec<f32> {
+    let d = v.cols;
+    if sel.idx.is_empty() {
+        return vec![0.0; d];
+    }
+    let logits = logits_for(k, q_scaled, &sel.idx);
+    // Stabilize including the log-importance weights, since the weighted
+    // exponent is what actually enters the sum.
+    let mut m = f32::NEG_INFINITY;
+    for (j, &l) in logits.iter().enumerate() {
+        let lw = l - sel.prob[j].ln();
+        if lw > m {
+            m = lw;
+        }
+    }
+    let mut out = vec![0.0f32; d];
+    let mut denom = 0.0f64;
+    for (j, &l) in logits.iter().enumerate() {
+        let w = (l - sel.prob[j].ln() - m).exp();
+        denom += w as f64;
+        crate::tensor::axpy(w, v.row(sel.idx[j]), &mut out);
+    }
+    let inv = (1.0 / denom) as f32;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+    out
+}
+
+/// Stabilized numerator/denominator of the vAttention estimator (Eqs. 6–7)
+/// relative to a caller-supplied reference logit `m_ref`:
+///   N̂ = Σ_i (1/p_i) exp(l_i - m_ref) v_i,  D̂ = Σ_i (1/p_i) exp(l_i - m_ref).
+/// Exposed for the budget machinery and for verified-N / verified-D
+/// experiments that need the raw estimates, not just the ratio.
+pub fn weighted_num_den(
+    k: &Mat,
+    v: &Mat,
+    q_scaled: &[f32],
+    sel: &Selection,
+    m_ref: f32,
+) -> (Vec<f32>, f64) {
+    let d = v.cols;
+    let mut num = vec![0.0f32; d];
+    let mut den = 0.0f64;
+    for (j, &i) in sel.idx.iter().enumerate() {
+        let l = dot(k.row(i), q_scaled);
+        let w = ((l - m_ref).exp() as f64 / sel.prob[j] as f64) as f32;
+        den += w as f64;
+        crate::tensor::axpy(w, v.row(i), &mut num);
+    }
+    (num, den)
+}
+
+/// Exact (dense) stabilized numerator/denominator relative to `m_ref`.
+pub fn exact_num_den(k: &Mat, v: &Mat, q_scaled: &[f32], m_ref: f32) -> (Vec<f32>, f64) {
+    let d = v.cols;
+    let mut num = vec![0.0f32; d];
+    let mut den = 0.0f64;
+    for i in 0..k.rows {
+        let l = dot(k.row(i), q_scaled);
+        let w = (l - m_ref).exp();
+        den += w as f64;
+        crate::tensor::axpy(w, v.row(i), &mut num);
+    }
+    (num, den)
+}
+
+/// Full attention scores a_i (softmax over all logits). Used by oracle
+/// policies (top-k / top-p / H2O) and the coverage plots of Fig. 2.
+pub fn attention_scores(k: &Mat, q_scaled: &[f32]) -> Vec<f32> {
+    let mut l = logits_all(k, q_scaled);
+    crate::tensor::softmax_inplace(&mut l);
+    l
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn toy(n: usize, d: usize, seed: u64) -> (Mat, Mat, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let k = Mat::randn(n, d, 1.0, &mut rng);
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+        let scale = 1.0 / (d as f32).sqrt();
+        let q: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 1.0) * scale).collect();
+        (k, v, q)
+    }
+
+    #[test]
+    fn dense_matches_naive() {
+        let (k, v, q) = toy(50, 8, 1);
+        let got = dense_sdpa(&k, &v, &q);
+        // naive f64 reference
+        let logits: Vec<f64> = (0..50).map(|i| dot(k.row(i), &q) as f64).collect();
+        let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let ws: Vec<f64> = logits.iter().map(|l| (l - mx).exp()).collect();
+        let wsum: f64 = ws.iter().sum();
+        for c in 0..8 {
+            let want: f64 =
+                (0..50).map(|i| ws[i] / wsum * v.get(i, c) as f64).sum();
+            assert!((got.out[c] as f64 - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn full_selection_equals_dense() {
+        let (k, v, q) = toy(64, 16, 2);
+        let sel = Selection::deterministic((0..64).collect());
+        let sparse = sparse_sdpa(&k, &v, &q, &sel);
+        let dense = dense_sdpa(&k, &v, &q).out;
+        let err = crate::tensor::rel_l2_error(&sparse, &dense);
+        assert!(err < 1e-6, "err={err}");
+    }
+
+    #[test]
+    fn subset_renormalizes() {
+        let (k, v, q) = toy(20, 4, 3);
+        let sel = Selection::deterministic(vec![0, 5, 7]);
+        let out = sparse_sdpa(&k, &v, &q, &sel);
+        // manual Eq. 2
+        let l = logits_for(&k, &q, &[0, 5, 7]);
+        let mx = l.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let w: Vec<f32> = l.iter().map(|x| (x - mx).exp()).collect();
+        let s: f32 = w.iter().sum();
+        for c in 0..4 {
+            let want = (w[0] * v.get(0, c) + w[1] * v.get(5, c) + w[2] * v.get(7, c)) / s;
+            assert!((out[c] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn importance_weights_are_unbiased_for_denominator() {
+        // Sampling half the tokens with p=1/2 should give an unbiased D̂:
+        // average over many resamples converges to exact D.
+        let (k, v, q) = toy(200, 8, 4);
+        let m_ref = 0.0f32;
+        let (_, d_exact) = exact_num_den(&k, &v, &q, m_ref);
+        let mut rng = Rng::new(99);
+        let trials = 3000;
+        let mut acc = 0.0f64;
+        for _ in 0..trials {
+            let idx = rng.sample_distinct(200, 100);
+            let sel = Selection::sampled(idx, 100.0 / 200.0);
+            let (_, d_hat) = weighted_num_den(&k, &v, &q, &sel, m_ref);
+            acc += d_hat;
+        }
+        let mean = acc / trials as f64;
+        let rel = (mean - d_exact).abs() / d_exact;
+        assert!(rel < 0.01, "bias rel={rel}");
+    }
+
+    #[test]
+    fn attention_scores_sum_to_one_and_rank_correctly() {
+        let (k, _, q) = toy(30, 8, 5);
+        let a = attention_scores(&k, &q);
+        let s: f32 = a.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        // highest logit gets highest score
+        let l = logits_all(&k, &q);
+        let arg_l = (0..30).max_by(|&a_, &b_| l[a_].partial_cmp(&l[b_]).unwrap()).unwrap();
+        let arg_a = (0..30).max_by(|&x, &y| a[x].partial_cmp(&a[y]).unwrap()).unwrap();
+        assert_eq!(arg_l, arg_a);
+    }
+
+    #[test]
+    fn empty_selection_returns_zero() {
+        let (k, v, q) = toy(10, 4, 6);
+        let sel = Selection::deterministic(vec![]);
+        assert_eq!(sparse_sdpa(&k, &v, &q, &sel), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn stabilization_handles_huge_logits() {
+        // Keys scaled so raw exp would overflow f32.
+        let mut rng = Rng::new(7);
+        let k = Mat::randn(16, 8, 40.0, &mut rng);
+        let v = Mat::randn(16, 8, 1.0, &mut rng);
+        let q: Vec<f32> = (0..8).map(|_| rng.normal32(0.0, 4.0)).collect();
+        let out = dense_sdpa(&k, &v, &q);
+        assert!(out.out.iter().all(|x| x.is_finite()));
+        let sel = Selection::deterministic((0..16).collect());
+        let sp = sparse_sdpa(&k, &v, &q, &sel);
+        assert!(crate::tensor::rel_l2_error(&sp, &out.out) < 1e-5);
+    }
+
+    #[test]
+    fn parallel_dense_matches_serial() {
+        // Above the threading threshold, results must agree with the
+        // single-threaded chunk implementation to f32 tolerance.
+        let (k, v, q) = toy(20_000, 16, 9);
+        let par = dense_sdpa(&k, &v, &q);
+        let ser = dense_sdpa_chunk(&k, &v, &q, 0, 20_000);
+        let err = crate::tensor::rel_l2_error(&par.out, &ser.out);
+        assert!(err < 1e-5, "parallel vs serial err {err}");
+        assert!((par.denom / ser.denom - 1.0).abs() < 1e-5);
+    }
+}

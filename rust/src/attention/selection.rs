@@ -1,0 +1,143 @@
+//! The `Selection` type: a sequence of KV indices with their selection
+//! probabilities (Eq. 3 of the paper). Deterministic picks carry p = 1;
+//! uniformly sampled residual picks carry p = b / n_s.
+
+/// A set of selected KV indices and the probability each index was
+/// selected with. Invariants (checked by `validate`):
+///   * indices are unique and in-range,
+///   * probabilities are in (0, 1].
+#[derive(Clone, Debug, Default)]
+pub struct Selection {
+    pub idx: Vec<usize>,
+    pub prob: Vec<f32>,
+}
+
+impl Selection {
+    /// All-deterministic selection (p = 1 everywhere). Subsumes Eq. 2.
+    pub fn deterministic(idx: Vec<usize>) -> Selection {
+        let prob = vec![1.0; idx.len()];
+        Selection { idx, prob }
+    }
+
+    /// A uniformly-sampled selection where every index was drawn with the
+    /// same probability `p`.
+    pub fn sampled(idx: Vec<usize>, p: f32) -> Selection {
+        let prob = vec![p; idx.len()];
+        Selection { idx, prob }
+    }
+
+    /// Concatenate deterministic indices (p = 1) with sampled indices
+    /// (p = `p_dyn` each) — the composition of Algorithm 1, lines 9–10.
+    pub fn compose(deterministic: Vec<usize>, sampled: Vec<usize>, p_dyn: f32) -> Selection {
+        let mut idx = deterministic;
+        let n_det = idx.len();
+        idx.extend_from_slice(&sampled);
+        let mut prob = vec![1.0f32; n_det];
+        prob.resize(idx.len(), p_dyn);
+        Selection { idx, prob }
+    }
+
+    /// Per-index probabilities (e.g. MagicPig's LSH collision probs).
+    pub fn with_probs(idx: Vec<usize>, prob: Vec<f32>) -> Selection {
+        assert_eq!(idx.len(), prob.len());
+        Selection { idx, prob }
+    }
+
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// Fraction of the cache this selection touches.
+    pub fn density(&self, n: usize) -> f64 {
+        if n == 0 {
+            0.0
+        } else {
+            self.idx.len() as f64 / n as f64
+        }
+    }
+
+    /// Check the structural invariants against a cache of size `n`.
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        if self.idx.len() != self.prob.len() {
+            return Err(format!(
+                "idx/prob length mismatch: {} vs {}",
+                self.idx.len(),
+                self.prob.len()
+            ));
+        }
+        let mut seen = vec![false; n];
+        for (&i, &p) in self.idx.iter().zip(self.prob.iter()) {
+            if i >= n {
+                return Err(format!("index {i} out of range (n={n})"));
+            }
+            if seen[i] {
+                return Err(format!("duplicate index {i}"));
+            }
+            seen[i] = true;
+            if !(p > 0.0 && p <= 1.0) {
+                return Err(format!("probability {p} for index {i} outside (0,1]"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Truncate to at most `budget` entries, keeping the first entries
+    /// (deterministic ones come first by construction).
+    pub fn truncate(&mut self, budget: usize) {
+        self.idx.truncate(budget);
+        self.prob.truncate(budget);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compose_layout() {
+        let s = Selection::compose(vec![0, 1, 2], vec![10, 20], 0.25);
+        assert_eq!(s.idx, vec![0, 1, 2, 10, 20]);
+        assert_eq!(s.prob, vec![1.0, 1.0, 1.0, 0.25, 0.25]);
+        assert!(s.validate(32).is_ok());
+    }
+
+    #[test]
+    fn validate_catches_out_of_range() {
+        let s = Selection::deterministic(vec![5]);
+        assert!(s.validate(5).is_err());
+        assert!(s.validate(6).is_ok());
+    }
+
+    #[test]
+    fn validate_catches_duplicates() {
+        let s = Selection::deterministic(vec![1, 2, 1]);
+        assert!(s.validate(10).is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_probs() {
+        let s = Selection::with_probs(vec![0, 1], vec![0.5, 0.0]);
+        assert!(s.validate(10).is_err());
+        let s = Selection::with_probs(vec![0, 1], vec![0.5, 1.5]);
+        assert!(s.validate(10).is_err());
+    }
+
+    #[test]
+    fn density() {
+        let s = Selection::deterministic(vec![0, 1, 2, 3]);
+        assert!((s.density(16) - 0.25).abs() < 1e-12);
+        assert_eq!(Selection::default().density(0), 0.0);
+    }
+
+    #[test]
+    fn truncate_keeps_prefix() {
+        let mut s = Selection::compose(vec![0, 1], vec![5, 6], 0.5);
+        s.truncate(3);
+        assert_eq!(s.idx, vec![0, 1, 5]);
+        assert_eq!(s.prob.len(), 3);
+    }
+}

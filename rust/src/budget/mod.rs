@@ -1,0 +1,426 @@
+//! Adaptive sample-size ("budget") computation — Algorithm 2 and the
+//! theory of §4 / Appendix D–E.
+//!
+//! Given the deterministic index set `I_f` and a small uniform *base
+//! sample* of the residual tokens, we estimate the population statistics
+//! (σ² of the exp-logits for the denominator, Tr(Σ) of the exp-weighted
+//! value vectors for the numerator, plus D̂ and ‖N̂‖₂) and solve the CLT
+//! bound of Lemma 4.1 (or the conservative Hoeffding bound of App. E) for
+//! the minimum sample size `b` that yields an (ε, δ) approximation.
+//!
+//! All exponentials are taken relative to a reference logit `m_ref`
+//! supplied by the caller; every budget formula is scale-invariant in
+//! `m_ref` because it only involves ratios (σ/D, √Tr(Σ)/‖N‖).
+
+use crate::attention;
+use crate::tensor::Mat;
+use crate::util::{inv_normal_cdf, Rng};
+
+/// Which computation the (ε, δ) guarantee is requested for (Algorithm 2's
+/// `X` parameter).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verify {
+    /// Guarantee on the denominator D only.
+    Denominator,
+    /// Guarantee on the numerator N only.
+    Numerator,
+    /// Guarantee on the full attention output N/D (Theorem 4.3).
+    Sdpa,
+}
+
+/// Which concentration bound backs the budget (App. E).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bound {
+    /// Central-limit-theorem based (optimistic; the paper's default).
+    Clt,
+    /// Hoeffding's inequality (conservative; ~2.8× larger budgets).
+    Hoeffding,
+}
+
+/// Population statistics estimated from the base sample (Algorithm 2's
+/// `get-stats`), all relative to the shared reference logit `m_ref`.
+#[derive(Clone, Debug)]
+pub struct BaseStats {
+    /// Number of residual (non-deterministic) tokens n_s.
+    pub n_s: usize,
+    /// Sample variance of {exp(l_i - m_ref)} over the base sample.
+    pub sigma2_d: f64,
+    /// Sample trace of the covariance of {exp(l_i - m_ref)·v_i}.
+    pub trace_sigma_n: f64,
+    /// Estimated full denominator D̂ = D_f + (n_s/b₀)·Σ_base exp(l - m_ref).
+    pub d_hat: f64,
+    /// Estimated ‖N̂‖₂ with N̂ = N_f + (n_s/b₀)·Σ_base exp(l - m_ref)·v.
+    pub n_hat_norm: f64,
+    /// Max exp(l - m_ref) observed in the base sample (range proxy for
+    /// Hoeffding; inflated by `HOEFFDING_RANGE_SLACK`).
+    pub range_d: f64,
+    /// Max ‖exp(l - m_ref)·v‖ observed in the base sample.
+    pub range_n: f64,
+    /// Base-sample size actually used.
+    pub base_size: usize,
+}
+
+/// Multiplier applied to the base-sample max when it stands in for the
+/// (unknown) population range in the Hoeffding budget. The paper treats
+/// Hoeffding as the conservative recipe, so we err on the large side.
+pub const HOEFFDING_RANGE_SLACK: f64 = 1.5;
+
+/// Estimate `BaseStats` from a base sample of residual indices.
+///
+/// `i_f_sorted` — deterministic indices, sorted ascending (for exclusion).
+/// `base_idx` — the base-sample indices (must be residual tokens).
+pub fn estimate_stats(
+    k: &Mat,
+    v: &Mat,
+    q_scaled: &[f32],
+    i_f_sorted: &[usize],
+    base_idx: &[usize],
+    m_ref: f32,
+) -> BaseStats {
+    estimate_stats_impl(v, i_f_sorted, base_idx, m_ref, k.rows, |i| {
+        crate::tensor::dot(k.row(i), q_scaled)
+    })
+}
+
+/// `estimate_stats` over *precomputed* logits — the hot-path variant used
+/// when the top-k scorer already scanned all keys (oracle predictor):
+/// avoids re-touching K entirely (§Perf iteration 4).
+pub fn estimate_stats_from_logits(
+    logits: &[f32],
+    v: &Mat,
+    i_f_sorted: &[usize],
+    base_idx: &[usize],
+    m_ref: f32,
+) -> BaseStats {
+    estimate_stats_impl(v, i_f_sorted, base_idx, m_ref, logits.len(), |i| logits[i])
+}
+
+fn estimate_stats_impl(
+    v: &Mat,
+    i_f_sorted: &[usize],
+    base_idx: &[usize],
+    m_ref: f32,
+    n: usize,
+    logit_of: impl Fn(usize) -> f32,
+) -> BaseStats {
+    let n_s = n - i_f_sorted.len();
+    let b0 = base_idx.len();
+    let d_dim = v.cols;
+
+    // Deterministic contributions D_f, N_f (via the logit accessor).
+    let mut n_f = vec![0.0f32; d_dim];
+    let mut d_f = 0.0f64;
+    for &i in i_f_sorted {
+        let w = (logit_of(i) - m_ref).exp();
+        d_f += w as f64;
+        crate::tensor::axpy(w, v.row(i), &mut n_f);
+    }
+
+    if b0 == 0 || n_s == 0 {
+        // Degenerate: no residual / no sample — zero variance, exact sums.
+        let n_norm = crate::tensor::norm2(&n_f) as f64;
+        return BaseStats {
+            n_s,
+            sigma2_d: 0.0,
+            trace_sigma_n: 0.0,
+            d_hat: d_f,
+            n_hat_norm: n_norm,
+            range_d: 0.0,
+            range_n: 0.0,
+            base_size: 0,
+        };
+    }
+
+    // Base-sample moments of r_i = exp(l_i - m_ref) (scalar) and
+    // r⃗_i = exp(l_i - m_ref)·v_i (vector).
+    let mut sum_w = 0.0f64;
+    let mut sum_w2 = 0.0f64;
+    let mut max_w = 0.0f64;
+    let mut max_rn = 0.0f64;
+    let mut sum_vec = vec![0.0f64; d_dim];
+    let mut sum_vec2 = vec![0.0f64; d_dim];
+    for &i in base_idx {
+        let l = logit_of(i);
+        let w = (l - m_ref).exp() as f64;
+        sum_w += w;
+        sum_w2 += w * w;
+        max_w = max_w.max(w);
+        let row = v.row(i);
+        let mut rn2 = 0.0f64;
+        for (c, &vc) in row.iter().enumerate() {
+            let r = w * vc as f64;
+            sum_vec[c] += r;
+            sum_vec2[c] += r * r;
+            rn2 += r * r;
+        }
+        max_rn = max_rn.max(rn2.sqrt());
+    }
+    let b0f = b0 as f64;
+    let mean_w = sum_w / b0f;
+    // Unbiased sample variance (guard b0 == 1).
+    let sigma2_d = if b0 > 1 {
+        ((sum_w2 - b0f * mean_w * mean_w) / (b0f - 1.0)).max(0.0)
+    } else {
+        0.0
+    };
+    // Tr(Σ) = Σ_c Var(r_c).
+    let mut trace = 0.0f64;
+    for c in 0..d_dim {
+        let mean_c = sum_vec[c] / b0f;
+        if b0 > 1 {
+            trace += ((sum_vec2[c] - b0f * mean_c * mean_c) / (b0f - 1.0)).max(0.0);
+        }
+    }
+
+    // Scale-up estimates of the residual sums.
+    let d_dyn = n_s as f64 * mean_w;
+    let d_hat = d_f + d_dyn;
+    let mut n_hat2 = 0.0f64;
+    for c in 0..d_dim {
+        let n_c = n_f[c] as f64 + n_s as f64 * (sum_vec[c] / b0f);
+        n_hat2 += n_c * n_c;
+    }
+
+    BaseStats {
+        n_s,
+        sigma2_d,
+        trace_sigma_n: trace,
+        d_hat,
+        n_hat_norm: n_hat2.sqrt(),
+        range_d: max_w * HOEFFDING_RANGE_SLACK,
+        range_n: max_rn * HOEFFDING_RANGE_SLACK,
+        base_size: b0,
+    }
+}
+
+/// CLT budget for estimating a *scalar* sum to absolute error τ w.p. 1-δ
+/// (Lemma 4.1 with d = 1): b ≥ (Φ⁻¹(1-δ/2) · n_s·σ / τ)².
+pub fn clt_budget_scalar(n_s: usize, sigma: f64, tau: f64, delta: f64) -> usize {
+    if sigma <= 0.0 || tau <= 0.0 || n_s == 0 {
+        return 0;
+    }
+    let z = inv_normal_cdf(1.0 - delta / 2.0);
+    let b = (z * n_s as f64 * sigma / tau).powi(2);
+    ceil_budget(b, n_s)
+}
+
+/// CLT budget for a *vector* sum (Lemma 4.1): σ replaced by √Tr(Σ).
+pub fn clt_budget_vector(n_s: usize, trace_sigma: f64, tau: f64, delta: f64) -> usize {
+    clt_budget_scalar(n_s, trace_sigma.max(0.0).sqrt(), tau, delta)
+}
+
+/// Hoeffding budget for a sum of n_s terms bounded in [0, R], estimated by
+/// a scaled sample mean: Pr(|ŝ-s| > τ) ≤ 2·exp(-2bτ²/(n_s²R²)), so
+/// b ≥ n_s²·R²·ln(2/δ) / (2τ²).
+pub fn hoeffding_budget(n_s: usize, range: f64, tau: f64, delta: f64) -> usize {
+    if range <= 0.0 || tau <= 0.0 || n_s == 0 {
+        return 0;
+    }
+    let b = (n_s as f64 * range).powi(2) * (2.0 / delta).ln() / (2.0 * tau * tau);
+    ceil_budget(b, n_s)
+}
+
+fn ceil_budget(b: f64, n_s: usize) -> usize {
+    if !b.is_finite() {
+        return n_s;
+    }
+    (b.ceil().max(0.0) as usize).min(n_s)
+}
+
+/// Budget b_D(ε, δ) for an (ε, δ)-approximation of the denominator
+/// (Corollary D.3): τ = ε·D̂.
+pub fn budget_denominator(stats: &BaseStats, eps: f64, delta: f64, bound: Bound) -> usize {
+    let tau = eps * stats.d_hat;
+    match bound {
+        Bound::Clt => clt_budget_scalar(stats.n_s, stats.sigma2_d.sqrt(), tau, delta),
+        Bound::Hoeffding => hoeffding_budget(stats.n_s, stats.range_d, tau, delta),
+    }
+}
+
+/// Budget b_N(ε, δ) for the numerator (Corollary D.2): τ = ε·‖N̂‖₂.
+pub fn budget_numerator(stats: &BaseStats, eps: f64, delta: f64, bound: Bound) -> usize {
+    let tau = eps * stats.n_hat_norm;
+    match bound {
+        Bound::Clt => clt_budget_vector(stats.n_s, stats.trace_sigma_n, tau, delta),
+        Bound::Hoeffding => hoeffding_budget(stats.n_s, stats.range_n, tau, delta),
+    }
+}
+
+/// Budget for (ε, δ)-verified SDPA (Theorem 4.3):
+///   b ≥ min over ε'∈(0,ε), δ'∈(0,δ) of max(b_D(ε'/2, δ'), b_N((ε-ε')/2, δ-δ')).
+/// We grid-search the (ε', δ') split — both budget formulas are closed
+/// form, so a 15×7 grid costs ~100 Φ⁻¹ evaluations.
+pub fn budget_sdpa(stats: &BaseStats, eps: f64, delta: f64, bound: Bound) -> usize {
+    let mut best = usize::MAX;
+    const EPS_GRID: usize = 15;
+    const DELTA_GRID: usize = 7;
+    for i in 1..EPS_GRID {
+        let eps_d = eps * i as f64 / EPS_GRID as f64; // ε' for denominator
+        let eps_n = eps - eps_d;
+        for j in 1..DELTA_GRID {
+            let delta_d = delta * j as f64 / DELTA_GRID as f64;
+            let delta_n = delta - delta_d;
+            let bd = budget_denominator(stats, eps_d / 2.0, delta_d, bound);
+            let bn = budget_numerator(stats, eps_n / 2.0, delta_n, bound);
+            best = best.min(bd.max(bn));
+        }
+    }
+    best.min(stats.n_s)
+}
+
+/// Budget dispatch over the verified computation (Algorithm 2).
+pub fn budget_for(stats: &BaseStats, verify: Verify, eps: f64, delta: f64, bound: Bound) -> usize {
+    match verify {
+        Verify::Denominator => budget_denominator(stats, eps, delta, bound),
+        Verify::Numerator => budget_numerator(stats, eps, delta, bound),
+        Verify::Sdpa => budget_sdpa(stats, eps, delta, bound),
+    }
+}
+
+/// Draw the base sample (Algorithm 2 line 1): `⌈f_b · n_s⌉` uniform
+/// residual indices, excluding the deterministic set (sorted).
+pub fn draw_base_sample(
+    n: usize,
+    i_f_sorted: &[usize],
+    f_b: f64,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let n_s = n - i_f_sorted.len();
+    let b0 = ((f_b * n_s as f64).ceil() as usize).min(n_s);
+    rng.sample_excluding(n, b0, i_f_sorted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_stats() -> BaseStats {
+        // Scales chosen so CLT budgets land well inside (0, n_s): a
+        // moderately concentrated residual with a large estimated sum.
+        BaseStats {
+            n_s: 10_000,
+            sigma2_d: 0.25,
+            trace_sigma_n: 4.0,
+            d_hat: 20_000.0,
+            n_hat_norm: 30_000.0,
+            range_d: 3.0,
+            range_n: 10.0,
+            base_size: 256,
+        }
+    }
+
+    #[test]
+    fn clt_matches_formula() {
+        // b = (z * n_s * sigma / tau)^2 with z = Phi^-1(0.975) ≈ 1.96.
+        let b = clt_budget_scalar(1000, 0.5, 50.0, 0.05);
+        let z = inv_normal_cdf(0.975);
+        let want = (z * 1000.0 * 0.5 / 50.0).powi(2).ceil() as usize;
+        assert_eq!(b, want);
+    }
+
+    #[test]
+    fn budget_monotone_in_eps_and_delta() {
+        let s = toy_stats();
+        for bound in [Bound::Clt, Bound::Hoeffding] {
+            let tight = budget_denominator(&s, 0.01, 0.05, bound);
+            let loose = budget_denominator(&s, 0.1, 0.05, bound);
+            assert!(tight >= loose, "{bound:?}: eps monotonicity");
+            let sure = budget_denominator(&s, 0.05, 0.01, bound);
+            let unsure = budget_denominator(&s, 0.05, 0.2, bound);
+            assert!(sure >= unsure, "{bound:?}: delta monotonicity");
+        }
+    }
+
+    #[test]
+    fn hoeffding_at_least_clt_in_practice() {
+        // With matched range/σ scales, Hoeffding should be (much) more
+        // conservative — the paper reports ~2.8×.
+        let s = toy_stats();
+        let clt = budget_denominator(&s, 0.05, 0.1, Bound::Clt);
+        let hoef = budget_denominator(&s, 0.05, 0.1, Bound::Hoeffding);
+        assert!(hoef > clt, "hoeffding {hoef} <= clt {clt}");
+    }
+
+    #[test]
+    fn budget_capped_at_ns() {
+        let s = toy_stats();
+        assert!(budget_denominator(&s, 1e-6, 1e-6, Bound::Clt) <= s.n_s);
+        assert!(budget_numerator(&s, 1e-6, 1e-6, Bound::Hoeffding) <= s.n_s);
+    }
+
+    #[test]
+    fn sdpa_budget_at_most_worst_single_split() {
+        let s = toy_stats();
+        let b = budget_sdpa(&s, 0.1, 0.1, Bound::Clt);
+        // An even split is a feasible point of the minimization, so the
+        // optimum can't exceed it.
+        let bd = budget_denominator(&s, 0.025, 0.05, Bound::Clt);
+        let bn = budget_numerator(&s, 0.025, 0.05, Bound::Clt);
+        assert!(b <= bd.max(bn).min(s.n_s));
+        assert!(b > 0);
+    }
+
+    #[test]
+    fn zero_variance_means_zero_budget() {
+        let mut s = toy_stats();
+        s.sigma2_d = 0.0;
+        assert_eq!(budget_denominator(&s, 0.05, 0.05, Bound::Clt), 0);
+    }
+
+    #[test]
+    fn estimate_stats_on_uniform_population() {
+        // All keys identical -> zero variance, exact D̂.
+        use crate::tensor::Mat;
+        let n = 128;
+        let d = 8;
+        let k = Mat::from_fn(n, d, |_, c| if c == 0 { 1.0 } else { 0.0 });
+        let v = Mat::from_fn(n, d, |_, c| c as f32);
+        let q = vec![1.0; d];
+        let i_f: Vec<usize> = (0..8).collect();
+        let mut rng = Rng::new(1);
+        let base = draw_base_sample(n, &i_f, 0.25, &mut rng);
+        let stats = estimate_stats(&k, &v, &q, &i_f, &base, 1.0);
+        assert!(stats.sigma2_d < 1e-12);
+        // exact D = n * exp(1 - 1) = 128
+        assert!((stats.d_hat - n as f64).abs() < 1e-3, "d_hat={}", stats.d_hat);
+        assert_eq!(stats.n_s, n - 8);
+    }
+
+    #[test]
+    fn estimate_stats_variance_accuracy() {
+        // Known two-point logit population: check σ̂² ≈ population σ².
+        use crate::tensor::Mat;
+        let n = 4000;
+        let d = 4;
+        // half the keys give logit 0, half logit ln(3) (w = 1 or 3).
+        let k = Mat::from_fn(n, d, |r, c| {
+            if c == 0 {
+                if r % 2 == 0 {
+                    0.0
+                } else {
+                    3f32.ln()
+                }
+            } else {
+                0.0
+            }
+        });
+        let v = Mat::from_fn(n, d, |_, _| 1.0);
+        let q = vec![1.0, 0.0, 0.0, 0.0];
+        let i_f: Vec<usize> = vec![];
+        let mut rng = Rng::new(7);
+        let base = draw_base_sample(n, &i_f, 0.5, &mut rng);
+        let stats = estimate_stats(&k, &v, &q, &i_f, &base, 0.0);
+        // population: w ∈ {1,3} equally -> mean 2, var 1.
+        assert!((stats.sigma2_d - 1.0).abs() < 0.1, "σ²={}", stats.sigma2_d);
+        assert!((stats.d_hat - 2.0 * n as f64).abs() < 0.1 * n as f64);
+    }
+
+    #[test]
+    fn base_sample_excludes_i_f() {
+        let mut rng = Rng::new(3);
+        let i_f: Vec<usize> = (0..100).collect();
+        let base = draw_base_sample(1000, &i_f, 0.1, &mut rng);
+        assert_eq!(base.len(), 90);
+        assert!(base.iter().all(|&i| i >= 100 && i < 1000));
+    }
+}

@@ -1,0 +1,102 @@
+//! Fig. 1 (middle) / Fig. 4 / Figs. 6–7 — the Pareto study: quality and
+//! attention error vs density for every method, per task family, plus
+//! the benchmark-mix aggregate.
+//!
+//! Expected shape (paper): vAttention(oracle) dominates, beating even
+//! oracle top-p at matched density; vAttention(HAT) lifts HashAttention
+//! substantially; plain top-k methods trail on the aggregation tasks.
+
+use super::common::*;
+use crate::metrics::{f, Table};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::workloads::TaskKind;
+
+pub fn run(args: &Args) -> String {
+    let n = args.get_usize("n", 4096);
+    let d = args.get_usize("d", 48);
+    let trials = args.get_usize("trials", 8);
+    let seed = args.get_u64("seed", 42);
+    let quick = args.has_flag("quick");
+
+    // Task families standing in for the benchmark suites (DESIGN.md §3):
+    // RULER-needle ≈ retrieval; RULER-aggregate ≈ vt/fwe; LongBench-QA ≈ qa.
+    let families: Vec<(&str, Vec<TaskKind>)> = vec![
+        ("ruler-needle", vec![TaskKind::NiahSingle, TaskKind::NiahMultikey2, TaskKind::NiahMultivalue]),
+        ("ruler-aggregate", vec![TaskKind::Vt, TaskKind::Fwe]),
+        ("qa-mix", vec![TaskKind::Qa1, TaskKind::Qa2]),
+    ];
+    let methods: Vec<&str> = if quick {
+        vec!["oracle-top-k", "oracle-top-p", "vattention-oracle"]
+    } else {
+        vec![
+            "oracle-top-k",
+            "oracle-top-p",
+            "hashattention",
+            "magicpig",
+            "vattention-oracle",
+            "vattention-hat",
+        ]
+    };
+
+    let mut out = String::new();
+    let mut json_fams = Vec::new();
+    for (fam, kinds) in &families {
+        let mut t = Table::new(
+            &format!("Fig 1/4 Pareto — {fam}: (density → quality%, error)"),
+            &["method", "knob", "density", "quality%", "rel-err"],
+        );
+        let mut json_methods = Vec::new();
+        for m in &methods {
+            let mut curve = Vec::new();
+            for knob in knob_sweep(m) {
+                // average the family's tasks at this knob
+                let (mut den, mut qual, mut err) = (0.0, 0.0, 0.0);
+                for &kind in kinds {
+                    let pt = eval_task(
+                        &|| make_policy(m, knob, seed),
+                        kind,
+                        n,
+                        d,
+                        1.0,
+                        trials,
+                        seed,
+                    );
+                    den += pt.density;
+                    qual += pt.quality;
+                    err += pt.err;
+                }
+                let kf = kinds.len() as f64;
+                let pt = EvalPoint { density: den / kf, quality: qual / kf, err: err / kf };
+                t.row(vec![
+                    m.to_string(),
+                    f(knob, 3),
+                    f(pt.density, 3),
+                    f(pt.quality, 1),
+                    f(pt.err, 4),
+                ]);
+                curve.push(pt);
+            }
+            json_methods.push(
+                Json::obj()
+                    .field("method", Json::str(*m))
+                    .field("density", Json::arr_f64(curve.iter().map(|p| p.density)))
+                    .field("quality", Json::arr_f64(curve.iter().map(|p| p.quality)))
+                    .field("error", Json::arr_f64(curve.iter().map(|p| p.err))),
+            );
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+        json_fams.push(
+            Json::obj()
+                .field("family", Json::str(*fam))
+                .field("methods", Json::Arr(json_methods)),
+        );
+    }
+
+    let json = Json::obj()
+        .field("experiment", Json::str("fig1_pareto"))
+        .field("families", Json::Arr(json_fams));
+    write_results("fig1_pareto", &out, &json);
+    out
+}

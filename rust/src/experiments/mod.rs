@@ -1,0 +1,93 @@
+//! The experiment harness: one module per paper table/figure (see the
+//! DESIGN.md §6 index), a registry, and the CLI entry point.
+//!
+//! Every experiment prints the paper-style rows/series and writes
+//! `results/<id>.{txt,json}`. Absolute numbers differ from the paper
+//! (synthetic substrate — DESIGN.md §3); the *shape* — who wins, by
+//! roughly what factor, where crossovers fall — is the reproduction
+//! target, and each module's header documents the expected shape.
+
+pub mod ablations;
+pub mod appd4_bias;
+pub mod common;
+pub mod fig11_clt_hoeffding;
+pub mod fig16_ablation;
+pub mod fig18_qq;
+pub mod fig19_sensitivity;
+pub mod fig1_correlation;
+pub mod fig1_pareto;
+pub mod fig2_motivation;
+pub mod fig5_speedup;
+pub mod table10_magicpig;
+pub mod table11_bootstrap;
+pub mod table12_wider;
+pub mod table1_hard;
+pub mod table2_longgen;
+pub mod table9_baselines;
+
+use crate::util::cli::Args;
+
+type ExpFn = fn(&Args) -> String;
+
+/// (id, description, runner) for every reproduced table/figure.
+pub fn registry() -> Vec<(&'static str, &'static str, ExpFn)> {
+    vec![
+        ("fig2", "motivation: coverage + error vs budget per score regime", fig2_motivation::run),
+        ("fig1", "pareto: quality/error vs density, all methods (also fig4/6/7)", fig1_pareto::run),
+        ("fig1-corr", "correlation of user eps with observed error", fig1_correlation::run),
+        ("fig5", "decode speedup vs density, CPU-hosted KV", fig5_speedup::run),
+        ("table1", "RULER-HARD proxy @10% sparsity across model regimes (also tables 4/5/7/8)", table1_hard::run),
+        ("table2", "long generation with natural config (also figs 8/9)", table2_longgen::run),
+        ("table9", "approximate-top-k family @512 budget", table9_baselines::run),
+        ("table10", "MagicPig setup A vs B ablation", table10_magicpig::run),
+        ("table11", "base-sample estimation error of sigma^2 / Tr(Sigma)", table11_bootstrap::run),
+        ("fig11", "CLT vs Hoeffding budgets + failure rates (figs 11-15)", fig11_clt_hoeffding::run),
+        ("fig16", "(eps, delta) ablation for verified-D/N + fig10 quality", fig16_ablation::run),
+        ("fig18", "QQ normality of the denominator estimator", fig18_qq::run),
+        ("fig19", "parameter sensitivity sweeps", fig19_sensitivity::run),
+        ("table12", "wider baseline x density grid", table12_wider::run),
+        ("appd4", "bias vs variance error propagation", appd4_bias::run),
+        ("ablations", "design-choice ablations: budget floor, bound, fixed-vs-adaptive split", ablations::run),
+    ]
+}
+
+/// Run one experiment by id (or "all"). Returns the rendered output.
+pub fn run(id: &str, args: &Args) -> Result<String, String> {
+    if id == "all" {
+        let mut out = String::new();
+        for (name, _, f) in registry() {
+            eprintln!("[exp] running {name} ...");
+            out.push_str(&format!("\n================ {name} ================\n"));
+            out.push_str(&f(args));
+        }
+        return Ok(out);
+    }
+    for (name, _, f) in registry() {
+        if name == id {
+            return Ok(f(args));
+        }
+    }
+    Err(format!(
+        "unknown experiment '{id}'. available: {}",
+        registry().iter().map(|(n, _, _)| *n).collect::<Vec<_>>().join(", ")
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_unique() {
+        let ids: Vec<_> = registry().iter().map(|(n, _, _)| *n).collect();
+        let set: std::collections::HashSet<_> = ids.iter().collect();
+        assert_eq!(ids.len(), set.len());
+        assert!(ids.len() >= 15);
+    }
+
+    #[test]
+    fn unknown_id_is_error() {
+        let args = Args::default();
+        assert!(run("nope", &args).is_err());
+    }
+}

@@ -1,0 +1,132 @@
+//! Table 10 — the MagicPig evaluation-setup ablation.
+//!
+//! Setup A (authors'): the *question* is processed with dense attention,
+//! so by the time sparse decoding starts, the needle's signal already
+//! sits in the local window of the query. Setup B (this paper's): only
+//! the context gets dense attention; the question is processed sparsely
+//! and retrieval must actually work. We emulate the setups by where the
+//! needle signal lives relative to the always-kept window: Setup A ⇒
+//! needle duplicated near the sequence end (inside the window), Setup B
+//! ⇒ needle only at its original position. Also compares the
+//! theory-faithful simpleLSH variant against raw angular LSH.
+
+use super::common::write_results;
+use crate::attention::{dense_sdpa, sparse_sdpa};
+use crate::metrics::{f, Table};
+use crate::policies::{IndexPolicy, MagicPigPolicy, PolicyCtx, SizeSpec};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::Rng;
+use crate::workloads::{Task, TaskKind};
+
+pub fn run(args: &Args) -> String {
+    let n = args.get_usize("n", 4096);
+    let d = args.get_usize("d", 48);
+    let trials = args.get_usize("trials", 12);
+    let seed = args.get_u64("seed", 42);
+
+    let kinds = [TaskKind::NiahSingle, TaskKind::NiahMultikey2, TaskKind::NiahMultikey3];
+    let variants: [(&str, bool, bool); 4] = [
+        // (label, setup_a, simple_lsh)
+        ("A + raw-LSH (authors')", true, false),
+        ("A + simpleLSH", true, true),
+        ("B + raw-LSH", false, false),
+        ("B + simpleLSH (ours)", false, true),
+    ];
+
+    let mut hdr: Vec<&str> = vec!["setup"];
+    hdr.extend(kinds.iter().map(|k| k.name()));
+    let mut t = Table::new("Table 10: MagicPig under evaluation setups A vs B (K=8, L=75)", &hdr);
+    let mut json_rows = Vec::new();
+    for (label, setup_a, simple) in variants {
+        let mut row = vec![label.to_string()];
+        let mut scores = Vec::new();
+        for &kind in &kinds {
+            let task = Task::new(kind, n, d);
+            let mut rng = Rng::new(seed ^ kind as u64);
+            let mut acc = 0.0;
+            for tr in 0..trials {
+                let mut inst = task.generate(&mut rng.fork(tr as u64));
+                // Real key distributions give needles their inner-product
+                // advantage partly through *norm*, not pure angle (the
+                // orthogonality problem MagicPig's App. B.5 discussion is
+                // about). Emulate: pad every needle key with a large
+                // component orthogonal to q — the logit is unchanged
+                // (dense attention still solves the task) but the lifted
+                // cosine collapses, so angular LSH struggles to retrieve
+                // it.
+                {
+                    let logits = crate::attention::logits_all(&inst.k, &inst.q_scaled);
+                    let mut order: Vec<usize> = (0..inst.k.rows).collect();
+                    order.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+                    let mut fork = rng.fork(9_000 + tr as u64);
+                    for &ni in order.iter().take(10) {
+                        let d_ = inst.k.cols;
+                        let mut u: Vec<f32> = (0..d_).map(|_| fork.normal32(0.0, 1.0)).collect();
+                        let proj = crate::tensor::dot(&u, &inst.q_scaled);
+                        for (c, x) in u.iter_mut().enumerate() {
+                            *x -= proj * inst.q_scaled[c];
+                        }
+                        let un = crate::tensor::norm2(&u).max(1e-6);
+                        let kn = crate::tensor::norm2(inst.k.row(ni));
+                        for c in 0..d_ {
+                            let cur = inst.k.get(ni, c);
+                            inst.k.set(ni, c, cur + 4.0 * kn * u[c] / un);
+                        }
+                    }
+                }
+                if setup_a {
+                    // Setup A: dense question processing has already
+                    // surfaced the needle — emulate by copying the
+                    // needle's KV into the kept window region.
+                    let logits = crate::attention::logits_all(&inst.k, &inst.q_scaled);
+                    let ni = (0..inst.k.rows)
+                        .max_by(|&a, &b| logits[a].partial_cmp(&logits[b]).unwrap())
+                        .unwrap();
+                    let last = inst.k.rows - 4;
+                    let krow = inst.k.row(ni).to_vec();
+                    let vrow = inst.v.row(ni).to_vec();
+                    inst.k.row_mut(last).copy_from_slice(&krow);
+                    inst.v.row_mut(last).copy_from_slice(&vrow);
+                }
+                let mut pol = MagicPigPolicy::new(8, 75, seed.wrapping_add(tr as u64));
+                pol.simple_lsh = simple;
+                pol.sink = SizeSpec::Abs(128);
+                pol.window = SizeSpec::Abs(128);
+                let mut fork = rng.fork(500 + tr as u64);
+                let mut ctx = PolicyCtx {
+                    k: &inst.k,
+                    v: &inst.v,
+                    q_scaled: &inst.q_scaled,
+                    rng: &mut fork,
+                    step: 0,
+                };
+                let sel = pol.select(&mut ctx);
+                let approx = sparse_sdpa(&inst.k, &inst.v, &inst.q_scaled, &sel);
+                let _dense = dense_sdpa(&inst.k, &inst.v, &inst.q_scaled);
+                acc += inst.score(&approx);
+            }
+            let q = acc / trials as f64 * 100.0;
+            row.push(f(q, 1));
+            scores.push(q);
+        }
+        t.row(row);
+        json_rows.push(
+            Json::obj()
+                .field("setup", Json::str(label))
+                .field("scores", Json::arr_f64(scores)),
+        );
+    }
+
+    let mut out = t.render();
+    out.push_str(
+        "\npaper Table 10: MagicPig scores 100/98/98 under setup A but collapses\n\
+         (e.g. 46/12) under setup B on multikey tasks — dense question\n\
+         processing masks retrieval failures. Expect A-rows >> B-rows here.\n",
+    );
+    let json = Json::obj()
+        .field("experiment", Json::str("table10"))
+        .field("rows", Json::Arr(json_rows));
+    write_results("table10", &out, &json);
+    out
+}

@@ -1,0 +1,97 @@
+//! Table 1 (and Tables 4/5/7/8 detail) — RULER32K-HARD at 10% sparsity
+//! across three model regimes.
+//!
+//! The three base models are emulated as *sharpness regimes* of the task
+//! generator (DESIGN.md §3): Llama-like (sharp logit separation),
+//! DeepSeek-distill-like (intermediate), Mistral-like (flat). Expected
+//! ordering per column: SDPA ≥ vAttention(oracle) ≥ oracle-top-k, and
+//! vAttention(HAT) recovering most of HAT's gap to full attention.
+
+use super::common::*;
+use crate::metrics::{f, Table};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::workloads::TaskKind;
+
+pub fn run(args: &Args) -> String {
+    let n = args.get_usize("n", 4096);
+    let d = args.get_usize("d", 48);
+    let trials = args.get_usize("trials", 10);
+    let seed = args.get_u64("seed", 42);
+    let detail = args.has_flag("detail");
+
+    // (name, sharpness) regimes standing in for the three models.
+    let regimes: [(&str, f32); 3] =
+        [("llama-like", 1.0), ("dpsk-like", 0.85), ("mistral-like", 0.7)];
+
+    // Method → (name, knob targeting ~10% density).
+    let methods: [(&str, &str, f64); 5] = [
+        ("SDPA", "oracle-top-p", 0.999999),
+        ("oracle-top-k", "oracle-top-k", 0.10),
+        ("vAttention(oracle-top-k)", "vattention-oracle", 0.025),
+        ("HAT", "hashattention", 0.10),
+        ("vAttention(HAT)", "vattention-hat", 0.025),
+    ];
+
+    let suite = TaskKind::hard_suite();
+    let mut out = String::new();
+    let mut json_rows = Vec::new();
+
+    let mut t = Table::new(
+        "Table 1: RULER-HARD proxy average @ ~10% density",
+        &["method", regimes[0].0, regimes[1].0, regimes[2].0],
+    );
+    let mut detail_tables: Vec<Table> = regimes
+        .iter()
+        .map(|(rn, _)| {
+            let mut hdr: Vec<&str> = vec!["method"];
+            hdr.extend(suite.iter().map(|k| k.name()));
+            Table::new(&format!("Table 7/8-style detail — {rn}"), &hdr)
+        })
+        .collect();
+
+    for (label, method, knob) in methods {
+        let mut cells = vec![label.to_string()];
+        let mut per_regime = Vec::new();
+        for (ri, (_, sharp)) in regimes.iter().enumerate() {
+            let mut scores = Vec::new();
+            for &kind in &suite {
+                let pt = eval_task(&|| make_policy(method, knob, seed), kind, n, d, *sharp, trials, seed);
+                scores.push(pt.quality);
+            }
+            let avg = scores.iter().sum::<f64>() / scores.len() as f64;
+            cells.push(f(avg, 2));
+            per_regime.push(avg);
+            if detail {
+                let mut row = vec![label.to_string()];
+                row.extend(scores.iter().map(|&s| f(s, 1)));
+                detail_tables[ri].row(row);
+            }
+        }
+        t.row(cells);
+        json_rows.push(
+            Json::obj()
+                .field("method", Json::str(label))
+                .field("scores", Json::arr_f64(per_regime)),
+        );
+    }
+
+    out.push_str(&t.render());
+    out.push_str(
+        "\npaper Table 1 (Llama/Dpsk/Mistral): SDPA 88.7/65.4/64.1, oracle-top-k\n\
+         87.2/64.9/64.4, vAtt(oracle) 88.6/65.2/64.1, HAT 81.9/60.7/54.7,\n\
+         vAtt(HAT) 86.6/65.1/56.9 — expect the same ordering & gap closure.\n\n",
+    );
+    if detail {
+        for dt in detail_tables {
+            out.push_str(&dt.render());
+            out.push('\n');
+        }
+    }
+
+    let json = Json::obj()
+        .field("experiment", Json::str("table1"))
+        .field("rows", Json::Arr(json_rows));
+    write_results("table1", &out, &json);
+    out
+}

@@ -1,0 +1,111 @@
+//! Table 2 + Figs. 8/9 — long generation "in the wild": run the engine
+//! with vAttention at its natural config and verify (a) generation
+//! quality matches dense (token agreement as the AIME-accuracy proxy),
+//! (b) density adapts per step and stays low, (c) attention error stays
+//! bounded as the sequence grows into the thousands of tokens.
+
+use super::common::write_results;
+use crate::kvcache::KvCache;
+use crate::metrics::{f, mean, Table};
+use crate::model::{Model, ModelConfig, Sampler};
+use crate::policies::{IndexPolicy, PolicyCtx, SizeSpec, VAttentionPolicy};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::Rng;
+
+pub fn run(args: &Args) -> String {
+    let steps = args.get_usize("steps", 1200);
+    let prompt_len = args.get_usize("prompt", 96);
+    let seed = args.get_u64("seed", 42);
+    let eps = args.get_f64("eps", 0.05);
+
+    let cfg = ModelConfig::tiny();
+    let model = Model::new(cfg.clone(), seed);
+    let sampler = Sampler::Greedy;
+    let mut rng = Rng::new(seed);
+    let prompt: Vec<u32> = (0..prompt_len as u32).map(|t| (t * 31 + 7) % 250).collect();
+
+    // ── dense rollout (reference) ──
+    let mut dense_cache = KvCache::new(&cfg);
+    let mut dense_tokens = Vec::new();
+    let out = model.prefill(&prompt, &mut dense_cache);
+    let mut tok = sampler.sample(&out.logits, &mut rng.fork(1));
+    for s in 0..steps {
+        dense_tokens.push(tok);
+        let out = model.decode_step(tok, prompt_len + s, &mut dense_cache, None);
+        tok = sampler.sample(&out.logits, &mut rng.fork(2 + s as u64));
+    }
+
+    // ── vAttention rollout (natural config, per paper Table 2) ──
+    let mut vcfg = super::common::vcfg(eps);
+    vcfg.sink = SizeSpec::Abs(128);
+    vcfg.window = SizeSpec::Abs(128);
+    vcfg.heavy = SizeSpec::Frac(0.025);
+    vcfg.base_rate = 0.025;
+    let lh = cfg.n_layers * cfg.n_heads;
+    let mut policies: Vec<VAttentionPolicy> =
+        (0..lh).map(|_| VAttentionPolicy::oracle(vcfg.clone())).collect();
+    let mut cache = KvCache::new(&cfg);
+    let mut v_tokens = Vec::new();
+    let mut densities = Vec::new();
+    let mut errors = Vec::new();
+    let out = model.prefill(&prompt, &mut cache);
+    let mut tok = sampler.sample(&out.logits, &mut rng.fork(1));
+    let mut step_rng = Rng::new(seed ^ 0xABCD);
+    for s in 0..steps {
+        v_tokens.push(tok);
+        let n_heads = cfg.n_heads;
+        let mut select = |l: usize, h: usize, k: &crate::tensor::Mat, v: &crate::tensor::Mat, q: &[f32]| {
+            let mut ctx = PolicyCtx { k, v, q_scaled: q, rng: &mut step_rng, step: s };
+            policies[l * n_heads + h].select(&mut ctx)
+        };
+        let out = model.decode_step(tok, prompt_len + s, &mut cache, Some(&mut select));
+        densities.push(out.mean_density);
+        // Attention-error probe every 100 steps: compare the sparse
+        // logits against a dense step on a cloned position.
+        if s % 100 == 0 {
+            let dense_out = model.decode_step(tok, prompt_len + s, &mut dense_cache_probe(&model, &prompt, &v_tokens), None);
+            errors.push(crate::tensor::rel_l2_error(&out.logits, &dense_out.logits));
+        }
+        tok = sampler.sample(&out.logits, &mut rng.fork(2 + s as u64));
+    }
+
+    // Token-agreement "accuracy" proxy + density evolution.
+    let agree = dense_tokens.iter().zip(v_tokens.iter()).filter(|(a, b)| a == b).count();
+    let agreement = agree as f64 / steps as f64 * 100.0;
+    let early = mean(&densities[..steps / 4]);
+    let late = mean(&densities[steps - steps / 4..]);
+
+    let mut t = Table::new("Table 2 proxy: long generation with vAttention (natural config)", &["metric", "value"]);
+    t.row(vec!["steps".into(), steps.to_string()]);
+    t.row(vec!["token agreement vs dense %".into(), f(agreement, 2)]);
+    t.row(vec!["mean density (first quarter)".into(), f(early, 3)]);
+    t.row(vec!["mean density (last quarter)".into(), f(late, 3)]);
+    t.row(vec!["mean logits rel-err (probes)".into(), f(mean(&errors), 4)]);
+    let mut out_s = t.render();
+    out_s.push_str(
+        "\npaper Table 2: vAttention matches dense avg@4 (36.7 vs 36.7) at ~10-15%\n\
+         density over 32K-token generations; Fig 8/9: density *decreases* with\n\
+         sequence length (fixed sink/window shrink relatively; adaptive budget\n\
+         tracks the distribution).\n",
+    );
+
+    let json = Json::obj()
+        .field("experiment", Json::str("table2_longgen"))
+        .field("agreement_pct", Json::num(agreement))
+        .field("density", Json::arr_f64(densities.iter().copied().step_by(10)))
+        .field("probe_errors", Json::arr_f64(errors.clone()));
+    write_results("table2_longgen", &out_s, &json);
+    out_s
+}
+
+/// Rebuild a dense cache that matches the sparse rollout's token history
+/// (probe helper — dense reference for the current prefix).
+fn dense_cache_probe(model: &Model, prompt: &[u32], generated: &[u32]) -> KvCache {
+    let mut cache = KvCache::new(&model.cfg);
+    model.prefill(prompt, &mut cache);
+    for (i, &t) in generated[..generated.len().saturating_sub(1)].iter().enumerate() {
+        model.decode_step(t, prompt.len() + i, &mut cache, None);
+    }
+    cache
+}

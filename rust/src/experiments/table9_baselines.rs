@@ -1,0 +1,141 @@
+//! Table 9 — the approximate-top-k family at a fixed 512-token budget:
+//! H2O, StreamingLLM, InfLLM, DoubleSparsity, Quest, PQCache,
+//! HashAttention vs oracle-top and the full model, on a task mix.
+//!
+//! Expected shape: oracle ≈ full > HashAttention ≳ Quest/DS/PQCache >
+//! InfLLM > H2O > StreamingLLM.
+
+use super::common::*;
+use crate::metrics::{f, Table};
+use crate::policies::*;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::workloads::TaskKind;
+
+pub fn run(args: &Args) -> String {
+    let n = args.get_usize("n", 4096);
+    let d = args.get_usize("d", 48);
+    let trials = args.get_usize("trials", 10);
+    let seed = args.get_u64("seed", 42);
+    let budget = args.get_usize("budget", 512);
+
+    let tasks = [
+        TaskKind::NiahSingle,
+        TaskKind::NiahMultikey2,
+        TaskKind::Qa1,
+        TaskKind::Fwe,
+        TaskKind::Vt,
+    ];
+    // Multi-turn emulation: history-based policies (H2O, SnapKV — and the
+    // irreversible-compression family generally) accumulate relevance
+    // from *past* queries. The paper's critique is exactly that relevance
+    // shifts between turns, so we warm every policy with a few unrelated
+    // queries before the scored one (stateless policies are unaffected).
+    let history_turns = args.get_usize("history", 4);
+
+    // (label, factory) — budget-matched at `budget` tokens (plus the
+    // shared 128+128 sink/window, as in the paper's protocol).
+    type Factory<'a> = Box<dyn Fn() -> Box<dyn IndexPolicy> + 'a>;
+    let abs = SizeSpec::Abs(budget);
+    let entries: Vec<(&str, Factory, usize)> = vec![
+        ("Full Model", Box::new(|| make_policy("oracle-top-p", 0.999999, seed)), 0),
+        ("Oracle(top)", Box::new(move || Box::new(OracleTopKPolicy { sink: SizeSpec::Abs(128), window: SizeSpec::Abs(128), heavy: abs })), 0),
+        ("H2O", Box::new(move || Box::new(H2OPolicy::new(abs))), 0),
+        ("StreamLLM", Box::new(move || Box::new(SinkWindowPolicy::new(128, budget))), 0),
+        ("InfLLM", Box::new(move || Box::new(HeavyHitterPolicy::new(Box::new(scorers::BlockMeanScorer::new(16)), abs))), 256),
+        ("DS", Box::new(move || Box::new(HeavyHitterPolicy::new(Box::new(scorers::DoubleSparsityScorer { channels: 8 }), abs))), 32),
+        ("Quest", Box::new(move || Box::new(HeavyHitterPolicy::new(Box::new(scorers::QuestScorer::new(16)), abs))), 32),
+        ("PQCache", Box::new(move || Box::new(HeavyHitterPolicy::new(Box::new(scorers::PqScorer::new(8, 16, seed)), abs))), 32),
+        ("HashAttention", Box::new(move || Box::new(HeavyHitterPolicy::new(Box::new(scorers::HashSignScorer::new(32, seed)), abs))), 32),
+    ];
+
+    let mut hdr: Vec<&str> = vec!["method", "aux bits/tok"];
+    hdr.extend(tasks.iter().map(|k| k.name()));
+    hdr.push("Average");
+    let mut t = Table::new(
+        &format!("Table 9: approximate-top-k family @ {budget} tokens"),
+        &hdr,
+    );
+    let mut json_rows = Vec::new();
+    let mut out = String::new();
+    for (label, factory, aux_bits) in &entries {
+        let mut scores = Vec::new();
+        for &kind in &tasks {
+            let pt = eval_task_with_history(factory.as_ref(), kind, n, d, trials, seed, history_turns);
+            scores.push(pt.quality);
+        }
+        let avg = scores.iter().sum::<f64>() / scores.len() as f64;
+        let mut row = vec![label.to_string(), aux_bits.to_string()];
+        row.extend(scores.iter().map(|&s| f(s, 1)));
+        row.push(f(avg, 2));
+        t.row(row);
+        json_rows.push(
+            Json::obj()
+                .field("method", Json::str(*label))
+                .field("scores", Json::arr_f64(scores))
+                .field("average", Json::num(avg)),
+        );
+    }
+    out.push_str(&t.render());
+    out.push_str(
+        "\npaper Table 9 averages: Full 63.6, Oracle 63.4, HashAttention 64.2,\n\
+         Quest 62.4, DS 61.9, InfLLM 48.2, H2O 43.5, StreamLLM 33.3 — expect\n\
+         the same ordering (oracle/hash near full; static patterns collapse).\n",
+    );
+
+    let json = Json::obj()
+        .field("experiment", Json::str("table9"))
+        .field("budget", Json::num(budget as f64))
+        .field("rows", Json::Arr(json_rows));
+    write_results("table9", &out, &json);
+    out
+}
+
+/// eval_task variant that feeds `history` unrelated queries to the
+/// (stateful) policy before the scored query.
+fn eval_task_with_history(
+    factory: &dyn Fn() -> Box<dyn IndexPolicy>,
+    kind: TaskKind,
+    n: usize,
+    d: usize,
+    trials: usize,
+    seed: u64,
+    history: usize,
+) -> EvalPoint {
+    use crate::attention::{dense_sdpa, sparse_sdpa};
+    use crate::util::Rng;
+    use crate::workloads::Task;
+    let task = Task::new(kind, n, d);
+    let mut rng = Rng::new(seed ^ (kind as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let (mut acc, mut den, mut err) = (0.0, 0.0, 0.0);
+    for t in 0..trials {
+        let inst = task.generate(&mut rng.fork(t as u64));
+        let exact = dense_sdpa(&inst.k, &inst.v, &inst.q_scaled).out;
+        let mut policy = factory();
+        let mut fork = rng.fork(1_000_000 + t as u64);
+        // unrelated turns: random unit queries over the same cache
+        for h in 0..history {
+            let mut q: Vec<f32> = (0..d).map(|_| fork.normal32(0.0, 1.0)).collect();
+            let qa = crate::tensor::norm2(&q);
+            for x in q.iter_mut() {
+                *x /= qa;
+            }
+            let mut ctx = PolicyCtx { k: &inst.k, v: &inst.v, q_scaled: &q, rng: &mut fork, step: h };
+            let _ = policy.select(&mut ctx);
+        }
+        let mut ctx = PolicyCtx {
+            k: &inst.k,
+            v: &inst.v,
+            q_scaled: &inst.q_scaled,
+            rng: &mut fork,
+            step: history,
+        };
+        let sel = policy.select(&mut ctx);
+        den += sel.density(inst.k.rows);
+        let approx = sparse_sdpa(&inst.k, &inst.v, &inst.q_scaled, &sel);
+        err += crate::tensor::rel_l2_error(&approx, &exact);
+        acc += inst.score(&approx);
+    }
+    let tf = trials as f64;
+    EvalPoint { density: den / tf, err: err / tf, quality: acc / tf * 100.0 }
+}

@@ -1,0 +1,214 @@
+//! KV cache management.
+//!
+//! The cache is host-resident (the paper's CPU-offload deployment): the
+//! L3 coordinator owns it, runs index selection over it, and ships only
+//! the *gathered* rows to the device. We track per-tier byte traffic so
+//! the Fig. 5 bandwidth accounting is explicit, and maintain the small
+//! auxiliary caches vAttention needs (the incremental random base-sample
+//! cache; approximate-top-k bit caches live inside their scorers).
+
+pub mod tiered;
+
+pub use tiered::{TierStats, TransferModel};
+
+use crate::model::ModelConfig;
+use crate::tensor::Mat;
+
+/// Per-(layer, head) append-only KV store.
+pub struct KvCache {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    /// layers × heads, each an (n × d_head) matrix pair.
+    k: Vec<Mat>,
+    v: Vec<Mat>,
+    /// Host→device traffic accounting.
+    pub stats: TierStats,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig) -> KvCache {
+        // One slot per (layer, KV head) — query heads share KV slots
+        // under grouped-query attention.
+        let slots = cfg.n_layers * cfg.n_kv_heads;
+        let d = cfg.d_head();
+        KvCache {
+            n_layers: cfg.n_layers,
+            n_heads: cfg.n_kv_heads,
+            d_head: d,
+            k: (0..slots).map(|_| Mat::zeros(0, d)).collect(),
+            v: (0..slots).map(|_| Mat::zeros(0, d)).collect(),
+            stats: TierStats::default(),
+        }
+    }
+
+    #[inline]
+    fn slot(&self, layer: usize, head: usize) -> usize {
+        layer * self.n_heads + head
+    }
+
+    /// Append one token's (k, v) rows for a head.
+    pub fn append(&mut self, layer: usize, head: usize, k_row: &[f32], v_row: &[f32]) {
+        let s = self.slot(layer, head);
+        debug_assert_eq!(k_row.len(), self.d_head);
+        self.k[s].data.extend_from_slice(k_row);
+        self.k[s].rows += 1;
+        self.v[s].data.extend_from_slice(v_row);
+        self.v[s].rows += 1;
+    }
+
+    /// Number of cached tokens for a layer (all heads advance together).
+    pub fn len(&self, layer: usize) -> usize {
+        self.k[self.slot(layer, 0)].rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.k.iter().all(|m| m.rows == 0)
+    }
+
+    /// Borrow a head's (K, V) matrices.
+    pub fn head(&self, layer: usize, head: usize) -> (&Mat, &Mat) {
+        let s = self.slot(layer, head);
+        (&self.k[s], &self.v[s])
+    }
+
+    /// Gather selected rows into dense (b × d) buffers — the host→device
+    /// transfer of the serving path. Also charges the byte traffic to
+    /// `stats` (2 matrices × b rows × d floats).
+    pub fn gather(&mut self, layer: usize, head: usize, idx: &[usize]) -> (Mat, Mat) {
+        let s = self.slot(layer, head);
+        let d = self.d_head;
+        let mut gk = Mat::zeros(idx.len(), d);
+        let mut gv = Mat::zeros(idx.len(), d);
+        for (j, &i) in idx.iter().enumerate() {
+            gk.row_mut(j).copy_from_slice(self.k[s].row(i));
+            gv.row_mut(j).copy_from_slice(self.v[s].row(i));
+        }
+        self.stats.record_read(2 * idx.len() * d * 4);
+        (gk, gv)
+    }
+
+    /// Total resident bytes.
+    pub fn resident_bytes(&self) -> usize {
+        self.k
+            .iter()
+            .zip(self.v.iter())
+            .map(|(k, v)| (k.data.len() + v.data.len()) * 4)
+            .sum()
+    }
+
+    /// Drop all cached tokens (end of a request).
+    pub fn clear(&mut self) {
+        for m in self.k.iter_mut().chain(self.v.iter_mut()) {
+            m.rows = 0;
+            m.data.clear();
+        }
+    }
+}
+
+/// Incrementally-maintained random cache of residual token indices (the
+/// paper's "small random cache ... incrementally populated and updated
+/// during token generation" used for on-GPU budget estimation):
+/// reservoir sampling keeps a uniform sample of all appended positions.
+pub struct RandomCache {
+    pub capacity: usize,
+    pub indices: Vec<usize>,
+    seen: usize,
+}
+
+impl RandomCache {
+    pub fn new(capacity: usize) -> RandomCache {
+        RandomCache { capacity, indices: Vec::with_capacity(capacity), seen: 0 }
+    }
+
+    /// Observe the next appended position; O(1) amortized reservoir step.
+    pub fn observe(&mut self, pos: usize, rng: &mut crate::util::Rng) {
+        self.seen += 1;
+        if self.indices.len() < self.capacity {
+            self.indices.push(pos);
+        } else {
+            let j = rng.below(self.seen);
+            if j < self.capacity {
+                self.indices[j] = pos;
+            }
+        }
+    }
+
+    pub fn seen(&self) -> usize {
+        self.seen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::tiny()
+    }
+
+    #[test]
+    fn append_and_len() {
+        let c = cfg();
+        let mut cache = KvCache::new(&c);
+        assert!(cache.is_empty());
+        let row = vec![1.0f32; c.d_head()];
+        for l in 0..c.n_layers {
+            for h in 0..c.n_heads {
+                cache.append(l, h, &row, &row);
+            }
+        }
+        assert_eq!(cache.len(0), 1);
+        assert_eq!(cache.len(1), 1);
+        assert!(!cache.is_empty());
+    }
+
+    #[test]
+    fn gather_returns_selected_rows_and_charges_bytes() {
+        let c = cfg();
+        let mut cache = KvCache::new(&c);
+        for i in 0..10 {
+            let row = vec![i as f32; c.d_head()];
+            cache.append(0, 0, &row, &row);
+        }
+        let (gk, gv) = cache.gather(0, 0, &[2, 7]);
+        assert_eq!(gk.rows, 2);
+        assert_eq!(gk.row(0)[0], 2.0);
+        assert_eq!(gv.row(1)[0], 7.0);
+        assert_eq!(cache.stats.bytes_read, 2 * 2 * c.d_head() * 4);
+    }
+
+    #[test]
+    fn resident_bytes_grows_linearly() {
+        let c = cfg();
+        let mut cache = KvCache::new(&c);
+        let row = vec![0.0f32; c.d_head()];
+        cache.append(0, 0, &row, &row);
+        let b1 = cache.resident_bytes();
+        cache.append(0, 0, &row, &row);
+        assert_eq!(cache.resident_bytes(), 2 * b1);
+        cache.clear();
+        assert_eq!(cache.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn reservoir_is_uniformish() {
+        let mut rng = Rng::new(1);
+        let cap = 100;
+        let n = 10_000;
+        // Count how often position < 5000 is retained across trials.
+        let mut lows = 0usize;
+        for t in 0..50 {
+            let mut rc = RandomCache::new(cap);
+            let mut fork = rng.fork(t);
+            for p in 0..n {
+                rc.observe(p, &mut fork);
+            }
+            assert_eq!(rc.indices.len(), cap);
+            lows += rc.indices.iter().filter(|&&p| p < n / 2).count();
+        }
+        let frac = lows as f64 / (50.0 * cap as f64);
+        assert!((frac - 0.5).abs() < 0.05, "frac={frac}");
+    }
+}

@@ -1,0 +1,76 @@
+//! Two-tier KV placement accounting + the bandwidth transfer model used
+//! to extrapolate Fig. 5 to 8B-scale shapes.
+
+/// Byte-traffic counters for the host (CPU RAM) tier.
+#[derive(Clone, Debug, Default)]
+pub struct TierStats {
+    /// Bytes gathered/read from the host-resident cache.
+    pub bytes_read: usize,
+    /// Number of gather operations.
+    pub reads: usize,
+}
+
+impl TierStats {
+    pub fn record_read(&mut self, bytes: usize) {
+        self.bytes_read += bytes;
+        self.reads += 1;
+    }
+
+    pub fn reset(&mut self) {
+        *self = TierStats::default();
+    }
+}
+
+/// A simple bandwidth/latency model for KV traffic: t = bytes/BW + c·ops.
+/// Defaults approximate a PCIe-4.0 x16 host→GPU link (the paper's
+/// CPU-offloaded serving deployment) — see DESIGN.md §3.
+#[derive(Clone, Debug)]
+pub struct TransferModel {
+    /// Sustained bandwidth, bytes/second.
+    pub bandwidth: f64,
+    /// Fixed per-transfer overhead, seconds.
+    pub overhead: f64,
+}
+
+impl Default for TransferModel {
+    fn default() -> Self {
+        TransferModel { bandwidth: 24e9, overhead: 8e-6 }
+    }
+}
+
+impl TransferModel {
+    pub fn transfer_time(&self, bytes: usize, ops: usize) -> f64 {
+        bytes as f64 / self.bandwidth + ops as f64 * self.overhead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s = TierStats::default();
+        s.record_read(100);
+        s.record_read(50);
+        assert_eq!(s.bytes_read, 150);
+        assert_eq!(s.reads, 2);
+        s.reset();
+        assert_eq!(s.bytes_read, 0);
+    }
+
+    #[test]
+    fn transfer_time_linear_in_bytes() {
+        let m = TransferModel { bandwidth: 1e9, overhead: 0.0 };
+        assert!((m.transfer_time(1_000_000_000, 0) - 1.0).abs() < 1e-12);
+        let t_half = m.transfer_time(500_000_000, 0);
+        assert!((t_half - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overhead_counts_ops() {
+        let m = TransferModel { bandwidth: 1e12, overhead: 1e-5 };
+        let t = m.transfer_time(0, 10);
+        assert!((t - 1e-4).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,32 @@
+//! # vAttention: Verified Sparse Attention — reproduction library
+//!
+//! A three-layer reproduction of "vAttention: Verified Sparse Attention"
+//! (Desai, Agrawal, et al., 2025):
+//!
+//! * **L3 (this crate)** — the serving coordinator: KV cache management,
+//!   index-selection policies (vAttention + all evaluated baselines),
+//!   the verified budget machinery, a continuous-batching engine, and
+//!   the experiment harness reproducing every table/figure.
+//! * **L2** — `python/compile/model.py`: JAX transformer blocks lowered
+//!   AOT to HLO text under `artifacts/`, executed from rust via PJRT.
+//! * **L1** — `python/compile/kernels/`: Pallas kernels (sparse SDPA with
+//!   importance weights, dense SDPA), validated against pure-jnp oracles.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod attention;
+pub mod budget;
+pub mod experiments;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod policies;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod tensor;
+pub mod workloads;
+pub mod util;
+
+pub fn version() -> &'static str { "0.1.0" }

@@ -1,0 +1,128 @@
+//! `vattn` — the command-line entry point.
+//!
+//! Subcommands:
+//!   exp <id> [--n N] [--trials T] [--seed S] [--quick]   run an experiment (or `all`)
+//!   list                                                  list experiments
+//!   serve [--model tiny|small] [--mode dense|vattention] [--requests R]
+//!                                                         run the serving engine on a trace
+//!   info                                                  build/config info
+
+use vattn::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "list" => {
+            println!("experiments:");
+            for (id, desc, _) in vattn::experiments::registry() {
+                println!("  {id:<12} {desc}");
+            }
+        }
+        "exp" => {
+            let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+            match vattn::experiments::run(id, &args) {
+                Ok(out) => println!("{out}"),
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        "serve" => {
+            if let Err(e) = serve(&args) {
+                eprintln!("error: {e:#}");
+                std::process::exit(2);
+            }
+        }
+        "info" => {
+            println!(
+                "vattn {} — vAttention: Verified Sparse Attention (reproduction)",
+                vattn::version()
+            );
+            println!("experiments: {}", vattn::experiments::registry().len());
+            println!("budget buckets: {:?}", vattn::runtime::BUDGET_BUCKETS);
+        }
+        _ => {
+            println!("usage: vattn <list|exp <id>|serve|info> [options]");
+            println!("  vattn exp all --quick          run every experiment (reduced trials)");
+            println!("  vattn exp table1 --trials 20   single experiment");
+            println!("  vattn serve --mode vattention  engine demo on a synthetic trace");
+        }
+    }
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    use vattn::model::{Model, ModelConfig, Sampler};
+    use vattn::server::{AttentionMode, Engine, EngineConfig, Request};
+    use vattn::util::Rng;
+    use vattn::workloads::traces::{generate_trace, TraceConfig};
+
+    let model_name = args.get_str("model", "tiny");
+    let cfg = ModelConfig::by_name(model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model_name}'"))?;
+    let mode_name = args.get_str("mode", "vattention");
+    let n_req = args.get_usize("requests", 8);
+    let seed = args.get_u64("seed", 42);
+
+    let trace_cfg = TraceConfig {
+        num_requests: n_req,
+        context_min: args.get_usize("ctx-min", 128),
+        context_max: args.get_usize("ctx-max", 512),
+        gen_min: 8,
+        gen_max: 32,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(seed);
+    let trace = generate_trace(&trace_cfg, &mut rng);
+    let requests: Vec<Request> = trace
+        .iter()
+        .map(|t| {
+            let prompt: Vec<u32> =
+                (0..t.context_len as u32).map(|i| (i * 31 + t.id as u32) % 250).collect();
+            Request::new(t.id, prompt, t.gen_len)
+        })
+        .collect();
+
+    let mode = match mode_name {
+        "dense" => AttentionMode::Dense,
+        "vattention" => AttentionMode::Sparse(Box::new(|_l, _h| {
+            Box::new(vattn::policies::VAttentionPolicy::oracle(
+                vattn::experiments::common::vcfg(0.1),
+            ))
+        })),
+        other => anyhow::bail!("unknown mode '{other}' (dense|vattention)"),
+    };
+
+    let engine = Engine::new(
+        Model::new(cfg, seed),
+        EngineConfig { max_batch: args.get_usize("max-batch", 4), sampler: Sampler::Greedy, seed },
+    );
+    let t0 = std::time::Instant::now();
+    let results = engine.serve(requests, &mode)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let total_tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
+    let mean_density: f64 =
+        results.iter().map(|r| r.mean_density).sum::<f64>() / results.len() as f64;
+    let total_bytes: usize = results.iter().map(|r| r.kv_bytes_read).sum();
+    println!(
+        "served {} requests, {} tokens in {:.2}s ({:.1} tok/s)",
+        results.len(),
+        total_tokens,
+        wall,
+        total_tokens as f64 / wall
+    );
+    println!("mode={mode_name} mean decode density={mean_density:.3} kv bytes read={total_bytes}");
+    for r in &results {
+        println!(
+            "  req {:>3}: {} tokens, ttft {:>7.1}ms, decode {:>7.1}ms, density {:.3}",
+            r.id,
+            r.tokens.len(),
+            r.ttft_s * 1e3,
+            r.decode_s * 1e3,
+            r.mean_density
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! Model configuration. Mirrors `python/compile/model.py::ModelConfig` —
+//! the shapes must agree with the AOT artifacts the rust runtime loads.
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub d_model: usize,
+    pub n_heads: usize,
+    /// KV heads for grouped-query attention; must divide `n_heads`.
+    /// Equal to `n_heads` for plain multi-head attention.
+    pub n_kv_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+}
+
+impl ModelConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Query heads per KV head (GQA group size).
+    pub fn gqa_group(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    /// Map a query head to its KV head.
+    pub fn kv_head_of(&self, q_head: usize) -> usize {
+        q_head / self.gqa_group()
+    }
+
+    /// Test-sized model (matches python `ModelConfig.tiny()`).
+    pub fn tiny() -> ModelConfig {
+        ModelConfig { d_model: 64, n_heads: 2, n_kv_heads: 2, n_layers: 2, d_ff: 128, vocab: 256 }
+    }
+
+    /// Tiny GQA variant: 4 query heads sharing 2 KV heads.
+    pub fn tiny_gqa() -> ModelConfig {
+        ModelConfig { d_model: 64, n_heads: 4, n_kv_heads: 2, n_layers: 2, d_ff: 128, vocab: 256 }
+    }
+
+    /// End-to-end serving example (~26M params; python `small()`).
+    pub fn small() -> ModelConfig {
+        ModelConfig { d_model: 512, n_heads: 8, n_kv_heads: 8, n_layers: 8, d_ff: 1408, vocab: 8192 }
+    }
+
+    /// Llama-3-8B *shape* (for latency extrapolation only — weights are
+    /// never materialized at this size; see `sim::memory_model`). GQA:
+    /// 32 query heads over 8 KV heads, like the real model.
+    pub fn llama8b_shape() -> ModelConfig {
+        ModelConfig {
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_heads: 8,
+            n_layers: 32,
+            d_ff: 14336,
+            vocab: 128256,
+        }
+    }
+
+    /// KV cache bytes per token (f32 here; the paper's fp16 halves this —
+    /// the *ratios* Fig. 5 cares about are unaffected).
+    pub fn kv_bytes_per_token(&self) -> usize {
+        2 * self.n_kv_heads * self.d_head() * 4 * self.n_layers
+    }
+
+    /// Parse from a CLI name.
+    pub fn by_name(name: &str) -> Option<ModelConfig> {
+        match name {
+            "tiny" => Some(Self::tiny()),
+            "small" => Some(Self::small()),
+            "llama8b-shape" => Some(Self::llama8b_shape()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heads_divide_model_dim() {
+        for cfg in [ModelConfig::tiny(), ModelConfig::small(), ModelConfig::llama8b_shape()] {
+            assert_eq!(cfg.d_model % cfg.n_heads, 0);
+            assert!(cfg.d_head() >= 16);
+        }
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert_eq!(ModelConfig::by_name("tiny"), Some(ModelConfig::tiny()));
+        assert!(ModelConfig::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn kv_bytes_llama_shape() {
+        // GQA: 2 * 8 kv-heads * 128 * 4B * 32 layers = 256 KiB/token f32.
+        assert_eq!(ModelConfig::llama8b_shape().kv_bytes_per_token(), 256 << 10);
+    }
+
+    #[test]
+    fn gqa_head_mapping() {
+        let cfg = ModelConfig::llama8b_shape();
+        assert_eq!(cfg.gqa_group(), 4);
+        assert_eq!(cfg.kv_head_of(0), 0);
+        assert_eq!(cfg.kv_head_of(3), 0);
+        assert_eq!(cfg.kv_head_of(4), 1);
+        assert_eq!(cfg.kv_head_of(31), 7);
+    }
+}

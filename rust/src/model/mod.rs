@@ -1,0 +1,313 @@
+//! Rust-native reference transformer.
+//!
+//! Mirrors `python/compile/model.py` op-for-op (RMSNorm, RoPE, SwiGLU,
+//! tied LM head) so the PJRT-executed artifacts can be validated against
+//! a pure-rust forward pass, and so the engine has a host-side compute
+//! path when PJRT is not wanted (most experiments only need attention
+//! math, not the full model).
+
+pub mod config;
+pub mod sampler;
+pub mod weights;
+
+pub use config::ModelConfig;
+pub use sampler::Sampler;
+pub use weights::{LayerWeights, Weights};
+
+use crate::attention::Selection;
+use crate::kvcache::KvCache;
+use crate::tensor::Mat;
+
+/// RMSNorm matching `model.rmsnorm` (eps = 1e-5).
+pub fn rmsnorm(x: &[f32], w: &[f32]) -> Vec<f32> {
+    let d = x.len();
+    let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / d as f32;
+    let inv = 1.0 / (ms + 1e-5).sqrt();
+    x.iter().zip(w.iter()).map(|(&xv, &wv)| xv * inv * wv).collect()
+}
+
+/// Rotary phases for a position: (cos, sin), each of length d_head/2.
+pub fn rope_phases(pos: usize, d_head: usize) -> (Vec<f32>, Vec<f32>) {
+    let half = d_head / 2;
+    let mut cos = Vec::with_capacity(half);
+    let mut sin = Vec::with_capacity(half);
+    for i in 0..half {
+        let inv = 1.0f32 / 10000f32.powf(i as f32 / half as f32);
+        let ang = pos as f32 * inv;
+        cos.push(ang.cos());
+        sin.push(ang.sin());
+    }
+    (cos, sin)
+}
+
+/// Apply RoPE in the split layout used by the python model:
+/// (x1, x2) -> (x1·cos − x2·sin, x1·sin + x2·cos).
+pub fn apply_rope(x: &mut [f32], cos: &[f32], sin: &[f32]) {
+    let half = x.len() / 2;
+    for i in 0..half {
+        let a = x[i];
+        let b = x[half + i];
+        x[i] = a * cos[i] - b * sin[i];
+        x[half + i] = a * sin[i] + b * cos[i];
+    }
+}
+
+/// Per-step output of a decode step.
+pub struct StepOut {
+    pub logits: Vec<f32>,
+    /// Mean selection density across (layer, head) for this step (1.0 for
+    /// dense).
+    pub mean_density: f64,
+}
+
+/// The rust-native model: weights + forward passes.
+pub struct Model {
+    pub cfg: ModelConfig,
+    pub w: Weights,
+}
+
+impl Model {
+    pub fn new(cfg: ModelConfig, seed: u64) -> Model {
+        let w = Weights::generate(&cfg, seed);
+        Model { cfg, w }
+    }
+
+    /// Embed a token (row of the tied embedding).
+    pub fn embed(&self, token: u32) -> Vec<f32> {
+        self.w.w_emb.row(token as usize % self.cfg.vocab).to_vec()
+    }
+
+    /// One dense decode step: append (k, v) for `token` at `pos` into
+    /// `cache` and return logits. `select` chooses attention indices per
+    /// (layer, head); `None` = dense attention.
+    pub fn decode_step(
+        &self,
+        token: u32,
+        pos: usize,
+        cache: &mut KvCache,
+        mut select: Option<&mut dyn FnMut(usize, usize, &Mat, &Mat, &[f32]) -> Selection>,
+    ) -> StepOut {
+        let cfg = &self.cfg;
+        let (h, dh) = (cfg.n_heads, cfg.d_head());
+        let scale = 1.0 / (dh as f32).sqrt();
+        let (cos, sin) = rope_phases(pos, dh);
+        let mut x = self.embed(token);
+        let mut densities: Vec<f64> = Vec::new();
+
+        for l in 0..cfg.n_layers {
+            let lw = &self.w.layers[l];
+            // ── attention sub-block ──
+            let xn = rmsnorm(&x, &lw.w_ln_attn);
+            let q_flat = Mat::from_vec(1, cfg.d_model, xn.clone()).matmul(&lw.wq);
+            let k_flat = Mat::from_vec(1, cfg.d_model, xn.clone()).matmul(&lw.wk);
+            let v_flat = Mat::from_vec(1, cfg.d_model, xn).matmul(&lw.wv);
+            // GQA: one (k, v) append per KV head; query heads share them.
+            for kvh in 0..cfg.n_kv_heads {
+                let mut kh = k_flat.data[kvh * dh..(kvh + 1) * dh].to_vec();
+                let vh = &v_flat.data[kvh * dh..(kvh + 1) * dh];
+                apply_rope(&mut kh, &cos, &sin);
+                cache.append(l, kvh, &kh, vh);
+            }
+            let mut attn_concat = vec![0.0f32; cfg.d_model];
+            for head in 0..h {
+                let mut qh = q_flat.data[head * dh..(head + 1) * dh].to_vec();
+                apply_rope(&mut qh, &cos, &sin);
+                for qv in qh.iter_mut() {
+                    *qv *= scale;
+                }
+                let kv_head = cfg.kv_head_of(head);
+                let (out, rows_read) = {
+                    let (kc, vc) = cache.head(l, kv_head);
+                    match select.as_mut() {
+                        Some(f) => {
+                            let sel = f(l, head, kc, vc, &qh);
+                            densities.push(sel.density(kc.rows));
+                            (crate::attention::sparse_sdpa(kc, vc, &qh, &sel), sel.len())
+                        }
+                        None => {
+                            densities.push(1.0);
+                            (crate::attention::dense_sdpa(kc, vc, &qh).out, kc.rows)
+                        }
+                    }
+                };
+                // Charge the host-tier read traffic (K and V rows touched).
+                cache.stats.record_read(2 * rows_read * dh * 4);
+                attn_concat[head * dh..(head + 1) * dh].copy_from_slice(&out);
+            }
+            let attn_out = lw.wo.vecmat(&attn_concat);
+            for (xi, &ai) in x.iter_mut().zip(attn_out.iter()) {
+                *xi += ai;
+            }
+            // ── ffn sub-block ──
+            let xn = rmsnorm(&x, &lw.w_ln_ffn);
+            let g = lw.w_gate.vecmat(&xn);
+            let u = lw.w_up.vecmat(&xn);
+            let act: Vec<f32> = g
+                .iter()
+                .zip(u.iter())
+                .map(|(&gv, &uv)| gv / (1.0 + (-gv).exp()) * uv)
+                .collect();
+            let ffn_out = lw.w_down.vecmat(&act);
+            for (xi, &fi) in x.iter_mut().zip(ffn_out.iter()) {
+                *xi += fi;
+            }
+        }
+
+        let xn = rmsnorm(&x, &self.w.w_ln_f);
+        let logits = self.w.w_emb.matvec(&xn);
+        let mean_density = if densities.is_empty() {
+            1.0
+        } else {
+            densities.iter().sum::<f64>() / densities.len() as f64
+        };
+        StepOut { logits, mean_density }
+    }
+
+    /// Prefill: run `tokens` through the model densely, filling `cache`.
+    /// Returns the logits after the last token.
+    pub fn prefill(&self, tokens: &[u32], cache: &mut KvCache) -> StepOut {
+        let mut last = StepOut { logits: vec![], mean_density: 1.0 };
+        for (pos, &t) in tokens.iter().enumerate() {
+            last = self.decode_step(t, pos, cache, None);
+        }
+        last
+    }
+
+    /// Parameter count (for reporting).
+    pub fn param_count(&self) -> usize {
+        let c = &self.cfg;
+        let per_layer = 2 * c.d_model // norms
+            + 4 * c.d_model * c.d_model // q,k,v,o
+            + 2 * c.d_model * c.d_ff + c.d_ff * c.d_model; // gate,up,down
+        c.n_layers * per_layer + c.d_model + c.vocab * c.d_model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn rmsnorm_matches_definition() {
+        let x = vec![3.0, -4.0];
+        let out = rmsnorm(&x, &[1.0, 1.0]);
+        let rms = (out.iter().map(|v| v * v).sum::<f32>() / 2.0).sqrt();
+        assert!((rms - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rope_zero_position_is_identity() {
+        let (cos, sin) = rope_phases(0, 8);
+        let mut x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let orig = x.clone();
+        apply_rope(&mut x, &cos, &sin);
+        for (a, b) in x.iter().zip(orig.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let (cos, sin) = rope_phases(13, 16);
+        let mut rng = Rng::new(1);
+        let mut x: Vec<f32> = (0..16).map(|_| rng.normal32(0.0, 1.0)).collect();
+        let n0 = crate::tensor::norm2(&x);
+        apply_rope(&mut x, &cos, &sin);
+        assert!((crate::tensor::norm2(&x) - n0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rope_relative_inner_product() {
+        let dh = 16;
+        let mut rng = Rng::new(2);
+        let q: Vec<f32> = (0..dh).map(|_| rng.normal32(0.0, 1.0)).collect();
+        let k: Vec<f32> = (0..dh).map(|_| rng.normal32(0.0, 1.0)).collect();
+        let ip = |m: usize, n: usize| {
+            let (cm, sm) = rope_phases(m, dh);
+            let (cn, sn) = rope_phases(n, dh);
+            let mut qq = q.clone();
+            let mut kk = k.clone();
+            apply_rope(&mut qq, &cm, &sm);
+            apply_rope(&mut kk, &cn, &sn);
+            crate::tensor::dot(&qq, &kk)
+        };
+        assert!((ip(5, 3) - ip(9, 7)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn decode_step_shapes_and_determinism() {
+        let cfg = ModelConfig::tiny();
+        let model = Model::new(cfg.clone(), 42);
+        let mut c1 = KvCache::new(&cfg);
+        let mut c2 = KvCache::new(&cfg);
+        let a = model.decode_step(5, 0, &mut c1, None);
+        let b = model.decode_step(5, 0, &mut c2, None);
+        assert_eq!(a.logits.len(), cfg.vocab);
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(c1.len(0), 1);
+    }
+
+    #[test]
+    fn prefill_grows_cache() {
+        let cfg = ModelConfig::tiny();
+        let model = Model::new(cfg.clone(), 42);
+        let mut cache = KvCache::new(&cfg);
+        let out = model.prefill(&[1, 2, 3, 4], &mut cache);
+        assert_eq!(cache.len(0), 4);
+        assert_eq!(out.logits.len(), cfg.vocab);
+    }
+
+    #[test]
+    fn dense_selection_equals_dense_path() {
+        // A selector that picks everything must reproduce dense logits.
+        let cfg = ModelConfig::tiny();
+        let model = Model::new(cfg.clone(), 7);
+        let mut c1 = KvCache::new(&cfg);
+        let mut c2 = KvCache::new(&cfg);
+        model.prefill(&[1, 2, 3], &mut c1);
+        model.prefill(&[1, 2, 3], &mut c2);
+        let dense = model.decode_step(4, 3, &mut c1, None);
+        let mut select_all = |_l: usize, _h: usize, k: &Mat, _v: &Mat, _q: &[f32]| {
+            Selection::deterministic((0..k.rows).collect())
+        };
+        let sparse = model.decode_step(4, 3, &mut c2, Some(&mut select_all));
+        let err = crate::tensor::rel_l2_error(&sparse.logits, &dense.logits);
+        assert!(err < 1e-5, "err={err}");
+        assert!((sparse.mean_density - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn param_count_small_is_tens_of_millions() {
+        let m = Model::new(ModelConfig::small(), 1);
+        let p = m.param_count();
+        assert!(p > 20_000_000 && p < 60_000_000, "params={p}");
+    }
+
+    #[test]
+    fn gqa_model_runs_and_shares_kv_heads() {
+        let cfg = ModelConfig::tiny_gqa();
+        let model = Model::new(cfg.clone(), 11);
+        let mut cache = KvCache::new(&cfg);
+        let out = model.prefill(&[1, 2, 3, 4, 5], &mut cache);
+        assert_eq!(out.logits.len(), cfg.vocab);
+        // cache has n_kv_heads slots per layer, each with 5 rows
+        assert_eq!(cache.n_heads, cfg.n_kv_heads);
+        assert_eq!(cache.len(0), 5);
+        let (k0, _) = cache.head(0, 0);
+        let (k1, _) = cache.head(0, 1);
+        assert_eq!(k0.rows, 5);
+        assert_ne!(k0.data, k1.data);
+    }
+
+    #[test]
+    fn gqa_equals_mha_when_groups_are_one() {
+        // n_kv_heads == n_heads must reproduce the plain MHA path.
+        let cfg = ModelConfig::tiny();
+        assert_eq!(cfg.gqa_group(), 1);
+        let model = Model::new(cfg.clone(), 5);
+        let mut c = KvCache::new(&cfg);
+        let out = model.decode_step(9, 0, &mut c, None);
+        assert!(out.logits.iter().all(|x| x.is_finite()));
+    }
+}

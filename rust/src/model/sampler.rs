@@ -1,0 +1,77 @@
+//! Token sampling for the generation loop: greedy or temperature.
+
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub enum Sampler {
+    Greedy,
+    Temperature(f32),
+}
+
+impl Sampler {
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> u32 {
+        match self {
+            Sampler::Greedy => argmax(logits) as u32,
+            Sampler::Temperature(t) => {
+                let mut probs: Vec<f32> = logits.iter().map(|&l| l / t).collect();
+                crate::tensor::softmax_inplace(&mut probs);
+                let r = rng.f32();
+                let mut cum = 0.0f32;
+                for (i, &p) in probs.iter().enumerate() {
+                    cum += p;
+                    if r < cum {
+                        return i as u32;
+                    }
+                }
+                (probs.len() - 1) as u32
+            }
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > best_v {
+            best_v = x;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let mut rng = Rng::new(1);
+        let s = Sampler::Greedy;
+        assert_eq!(s.sample(&[0.1, 3.0, 0.5], &mut rng), 1);
+    }
+
+    #[test]
+    fn temperature_respects_distribution() {
+        let mut rng = Rng::new(2);
+        let s = Sampler::Temperature(1.0);
+        // one dominant logit: should be picked almost always
+        let mut hits = 0;
+        for _ in 0..200 {
+            if s.sample(&[0.0, 10.0, 0.0], &mut rng) == 1 {
+                hits += 1;
+            }
+        }
+        assert!(hits > 190);
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let mut rng = Rng::new(3);
+        let s = Sampler::Temperature(0.01);
+        for _ in 0..50 {
+            assert_eq!(s.sample(&[1.0, 1.2, 0.8], &mut rng), 1);
+        }
+    }
+}

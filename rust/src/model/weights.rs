@@ -1,0 +1,98 @@
+//! Seeded synthetic weight generation. The paper serves pretrained
+//! checkpoints; this environment has none (DESIGN.md §3), so weights are
+//! Gaussian with transformer-standard scales — enough to exercise every
+//! compute path with realistic magnitudes and full determinism.
+
+use super::ModelConfig;
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+/// One transformer layer's weights (shapes match the AOT artifacts).
+pub struct LayerWeights {
+    pub w_ln_attn: Vec<f32>,
+    pub wq: Mat,
+    pub wk: Mat,
+    pub wv: Mat,
+    pub wo: Mat,
+    pub w_ln_ffn: Vec<f32>,
+    pub w_gate: Mat,
+    pub w_up: Mat,
+    pub w_down: Mat,
+}
+
+pub struct Weights {
+    pub layers: Vec<LayerWeights>,
+    pub w_ln_f: Vec<f32>,
+    /// Tied embedding / LM head, [vocab × d_model].
+    pub w_emb: Mat,
+}
+
+impl Weights {
+    pub fn generate(cfg: &ModelConfig, seed: u64) -> Weights {
+        let mut rng = Rng::new(seed);
+        let d = cfg.d_model;
+        let f = cfg.d_ff;
+        // 1/sqrt(d) init keeps activations O(1) through depth.
+        let s_attn = 1.0 / (d as f32).sqrt();
+        let s_ffn = 1.0 / (f as f32).sqrt();
+        // GQA: K/V projections emit n_kv_heads * d_head columns.
+        let d_kv = cfg.n_kv_heads * cfg.d_head();
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                w_ln_attn: ln_weight(d, &mut rng),
+                wq: Mat::randn(d, d, s_attn, &mut rng),
+                wk: Mat::randn(d, d_kv, s_attn, &mut rng),
+                wv: Mat::randn(d, d_kv, s_attn, &mut rng),
+                wo: Mat::randn(d, d, s_attn, &mut rng),
+                w_ln_ffn: ln_weight(d, &mut rng),
+                w_gate: Mat::randn(d, f, s_attn, &mut rng),
+                w_up: Mat::randn(d, f, s_attn, &mut rng),
+                w_down: Mat::randn(f, d, s_ffn, &mut rng),
+            })
+            .collect();
+        Weights {
+            layers,
+            w_ln_f: ln_weight(d, &mut rng),
+            w_emb: Mat::randn(cfg.vocab, d, 1.0, &mut rng),
+        }
+    }
+}
+
+fn ln_weight(d: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..d).map(|_| 1.0 + rng.normal32(0.0, 0.02)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = ModelConfig::tiny();
+        let a = Weights::generate(&cfg, 3);
+        let b = Weights::generate(&cfg, 3);
+        assert_eq!(a.layers[0].wq.data, b.layers[0].wq.data);
+        assert_eq!(a.w_emb.data, b.w_emb.data);
+        let c = Weights::generate(&cfg, 4);
+        assert_ne!(a.layers[0].wq.data, c.layers[0].wq.data);
+    }
+
+    #[test]
+    fn shapes_match_config() {
+        let cfg = ModelConfig::tiny();
+        let w = Weights::generate(&cfg, 1);
+        assert_eq!(w.layers.len(), cfg.n_layers);
+        assert_eq!(w.layers[0].wq.rows, cfg.d_model);
+        assert_eq!(w.layers[0].w_gate.cols, cfg.d_ff);
+        assert_eq!(w.w_emb.rows, cfg.vocab);
+    }
+
+    #[test]
+    fn ln_weights_near_one() {
+        let cfg = ModelConfig::tiny();
+        let w = Weights::generate(&cfg, 2);
+        for &x in &w.layers[0].w_ln_attn {
+            assert!((x - 1.0).abs() < 0.2);
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! Deterministic heavy-hitter policies: StreamingLLM sink+window, the
+//! generic scorer-driven approximate-top-k policy (wrapping any
+//! `TopkScorer`), and the history-based H2O / SnapKV baselines.
+
+use super::scorers::TopkScorer;
+use super::{sink_window_indices, top_indices_excluding, IndexPolicy, PolicyCtx, SizeSpec};
+use crate::attention::Selection;
+
+/// StreamingLLM: attention sinks + sliding window, nothing else.
+pub struct SinkWindowPolicy {
+    pub sink: SizeSpec,
+    pub window: SizeSpec,
+}
+
+impl SinkWindowPolicy {
+    pub fn new(sink: usize, window: usize) -> Self {
+        SinkWindowPolicy { sink: SizeSpec::Abs(sink), window: SizeSpec::Abs(window) }
+    }
+}
+
+impl IndexPolicy for SinkWindowPolicy {
+    fn name(&self) -> String {
+        "streaming-llm".into()
+    }
+    fn select(&mut self, ctx: &mut PolicyCtx) -> Selection {
+        let n = ctx.n();
+        Selection::deterministic(sink_window_indices(
+            n,
+            self.sink.resolve(n),
+            self.window.resolve(n),
+        ))
+    }
+}
+
+/// Generic approximate-top-k policy: sink + window + the `heavy` highest
+/// tokens according to a pluggable scorer (HashAttention, DoubleSparsity,
+/// Quest, PQCache, InfLLM, or the oracle). Deterministic attention.
+pub struct HeavyHitterPolicy {
+    pub sink: SizeSpec,
+    pub window: SizeSpec,
+    pub heavy: SizeSpec,
+    pub scorer: Box<dyn TopkScorer>,
+}
+
+impl HeavyHitterPolicy {
+    pub fn new(scorer: Box<dyn TopkScorer>, heavy: SizeSpec) -> Self {
+        HeavyHitterPolicy { sink: SizeSpec::Abs(128), window: SizeSpec::Abs(128), heavy, scorer }
+    }
+}
+
+impl IndexPolicy for HeavyHitterPolicy {
+    fn name(&self) -> String {
+        self.scorer.name()
+    }
+
+    fn select(&mut self, ctx: &mut PolicyCtx) -> Selection {
+        let n = ctx.n();
+        let fixed = sink_window_indices(n, self.sink.resolve(n), self.window.resolve(n));
+        let scores = self.scorer.score(ctx);
+        let mut idx = fixed;
+        let top = top_indices_excluding(&scores, self.heavy.resolve(n), &idx);
+        idx.extend(top);
+        idx.sort_unstable();
+        Selection::deterministic(idx)
+    }
+
+    fn reset(&mut self) {
+        self.scorer.reset();
+    }
+}
+
+/// H2O: heavy-hitter oracle via *accumulated* attention scores across the
+/// queries seen so far. Irreversible in spirit — once a token has low
+/// accumulated mass it keeps losing — which is exactly the failure mode
+/// the paper calls out for multi-turn relevance shifts.
+pub struct H2OPolicy {
+    pub window: SizeSpec,
+    pub heavy: SizeSpec,
+    acc: Vec<f64>,
+}
+
+impl H2OPolicy {
+    pub fn new(heavy: SizeSpec) -> Self {
+        H2OPolicy { window: SizeSpec::Abs(128), heavy, acc: Vec::new() }
+    }
+}
+
+impl IndexPolicy for H2OPolicy {
+    fn name(&self) -> String {
+        "h2o".into()
+    }
+
+    fn select(&mut self, ctx: &mut PolicyCtx) -> Selection {
+        let n = ctx.n();
+        // Accumulate current query's exact attention scores into history.
+        let scores = crate::attention::attention_scores(ctx.k, ctx.q_scaled);
+        if self.acc.len() < n {
+            self.acc.resize(n, 0.0);
+        }
+        for (a, &s) in self.acc.iter_mut().zip(scores.iter()) {
+            *a += s as f64;
+        }
+        let window = sink_window_indices(n, 0, self.window.resolve(n));
+        let acc32: Vec<f32> = self.acc.iter().map(|&x| x as f32).collect();
+        let mut idx = window;
+        let top = top_indices_excluding(&acc32, self.heavy.resolve(n), &idx);
+        idx.extend(top);
+        idx.sort_unstable();
+        Selection::deterministic(idx)
+    }
+
+    fn reset(&mut self) {
+        self.acc.clear();
+    }
+}
+
+/// SnapKV: selection driven by attention pooled over an observation
+/// window of the most recent queries.
+pub struct SnapKvPolicy {
+    pub window: SizeSpec,
+    pub heavy: SizeSpec,
+    pub obs_window: usize,
+    recent_scores: std::collections::VecDeque<Vec<f32>>,
+}
+
+impl SnapKvPolicy {
+    pub fn new(heavy: SizeSpec, obs_window: usize) -> Self {
+        SnapKvPolicy {
+            window: SizeSpec::Abs(128),
+            heavy,
+            obs_window,
+            recent_scores: Default::default(),
+        }
+    }
+}
+
+impl IndexPolicy for SnapKvPolicy {
+    fn name(&self) -> String {
+        "snapkv".into()
+    }
+
+    fn select(&mut self, ctx: &mut PolicyCtx) -> Selection {
+        let n = ctx.n();
+        let scores = crate::attention::attention_scores(ctx.k, ctx.q_scaled);
+        self.recent_scores.push_back(scores);
+        while self.recent_scores.len() > self.obs_window {
+            self.recent_scores.pop_front();
+        }
+        // Average-pool scores over the observation window (ragged lengths:
+        // older score vectors are shorter; missing entries count as 0).
+        let mut pooled = vec![0.0f32; n];
+        for s in &self.recent_scores {
+            for (p, &x) in pooled.iter_mut().zip(s.iter()) {
+                *p += x;
+            }
+        }
+        let inv = 1.0 / self.recent_scores.len() as f32;
+        for p in pooled.iter_mut() {
+            *p *= inv;
+        }
+        let window = sink_window_indices(n, 0, self.window.resolve(n));
+        let mut idx = window;
+        let top = top_indices_excluding(&pooled, self.heavy.resolve(n), &idx);
+        idx.extend(top);
+        idx.sort_unstable();
+        Selection::deterministic(idx)
+    }
+
+    fn reset(&mut self) {
+        self.recent_scores.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::scorers::{HashSignScorer, OracleScorer};
+    use crate::tensor::Mat;
+    use crate::util::Rng;
+
+    fn fixture(n: usize, d: usize, seed: u64) -> (Mat, Mat, Vec<f32>, Rng) {
+        let mut rng = Rng::new(seed);
+        let k = Mat::randn(n, d, 1.0, &mut rng);
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+        let q: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 1.0) / (d as f32).sqrt()).collect();
+        (k, v, q, rng)
+    }
+
+    #[test]
+    fn sink_window_policy_is_static() {
+        let (k, v, q, mut rng) = fixture(500, 16, 1);
+        let mut pol = SinkWindowPolicy::new(4, 8);
+        let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 };
+        let sel = pol.select(&mut ctx);
+        assert_eq!(sel.len(), 12);
+        assert!(sel.validate(500).is_ok());
+    }
+
+    #[test]
+    fn heavy_policy_with_oracle_matches_oracle_topk() {
+        let (k, v, q, mut rng) = fixture(600, 16, 2);
+        let mut a = HeavyHitterPolicy {
+            sink: SizeSpec::Abs(8),
+            window: SizeSpec::Abs(8),
+            heavy: SizeSpec::Abs(32),
+            scorer: Box::new(OracleScorer),
+        };
+        let mut b = crate::policies::OracleTopKPolicy {
+            sink: SizeSpec::Abs(8),
+            window: SizeSpec::Abs(8),
+            heavy: SizeSpec::Abs(32),
+        };
+        let sa = {
+            let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 };
+            a.select(&mut ctx)
+        };
+        let sb = {
+            let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 };
+            b.select(&mut ctx)
+        };
+        assert_eq!(sa.idx, sb.idx);
+    }
+
+    #[test]
+    fn heavy_policy_hash_valid_and_budgeted() {
+        let (k, v, q, mut rng) = fixture(512, 32, 3);
+        let mut pol = HeavyHitterPolicy {
+            sink: SizeSpec::Abs(4),
+            window: SizeSpec::Abs(4),
+            heavy: SizeSpec::Abs(50),
+            scorer: Box::new(HashSignScorer::new(32, 5)),
+        };
+        let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 };
+        let sel = pol.select(&mut ctx);
+        assert_eq!(sel.len(), 58);
+        assert!(sel.validate(512).is_ok());
+    }
+
+    #[test]
+    fn h2o_accumulates_across_queries() {
+        let (k, v, _, mut rng) = fixture(300, 16, 4);
+        let mut pol = H2OPolicy::new(SizeSpec::Abs(20));
+        // Two different queries; accumulated mass should reflect both.
+        for step in 0..2 {
+            let q: Vec<f32> = (0..16).map(|_| rng.normal32(0.0, 0.25)).collect();
+            let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step };
+            let sel = pol.select(&mut ctx);
+            assert!(sel.validate(300).is_ok());
+        }
+        assert!(pol.acc.iter().sum::<f64>() > 1.9); // ~2 queries of mass 1
+        pol.reset();
+        assert!(pol.acc.is_empty());
+    }
+
+    #[test]
+    fn snapkv_pools_observation_window() {
+        let (k, v, _, mut rng) = fixture(200, 16, 5);
+        let mut pol = SnapKvPolicy::new(SizeSpec::Abs(16), 3);
+        for step in 0..5 {
+            let q: Vec<f32> = (0..16).map(|_| rng.normal32(0.0, 0.25)).collect();
+            let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step };
+            let sel = pol.select(&mut ctx);
+            assert!(sel.validate(200).is_ok());
+        }
+        assert_eq!(pol.recent_scores.len(), 3); // window capped
+    }
+}

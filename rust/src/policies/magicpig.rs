@@ -1,0 +1,284 @@
+//! MagicPig (Chen et al., 2024): LSH-sampling-based sparse attention.
+//!
+//! Keys are centered and lifted with the simpleLSH transform
+//! x → [x, √(M² − ‖x‖²)] so inner-product search becomes angular search;
+//! `l` hash tables of `k_bits` random-hyperplane bits each retrieve
+//! candidate tokens, and each retrieved token carries its LSH collision
+//! probability p_i = 1 − (1 − c_iᵏ)ˡ with c_i = 1 − θ_i/π, feeding the
+//! importance-sampling estimator of Eq. 3.
+//!
+//! Two fidelity modes reproduce the Table 10 ablation:
+//! * `simple_lsh = true`  — the theory-faithful version ("MagicPig-B");
+//! * `simple_lsh = false` — plain angular LSH on raw keys, as in the
+//!   authors' released code ("MagicPig-A").
+
+use super::{sink_window_indices, IndexPolicy, PolicyCtx, SizeSpec};
+use crate::attention::Selection;
+use crate::tensor::{dot, norm2, Mat};
+use crate::util::Rng;
+
+pub struct MagicPigPolicy {
+    pub k_bits: usize,
+    pub l_tables: usize,
+    pub sink: SizeSpec,
+    pub window: SizeSpec,
+    /// Cap on retrieved tokens (paper: random-subsample if exceeded).
+    pub max_budget: Option<usize>,
+    /// Use the simpleLSH MIPS transform + centering (theory-faithful).
+    pub simple_lsh: bool,
+    seed: u64,
+    state: Option<LshState>,
+}
+
+struct LshState {
+    /// l_tables × k_bits hyperplanes over the (d+1)-dim lifted space.
+    planes: Vec<Mat>,
+    /// Bucket maps: per table, bucket-code → token indices.
+    tables: Vec<std::collections::HashMap<u64, Vec<u32>>>,
+    /// Lifted, normalized key copies (needed for collision probs).
+    lifted: Mat,
+    rows_seen: usize,
+}
+
+impl MagicPigPolicy {
+    pub fn new(k_bits: usize, l_tables: usize, seed: u64) -> Self {
+        assert!(k_bits <= 64);
+        MagicPigPolicy {
+            k_bits,
+            l_tables,
+            sink: SizeSpec::Abs(128),
+            window: SizeSpec::Abs(128),
+            max_budget: None,
+            simple_lsh: true,
+            seed,
+            state: None,
+        }
+    }
+
+    fn build(&mut self, k: &Mat) {
+        let d = k.cols;
+        let n = k.rows;
+        // Center keys (practical fix from the paper's App. B.5 discussion).
+        let mut center = vec![0.0f32; d];
+        if self.simple_lsh {
+            for i in 0..n {
+                crate::tensor::axpy(1.0 / n as f32, k.row(i), &mut center);
+            }
+        }
+        let mut max_norm = 1e-6f32;
+        let mut centered = Mat::zeros(n, d);
+        for i in 0..n {
+            let row = k.row(i);
+            for c in 0..d {
+                centered.set(i, c, row[c] - center[c]);
+            }
+            max_norm = max_norm.max(norm2(centered.row(i)));
+        }
+        // Lift: [x, sqrt(M^2 - |x|^2)] / M  (unit vectors).
+        let mut lifted = Mat::zeros(n, d + 1);
+        for i in 0..n {
+            let row = centered.row(i).to_vec();
+            let nrm = norm2(&row);
+            let last = (max_norm * max_norm - nrm * nrm).max(0.0).sqrt();
+            for c in 0..d {
+                lifted.set(i, c, row[c] / max_norm);
+            }
+            lifted.set(i, d, last / max_norm);
+        }
+        let mut rng = Rng::new(self.seed);
+        let planes: Vec<Mat> = (0..self.l_tables)
+            .map(|_| Mat::randn(self.k_bits, d + 1, 1.0, &mut rng))
+            .collect();
+        let mut tables = vec![std::collections::HashMap::new(); self.l_tables];
+        for i in 0..n {
+            for (t, plane) in planes.iter().enumerate() {
+                let code = hash_code(plane, lifted.row(i), self.k_bits);
+                tables[t].entry(code).or_insert_with(Vec::new).push(i as u32);
+            }
+        }
+        self.state = Some(LshState { planes, tables, lifted, rows_seen: n });
+    }
+}
+
+fn hash_code(planes: &Mat, x: &[f32], k_bits: usize) -> u64 {
+    let mut code = 0u64;
+    for b in 0..k_bits {
+        if dot(planes.row(b), x) >= 0.0 {
+            code |= 1 << b;
+        }
+    }
+    code
+}
+
+impl IndexPolicy for MagicPigPolicy {
+    fn name(&self) -> String {
+        format!(
+            "magicpig(K={},L={}{})",
+            self.k_bits,
+            self.l_tables,
+            if self.simple_lsh { "" } else { ",raw" }
+        )
+    }
+
+    fn select(&mut self, ctx: &mut PolicyCtx) -> Selection {
+        let n = ctx.n();
+        let rebuild = match &self.state {
+            Some(s) => s.rows_seen != n,
+            None => true,
+        };
+        if rebuild {
+            // (Re)index — real MagicPig hashes incrementally; rebuild is
+            // equivalent and only costs build time, not quality.
+            self.build(ctx.k);
+        }
+        let st = self.state.as_ref().unwrap();
+        let d = ctx.k.cols;
+
+        // Lift the query: center is NOT subtracted from q (asymmetric
+        // transform): q -> [q, 0] normalized.
+        let mut qlift = vec![0.0f32; d + 1];
+        let qn = norm2(ctx.q_scaled).max(1e-9);
+        for c in 0..d {
+            qlift[c] = ctx.q_scaled[c] / qn;
+        }
+
+        // Retrieve candidates from all tables.
+        let mut seen = std::collections::HashSet::new();
+        for (t, plane) in st.planes.iter().enumerate() {
+            let code = hash_code(plane, &qlift, self.k_bits);
+            if let Some(bucket) = st.tables[t].get(&code) {
+                for &i in bucket {
+                    seen.insert(i as usize);
+                }
+            }
+        }
+
+        let fixed = sink_window_indices(n, self.sink.resolve(n), self.window.resolve(n));
+        let fixed_set: std::collections::HashSet<usize> = fixed.iter().copied().collect();
+        let mut cand: Vec<usize> =
+            seen.into_iter().filter(|i| !fixed_set.contains(i)).collect();
+        cand.sort_unstable();
+
+        // Random-subsample if over budget (paper's §3 ablation protocol).
+        if let Some(cap) = self.max_budget {
+            if cand.len() > cap {
+                ctx.rng.shuffle(&mut cand);
+                cand.truncate(cap);
+                cand.sort_unstable();
+            }
+        }
+
+        // Collision probabilities for the retained candidates.
+        let mut probs = Vec::with_capacity(cand.len());
+        for &i in &cand {
+            let cosine = dot(st.lifted.row(i), &qlift).clamp(-1.0, 1.0);
+            let theta = cosine.acos();
+            let c = 1.0 - theta / std::f32::consts::PI; // per-bit agree prob
+            let p_table = c.powi(self.k_bits as i32);
+            let p = 1.0 - (1.0 - p_table).powi(self.l_tables as i32);
+            probs.push(p.clamp(1e-6, 1.0));
+        }
+
+        let mut idx = fixed;
+        let n_fixed = idx.len();
+        idx.extend(cand);
+        let mut prob = vec![1.0f32; n_fixed];
+        prob.extend(probs);
+        Selection::with_probs(idx, prob)
+    }
+
+    fn reset(&mut self) {
+        self.state = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(n: usize, d: usize, seed: u64) -> (Mat, Mat, Vec<f32>, Rng) {
+        let mut rng = Rng::new(seed);
+        let k = Mat::randn(n, d, 1.0, &mut rng);
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+        let q: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 1.0) / (d as f32).sqrt()).collect();
+        (k, v, q, rng)
+    }
+
+    #[test]
+    fn selection_is_valid() {
+        let (k, v, q, mut rng) = fixture(600, 16, 1);
+        let mut pol = MagicPigPolicy::new(6, 32, 3);
+        pol.sink = SizeSpec::Abs(8);
+        pol.window = SizeSpec::Abs(8);
+        let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 };
+        let sel = pol.select(&mut ctx);
+        assert!(sel.validate(600).is_ok(), "{:?}", sel.validate(600));
+        assert!(sel.len() >= 16);
+    }
+
+    #[test]
+    fn more_tables_retrieve_more() {
+        let (k, v, q, mut rng) = fixture(800, 16, 2);
+        let count = |l: usize, rng: &mut Rng| {
+            let mut pol = MagicPigPolicy::new(8, l, 3);
+            pol.sink = SizeSpec::Abs(0);
+            pol.window = SizeSpec::Abs(0);
+            let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng, step: 0 };
+            pol.select(&mut ctx).len()
+        };
+        let few = count(4, &mut rng);
+        let many = count(64, &mut rng);
+        assert!(many > few, "L=64 {many} <= L=4 {few}");
+    }
+
+    #[test]
+    fn collision_probs_favor_similar_keys() {
+        let (mut k, v, q, mut rng) = fixture(400, 16, 3);
+        // Plant token 100 aligned with q: it should get a high p if drawn.
+        for c in 0..16 {
+            k.set(100, c, q[c] * 30.0);
+        }
+        let mut pol = MagicPigPolicy::new(4, 64, 5);
+        pol.sink = SizeSpec::Abs(0);
+        pol.window = SizeSpec::Abs(0);
+        let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 };
+        let sel = pol.select(&mut ctx);
+        if let Some(pos) = sel.idx.iter().position(|&i| i == 100) {
+            let p_planted = sel.prob[pos];
+            let mean_p: f32 = sel.prob.iter().sum::<f32>() / sel.len() as f32;
+            assert!(
+                p_planted >= mean_p,
+                "planted p {p_planted} < mean {mean_p}"
+            );
+        }
+    }
+
+    #[test]
+    fn budget_cap_enforced() {
+        let (k, v, q, mut rng) = fixture(500, 16, 4);
+        let mut pol = MagicPigPolicy::new(2, 64, 7); // coarse hash: many hits
+        pol.sink = SizeSpec::Abs(4);
+        pol.window = SizeSpec::Abs(4);
+        pol.max_budget = Some(50);
+        let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 };
+        let sel = pol.select(&mut ctx);
+        assert!(sel.len() <= 8 + 50);
+        assert!(sel.validate(500).is_ok());
+    }
+
+    #[test]
+    fn raw_mode_differs_from_simple_lsh() {
+        let (k, v, q, mut rng) = fixture(300, 16, 5);
+        let run = |simple: bool, rng: &mut Rng| {
+            let mut pol = MagicPigPolicy::new(8, 16, 9);
+            pol.simple_lsh = simple;
+            pol.sink = SizeSpec::Abs(0);
+            pol.window = SizeSpec::Abs(0);
+            let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng, step: 0 };
+            pol.select(&mut ctx).idx
+        };
+        let a = run(true, &mut rng);
+        let b = run(false, &mut rng);
+        assert_ne!(a, b); // different preprocessing -> different buckets
+    }
+}

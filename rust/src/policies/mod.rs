@@ -1,0 +1,178 @@
+//! Index-selection policies: the paper's vAttention (§4) plus every
+//! baseline the evaluation compares against — StreamingLLM-style
+//! sink+window, oracle top-k / top-p, uniform random sampling, the
+//! oracle-top+sample hybrid of §3, MagicPig (LSH sampling), and the
+//! approximate-top-k family (HashAttention, DoubleSparsity, Quest,
+//! PQCache, InfLLM), plus history-based H2O and SnapKV.
+//!
+//! A policy maps (KV cache, query) → `Selection` (indices +
+//! probabilities). Attention itself is computed by
+//! `attention::sparse_sdpa` over that selection; quality metrics compare
+//! against `attention::dense_sdpa`.
+
+pub mod heavy;
+pub mod magicpig;
+pub mod oracle;
+pub mod scorers;
+pub mod vattention;
+
+pub use heavy::{HeavyHitterPolicy, SinkWindowPolicy, SnapKvPolicy, H2OPolicy};
+pub use magicpig::MagicPigPolicy;
+pub use oracle::{HybridTopSamplePolicy, OracleTopKPolicy, OracleTopPPolicy, RandomSamplePolicy};
+pub use scorers::TopkScorer;
+pub use vattention::{VAttentionConfig, VAttentionPolicy};
+
+use crate::attention::Selection;
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+/// Everything a policy may look at when selecting indices for one
+/// (head, query) attention computation.
+pub struct PolicyCtx<'a> {
+    pub k: &'a Mat,
+    pub v: &'a Mat,
+    /// Query pre-scaled by 1/√d.
+    pub q_scaled: &'a [f32],
+    pub rng: &'a mut Rng,
+    /// Generation step (0 for the first sparse query); history-based
+    /// policies (H2O, SnapKV) key their state off monotone steps.
+    pub step: usize,
+}
+
+impl<'a> PolicyCtx<'a> {
+    pub fn n(&self) -> usize {
+        self.k.rows
+    }
+}
+
+/// An index-selection policy. `select` may mutate internal state
+/// (auxiliary caches, accumulated scores); `reset` clears per-sequence
+/// state between requests.
+pub trait IndexPolicy: Send {
+    fn name(&self) -> String;
+    fn select(&mut self, ctx: &mut PolicyCtx) -> Selection;
+    fn reset(&mut self) {}
+}
+
+/// Size given either as an absolute token count or a fraction of n.
+#[derive(Clone, Copy, Debug)]
+pub enum SizeSpec {
+    Abs(usize),
+    Frac(f64),
+}
+
+impl SizeSpec {
+    pub fn resolve(&self, n: usize) -> usize {
+        match *self {
+            SizeSpec::Abs(a) => a.min(n),
+            SizeSpec::Frac(f) => ((f * n as f64).floor() as usize).min(n),
+        }
+    }
+}
+
+/// Sink (first `sink`) + local-window (last `window`) indices, deduped
+/// when they overlap; always sorted ascending.
+pub fn sink_window_indices(n: usize, sink: usize, window: usize) -> Vec<usize> {
+    let sink = sink.min(n);
+    let win_start = n.saturating_sub(window).max(sink);
+    let mut idx: Vec<usize> = (0..sink).collect();
+    idx.extend(win_start..n);
+    idx
+}
+
+/// Merge deterministic index groups into a sorted, deduped vector.
+pub fn merge_sorted_unique(groups: &[&[usize]]) -> Vec<usize> {
+    let mut all: Vec<usize> = groups.iter().flat_map(|g| g.iter().copied()).collect();
+    all.sort_unstable();
+    all.dedup();
+    all
+}
+
+/// Indices of the `count` largest entries of `scores`, excluding the
+/// sorted `excluded` set. Uses partial selection (O(n) average) instead
+/// of a full sort — this is on the decode hot path.
+pub fn top_indices_excluding(scores: &[f32], count: usize, excluded_sorted: &[usize]) -> Vec<usize> {
+    let mut cand: Vec<u32> = Vec::with_capacity(scores.len());
+    let mut ex = excluded_sorted.iter().peekable();
+    for i in 0..scores.len() {
+        if ex.peek() == Some(&&i) {
+            ex.next();
+        } else {
+            cand.push(i as u32);
+        }
+    }
+    let count = count.min(cand.len());
+    if count == 0 {
+        return Vec::new();
+    }
+    if count < cand.len() {
+        cand.select_nth_unstable_by(count - 1, |&a, &b| {
+            scores[b as usize]
+                .partial_cmp(&scores[a as usize])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        cand.truncate(count);
+    }
+    cand.into_iter().map(|i| i as usize).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sink_window_basic() {
+        assert_eq!(sink_window_indices(10, 2, 3), vec![0, 1, 7, 8, 9]);
+    }
+
+    #[test]
+    fn sink_window_overlap() {
+        // window reaches into the sink region: no duplicates.
+        let idx = sink_window_indices(5, 3, 4);
+        assert_eq!(idx, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn sink_window_degenerate() {
+        assert_eq!(sink_window_indices(3, 10, 10), vec![0, 1, 2]);
+        assert_eq!(sink_window_indices(0, 2, 2), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn size_spec() {
+        assert_eq!(SizeSpec::Abs(128).resolve(1000), 128);
+        assert_eq!(SizeSpec::Abs(128).resolve(64), 64);
+        assert_eq!(SizeSpec::Frac(0.1).resolve(1000), 100);
+        assert_eq!(SizeSpec::Frac(2.0).resolve(10), 10);
+    }
+
+    #[test]
+    fn top_indices_simple() {
+        let scores = vec![0.1, 5.0, 3.0, 4.0, 0.2];
+        let mut top = top_indices_excluding(&scores, 2, &[]);
+        top.sort_unstable();
+        assert_eq!(top, vec![1, 3]);
+    }
+
+    #[test]
+    fn top_indices_respects_exclusion() {
+        let scores = vec![0.1, 5.0, 3.0, 4.0, 0.2];
+        let mut top = top_indices_excluding(&scores, 2, &[1, 3]);
+        top.sort_unstable();
+        assert_eq!(top, vec![2, 4]);
+    }
+
+    #[test]
+    fn top_indices_count_larger_than_candidates() {
+        let scores = vec![1.0, 2.0];
+        let top = top_indices_excluding(&scores, 10, &[0]);
+        assert_eq!(top, vec![1]);
+    }
+
+    #[test]
+    fn merge_sorted_unique_dedups() {
+        let a = vec![1, 3, 5];
+        let b = vec![2, 3, 4];
+        assert_eq!(merge_sorted_unique(&[&a, &b]), vec![1, 2, 3, 4, 5]);
+    }
+}

@@ -1,0 +1,252 @@
+//! Oracle baselines from §3 and §5: oracle top-k (gold standard for the
+//! approximate-top-k family), oracle top-p (the strongest top-based
+//! baseline), uniform random sampling, and the oracle-top + sample hybrid
+//! used in the Fig. 2 motivation ablation.
+
+use super::{sink_window_indices, top_indices_excluding, IndexPolicy, PolicyCtx, SizeSpec};
+use crate::attention::{attention_scores, logits_all, Selection};
+
+/// Oracle top-k: exact query–key logits, pick the `heavy` largest plus
+/// sink and window tokens. Deterministic attention (Eq. 2).
+pub struct OracleTopKPolicy {
+    pub sink: SizeSpec,
+    pub window: SizeSpec,
+    pub heavy: SizeSpec,
+}
+
+impl OracleTopKPolicy {
+    /// Paper default: 128 sink + 128 window tokens, `heavy` fraction.
+    pub fn with_fraction(f: f64) -> Self {
+        OracleTopKPolicy { sink: SizeSpec::Abs(128), window: SizeSpec::Abs(128), heavy: SizeSpec::Frac(f) }
+    }
+}
+
+impl IndexPolicy for OracleTopKPolicy {
+    fn name(&self) -> String {
+        "oracle-top-k".into()
+    }
+
+    fn select(&mut self, ctx: &mut PolicyCtx) -> Selection {
+        let n = ctx.n();
+        let fixed = sink_window_indices(n, self.sink.resolve(n), self.window.resolve(n));
+        let logits = logits_all(ctx.k, ctx.q_scaled);
+        let heavy = self.heavy.resolve(n);
+        let mut idx = fixed;
+        let top = top_indices_excluding(&logits, heavy, &idx);
+        idx.extend(top);
+        idx.sort_unstable();
+        Selection::deterministic(idx)
+    }
+}
+
+/// Oracle top-p: smallest set of highest-score tokens whose cumulative
+/// full-attention scores exceed `p`, plus sink/window.
+pub struct OracleTopPPolicy {
+    pub sink: SizeSpec,
+    pub window: SizeSpec,
+    pub p: f64,
+}
+
+impl OracleTopPPolicy {
+    pub fn new(p: f64) -> Self {
+        OracleTopPPolicy { sink: SizeSpec::Abs(128), window: SizeSpec::Abs(128), p }
+    }
+}
+
+impl IndexPolicy for OracleTopPPolicy {
+    fn name(&self) -> String {
+        format!("oracle-top-p({})", self.p)
+    }
+
+    fn select(&mut self, ctx: &mut PolicyCtx) -> Selection {
+        let n = ctx.n();
+        let fixed = sink_window_indices(n, self.sink.resolve(n), self.window.resolve(n));
+        let scores = attention_scores(ctx.k, ctx.q_scaled);
+        // Sort all tokens by score descending; take until cumulative >= p.
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        order.sort_unstable_by(|&a, &b| {
+            scores[b as usize].partial_cmp(&scores[a as usize]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut cum = 0.0f64;
+        let mut chosen = Vec::new();
+        for &i in &order {
+            cum += scores[i as usize] as f64;
+            chosen.push(i as usize);
+            if cum >= self.p {
+                break;
+            }
+        }
+        let mut idx = super::merge_sorted_unique(&[&fixed, &chosen]);
+        idx.dedup();
+        Selection::deterministic(idx)
+    }
+}
+
+/// Uniform random sampling of `budget` tokens (plus sink/window as
+/// deterministic anchors), estimated with Eq. 3 importance weights.
+pub struct RandomSamplePolicy {
+    pub sink: SizeSpec,
+    pub window: SizeSpec,
+    pub budget: SizeSpec,
+}
+
+impl RandomSamplePolicy {
+    pub fn with_fraction(f: f64) -> Self {
+        RandomSamplePolicy { sink: SizeSpec::Abs(128), window: SizeSpec::Abs(128), budget: SizeSpec::Frac(f) }
+    }
+
+    /// Pure sampling variant (no sink/window anchors) for the Fig. 2
+    /// motivation study.
+    pub fn pure(f: f64) -> Self {
+        RandomSamplePolicy { sink: SizeSpec::Abs(0), window: SizeSpec::Abs(0), budget: SizeSpec::Frac(f) }
+    }
+}
+
+impl IndexPolicy for RandomSamplePolicy {
+    fn name(&self) -> String {
+        "random-sample".into()
+    }
+
+    fn select(&mut self, ctx: &mut PolicyCtx) -> Selection {
+        let n = ctx.n();
+        let fixed = sink_window_indices(n, self.sink.resolve(n), self.window.resolve(n));
+        let n_s = n - fixed.len();
+        let b = self.budget.resolve(n).min(n_s);
+        if n_s == 0 || b == 0 {
+            return Selection::deterministic(fixed);
+        }
+        let sampled = ctx.rng.sample_excluding(n, b, &fixed);
+        let p = b as f32 / n_s as f32;
+        Selection::compose(fixed, sampled, p)
+    }
+}
+
+/// The §3 hybrid: half the budget on oracle-top, half on uniform
+/// sampling of the residual — the simplified precursor of vAttention.
+pub struct HybridTopSamplePolicy {
+    pub budget: SizeSpec,
+    /// Fraction of the budget spent on oracle-top (paper uses 0.5).
+    pub top_fraction: f64,
+}
+
+impl HybridTopSamplePolicy {
+    pub fn new(budget_fraction: f64) -> Self {
+        HybridTopSamplePolicy { budget: SizeSpec::Frac(budget_fraction), top_fraction: 0.5 }
+    }
+}
+
+impl IndexPolicy for HybridTopSamplePolicy {
+    fn name(&self) -> String {
+        "oracle-top+random-sample".into()
+    }
+
+    fn select(&mut self, ctx: &mut PolicyCtx) -> Selection {
+        let n = ctx.n();
+        let budget = self.budget.resolve(n);
+        let k_top = ((budget as f64 * self.top_fraction) as usize).min(n);
+        let logits = logits_all(ctx.k, ctx.q_scaled);
+        let mut top = top_indices_excluding(&logits, k_top, &[]);
+        top.sort_unstable();
+        let n_s = n - top.len();
+        let b = (budget - top.len()).min(n_s);
+        if b == 0 || n_s == 0 {
+            return Selection::deterministic(top);
+        }
+        let sampled = ctx.rng.sample_excluding(n, b, &top);
+        let p = b as f32 / n_s as f32;
+        Selection::compose(top, sampled, p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Mat;
+    use crate::util::Rng;
+
+    fn ctx_fixture(n: usize, d: usize, seed: u64) -> (Mat, Mat, Vec<f32>, Rng) {
+        let mut rng = Rng::new(seed);
+        let k = Mat::randn(n, d, 1.0, &mut rng);
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+        let q: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 1.0) / (d as f32).sqrt()).collect();
+        (k, v, q, rng)
+    }
+
+    #[test]
+    fn oracle_topk_finds_planted_heavy_token() {
+        let (mut k, v, q, mut rng) = ctx_fixture(500, 16, 1);
+        // Plant token 250 to align strongly with q.
+        for c in 0..16 {
+            k.set(250, c, q[c] * 50.0);
+        }
+        let mut pol = OracleTopKPolicy {
+            sink: SizeSpec::Abs(4),
+            window: SizeSpec::Abs(4),
+            heavy: SizeSpec::Abs(10),
+        };
+        let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 };
+        let sel = pol.select(&mut ctx);
+        assert!(sel.idx.contains(&250), "planted heavy token not selected");
+        assert!(sel.validate(500).is_ok());
+        assert!(sel.prob.iter().all(|&p| p == 1.0));
+    }
+
+    #[test]
+    fn oracle_topp_covers_mass() {
+        let (k, v, q, mut rng) = ctx_fixture(300, 8, 2);
+        let mut pol = OracleTopPPolicy::new(0.9);
+        let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 };
+        let sel = pol.select(&mut ctx);
+        let scores = attention_scores(&k, &q);
+        let mass: f64 = sel.idx.iter().map(|&i| scores[i] as f64).sum();
+        assert!(mass >= 0.9, "mass={mass}");
+        assert!(sel.validate(300).is_ok());
+    }
+
+    #[test]
+    fn topp_higher_p_selects_more() {
+        let (k, v, q, mut rng) = ctx_fixture(400, 8, 3);
+        let mut lo = OracleTopPPolicy::new(0.5);
+        let mut hi = OracleTopPPolicy::new(0.99);
+        let n_lo = {
+            let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 };
+            lo.select(&mut ctx).len()
+        };
+        let n_hi = {
+            let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 };
+            hi.select(&mut ctx).len()
+        };
+        assert!(n_hi >= n_lo);
+    }
+
+    #[test]
+    fn random_sample_has_valid_probs_and_budget() {
+        let (k, v, q, mut rng) = ctx_fixture(1000, 8, 4);
+        let mut pol = RandomSamplePolicy {
+            sink: SizeSpec::Abs(8),
+            window: SizeSpec::Abs(8),
+            budget: SizeSpec::Abs(100),
+        };
+        let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 };
+        let sel = pol.select(&mut ctx);
+        assert!(sel.validate(1000).is_ok());
+        assert_eq!(sel.len(), 16 + 100);
+        let p_expect = 100.0 / (1000.0 - 16.0);
+        let sampled_probs: Vec<f32> =
+            sel.prob.iter().copied().filter(|&p| p < 1.0).collect();
+        assert_eq!(sampled_probs.len(), 100);
+        assert!(sampled_probs.iter().all(|&p| (p - p_expect as f32).abs() < 1e-6));
+    }
+
+    #[test]
+    fn hybrid_splits_budget() {
+        let (k, v, q, mut rng) = ctx_fixture(1000, 8, 5);
+        let mut pol = HybridTopSamplePolicy::new(0.1); // 100 tokens
+        let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 };
+        let sel = pol.select(&mut ctx);
+        assert!(sel.validate(1000).is_ok());
+        assert_eq!(sel.len(), 100);
+        let det = sel.prob.iter().filter(|&&p| p == 1.0).count();
+        assert_eq!(det, 50);
+    }
+}

@@ -1,0 +1,327 @@
+//! vAttention (Algorithm 1): sink + window + predicted top-k heavy
+//! hitters, plus a uniformly-sampled residual whose size is chosen by the
+//! verified budget machinery (`crate::budget`, Algorithm 2) to meet a
+//! user-specified (ε, δ) guarantee on the requested computation
+//! (denominator, numerator, or full SDPA).
+
+use super::scorers::{OracleScorer, TopkScorer};
+use super::{sink_window_indices, top_indices_excluding, IndexPolicy, PolicyCtx, SizeSpec};
+use crate::attention::Selection;
+use crate::budget::{self, Bound, Verify};
+
+/// Configuration for vAttention — mirrors the paper's parameterization
+/// (f_s, f_l, f_t, f_b, ε, δ) plus the verified computation and bound.
+#[derive(Clone, Debug)]
+pub struct VAttentionConfig {
+    pub sink: SizeSpec,
+    pub window: SizeSpec,
+    /// Heavy-hitter (predicted top-k) budget f_t.
+    pub heavy: SizeSpec,
+    /// Base sampling rate f_b — fraction of the residual used to estimate
+    /// the budget statistics.
+    pub base_rate: f64,
+    pub eps: f64,
+    pub delta: f64,
+    pub verify: Verify,
+    pub bound: Bound,
+    /// Floor the adaptive budget at the base-sample size (the experiments
+    /// in the paper lower-cap the computed budget by the base budget).
+    pub floor_at_base: bool,
+}
+
+impl Default for VAttentionConfig {
+    /// The paper's "natural config" (§5, Table 2 / App. I): 128 sink,
+    /// 128 window, f_t = 0.05, f_b = 0.05, ε = δ = 0.05.
+    fn default() -> Self {
+        VAttentionConfig {
+            sink: SizeSpec::Abs(128),
+            window: SizeSpec::Abs(128),
+            heavy: SizeSpec::Frac(0.05),
+            base_rate: 0.05,
+            eps: 0.05,
+            delta: 0.05,
+            verify: Verify::Sdpa,
+            bound: Bound::Clt,
+            floor_at_base: true,
+        }
+    }
+}
+
+/// vAttention composed with a pluggable top-k predictor (oracle,
+/// HashAttention, …). Produces a `Selection` with p = 1 on the
+/// deterministic part and p = b/n_s on the sampled residual, plus a
+/// diagnostics record of the adaptive budget decision.
+pub struct VAttentionPolicy {
+    pub cfg: VAttentionConfig,
+    pub scorer: Box<dyn TopkScorer>,
+    /// Diagnostics from the most recent `select` call.
+    pub last: Option<BudgetDecision>,
+}
+
+/// Everything the budget module decided for one (head, query) — used by
+/// the verification experiments (Figs. 11–18).
+#[derive(Clone, Debug)]
+pub struct BudgetDecision {
+    pub n: usize,
+    pub n_fixed: usize,
+    pub n_s: usize,
+    pub base_size: usize,
+    pub budget: usize,
+    pub sigma2_d: f64,
+    pub trace_sigma_n: f64,
+    pub d_hat: f64,
+    pub n_hat_norm: f64,
+}
+
+impl VAttentionPolicy {
+    pub fn new(cfg: VAttentionConfig, scorer: Box<dyn TopkScorer>) -> Self {
+        VAttentionPolicy { cfg, scorer, last: None }
+    }
+
+    /// vAttention with the oracle top-k predictor.
+    pub fn oracle(cfg: VAttentionConfig) -> Self {
+        Self::new(cfg, Box::new(OracleScorer))
+    }
+
+    /// Reference logit for stabilized budget statistics: the max logit
+    /// over the deterministic set (heavy hitters dominate, so this keeps
+    /// every exp() ≤ ~1 and the ratios well-scaled).
+    fn m_ref(&self, ctx: &PolicyCtx, i_f: &[usize]) -> f32 {
+        let mut m = f32::NEG_INFINITY;
+        for &i in i_f {
+            let l = crate::tensor::dot(ctx.k.row(i), ctx.q_scaled);
+            if l > m {
+                m = l;
+            }
+        }
+        if m.is_finite() {
+            m
+        } else {
+            0.0
+        }
+    }
+}
+
+impl IndexPolicy for VAttentionPolicy {
+    fn name(&self) -> String {
+        format!("vattention({})", self.scorer.name())
+    }
+
+    fn select(&mut self, ctx: &mut PolicyCtx) -> Selection {
+        let n = ctx.n();
+        let cfg = &self.cfg;
+
+        // ── Algorithm 1, lines 1–4: deterministic index set I_f ──
+        let fixed = sink_window_indices(n, cfg.sink.resolve(n), cfg.window.resolve(n));
+        let scores = self.scorer.score(ctx);
+        let mut i_f = fixed;
+        let top = top_indices_excluding(&scores, cfg.heavy.resolve(n), &i_f);
+        i_f.extend(top);
+        i_f.sort_unstable();
+
+        let n_s = n - i_f.len();
+        if n_s == 0 {
+            self.last = Some(BudgetDecision {
+                n,
+                n_fixed: i_f.len(),
+                n_s: 0,
+                base_size: 0,
+                budget: 0,
+                sigma2_d: 0.0,
+                trace_sigma_n: 0.0,
+                d_hat: 0.0,
+                n_hat_norm: 0.0,
+            });
+            return Selection::deterministic(i_f);
+        }
+
+        // ── Algorithm 2: base sample → statistics → budget ──
+        // When the scorer already produced exact logits (oracle), reuse
+        // them for m_ref and the stats — K is scanned exactly once per
+        // select (§Perf iteration 4).
+        let logits_reusable = self.scorer.scores_are_logits();
+        let m_ref = if logits_reusable {
+            let m = i_f.iter().map(|&i| scores[i]).fold(f32::NEG_INFINITY, f32::max);
+            if m.is_finite() {
+                m
+            } else {
+                0.0
+            }
+        } else {
+            self.m_ref(ctx, &i_f)
+        };
+        let base = budget::draw_base_sample(n, &i_f, cfg.base_rate, ctx.rng);
+        let stats = if logits_reusable {
+            budget::estimate_stats_from_logits(&scores, ctx.v, &i_f, &base, m_ref)
+        } else {
+            budget::estimate_stats(ctx.k, ctx.v, ctx.q_scaled, &i_f, &base, m_ref)
+        };
+        let mut b = budget::budget_for(&stats, cfg.verify, cfg.eps, cfg.delta, cfg.bound);
+        if cfg.floor_at_base {
+            b = b.max(base.len());
+        }
+        b = b.min(n_s);
+
+        self.last = Some(BudgetDecision {
+            n,
+            n_fixed: i_f.len(),
+            n_s,
+            base_size: base.len(),
+            budget: b,
+            sigma2_d: stats.sigma2_d,
+            trace_sigma_n: stats.trace_sigma_n,
+            d_hat: stats.d_hat,
+            n_hat_norm: stats.n_hat_norm,
+        });
+
+        // ── Algorithm 1, lines 7–10: uniform residual sample ──
+        if b == 0 {
+            return Selection::deterministic(i_f);
+        }
+        let dyn_idx = ctx.rng.sample_excluding(n, b, &i_f);
+        let p_dyn = b as f32 / n_s as f32;
+        Selection::compose(i_f, dyn_idx, p_dyn)
+    }
+
+    fn reset(&mut self) {
+        self.scorer.reset();
+        self.last = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{dense_sdpa, sparse_sdpa};
+    use crate::tensor::{rel_l2_error, Mat};
+    use crate::util::Rng;
+
+    fn fixture(n: usize, d: usize, seed: u64) -> (Mat, Mat, Vec<f32>, Rng) {
+        let mut rng = Rng::new(seed);
+        let k = Mat::randn(n, d, 1.0, &mut rng);
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+        let q: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 1.0) / (d as f32).sqrt()).collect();
+        (k, v, q, rng)
+    }
+
+    fn small_cfg(eps: f64, delta: f64) -> VAttentionConfig {
+        VAttentionConfig {
+            sink: SizeSpec::Abs(8),
+            window: SizeSpec::Abs(8),
+            heavy: SizeSpec::Frac(0.05),
+            base_rate: 0.05,
+            eps,
+            delta,
+            verify: Verify::Sdpa,
+            bound: Bound::Clt,
+            floor_at_base: true,
+        }
+    }
+
+    #[test]
+    fn selection_valid_and_budget_recorded() {
+        let (k, v, q, mut rng) = fixture(2000, 16, 1);
+        let mut pol = VAttentionPolicy::oracle(small_cfg(0.1, 0.1));
+        let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 };
+        let sel = pol.select(&mut ctx);
+        assert!(sel.validate(2000).is_ok(), "{:?}", sel.validate(2000));
+        let dec = pol.last.as_ref().unwrap();
+        assert_eq!(dec.n, 2000);
+        assert_eq!(dec.n_fixed + dec.n_s, 2000);
+        assert!(dec.budget >= dec.base_size); // floor_at_base
+        assert_eq!(sel.len(), dec.n_fixed + dec.budget);
+    }
+
+    #[test]
+    fn tighter_eps_gives_bigger_budget() {
+        let (k, v, q, mut rng) = fixture(4000, 16, 2);
+        let budget_at = |eps: f64, rng: &mut Rng| {
+            let mut cfg = small_cfg(eps, 0.1);
+            cfg.floor_at_base = false;
+            // Denominator guarantee: on mean-zero random values the
+            // numerator guarantee saturates at n_s (correct but
+            // uninformative for monotonicity).
+            cfg.verify = Verify::Denominator;
+            let mut pol = VAttentionPolicy::oracle(cfg);
+            let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng, step: 0 };
+            pol.select(&mut ctx);
+            pol.last.unwrap().budget
+        };
+        let tight = budget_at(0.1, &mut rng);
+        let loose = budget_at(0.5, &mut rng);
+        assert!(tight > loose, "tight={tight} loose={loose}");
+    }
+
+    #[test]
+    fn empirical_error_within_eps_most_of_the_time() {
+        // The (ε, δ) guarantee, checked empirically: at ε=0.15, δ=0.1 the
+        // attention error should exceed ε in well under ~δ+slack of trials.
+        let (k, v, q, mut rng) = fixture(3000, 16, 3);
+        let exact = dense_sdpa(&k, &v, &q).out;
+        let mut failures = 0;
+        let trials = 60;
+        for t in 0..trials {
+            let mut pol = VAttentionPolicy::oracle(small_cfg(0.15, 0.1));
+            let mut fork = rng.fork(t as u64);
+            let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut fork, step: 0 };
+            let sel = pol.select(&mut ctx);
+            let approx = sparse_sdpa(&k, &v, &q, &sel);
+            if rel_l2_error(&approx, &exact) > 0.15 {
+                failures += 1;
+            }
+        }
+        // δ = 0.1 → expect ≤ ~6 failures in 60; allow generous slack for
+        // the CLT approximation.
+        assert!(failures <= 12, "failures={failures}/{trials}");
+    }
+
+    #[test]
+    fn no_residual_degenerates_to_deterministic() {
+        let (k, v, q, mut rng) = fixture(20, 8, 4);
+        let mut cfg = small_cfg(0.1, 0.1);
+        cfg.sink = SizeSpec::Abs(10);
+        cfg.window = SizeSpec::Abs(10);
+        let mut pol = VAttentionPolicy::oracle(cfg);
+        let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 };
+        let sel = pol.select(&mut ctx);
+        assert_eq!(sel.len(), 20);
+        assert!(sel.prob.iter().all(|&p| p == 1.0));
+        assert_eq!(pol.last.as_ref().unwrap().n_s, 0);
+    }
+
+    #[test]
+    fn hoeffding_budget_larger_than_clt() {
+        let (k, v, q, mut rng) = fixture(4000, 16, 5);
+        let budget_with = |bound: Bound, rng: &mut Rng| {
+            let mut cfg = small_cfg(0.1, 0.2);
+            cfg.bound = bound;
+            cfg.verify = Verify::Denominator;
+            cfg.floor_at_base = false;
+            let mut pol = VAttentionPolicy::oracle(cfg);
+            let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng, step: 0 };
+            pol.select(&mut ctx);
+            pol.last.unwrap().budget
+        };
+        let clt = budget_with(Bound::Clt, &mut rng);
+        let hoef = budget_with(Bound::Hoeffding, &mut rng);
+        assert!(hoef >= clt, "hoef={hoef} clt={clt}");
+    }
+
+    #[test]
+    fn flat_distribution_needs_fewer_samples_than_sharp_tail() {
+        // Uniform scores -> tiny variance -> budget collapses to the floor.
+        let d = 16;
+        let n = 4000;
+        let k_flat = Mat::from_fn(n, d, |_, c| if c == 0 { 1.0 } else { 0.0 });
+        let v = Mat::from_fn(n, d, |_, _| 1.0);
+        let q = vec![1.0; d];
+        let mut cfg = small_cfg(0.05, 0.05);
+        cfg.floor_at_base = false;
+        let mut pol = VAttentionPolicy::oracle(cfg);
+        let mut rng = Rng::new(6);
+        let mut ctx = PolicyCtx { k: &k_flat, v: &v, q_scaled: &q, rng: &mut rng, step: 0 };
+        pol.select(&mut ctx);
+        let flat_budget = pol.last.unwrap().budget;
+        assert!(flat_budget < 50, "flat budget should be tiny, got {flat_budget}");
+    }
+}

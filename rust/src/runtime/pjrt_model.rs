@@ -1,0 +1,200 @@
+//! The PJRT-executed transformer: rust drives the per-layer artifacts
+//! (`qkv` → host-side index selection + gather → `attn_b{B}` → `ffn` →
+//! `logits`), with all weights resident on the device.
+
+use anyhow::{anyhow, Result};
+
+use super::{bucket_for, Runtime, BUDGET_BUCKETS};
+use crate::attention::Selection;
+use crate::kvcache::KvCache;
+use crate::model::{rope_phases, ModelConfig, StepOut, Weights};
+use crate::tensor::Mat;
+
+/// Device-resident weight buffers for one layer.
+struct LayerBufs {
+    w_ln_attn: xla::PjRtBuffer,
+    wq: xla::PjRtBuffer,
+    wk: xla::PjRtBuffer,
+    wv: xla::PjRtBuffer,
+    wo: xla::PjRtBuffer,
+    w_ln_ffn: xla::PjRtBuffer,
+    w_gate: xla::PjRtBuffer,
+    w_up: xla::PjRtBuffer,
+    w_down: xla::PjRtBuffer,
+}
+
+/// A transformer whose compute runs through the AOT artifacts while the
+/// KV cache (and index selection) stay on the rust side.
+pub struct PjrtModel {
+    pub cfg: ModelConfig,
+    rt: Runtime,
+    layers: Vec<LayerBufs>,
+    w_ln_f: xla::PjRtBuffer,
+    w_emb: xla::PjRtBuffer,
+    /// Host copy of the embedding for token lookup.
+    emb_host: Mat,
+}
+
+impl PjrtModel {
+    /// Upload `weights` once and bind to the artifact runtime.
+    pub fn new(rt: Runtime, cfg: ModelConfig, weights: &Weights) -> Result<PjrtModel> {
+        let d = cfg.d_model;
+        let f = cfg.d_ff;
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for lw in &weights.layers {
+            layers.push(LayerBufs {
+                w_ln_attn: rt.upload(&lw.w_ln_attn, &[d])?,
+                wq: rt.upload(&lw.wq.data, &[d, d])?,
+                wk: rt.upload(&lw.wk.data, &[d, d])?,
+                wv: rt.upload(&lw.wv.data, &[d, d])?,
+                wo: rt.upload(&lw.wo.data, &[d, d])?,
+                w_ln_ffn: rt.upload(&lw.w_ln_ffn, &[d])?,
+                w_gate: rt.upload(&lw.w_gate.data, &[d, f])?,
+                w_up: rt.upload(&lw.w_up.data, &[d, f])?,
+                w_down: rt.upload(&lw.w_down.data, &[f, d])?,
+            });
+        }
+        let w_ln_f = rt.upload(&weights.w_ln_f, &[d])?;
+        let w_emb = rt.upload(&weights.w_emb.data, &[cfg.vocab, d])?;
+        Ok(PjrtModel {
+            cfg,
+            rt,
+            layers,
+            w_ln_f,
+            w_emb,
+            emb_host: weights.w_emb.clone(),
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// One decode step through the artifacts. `select` picks attention
+    /// indices per (layer, head); `None` = dense attention over the whole
+    /// cache (bucketed; contexts beyond the largest bucket must be
+    /// served sparsely — exactly the regime the paper targets).
+    pub fn decode_step(
+        &self,
+        token: u32,
+        pos: usize,
+        cache: &mut KvCache,
+        mut select: Option<&mut dyn FnMut(usize, usize, &Mat, &Mat, &[f32]) -> Selection>,
+    ) -> Result<StepOut> {
+        let cfg = &self.cfg;
+        let (h, dh, d) = (cfg.n_heads, cfg.d_head(), cfg.d_model);
+        let (cos, sin) = rope_phases(pos, dh);
+        let cos_b = self.rt.upload(&cos, &[dh / 2])?;
+        let sin_b = self.rt.upload(&sin, &[dh / 2])?;
+        let mut x = self.emb_host.row(token as usize % cfg.vocab).to_vec();
+        let mut densities: Vec<f64> = Vec::new();
+
+        for (l, lb) in self.layers.iter().enumerate() {
+            // ── qkv artifact ──
+            let x_b = self.rt.upload(&x, &[1, d])?;
+            let parts = self.rt.execute(
+                "qkv",
+                &[&x_b, &lb.w_ln_attn, &lb.wq, &lb.wk, &lb.wv, &cos_b, &sin_b],
+            )?;
+            let mut it = parts.into_iter();
+            let q = it.next().ok_or_else(|| anyhow!("qkv: missing q"))?.to_vec::<f32>()
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let k = it.next().ok_or_else(|| anyhow!("qkv: missing k"))?.to_vec::<f32>()
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let v = it.next().ok_or_else(|| anyhow!("qkv: missing v"))?.to_vec::<f32>()
+                .map_err(|e| anyhow!("{e:?}"))?;
+
+            // Append to the host cache, then select + gather per head.
+            for head in 0..h {
+                cache.append(l, head, &k[head * dh..(head + 1) * dh], &v[head * dh..(head + 1) * dh]);
+            }
+            let n = cache.len(l);
+            // Select per head first, then size the bucket to the largest
+            // selection (dense mode selects everything).
+            let mut sels: Vec<Selection> = Vec::with_capacity(h);
+            for head in 0..h {
+                let qh = &q[head * dh..(head + 1) * dh];
+                let sel = match select.as_mut() {
+                    Some(f) => {
+                        let (kc, vc) = cache.head(l, head);
+                        f(l, head, kc, vc, qh)
+                    }
+                    None => Selection::deterministic((0..n).collect()),
+                };
+                sels.push(sel);
+            }
+            let max_len = sels.iter().map(|s| s.len()).max().unwrap_or(0);
+            let bucket = self.attn_bucket(max_len, select.is_some())?;
+            let mut kg = vec![0.0f32; h * bucket * dh];
+            let mut vg = vec![0.0f32; h * bucket * dh];
+            let mut log_invp = vec![0.0f32; h * bucket];
+            let mut mask = vec![0.0f32; h * bucket];
+
+            for (head, sel) in sels.iter_mut().enumerate() {
+                if sel.len() > bucket {
+                    sel.truncate(bucket);
+                }
+                densities.push(sel.density(n));
+                let (gk, gv) = cache.gather(l, head, &sel.idx);
+                let base = head * bucket;
+                kg[base * dh..(base + sel.len()) * dh].copy_from_slice(&gk.data);
+                vg[base * dh..(base + sel.len()) * dh].copy_from_slice(&gv.data);
+                for (j, &p) in sel.prob.iter().enumerate() {
+                    log_invp[base + j] = -(p.ln());
+                    mask[base + j] = 1.0;
+                }
+            }
+
+            // ── attn artifact (bucketed) ──
+            let q_b = self.rt.upload(&q, &[h, dh])?;
+            let kg_b = self.rt.upload(&kg, &[h, bucket, dh])?;
+            let vg_b = self.rt.upload(&vg, &[h, bucket, dh])?;
+            let lp_b = self.rt.upload(&log_invp, &[h, bucket])?;
+            let mk_b = self.rt.upload(&mask, &[h, bucket])?;
+            let attn_out = self.rt.execute_1(
+                &format!("attn_b{bucket}"),
+                &[&q_b, &kg_b, &vg_b, &lp_b, &mk_b, &lb.wo],
+            )?;
+            for (xi, &ai) in x.iter_mut().zip(attn_out.iter()) {
+                *xi += ai;
+            }
+
+            // ── ffn artifact ──
+            let x_b = self.rt.upload(&x, &[1, d])?;
+            let ffn_out = self
+                .rt
+                .execute_1("ffn", &[&x_b, &lb.w_ln_ffn, &lb.w_gate, &lb.w_up, &lb.w_down])?;
+            for (xi, &fi) in x.iter_mut().zip(ffn_out.iter()) {
+                *xi += fi;
+            }
+        }
+
+        // ── logits artifact ──
+        let x_b = self.rt.upload(&x, &[1, d])?;
+        let logits = self.rt.execute_1("logits", &[&x_b, &self.w_ln_f, &self.w_emb])?;
+        let mean_density = if densities.is_empty() {
+            1.0
+        } else {
+            densities.iter().sum::<f64>() / densities.len() as f64
+        };
+        Ok(StepOut { logits, mean_density })
+    }
+
+    /// Pick the attention bucket for a cache of size n. Sparse mode uses
+    /// the smallest bucket that fits the selection (callers truncate);
+    /// dense mode needs a bucket ≥ n.
+    fn attn_bucket(&self, n: usize, sparse: bool) -> Result<usize> {
+        if sparse {
+            // Sparse selections are capped to the largest bucket.
+            Ok(bucket_for(n).unwrap_or(*BUDGET_BUCKETS.last().unwrap()))
+        } else {
+            bucket_for(n).ok_or_else(|| {
+                anyhow!(
+                    "dense attention over n={n} exceeds the largest artifact bucket \
+                     ({}); serve long contexts with a sparse policy",
+                    BUDGET_BUCKETS.last().unwrap()
+                )
+            })
+        }
+    }
+}

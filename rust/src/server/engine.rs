@@ -1,0 +1,319 @@
+//! The generation engine: continuous batching over a compute backend.
+//!
+//! Scheduling model (vLLM-style, specialized to this testbed): a FIFO
+//! waiting queue; up to `max_batch` active requests; each scheduler round
+//! advances every active request by one decode step (prefill first,
+//! token by token, dense per the paper's Setup B); completed requests
+//! free their slot immediately and the queue backfills.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::{Request, RequestResult};
+use crate::attention::Selection;
+use crate::kvcache::KvCache;
+use crate::model::{Model, ModelConfig, Sampler, StepOut};
+use crate::policies::{IndexPolicy, PolicyCtx};
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+/// Compute backend abstraction: the rust-native model or the PJRT path.
+pub trait Backend {
+    fn config(&self) -> &ModelConfig;
+    fn step(
+        &self,
+        token: u32,
+        pos: usize,
+        cache: &mut KvCache,
+        select: Option<&mut dyn FnMut(usize, usize, &Mat, &Mat, &[f32]) -> Selection>,
+    ) -> Result<StepOut>;
+}
+
+impl Backend for Model {
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+    fn step(
+        &self,
+        token: u32,
+        pos: usize,
+        cache: &mut KvCache,
+        select: Option<&mut dyn FnMut(usize, usize, &Mat, &Mat, &[f32]) -> Selection>,
+    ) -> Result<StepOut> {
+        Ok(self.decode_step(token, pos, cache, select))
+    }
+}
+
+impl Backend for crate::runtime::PjrtModel {
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+    fn step(
+        &self,
+        token: u32,
+        pos: usize,
+        cache: &mut KvCache,
+        select: Option<&mut dyn FnMut(usize, usize, &Mat, &Mat, &[f32]) -> Selection>,
+    ) -> Result<StepOut> {
+        self.decode_step(token, pos, cache, select)
+    }
+}
+
+/// Creates a fresh policy per (layer, head) for each admitted request.
+pub type PolicyFactory = Box<dyn Fn(usize, usize) -> Box<dyn IndexPolicy>>;
+
+/// How decode attention is computed.
+pub enum AttentionMode {
+    Dense,
+    Sparse(PolicyFactory),
+}
+
+pub struct EngineConfig {
+    pub max_batch: usize,
+    pub sampler: Sampler,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { max_batch: 4, sampler: Sampler::Greedy, seed: 0 }
+    }
+}
+
+/// One active request's serving state.
+struct Active {
+    req: Request,
+    cache: KvCache,
+    policies: Vec<Box<dyn IndexPolicy>>, // L*H, empty in dense mode
+    rng: Rng,
+    tokens: Vec<u32>,
+    next_token: u32,
+    pos: usize,
+    prefill_left: usize,
+    started: Instant,
+    ttft_s: f64,
+    decode_s: f64,
+    density_sum: f64,
+    density_n: usize,
+    step: usize,
+}
+
+pub struct Engine<B: Backend> {
+    pub backend: B,
+    pub cfg: EngineConfig,
+}
+
+impl<B: Backend> Engine<B> {
+    pub fn new(backend: B, cfg: EngineConfig) -> Engine<B> {
+        Engine { backend, cfg }
+    }
+
+    /// Serve a batch of requests to completion with continuous batching.
+    pub fn serve(&self, requests: Vec<Request>, mode: &AttentionMode) -> Result<Vec<RequestResult>> {
+        let mcfg = self.backend.config().clone();
+        let mut waiting: VecDeque<Request> = requests.into();
+        let mut active: Vec<Active> = Vec::new();
+        let mut done: Vec<RequestResult> = Vec::new();
+        let mut seed_rng = Rng::new(self.cfg.seed);
+
+        loop {
+            // ── admission: backfill free slots FIFO ──
+            while active.len() < self.cfg.max_batch {
+                let Some(req) = waiting.pop_front() else { break };
+                let policies = match mode {
+                    AttentionMode::Dense => Vec::new(),
+                    AttentionMode::Sparse(factory) => {
+                        let mut v = Vec::with_capacity(mcfg.n_layers * mcfg.n_heads);
+                        for l in 0..mcfg.n_layers {
+                            for h in 0..mcfg.n_heads {
+                                v.push(factory(l, h));
+                            }
+                        }
+                        v
+                    }
+                };
+                let first = *req.prompt.first().unwrap_or(&0);
+                active.push(Active {
+                    prefill_left: req.prompt.len(),
+                    cache: KvCache::new(&mcfg),
+                    policies,
+                    rng: seed_rng.fork(req.id),
+                    tokens: Vec::new(),
+                    next_token: first,
+                    pos: 0,
+                    started: Instant::now(),
+                    ttft_s: 0.0,
+                    decode_s: 0.0,
+                    density_sum: 0.0,
+                    density_n: 0,
+                    step: 0,
+                    req,
+                });
+            }
+            if active.is_empty() {
+                break;
+            }
+
+            // ── one scheduler round: each active request advances a step ──
+            let mut i = 0;
+            while i < active.len() {
+                let a = &mut active[i];
+                let t0 = Instant::now();
+                let out = if a.prefill_left > 0 {
+                    // Prefill (dense, Setup B: context via full attention).
+                    let tok = a.req.prompt[a.pos];
+                    let out = self.backend.step(tok, a.pos, &mut a.cache, None)?;
+                    a.prefill_left -= 1;
+                    a.pos += 1;
+                    if a.prefill_left == 0 {
+                        a.ttft_s = a.started.elapsed().as_secs_f64();
+                        a.cache.stats.reset(); // count decode traffic only
+                    }
+                    out
+                } else {
+                    // Decode (sparse per policy).
+                    let n_heads = mcfg.n_heads;
+                    let sparse = !a.policies.is_empty();
+                    let policies = &mut a.policies;
+                    let rng = &mut a.rng;
+                    let step = a.step;
+                    let mut select = |l: usize, h: usize, k: &Mat, v: &Mat, q: &[f32]| {
+                        let mut ctx = PolicyCtx { k, v, q_scaled: q, rng, step };
+                        policies[l * n_heads + h].select(&mut ctx)
+                    };
+                    let sel_opt: Option<&mut dyn FnMut(usize, usize, &Mat, &Mat, &[f32]) -> Selection> =
+                        if sparse { Some(&mut select) } else { None };
+                    let out = self.backend.step(a.next_token, a.pos, &mut a.cache, sel_opt)?;
+                    a.decode_s += t0.elapsed().as_secs_f64();
+                    a.pos += 1;
+                    a.step += 1;
+                    a.density_sum += out.mean_density;
+                    a.density_n += 1;
+                    out
+                };
+                // Sample the next token once the prompt is fully ingested.
+                if a.prefill_left == 0 {
+                    let tok = self.cfg.sampler.sample(&out.logits, &mut a.rng);
+                    if a.tokens.len() < a.req.gen_len {
+                        // The token just generated becomes the next input.
+                        if a.step > 0 || a.pos == a.req.prompt.len() {
+                            a.tokens.push(tok);
+                            a.next_token = tok;
+                        }
+                    }
+                }
+                // ── completion ──
+                if a.prefill_left == 0 && a.tokens.len() >= a.req.gen_len {
+                    let a = active.swap_remove(i);
+                    done.push(RequestResult {
+                        id: a.req.id,
+                        tokens: a.tokens,
+                        ttft_s: a.ttft_s,
+                        decode_s: a.decode_s,
+                        mean_density: if a.density_n > 0 {
+                            a.density_sum / a.density_n as f64
+                        } else {
+                            1.0
+                        },
+                        kv_bytes_read: a.cache.stats.bytes_read,
+                    });
+                    continue; // don't advance i: swapped element takes slot
+                }
+                i += 1;
+            }
+        }
+        done.sort_by_key(|r| r.id);
+        Ok(done)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::{SizeSpec, VAttentionConfig, VAttentionPolicy};
+
+    fn tiny_engine() -> Engine<Model> {
+        let cfg = ModelConfig::tiny();
+        Engine::new(Model::new(cfg, 42), EngineConfig::default())
+    }
+
+    fn reqs(n: usize, prompt_len: usize, gen_len: usize) -> Vec<Request> {
+        (0..n as u64)
+            .map(|i| {
+                let prompt: Vec<u32> = (0..prompt_len as u32).map(|t| (i as u32 * 7 + t) % 250).collect();
+                Request::new(i, prompt, gen_len)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn serves_all_requests_dense() {
+        let eng = tiny_engine();
+        let results = eng.serve(reqs(6, 12, 5), &AttentionMode::Dense).unwrap();
+        assert_eq!(results.len(), 6);
+        for r in &results {
+            assert_eq!(r.tokens.len(), 5);
+            assert!((r.mean_density - 1.0).abs() < 1e-9);
+            assert!(r.ttft_s >= 0.0);
+        }
+        // FIFO ids preserved in output ordering
+        let ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn greedy_dense_is_deterministic() {
+        let eng = tiny_engine();
+        let a = eng.serve(reqs(2, 10, 6), &AttentionMode::Dense).unwrap();
+        let b = eng.serve(reqs(2, 10, 6), &AttentionMode::Dense).unwrap();
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.tokens, y.tokens);
+        }
+    }
+
+    #[test]
+    fn sparse_mode_reads_fewer_bytes() {
+        let eng = tiny_engine();
+        let mk_mode = || -> AttentionMode {
+            AttentionMode::Sparse(Box::new(|_l, _h| {
+                let mut cfg = VAttentionConfig::default();
+                cfg.sink = SizeSpec::Abs(4);
+                cfg.window = SizeSpec::Abs(8);
+                cfg.heavy = SizeSpec::Frac(0.05);
+                // Random-weight tiny models have unstructured values, so
+                // the full-SDPA guarantee correctly saturates at dense —
+                // use the denominator guarantee at a moderate tolerance
+                // to exercise genuine sparsity here (cf. Fig. 10).
+                cfg.verify = crate::budget::Verify::Denominator;
+                cfg.eps = 0.2;
+                cfg.delta = 0.2;
+                Box::new(VAttentionPolicy::oracle(cfg))
+            }))
+        };
+        // Long prompt so sparsity has room.
+        let dense = eng.serve(reqs(1, 192, 8), &AttentionMode::Dense).unwrap();
+        let sparse = eng.serve(reqs(1, 192, 8), &mk_mode()).unwrap();
+        assert!(sparse[0].mean_density < 1.0);
+        assert!(sparse[0].kv_bytes_read < dense[0].kv_bytes_read);
+        assert_eq!(sparse[0].tokens.len(), 8);
+    }
+
+    #[test]
+    fn batch_capacity_respected_and_all_complete() {
+        let eng = Engine::new(
+            Model::new(ModelConfig::tiny(), 1),
+            EngineConfig { max_batch: 2, ..Default::default() },
+        );
+        let results = eng.serve(reqs(7, 6, 3), &AttentionMode::Dense).unwrap();
+        assert_eq!(results.len(), 7);
+        assert!(results.iter().all(|r| r.tokens.len() == 3));
+    }
+
+    #[test]
+    fn empty_request_list_ok() {
+        let eng = tiny_engine();
+        assert!(eng.serve(vec![], &AttentionMode::Dense).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,51 @@
+//! The serving coordinator: request admission, continuous batching, and
+//! the generation loop, generic over the compute backend (rust-native
+//! model or the PJRT artifact path).
+//!
+//! Responsibilities mirror a vLLM-style router specialized to the
+//! paper's deployment: the KV cache is host-resident per request; every
+//! decode step runs index selection per (layer, head) through the
+//! configured policy; attention reads only the selected rows.
+
+pub mod engine;
+
+pub use engine::{AttentionMode, Engine, EngineConfig, PolicyFactory};
+
+/// An inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub gen_len: usize,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<u32>, gen_len: usize) -> Request {
+        Request { id, prompt, gen_len }
+    }
+}
+
+/// Completion record with serving metrics.
+#[derive(Clone, Debug)]
+pub struct RequestResult {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    /// Time to first token (prefill), seconds.
+    pub ttft_s: f64,
+    /// Total decode wall-clock, seconds.
+    pub decode_s: f64,
+    /// Mean attention density over all decode steps.
+    pub mean_density: f64,
+    /// Bytes of KV gathered from the host tier during decode.
+    pub kv_bytes_read: usize,
+}
+
+impl RequestResult {
+    pub fn decode_tokens_per_s(&self) -> f64 {
+        if self.decode_s > 0.0 {
+            self.tokens.len() as f64 / self.decode_s
+        } else {
+            0.0
+        }
+    }
+}

@@ -1,0 +1,295 @@
+//! Minimal dense f32 tensor ops: a row-major 2-D matrix plus the handful
+//! of BLAS-1/2/3 primitives the attention stack and the rust-native
+//! transformer need. Hot loops are written with 8-wide manual unrolling
+//! so LLVM auto-vectorizes them; see EXPERIMENTS.md §Perf.
+
+use crate::util::Rng;
+
+/// Row-major 2-D f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(rows * cols, data.len(), "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Gaussian-initialized matrix (mean 0, given std), seeded.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(rng.normal32(0.0, std));
+        }
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// C = self · other  (self: m×k, other: k×n). Straightforward ikj
+    /// loop with row-major accumulation; good enough for the model sizes
+    /// here (the PJRT path carries the big matmuls).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = out.row_mut(i);
+            for (p, &a) in arow.iter().enumerate().take(k) {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[p * n..(p + 1) * n];
+                axpy(a, brow, orow);
+            }
+        }
+        out
+    }
+
+    /// y = self · x for a vector x (len = cols).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows).map(|r| dot(self.row(r), x)).collect()
+    }
+
+    /// yᵀ = xᵀ · self for a vector x (len = rows). Cache-friendly: walks
+    /// rows and accumulates, instead of striding columns.
+    pub fn vecmat(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.rows, x.len());
+        let mut out = vec![0.0f32; self.cols];
+        for (r, &xv) in x.iter().enumerate() {
+            if xv != 0.0 {
+                axpy(xv, self.row(r), &mut out);
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+}
+
+/// Dot product, 8-wide unrolled so LLVM vectorizes it. This is the single
+/// hottest scalar kernel in the repo (score computation reads all keys).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = [0.0f32; 8];
+    for i in 0..chunks {
+        let o = i * 8;
+        // Safety-free indexing: bounds are provably in range.
+        acc[0] += a[o] * b[o];
+        acc[1] += a[o + 1] * b[o + 1];
+        acc[2] += a[o + 2] * b[o + 2];
+        acc[3] += a[o + 3] * b[o + 3];
+        acc[4] += a[o + 4] * b[o + 4];
+        acc[5] += a[o + 5] * b[o + 5];
+        acc[6] += a[o + 6] * b[o + 6];
+        acc[7] += a[o + 7] * b[o + 7];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for i in chunks * 8..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// y += alpha * x, unrolled.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// y *= alpha.
+#[inline]
+pub fn scale(alpha: f32, y: &mut [f32]) {
+    for v in y.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(x: &[f32]) -> f32 {
+    dot(x, x).sqrt()
+}
+
+/// Relative L2 error ||a-b|| / ||b|| (the paper's error metric; `b` is the
+/// exact quantity). Returns 0 when both are ~zero.
+pub fn rel_l2_error(approx: &[f32], exact: &[f32]) -> f64 {
+    assert_eq!(approx.len(), exact.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&a, &e) in approx.iter().zip(exact.iter()) {
+        num += ((a - e) as f64).powi(2);
+        den += (e as f64).powi(2);
+    }
+    if den < 1e-30 {
+        if num < 1e-30 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        (num / den).sqrt()
+    }
+}
+
+/// Numerically stable in-place softmax.
+pub fn softmax_inplace(x: &mut [f32]) {
+    if x.is_empty() {
+        return;
+    }
+    let m = x.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let i = Mat::from_fn(2, 2, |r, c| if r == c { 1.0 } else { 0.0 });
+        assert_eq!(a.matmul(&i), a);
+        assert_eq!(i.matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matvec_vecmat_consistent_with_matmul() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(5, 7, 1.0, &mut rng);
+        let x: Vec<f32> = (0..7).map(|i| i as f32 * 0.3 - 1.0).collect();
+        let y = a.matvec(&x);
+        let xm = Mat::from_vec(7, 1, x.clone());
+        let ym = a.matmul(&xm);
+        for i in 0..5 {
+            assert!((y[i] - ym.data[i]).abs() < 1e-5);
+        }
+        let z: Vec<f32> = (0..5).map(|i| 0.5 - i as f32 * 0.2).collect();
+        let w = a.vecmat(&z);
+        let zm = Mat::from_vec(1, 5, z.clone());
+        let wm = zm.matmul(&a);
+        for i in 0..7 {
+            assert!((w[i] - wm.data[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn dot_matches_naive_all_lengths() {
+        let mut rng = Rng::new(2);
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 64, 100, 128, 1000] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal32(0.0, 1.0)).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal32(0.0, 1.0)).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let fast = dot(&a, &b);
+            assert!((naive - fast).abs() < 1e-3 * (1.0 + naive.abs()), "n={n}");
+        }
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let mut x = vec![1000.0, 1001.0, 999.0];
+        softmax_inplace(&mut x);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(x.iter().all(|v| v.is_finite()));
+        assert!(x[1] > x[0] && x[0] > x[2]);
+    }
+
+    #[test]
+    fn softmax_uniform() {
+        let mut x = vec![3.0; 8];
+        softmax_inplace(&mut x);
+        for &v in &x {
+            assert!((v - 0.125).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rel_error_basics() {
+        assert_eq!(rel_l2_error(&[1.0, 0.0], &[1.0, 0.0]), 0.0);
+        let e = rel_l2_error(&[1.1], &[1.0]);
+        assert!((e - 0.1).abs() < 1e-6);
+        assert_eq!(rel_l2_error(&[0.0], &[0.0]), 0.0);
+        assert!(rel_l2_error(&[1.0], &[0.0]).is_infinite());
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(4, 6, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn norm2_known() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,106 @@
+//! Minimal argument parser (clap is not available offline). Supports
+//! `--key value`, `--key=value`, bare flags and positional args.
+
+use std::collections::HashMap;
+
+/// Parsed command line: positionals plus `--key value` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("exp fig2 --seed 42 --eps=0.05 --verbose");
+        assert_eq!(a.positional, vec!["exp", "fig2"]);
+        assert_eq!(a.get("seed"), Some("42"));
+        assert_eq!(a.get_f64("eps", 0.1), 0.05);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.get_usize("n", 32768), 32768);
+        assert_eq!(a.get_str("mode", "dense"), "dense");
+        assert!(!a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--fast --slow");
+        assert!(a.has_flag("fast") && a.has_flag("slow"));
+        assert!(a.options.is_empty());
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = parse("--shift -3"); // "-3" does not start with --, so value
+        assert_eq!(a.get("shift"), Some("-3"));
+    }
+}

@@ -1,0 +1,149 @@
+//! Tiny JSON *writer* (no parser needed — results files only). Handles
+//! the subset we emit: objects, arrays, strings, numbers, bools.
+
+use std::fmt::Write as _;
+
+/// A JSON value builder. Construct with the helper ctors and serialize
+/// with `to_string()`.
+#[derive(Clone, Debug)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn num(x: impl Into<f64>) -> Json {
+        Json::Num(x.into())
+    }
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+    pub fn arr(items: impl IntoIterator<Item = Json>) -> Json {
+        Json::Arr(items.into_iter().collect())
+    }
+    pub fn arr_f64(items: impl IntoIterator<Item = f64>) -> Json {
+        Json::Arr(items.into_iter().map(Json::Num).collect())
+    }
+    pub fn obj() -> Json {
+        Json::Obj(Vec::new())
+    }
+    /// Chainable field insertion (only valid on `Obj`).
+    pub fn field(mut self, key: &str, value: Json) -> Json {
+        if let Json::Obj(ref mut fields) = self {
+            fields.push((key.to_string(), value));
+        } else {
+            panic!("Json::field on non-object");
+        }
+        self
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0);
+        s
+    }
+
+    fn write(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    if *x == x.trunc() && x.abs() < 1e15 {
+                        let _ = write!(out, "{}", *x as i64);
+                    } else {
+                        let _ = write!(out, "{x}");
+                    }
+                } else {
+                    out.push_str("null"); // JSON has no NaN/Inf
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out, indent);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                let pad = "  ".repeat(indent + 1);
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    out.push_str(&pad);
+                    Json::Str(k.clone()).write(out, indent);
+                    out.push_str(": ");
+                    v.write(out, indent + 1);
+                }
+                if !fields.is_empty() {
+                    out.push('\n');
+                    out.push_str(&"  ".repeat(indent));
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_shapes() {
+        let j = Json::obj()
+            .field("name", Json::str("fig2"))
+            .field("density", Json::num(0.1))
+            .field("errors", Json::arr_f64(vec![0.5, 0.25]))
+            .field("ok", Json::Bool(true));
+        let s = j.to_string();
+        assert!(s.contains("\"name\": \"fig2\""));
+        assert!(s.contains("[0.5,0.25]"));
+        assert!(s.contains("\"ok\": true"));
+    }
+
+    #[test]
+    fn escapes() {
+        let s = Json::str("a\"b\\c\nd").to_string();
+        assert_eq!(s, "\"a\\\"b\\\\c\\nd\"");
+    }
+
+    #[test]
+    fn non_finite_to_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn ints_have_no_decimal() {
+        assert_eq!(Json::num(3.0).to_string(), "3");
+        assert_eq!(Json::num(3.5).to_string(), "3.5");
+    }
+}

@@ -1,0 +1,16 @@
+//! Small self-contained utilities: seeded RNG, inverse normal CDF, JSON
+//! writer, CLI parsing, timing, a thread pool and an in-repo
+//! property-testing helper. The offline build has no `rand`, `serde`,
+//! `clap`, `criterion` or `proptest`, so these live here.
+
+pub mod cli;
+pub mod json;
+pub mod ncdf;
+pub mod proptest;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;
+
+pub use ncdf::{inv_normal_cdf, normal_cdf};
+pub use rng::Rng;
+pub use timer::Timer;

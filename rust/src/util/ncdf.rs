@@ -1,0 +1,248 @@
+//! Normal CDF and its inverse.
+//!
+//! The CLT budget rule (Lemma 4.1) needs Φ⁻¹(1 - δ/2). We implement
+//! W. J. Cody's double-precision rational approximation for erf/erfc
+//! (~1e-16 rel. error) and Acklam's inverse-CDF approximation polished
+//! with one Halley step against the accurate forward CDF.
+
+/// Standard normal CDF Φ(x).
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * erfc(-x / std::f64::consts::SQRT_2)
+}
+
+/// Error function, Cody's rational approximation (double precision).
+pub fn erf(x: f64) -> f64 {
+    if x.abs() <= 0.46875 {
+        cody_small(x)
+    } else {
+        let sign = if x >= 0.0 { 1.0 } else { -1.0 };
+        sign * (1.0 - cody_erfc_abs(x.abs()))
+    }
+}
+
+/// Complementary error function erfc(x) = 1 - erf(x).
+pub fn erfc(x: f64) -> f64 {
+    if x.abs() <= 0.46875 {
+        1.0 - cody_small(x)
+    } else if x > 0.0 {
+        cody_erfc_abs(x)
+    } else {
+        2.0 - cody_erfc_abs(-x)
+    }
+}
+
+/// Cody regime 1: erf(x) for |x| <= 0.46875.
+fn cody_small(x: f64) -> f64 {
+    const A: [f64; 5] = [
+        3.16112374387056560e0,
+        1.13864154151050156e2,
+        3.77485237685302021e2,
+        3.20937758913846947e3,
+        1.85777706184603153e-1,
+    ];
+    const B: [f64; 4] = [
+        2.36012909523441209e1,
+        2.44024637934444173e2,
+        1.28261652607737228e3,
+        2.84423683343917062e3,
+    ];
+    let z = x * x;
+    let mut xnum = A[4] * z;
+    let mut xden = z;
+    for i in 0..3 {
+        xnum = (xnum + A[i]) * z;
+        xden = (xden + B[i]) * z;
+    }
+    x * (xnum + A[3]) / (xden + B[3])
+}
+
+/// Cody regimes 2–3: erfc(x) for x > 0.46875.
+fn cody_erfc_abs(x: f64) -> f64 {
+    debug_assert!(x > 0.0);
+    if x <= 4.0 {
+        const C: [f64; 9] = [
+            5.64188496988670089e-1,
+            8.88314979438837594e0,
+            6.61191906371416295e1,
+            2.98635138197400131e2,
+            8.81952221241769090e2,
+            1.71204761263407058e3,
+            2.05107837782607147e3,
+            1.23033935479799725e3,
+            2.15311535474403846e-8,
+        ];
+        const D: [f64; 8] = [
+            1.57449261107098347e1,
+            1.17693950891312499e2,
+            5.37181101862009858e2,
+            1.62138957456669019e3,
+            3.29079923573345963e3,
+            4.36261909014324716e3,
+            3.43936767414372164e3,
+            1.23033935480374942e3,
+        ];
+        let mut xnum = C[8] * x;
+        let mut xden = x;
+        for i in 0..7 {
+            xnum = (xnum + C[i]) * x;
+            xden = (xden + D[i]) * x;
+        }
+        (-x * x).exp() * (xnum + C[7]) / (xden + D[7])
+    } else {
+        const P: [f64; 6] = [
+            3.05326634961232344e-1,
+            3.60344899949804439e-1,
+            1.25781726111229246e-1,
+            1.60837851487422766e-2,
+            6.58749161529837803e-4,
+            1.63153871373020978e-2,
+        ];
+        const Q: [f64; 5] = [
+            2.56852019228982242e0,
+            1.87295284992346047e0,
+            5.27905102951428412e-1,
+            6.05183413124413191e-2,
+            2.33520497626869185e-3,
+        ];
+        if x > 26.5 {
+            return 0.0; // underflows double precision anyway
+        }
+        let z = 1.0 / (x * x);
+        let mut xnum = P[5] * z;
+        let mut xden = z;
+        for i in 0..4 {
+            xnum = (xnum + P[i]) * z;
+            xden = (xden + Q[i]) * z;
+        }
+        let r = z * (xnum + P[4]) / (xden + Q[4]);
+        let r = (1.0 / std::f64::consts::PI.sqrt() - r) / x;
+        (-x * x).exp() * r
+    }
+}
+
+/// Inverse standard normal CDF Φ⁻¹(p) for p ∈ (0, 1).
+///
+/// Acklam's algorithm + one Halley refinement step against the accurate
+/// forward CDF. Panics on p outside (0,1) in debug; clamps in release.
+pub fn inv_normal_cdf(p: f64) -> f64 {
+    debug_assert!(p > 0.0 && p < 1.0, "inv_normal_cdf domain: got {p}");
+    let p = p.clamp(1e-300, 1.0 - 1e-16);
+
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+
+    let x = if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+
+    // Halley refinement against the (accurate) forward CDF.
+    let e = normal_cdf(x) - p;
+    let u = e * (2.0 * std::f64::consts::PI).sqrt() * (x * x / 2.0).exp();
+    x - u / (1.0 + x * u / 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_known_values() {
+        assert!((erf(0.0)).abs() < 1e-15);
+        assert!((erf(1.0) - 0.8427007929497149).abs() < 1e-12);
+        assert!((erf(-1.0) + 0.8427007929497149).abs() < 1e-12);
+        assert!((erf(2.0) - 0.9953222650189527).abs() < 1e-12);
+        assert!((erfc(3.0) - 2.2090496998585441e-5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn cdf_known_values() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-12);
+        assert!((normal_cdf(1.0) - 0.8413447460685429).abs() < 1e-12);
+        assert!((normal_cdf(-1.959963984540054) - 0.025).abs() < 1e-10);
+        assert!((normal_cdf(3.0) - 0.9986501019683699).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverse_known_values() {
+        assert!((inv_normal_cdf(0.975) - 1.959963984540054).abs() < 1e-9);
+        assert!((inv_normal_cdf(0.5)).abs() < 1e-9);
+        assert!((inv_normal_cdf(0.95) - 1.6448536269514722).abs() < 1e-9);
+        assert!((inv_normal_cdf(0.995) - 2.5758293035489004).abs() < 1e-9);
+        assert!((inv_normal_cdf(0.025) + 1.959963984540054).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inverse_round_trip() {
+        for i in 1..200 {
+            let p = i as f64 / 200.0;
+            let x = inv_normal_cdf(p);
+            let back = normal_cdf(x);
+            assert!((back - p).abs() < 1e-12, "p={p} x={x} back={back}");
+        }
+    }
+
+    #[test]
+    fn inverse_monotone() {
+        let mut prev = f64::NEG_INFINITY;
+        for i in 1..1000 {
+            let p = i as f64 / 1000.0;
+            let x = inv_normal_cdf(p);
+            assert!(x > prev);
+            prev = x;
+        }
+    }
+
+    #[test]
+    fn tails_finite() {
+        assert!(inv_normal_cdf(1e-12).is_finite());
+        assert!(inv_normal_cdf(1.0 - 1e-12).is_finite());
+        assert!(inv_normal_cdf(1e-12) < -6.0);
+        assert!(inv_normal_cdf(1.0 - 1e-12) > 6.0);
+    }
+
+    #[test]
+    fn erfc_symmetry() {
+        for &x in &[0.1, 0.7, 1.3, 2.4, 4.5] {
+            assert!((erfc(x) + erfc(-x) - 2.0).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Minimal in-repo property-testing helper (the `proptest` crate is not
+//! available offline). Provides: seeded case generation, failure
+//! reporting with the reproducing seed, and a light shrink over a
+//! user-provided `simplify` function.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+    pub name: &'static str,
+}
+
+impl Prop {
+    pub fn new(name: &'static str) -> Prop {
+        Prop { cases: 128, seed: 0xC0FFEE, name }
+    }
+
+    pub fn cases(mut self, n: usize) -> Prop {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Prop {
+        self.seed = s;
+        self
+    }
+
+    /// Run `check(rng)` for `cases` independent seeded cases; `check`
+    /// should panic (e.g. via assert!) on failure. We catch the panic,
+    /// report the case seed, and re-panic so the test fails with context.
+    pub fn run(self, check: impl Fn(&mut Rng) + std::panic::RefUnwindSafe) {
+        let mut meta = Rng::new(self.seed);
+        for case in 0..self.cases {
+            let case_seed = meta.next_u64();
+            let result = std::panic::catch_unwind(|| {
+                let mut rng = Rng::new(case_seed);
+                check(&mut rng);
+            });
+            if let Err(e) = result {
+                eprintln!(
+                    "property '{}' failed on case {}/{} (case_seed={:#x})",
+                    self.name, case, self.cases, case_seed
+                );
+                std::panic::resume_unwind(e);
+            }
+        }
+    }
+
+    /// Run a property over generated values with shrinking: `gen`
+    /// produces a case, `simplify` proposes smaller variants, and
+    /// `check` returns Ok(()) or Err(description).
+    pub fn run_shrink<T: Clone + std::fmt::Debug>(
+        self,
+        gen: impl Fn(&mut Rng) -> T,
+        simplify: impl Fn(&T) -> Vec<T>,
+        check: impl Fn(&T) -> Result<(), String>,
+    ) {
+        let mut meta = Rng::new(self.seed);
+        for case in 0..self.cases {
+            let case_seed = meta.next_u64();
+            let mut rng = Rng::new(case_seed);
+            let value = gen(&mut rng);
+            if let Err(first_err) = check(&value) {
+                // Greedy shrink: repeatedly take the first simpler failing value.
+                let mut cur = value;
+                let mut err = first_err;
+                'outer: loop {
+                    for cand in simplify(&cur) {
+                        if let Err(e) = check(&cand) {
+                            cur = cand;
+                            err = e;
+                            continue 'outer;
+                        }
+                    }
+                    break;
+                }
+                panic!(
+                    "property '{}' failed (case {case}, seed {case_seed:#x}):\n  value: {:?}\n  error: {}",
+                    self.name, cur, err
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Prop::new("add-commutes").cases(64).run(|rng| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        Prop::new("always-small").cases(64).run(|rng| {
+            let a = rng.below(1000);
+            assert!(a < 10, "a={a}");
+        });
+    }
+
+    #[test]
+    fn shrink_finds_smaller_counterexample() {
+        let result = std::panic::catch_unwind(|| {
+            Prop::new("all-below-5").cases(32).run_shrink(
+                |rng| rng.below(1000),
+                |&v| if v > 0 { vec![v / 2, v - 1] } else { vec![] },
+                |&v| {
+                    if v < 5 {
+                        Ok(())
+                    } else {
+                        Err(format!("{v} >= 5"))
+                    }
+                },
+            );
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        // Shrinking should drive the counterexample down to the boundary.
+        assert!(msg.contains("value: 5"), "msg={msg}");
+    }
+}

@@ -1,0 +1,257 @@
+//! Deterministic, seedable PRNG (xoshiro256**). No external deps; every
+//! experiment in the repo threads an explicit seed through this type so
+//! results are bit-reproducible.
+
+/// xoshiro256** PRNG. Fast, high-quality, and deterministic across
+/// platforms — all stochastic pieces of the system (sampling, synthetic
+/// workloads, LSH projections, arrival processes) draw from this.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create from a seed; any seed (including 0) is valid. The seed is
+    /// expanded with splitmix64 so nearby seeds give unrelated streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()] }
+    }
+
+    /// Derive an independent child stream (for per-head / per-request RNGs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0xA24BAED4963EE407))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n). n must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's method with 128-bit multiply; bias is < 2^-64, fine here.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform integer in [lo, hi).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo)
+    }
+
+    /// Standard normal via Box–Muller (cached second value not kept; the
+    /// callers here value statelessness over the 2x speedup).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal with given mean/std, as f32.
+    pub fn normal32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal() as f32
+    }
+
+    /// Exponential with rate lambda.
+    pub fn exp(&mut self, lambda: f64) -> f64 {
+        -self.f64().max(1e-300).ln() / lambda
+    }
+
+    /// Sample `k` distinct indices uniformly from [0, n) \ `excluded`,
+    /// where `excluded` is a sorted slice. Uses Floyd's algorithm over the
+    /// compressed range so it is O(k log k) and never scans all n.
+    pub fn sample_excluding(&mut self, n: usize, k: usize, excluded: &[usize]) -> Vec<usize> {
+        let m = n - excluded.len(); // size of the residual universe
+        let k = k.min(m);
+        let picked = self.sample_distinct(m, k);
+        // Map compressed index -> original index, skipping `excluded`.
+        picked.into_iter().map(|c| remap_excluding(c, excluded)).collect()
+    }
+
+    /// Floyd's algorithm: k distinct uniform draws from [0, n).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let k = k.min(n);
+        let mut chosen = std::collections::HashSet::with_capacity(k * 2);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.below(j + 1);
+            let v = if chosen.contains(&t) { j } else { t };
+            chosen.insert(v);
+            out.push(v);
+        }
+        out
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Map an index `c` in the compressed universe [0, n - |excluded|) back to
+/// the original universe [0, n), where `excluded` is sorted ascending.
+/// Solves mapped = c + #{excluded ≤ mapped} by monotone fixed-point
+/// iteration with binary search — O(log|excluded|) per draw (a linear
+/// scan here was the decode hot path's top cost; §Perf iteration 5).
+fn remap_excluding(c: usize, excluded: &[usize]) -> usize {
+    let mut mapped = c;
+    loop {
+        let e = excluded.partition_point(|&x| x <= mapped);
+        let next = c + e;
+        if next == mapped {
+            return mapped;
+        }
+        mapped = next;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.below(10);
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(9);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct_and_uniformish() {
+        let mut r = Rng::new(5);
+        let s = r.sample_distinct(100, 30);
+        let set: std::collections::HashSet<_> = s.iter().collect();
+        assert_eq!(set.len(), 30);
+        assert!(s.iter().all(|&x| x < 100));
+        // full draw = permutation of universe
+        let all = r.sample_distinct(50, 50);
+        let set: std::collections::HashSet<_> = all.iter().collect();
+        assert_eq!(set.len(), 50);
+    }
+
+    #[test]
+    fn sample_excluding_avoids_excluded() {
+        let mut r = Rng::new(11);
+        let excluded = vec![0, 1, 2, 50, 99];
+        for _ in 0..100 {
+            let s = r.sample_excluding(100, 20, &excluded);
+            assert_eq!(s.len(), 20);
+            for &x in &s {
+                assert!(x < 100);
+                assert!(!excluded.contains(&x), "drew excluded {x}");
+            }
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), 20);
+        }
+    }
+
+    #[test]
+    fn sample_excluding_covers_whole_residual() {
+        let mut r = Rng::new(13);
+        let excluded = vec![2, 3, 4];
+        let s = r.sample_excluding(8, 5, &excluded);
+        let mut s = s.clone();
+        s.sort_unstable();
+        assert_eq!(s, vec![0, 1, 5, 6, 7]);
+    }
+
+    #[test]
+    fn remap_excluding_basic() {
+        // universe 0..6, excluded {1,3}: compressed [0,1,2,3] -> [0,2,4,5]
+        let ex = vec![1, 3];
+        assert_eq!(remap_excluding(0, &ex), 0);
+        assert_eq!(remap_excluding(1, &ex), 2);
+        assert_eq!(remap_excluding(2, &ex), 4);
+        assert_eq!(remap_excluding(3, &ex), 5);
+    }
+
+    #[test]
+    fn exp_mean() {
+        let mut r = Rng::new(21);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.exp(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+}

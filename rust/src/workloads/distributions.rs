@@ -1,0 +1,185 @@
+//! Score-profile-controlled KV synthesis.
+//!
+//! Given a target logit profile, keys are constructed as
+//! `k_i = l_i · q̂ / ‖q̂‖ + orthogonal noise`, so ⟨k_i, q_scaled⟩ = l_i up
+//! to noise — letting us dial the attention-score distribution exactly
+//! (sharp, power-law, flat, or a planted mixture). Values carry a shared
+//! mean direction plus noise, matching the anisotropy of real value
+//! embeddings (and keeping ‖N‖₂ non-degenerate, which mean-zero random
+//! values would destroy).
+
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+/// Attention-score regimes from Fig. 2 (top panes).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScoreProfile {
+    /// A few tokens dominate: `heavy` tokens get logit `boost`, the rest
+    /// are noise. Top-k's best case.
+    Sharp { heavy: usize, boost: f32 },
+    /// Power-law decaying logits with exponent `alpha` (Tactic's model).
+    PowerLaw { alpha: f32 },
+    /// Near-uniform logits: random sampling's best case.
+    Flat,
+    /// Sharp head + heavy tail: the mixed regime where the hybrid wins.
+    Mixed { heavy: usize, boost: f32, alpha: f32 },
+}
+
+/// One synthetic attention head: KV cache + a scaled query.
+pub struct HeadSample {
+    pub k: Mat,
+    pub v: Mat,
+    /// Query pre-scaled by 1/√d.
+    pub q_scaled: Vec<f32>,
+}
+
+/// Build a head of `n` tokens, dim `d`, with the given score profile.
+pub fn synthesize_head(n: usize, d: usize, profile: ScoreProfile, rng: &mut Rng) -> HeadSample {
+    // Random unit query direction; the scaled query has norm ~1 so logits
+    // are exactly the profile values.
+    let mut q: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 1.0)).collect();
+    let qn = crate::tensor::norm2(&q);
+    for x in q.iter_mut() {
+        *x /= qn;
+    }
+
+    let logits = profile_logits(n, profile, rng);
+
+    // Keys: l_i * q + noise orthogonalized against q.
+    let noise_std = 0.4;
+    let mut k = Mat::zeros(n, d);
+    for i in 0..n {
+        let mut noise: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, noise_std)).collect();
+        let proj = crate::tensor::dot(&noise, &q);
+        for c in 0..d {
+            noise[c] -= proj * q[c];
+            k.set(i, c, logits[i] * q[c] + noise[c]);
+        }
+    }
+
+    // Values: shared mean direction + per-token noise + a component
+    // correlated with the token's *score rank*. The rank-correlated term
+    // is what makes deterministic truncation (top-k) biased: dropping the
+    // tail systematically tilts the renormalized output toward the
+    // high-score tokens' value direction — the failure mode Fig. 2 (and
+    // §3) attributes to top-k on non-sharp heads. Unbiased sampling is
+    // immune by construction.
+    let mean_dir: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 1.0)).collect();
+    let corr_dir: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 1.0)).collect();
+    let mean_logit = logits.iter().sum::<f32>() / n as f32;
+    let mut v = Mat::zeros(n, d);
+    for i in 0..n {
+        let tilt = 0.8 * (logits[i] - mean_logit).clamp(-2.0, 2.0);
+        for c in 0..d {
+            v.set(i, c, mean_dir[c] + tilt * corr_dir[c] + rng.normal32(0.0, 0.7));
+        }
+    }
+
+    HeadSample { k, v, q_scaled: q }
+}
+
+/// Target logits for a profile, shuffled so position carries no signal
+/// (except that the heavy tokens of `Sharp`/`Mixed` stay identifiable by
+/// magnitude, not index).
+pub fn profile_logits(n: usize, profile: ScoreProfile, rng: &mut Rng) -> Vec<f32> {
+    let mut logits: Vec<f32> = match profile {
+        ScoreProfile::Sharp { heavy, boost } => (0..n)
+            .map(|i| if i < heavy { boost + rng.normal32(0.0, 0.3) } else { rng.normal32(0.0, 0.5) })
+            .collect(),
+        ScoreProfile::PowerLaw { alpha } => (0..n)
+            .map(|i| {
+                // logit = -alpha * ln(rank): attention scores ∝ rank^-alpha
+                let rank = (i + 1) as f32;
+                -alpha * rank.ln() + rng.normal32(0.0, 0.2) + 6.0
+            })
+            .collect(),
+        ScoreProfile::Flat => (0..n).map(|_| rng.normal32(0.0, 0.25)).collect(),
+        ScoreProfile::Mixed { heavy, boost, alpha } => (0..n)
+            .map(|i| {
+                if i < heavy {
+                    boost + rng.normal32(0.0, 0.3)
+                } else {
+                    let rank = (i - heavy + 1) as f32;
+                    -alpha * rank.ln() + rng.normal32(0.0, 0.3) + 2.0
+                }
+            })
+            .collect(),
+    };
+    rng.shuffle(&mut logits);
+    logits
+}
+
+/// Effective support size of the attention distribution: #tokens needed
+/// to reach `p` cumulative mass (the Fig. 2 top-pane statistic).
+pub fn coverage_count(scores: &[f32], p: f64) -> usize {
+    let mut sorted: Vec<f32> = scores.to_vec();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut cum = 0.0f64;
+    for (i, &s) in sorted.iter().enumerate() {
+        cum += s as f64;
+        if cum >= p {
+            return i + 1;
+        }
+    }
+    sorted.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::attention_scores;
+
+    #[test]
+    fn sharp_profile_concentrates_mass() {
+        let mut rng = Rng::new(1);
+        let h = synthesize_head(2000, 32, ScoreProfile::Sharp { heavy: 8, boost: 8.0 }, &mut rng);
+        let scores = attention_scores(&h.k, &h.q_scaled);
+        let c90 = coverage_count(&scores, 0.9);
+        assert!(c90 <= 16, "sharp head needed {c90} tokens for 90% mass");
+    }
+
+    #[test]
+    fn flat_profile_spreads_mass() {
+        let mut rng = Rng::new(2);
+        let h = synthesize_head(2000, 32, ScoreProfile::Flat, &mut rng);
+        let scores = attention_scores(&h.k, &h.q_scaled);
+        let c90 = coverage_count(&scores, 0.9);
+        assert!(c90 > 1000, "flat head reached 90% mass with {c90} tokens");
+    }
+
+    #[test]
+    fn power_law_in_between() {
+        let mut rng = Rng::new(3);
+        let h = synthesize_head(2000, 32, ScoreProfile::PowerLaw { alpha: 1.0 }, &mut rng);
+        let scores = attention_scores(&h.k, &h.q_scaled);
+        let c90 = coverage_count(&scores, 0.9);
+        assert!(c90 > 16 && c90 < 1900, "power-law coverage {c90}");
+    }
+
+    #[test]
+    fn logits_realized_accurately() {
+        // The construction should realize ⟨k_i, q⟩ = l_i exactly (noise is
+        // orthogonal to q).
+        let mut rng = Rng::new(4);
+        let h = synthesize_head(100, 16, ScoreProfile::Flat, &mut rng);
+        let logits = crate::attention::logits_all(&h.k, &h.q_scaled);
+        for &l in &logits {
+            assert!(l.abs() < 2.0, "flat logit out of range: {l}");
+        }
+    }
+
+    #[test]
+    fn coverage_count_basics() {
+        assert_eq!(coverage_count(&[0.5, 0.3, 0.2], 0.5), 1);
+        assert_eq!(coverage_count(&[0.5, 0.3, 0.2], 0.79), 2);
+        assert_eq!(coverage_count(&[0.5, 0.3, 0.2], 0.99), 3);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let h1 = synthesize_head(50, 8, ScoreProfile::Flat, &mut Rng::new(7));
+        let h2 = synthesize_head(50, 8, ScoreProfile::Flat, &mut Rng::new(7));
+        assert_eq!(h1.k.data, h2.k.data);
+        assert_eq!(h1.v.data, h2.v.data);
+    }
+}

@@ -1,0 +1,22 @@
+//! Synthetic workloads calibrated to the regimes the paper evaluates on.
+//!
+//! We do not have the Llama/Mistral/DeepSeek KV caches or the RULER /
+//! LongBench corpora in this environment (see DESIGN.md §3). What the
+//! estimators and policies actually see, however, is (K, V, q) — so we
+//! generate KV caches whose *attention-score distributions* span the
+//! sharp → flat spectrum of Fig. 2, and plant retrieval/aggregation
+//! structure that mirrors what the RULER-HARD tasks test:
+//!
+//! * needle tasks (`niah_*`) reward heavy-hitter recall — a handful of
+//!   tokens carry the answer;
+//! * aggregation tasks (`fwe`, `vt`, `cwe`) encode the answer in the
+//!   *total mass* of a large group of medium-score tokens — exactly the
+//!   long-tail regime where deterministic top-k fails and unbiased
+//!   sampling wins.
+
+pub mod distributions;
+pub mod tasks;
+pub mod traces;
+
+pub use distributions::{synthesize_head, HeadSample, ScoreProfile};
+pub use tasks::{Task, TaskInstance, TaskKind};

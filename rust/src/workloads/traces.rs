@@ -1,0 +1,88 @@
+//! Serving traces: Poisson arrivals with configurable context-length and
+//! generation-length distributions, for the engine benchmarks (Fig. 5 and
+//! the end-to-end example).
+
+use crate::util::Rng;
+
+/// One request in a workload trace.
+#[derive(Clone, Debug)]
+pub struct TraceRequest {
+    pub id: u64,
+    /// Arrival time in seconds from trace start.
+    pub arrival_s: f64,
+    /// Prompt/context length in tokens.
+    pub context_len: usize,
+    /// Number of tokens to generate.
+    pub gen_len: usize,
+}
+
+/// Trace generator configuration.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Mean arrival rate (requests/second).
+    pub rate: f64,
+    pub num_requests: usize,
+    pub context_min: usize,
+    pub context_max: usize,
+    pub gen_min: usize,
+    pub gen_max: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            rate: 2.0,
+            num_requests: 32,
+            context_min: 512,
+            context_max: 2048,
+            gen_min: 16,
+            gen_max: 64,
+        }
+    }
+}
+
+/// Generate a Poisson-arrival trace with log-uniform context lengths
+/// (long-context serving traffic is heavy-tailed in context size).
+pub fn generate_trace(cfg: &TraceConfig, rng: &mut Rng) -> Vec<TraceRequest> {
+    let mut t = 0.0f64;
+    (0..cfg.num_requests)
+        .map(|i| {
+            t += rng.exp(cfg.rate);
+            let lc = (cfg.context_min as f64).ln();
+            let hc = (cfg.context_max as f64).ln();
+            let context_len = (lc + (hc - lc) * rng.f64()).exp() as usize;
+            let gen_len = rng.range(cfg.gen_min, cfg.gen_max + 1);
+            TraceRequest { id: i as u64, arrival_s: t, context_len, gen_len }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_sorted_and_in_bounds() {
+        let cfg = TraceConfig::default();
+        let mut rng = Rng::new(1);
+        let trace = generate_trace(&cfg, &mut rng);
+        assert_eq!(trace.len(), cfg.num_requests);
+        let mut prev = 0.0;
+        for r in &trace {
+            assert!(r.arrival_s >= prev);
+            prev = r.arrival_s;
+            assert!(r.context_len >= cfg.context_min && r.context_len <= cfg.context_max);
+            assert!(r.gen_len >= cfg.gen_min && r.gen_len <= cfg.gen_max);
+        }
+    }
+
+    #[test]
+    fn mean_interarrival_matches_rate() {
+        let cfg = TraceConfig { rate: 5.0, num_requests: 2000, ..Default::default() };
+        let mut rng = Rng::new(2);
+        let trace = generate_trace(&cfg, &mut rng);
+        let total = trace.last().unwrap().arrival_s;
+        let mean = total / cfg.num_requests as f64;
+        assert!((mean - 0.2).abs() < 0.03, "mean inter-arrival {mean}");
+    }
+}

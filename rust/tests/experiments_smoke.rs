@@ -1,0 +1,56 @@
+//! Smoke tests for the experiment harness: every registered experiment
+//! runs at a reduced scale, produces non-empty output, and writes its
+//! results files. (Full-scale runs happen via `vattn exp all`; their
+//! outputs are recorded in EXPERIMENTS.md.)
+
+use vattn::experiments;
+use vattn::util::cli::Args;
+
+fn quick_args() -> Args {
+    Args::parse(
+        [
+            "--n", "1024", "--d", "32", "--trials", "2", "--steps", "60", "--prompt", "24",
+            "--resamples", "60", "--quick",
+        ]
+        .iter()
+        .map(|s| s.to_string()),
+    )
+}
+
+#[test]
+fn every_experiment_runs_at_small_scale() {
+    let args = quick_args();
+    for (id, _, _) in experiments::registry() {
+        // fig5 benches wall-clock; still fine at small n.
+        let out = experiments::run(id, &args).unwrap_or_else(|e| panic!("{id}: {e}"));
+        assert!(!out.is_empty(), "{id}: empty output");
+        assert!(out.contains("##"), "{id}: no table rendered");
+        let path = vattn::experiments::common::results_dir().join(format!(
+            "{}.json",
+            match id {
+                "fig1" => "fig1_pareto",
+                "fig1-corr" => "fig1_correlation",
+                "fig5" => "fig5_speedup",
+                "fig11" => "fig11_clt_hoeffding",
+                "fig16" => "fig16_ablation",
+                "fig18" => "fig18_qq",
+                "fig19" => "fig19_sensitivity",
+                "table2" => "table2_longgen",
+                "appd4" => "appd4_bias",
+                other => other,
+            }
+        ));
+        assert!(path.exists(), "{id}: results JSON missing at {path:?}");
+    }
+}
+
+#[test]
+fn registry_listing_is_stable() {
+    let ids: Vec<&str> = experiments::registry().iter().map(|(n, _, _)| *n).collect();
+    for required in [
+        "fig2", "fig1", "fig1-corr", "fig5", "table1", "table2", "table9", "table10",
+        "table11", "fig11", "fig16", "fig18", "fig19", "table12", "appd4",
+    ] {
+        assert!(ids.contains(&required), "missing experiment {required}");
+    }
+}

@@ -1,0 +1,178 @@
+//! Property-based tests over coordinator and estimator invariants, using
+//! the in-repo helper (`util::proptest`). Each property runs across many
+//! seeded random cases; failures report the reproducing seed.
+
+use vattn::attention::{dense_sdpa, sparse_sdpa, Selection};
+use vattn::budget::{budget_denominator, budget_numerator, BaseStats, Bound};
+use vattn::model::{Model, ModelConfig};
+use vattn::policies::*;
+use vattn::server::{AttentionMode, Engine, EngineConfig, Request};
+use vattn::tensor::{rel_l2_error, Mat};
+use vattn::util::proptest::Prop;
+use vattn::util::Rng;
+
+fn random_head(rng: &mut Rng, n: usize, d: usize) -> (Mat, Mat, Vec<f32>) {
+    let k = Mat::randn(n, d, 1.0, rng);
+    let v = Mat::randn(n, d, 1.0, rng);
+    let q: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 1.0) / (d as f32).sqrt()).collect();
+    (k, v, q)
+}
+
+#[test]
+fn prop_selections_always_valid() {
+    Prop::new("selections-valid").cases(60).run(|rng| {
+        let n = rng.range(64, 2048);
+        let d = [16, 32, 48][rng.below(3)];
+        let (k, v, q) = random_head(rng, n, d);
+        let methods = [
+            "oracle-top-k",
+            "random-sample",
+            "hybrid",
+            "hashattention",
+            "quest",
+            "magicpig",
+            "vattention-oracle",
+        ];
+        let m = methods[rng.below(methods.len())];
+        let knobs = vattn::experiments::common::knob_sweep(m);
+        let knob = knobs[rng.below(knobs.len())];
+        let mut pol = vattn::experiments::common::make_policy(m, knob, rng.next_u64());
+        let mut fork = rng.fork(1);
+        let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut fork, step: 0 };
+        let sel = pol.select(&mut ctx);
+        if let Err(e) = sel.validate(n) {
+            panic!("{m} (n={n}, knob={knob}): {e}");
+        }
+    });
+}
+
+#[test]
+fn prop_sparse_converges_to_dense_as_density_to_one() {
+    Prop::new("density-1-equals-dense").cases(40).run(|rng| {
+        let n = rng.range(32, 512);
+        let d = 16;
+        let (k, v, q) = random_head(rng, n, d);
+        let dense = dense_sdpa(&k, &v, &q).out;
+        let sel = Selection::deterministic((0..n).collect());
+        let sparse = sparse_sdpa(&k, &v, &q, &sel);
+        let err = rel_l2_error(&sparse, &dense);
+        assert!(err < 1e-5, "full selection err {err} (n={n})");
+    });
+}
+
+#[test]
+fn prop_budget_monotone_in_tolerance() {
+    Prop::new("budget-monotone").cases(100).run(|rng| {
+        let stats = BaseStats {
+            n_s: rng.range(100, 100_000),
+            sigma2_d: rng.f64() * 4.0 + 1e-6,
+            trace_sigma_n: rng.f64() * 100.0 + 1e-6,
+            d_hat: rng.f64() * 1e4 + 10.0,
+            n_hat_norm: rng.f64() * 1e4 + 10.0,
+            range_d: rng.f64() * 10.0 + 0.1,
+            range_n: rng.f64() * 30.0 + 0.1,
+            base_size: 128,
+        };
+        let bound = if rng.below(2) == 0 { Bound::Clt } else { Bound::Hoeffding };
+        let eps_lo = 0.01 + rng.f64() * 0.1;
+        let eps_hi = eps_lo * (1.5 + rng.f64());
+        let delta = 0.05 + rng.f64() * 0.3;
+        let b_tight = budget_denominator(&stats, eps_lo, delta, bound);
+        let b_loose = budget_denominator(&stats, eps_hi, delta, bound);
+        assert!(b_tight >= b_loose, "D: eps {eps_lo}<{eps_hi} but {b_tight}<{b_loose}");
+        let b_tight = budget_numerator(&stats, eps_lo, delta, bound);
+        let b_loose = budget_numerator(&stats, eps_hi, delta, bound);
+        assert!(b_tight >= b_loose, "N: eps monotonicity violated");
+    });
+}
+
+#[test]
+fn prop_estimator_unbiased_over_resampling() {
+    // For any head, averaging the importance-weighted denominator over
+    // many resamples approaches the exact denominator.
+    Prop::new("estimator-unbiased").cases(8).run(|rng| {
+        let n = rng.range(200, 800);
+        let (k, v, q) = random_head(rng, n, 16);
+        let m_ref = 0.0f32;
+        let (_, d_exact) = vattn::attention::exact_num_den(&k, &v, &q, m_ref);
+        let b = (n / 4).max(10);
+        let mut acc = 0.0f64;
+        let resamples = 800;
+        for t in 0..resamples {
+            let mut fork = rng.fork(t as u64);
+            let idx = fork.sample_distinct(n, b);
+            let sel = Selection::sampled(idx, b as f32 / n as f32);
+            let (_, d_hat) = vattn::attention::weighted_num_den(&k, &v, &q, &sel, m_ref);
+            acc += d_hat;
+        }
+        let rel = (acc / resamples as f64 - d_exact).abs() / d_exact;
+        assert!(rel < 0.05, "bias {rel} (n={n}, b={b})");
+    });
+}
+
+#[test]
+fn prop_engine_serves_every_request_exactly_once() {
+    Prop::new("engine-complete-fifo").cases(12).run(|rng| {
+        let n_req = rng.range(1, 12);
+        let max_batch = rng.range(1, 5);
+        let eng = Engine::new(
+            Model::new(ModelConfig::tiny(), 42),
+            EngineConfig { max_batch, ..Default::default() },
+        );
+        let reqs: Vec<Request> = (0..n_req as u64)
+            .map(|i| {
+                let plen = rng.range(1, 24);
+                let glen = rng.range(1, 8);
+                Request::new(i, (0..plen as u32).collect(), glen)
+            })
+            .collect();
+        let want: Vec<(u64, usize)> = reqs.iter().map(|r| (r.id, r.gen_len)).collect();
+        let out = eng.serve(reqs, &AttentionMode::Dense).unwrap();
+        assert_eq!(out.len(), n_req, "request count");
+        for (r, (id, glen)) in out.iter().zip(want.iter()) {
+            assert_eq!(r.id, *id, "ids sorted/unique");
+            assert_eq!(r.tokens.len(), *glen, "generation length");
+        }
+    });
+}
+
+#[test]
+fn prop_vattention_density_never_exceeds_one_and_respects_floor() {
+    Prop::new("vattention-density-bounds").cases(30).run(|rng| {
+        let n = rng.range(300, 4000);
+        let (k, v, q) = random_head(rng, n, 16);
+        let mut cfg = vattn::experiments::common::vcfg(0.01 + rng.f64() * 0.4);
+        cfg.sink = SizeSpec::Abs(rng.range(0, 64));
+        cfg.window = SizeSpec::Abs(rng.range(0, 64));
+        cfg.heavy = SizeSpec::Frac(rng.f64() * 0.2);
+        cfg.base_rate = 0.01 + rng.f64() * 0.1;
+        let mut pol = VAttentionPolicy::oracle(cfg);
+        let mut fork = rng.fork(2);
+        let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut fork, step: 0 };
+        let sel = pol.select(&mut ctx);
+        sel.validate(n).expect("valid");
+        let dec = pol.last.as_ref().unwrap();
+        assert!(dec.budget <= dec.n_s);
+        assert!(sel.len() == dec.n_fixed + dec.budget);
+        assert!(sel.density(n) <= 1.0 + 1e-9);
+    });
+}
+
+#[test]
+fn prop_top_indices_are_actually_top() {
+    Prop::new("top-indices-correct").cases(80).run(|rng| {
+        let n = rng.range(8, 500);
+        let scores: Vec<f32> = (0..n).map(|_| rng.normal32(0.0, 1.0)).collect();
+        let count = rng.range(1, n + 1);
+        let top = top_indices_excluding(&scores, count, &[]);
+        assert_eq!(top.len(), count.min(n));
+        // min of selected >= max of unselected
+        let sel_min = top.iter().map(|&i| scores[i]).fold(f32::INFINITY, f32::min);
+        let set: std::collections::HashSet<_> = top.iter().collect();
+        let unsel_max = (0..n)
+            .filter(|i| !set.contains(i))
+            .map(|i| scores[i])
+            .fold(f32::NEG_INFINITY, f32::max);
+        assert!(sel_min >= unsel_max - 1e-6, "sel_min {sel_min} < unsel_max {unsel_max}");
+    });
+}

@@ -1,0 +1,119 @@
+//! PJRT round-trip tests: artifacts load + compile + execute, and the
+//! artifact-driven decode step agrees with the rust-native model.
+//!
+//! Requires `make artifacts` (config=small) to have run; tests skip
+//! gracefully when artifacts are missing so `cargo test` works before
+//! the python toolchain has been invoked.
+
+use vattn::kvcache::KvCache;
+use vattn::model::{Model, ModelConfig};
+use vattn::runtime::{bucket_for, PjrtModel, Runtime};
+use vattn::tensor::rel_l2_error;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("artifacts must load"))
+}
+
+#[test]
+fn smoke_artifact_executes() {
+    let Some(rt) = runtime_or_skip() else { return };
+    assert!(rt.has("smoke"));
+    let x = rt.upload(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+    let y = rt.upload(&[1.0, 1.0, 1.0, 1.0], &[2, 2]).unwrap();
+    let out = rt.execute_1("smoke", &[&x, &y]).unwrap();
+    assert_eq!(out, vec![5.0, 5.0, 9.0, 9.0]);
+}
+
+#[test]
+fn all_expected_artifacts_present() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for name in ["qkv", "ffn", "logits", "attn_b128", "attn_b2048"] {
+        assert!(rt.has(name), "missing artifact {name}; have {:?}", rt.names());
+    }
+}
+
+#[test]
+fn pjrt_decode_matches_rust_native() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = ModelConfig::small();
+    let native = Model::new(cfg.clone(), 42);
+    let pjrt = PjrtModel::new(rt, cfg.clone(), &native.w).expect("upload weights");
+
+    let mut c_native = KvCache::new(&cfg);
+    let mut c_pjrt = KvCache::new(&cfg);
+    let prompt = [3u32, 141, 5926, 535, 897, 93];
+    let mut last_native = None;
+    let mut last_pjrt = None;
+    for (pos, &t) in prompt.iter().enumerate() {
+        last_native = Some(native.decode_step(t, pos, &mut c_native, None));
+        last_pjrt = Some(pjrt.decode_step(t, pos, &mut c_pjrt, None).expect("pjrt step"));
+    }
+    let a = last_native.unwrap();
+    let b = last_pjrt.unwrap();
+    assert_eq!(a.logits.len(), cfg.vocab);
+    let err = rel_l2_error(&b.logits, &a.logits);
+    assert!(err < 5e-3, "pjrt vs native logits rel err {err}");
+    // caches must agree too
+    let (kn, _) = c_native.head(0, 0);
+    let (kp, _) = c_pjrt.head(0, 0);
+    assert_eq!(kn.rows, kp.rows);
+    let kerr = rel_l2_error(&kp.data, &kn.data);
+    assert!(kerr < 1e-3, "cache K rel err {kerr}");
+}
+
+#[test]
+fn pjrt_sparse_selection_reduces_traffic_and_stays_close() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = ModelConfig::small();
+    let native = Model::new(cfg.clone(), 7);
+    let pjrt = PjrtModel::new(rt, cfg.clone(), &native.w).expect("upload weights");
+
+    // Build a 200-token cache densely, twice (sparse run + dense control).
+    let build = |pjrt: &PjrtModel| {
+        let mut c = KvCache::new(&cfg);
+        for pos in 0..200 {
+            pjrt.decode_step((pos % 97) as u32, pos, &mut c, None).unwrap();
+        }
+        c
+    };
+    let mut c_dense = build(&pjrt);
+    let dense = pjrt.decode_step(11, 200, &mut c_dense, None).unwrap();
+
+    let mut c_sparse = build(&pjrt);
+    let mut select = |_l: usize,
+                      _h: usize,
+                      k: &vattn::tensor::Mat,
+                      _v: &vattn::tensor::Mat,
+                      q: &[f32]| {
+        // oracle top-64 + sink/window
+        let logits = vattn::attention::logits_all(k, q);
+        let mut idx = vattn::policies::sink_window_indices(k.rows, 8, 16);
+        let top = vattn::policies::top_indices_excluding(&logits, 64, &idx);
+        idx.extend(top);
+        idx.sort_unstable();
+        vattn::attention::Selection::deterministic(idx)
+    };
+    c_sparse.stats.reset();
+    let sparse = pjrt.decode_step(11, 200, &mut c_sparse, Some(&mut select)).unwrap();
+    assert!(sparse.mean_density < 0.55, "density {}", sparse.mean_density);
+    assert!(c_sparse.stats.bytes_read > 0);
+    // top-heavy selection keeps logits close on a random-weight model
+    let err = rel_l2_error(&sparse.logits, &dense.logits);
+    assert!(err < 0.35, "sparse vs dense logits err {err}");
+}
+
+#[test]
+fn bucket_function_covers_all_artifact_buckets() {
+    for b in vattn::runtime::BUDGET_BUCKETS {
+        assert_eq!(bucket_for(b), Some(b));
+    }
+}
