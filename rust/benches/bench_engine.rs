@@ -1,49 +1,119 @@
-//! Serving-engine throughput bench (rust-native backend): dense vs
-//! vAttention decode over a batched trace. The L3 coordinator numbers
-//! for EXPERIMENTS.md §Perf.
+//! Parallel continuous-batching engine bench: decode-throughput scaling
+//! across worker counts on a 16-request batch (acceptance target: ≥ 2x
+//! at 8 workers vs 1 on multi-core hosts, with byte-identical token
+//! streams), dense-vs-vAttention modes, and an open-loop Poisson trace
+//! with the TTFT/TPOT summary. The L3 coordinator numbers for
+//! EXPERIMENTS.md §Perf.
 //!
 //! Run: cargo bench --bench bench_engine
 
 use std::time::Instant;
 
+use vattn::metrics::ServeSummary;
 use vattn::model::{Model, ModelConfig, Sampler};
 use vattn::policies::{SizeSpec, VAttentionPolicy};
 use vattn::server::{AttentionMode, Engine, EngineConfig, Request};
+use vattn::workloads::traces::{generate_trace, to_requests, TraceConfig};
+use vattn::util::Rng;
 
-fn run(engine: &Engine<Model>, mode: &AttentionMode, label: &str) {
-    let requests: Vec<Request> = (0..6u64)
+/// Mid-size model: heavy enough per step that a scheduler round
+/// amortizes the pool's per-job overhead, light enough for a bench.
+fn bench_model() -> ModelConfig {
+    ModelConfig { d_model: 256, n_heads: 4, n_kv_heads: 4, n_layers: 4, d_ff: 512, vocab: 1024 }
+}
+
+fn requests_16() -> Vec<Request> {
+    (0..16u64)
         .map(|i| {
-            let ctx = 256 + 64 * i as usize;
-            Request::new(i, (0..ctx as u32).map(|t| t % 250).collect(), 24)
+            let ctx = 64 + 24 * (i as usize % 8); // 64..232 tokens
+            let prompt: Vec<u32> = (0..ctx as u32).map(|t| (t * 31 + i as u32) % 1024).collect();
+            Request::new(i, prompt, 24)
         })
-        .collect();
-    let t0 = Instant::now();
-    let out = engine.serve(requests, mode).expect("serve");
-    let wall = t0.elapsed().as_secs_f64();
-    let tokens: usize = out.iter().map(|r| r.tokens.len()).sum();
-    let decode_s: f64 = out.iter().map(|r| r.decode_s).sum();
-    let density: f64 = out.iter().map(|r| r.mean_density).sum::<f64>() / out.len() as f64;
-    let bytes: usize = out.iter().map(|r| r.kv_bytes_read).sum();
-    println!(
-        "{label:<22} wall {wall:>6.2}s  decode-tok/s {:>8.1}  density {density:>6.3}  kv-read {bytes:>12}",
-        tokens as f64 / decode_s,
-    );
+        .collect()
+}
+
+fn engine(workers: usize) -> Engine<Model> {
+    Engine::new(
+        Model::new(bench_model(), 42),
+        EngineConfig {
+            max_batch: 16,
+            sampler: Sampler::Greedy,
+            seed: 1,
+            workers,
+            ..Default::default()
+        },
+    )
 }
 
 fn main() {
-    println!("== serving engine (tiny model, rust-native backend) ==");
-    let engine = Engine::new(
-        Model::new(ModelConfig::tiny(), 42),
-        EngineConfig { max_batch: 3, sampler: Sampler::Greedy, seed: 1 },
+    println!("== engine scaling: 16-request batch, gen 24, d=256 model ==");
+    let run = |workers: usize| -> (f64, usize, Vec<Vec<u32>>) {
+        let eng = engine(workers);
+        let t0 = Instant::now();
+        let out = eng.serve(requests_16(), &AttentionMode::Dense).expect("serve");
+        let wall = t0.elapsed().as_secs_f64();
+        let tokens: usize = out.iter().map(|r| r.tokens.len()).sum();
+        let streams: Vec<Vec<u32>> = out.into_iter().map(|r| r.tokens).collect();
+        (wall, tokens, streams)
+    };
+    let (base_wall, base_tokens, base_streams) = run(1);
+    println!(
+        "workers  1  wall {base_wall:>6.2}s  throughput {:>7.1} tok/s  speedup vs 1 worker  1.00x",
+        base_tokens as f64 / base_wall
     );
-    run(&engine, &AttentionMode::Dense, "dense");
-    for eps in [0.05, 0.1, 0.2] {
-        let mode = AttentionMode::Sparse(Box::new(move |_l, _h| {
-            let mut c = vattn::experiments::common::vcfg(eps);
-            c.sink = SizeSpec::Abs(16);
-            c.window = SizeSpec::Abs(32);
-            Box::new(VAttentionPolicy::oracle(c))
-        }));
-        run(&engine, &mode, &format!("vattention eps={eps}"));
+    for workers in [2usize, 4, 8] {
+        let (wall, tokens, streams) = run(workers);
+        assert_eq!(base_streams, streams, "token streams diverged at {workers} workers");
+        println!(
+            "workers {workers:>2}  wall {wall:>6.2}s  throughput {:>7.1} tok/s  speedup vs 1 worker {:>5.2}x",
+            tokens as f64 / wall,
+            base_wall / wall
+        );
     }
+    println!("token streams identical across all worker counts: OK");
+
+    println!("\n== dense vs vAttention decode (8 workers) ==");
+    let eng = engine(8);
+    for (label, mode) in [
+        ("dense".to_string(), AttentionMode::Dense),
+        (
+            "vattention eps=0.1".to_string(),
+            AttentionMode::Sparse(Box::new(move |_l, _h| {
+                let mut c = vattn::experiments::common::vcfg(0.1);
+                c.sink = SizeSpec::Abs(16);
+                c.window = SizeSpec::Abs(32);
+                c.verify = vattn::budget::Verify::Denominator;
+                Box::new(VAttentionPolicy::oracle(c))
+            })),
+        ),
+    ] {
+        let t0 = Instant::now();
+        let out = eng.serve(requests_16(), &mode).expect("serve");
+        let wall = t0.elapsed().as_secs_f64();
+        let tokens: usize = out.iter().map(|r| r.tokens.len()).sum();
+        let decode_s: f64 = out.iter().map(|r| r.decode_s).sum();
+        let density: f64 = out.iter().map(|r| r.mean_density).sum::<f64>() / out.len() as f64;
+        let bytes: usize = out.iter().map(|r| r.kv_bytes_read).sum();
+        println!(
+            "{label:<22} wall {wall:>6.2}s  decode-tok/s {:>8.1}  density {density:>6.3}  kv-read {bytes:>12}",
+            tokens as f64 / decode_s,
+        );
+    }
+
+    println!("\n== open-loop Poisson trace (rate 8 req/s, 24 requests, 8 workers) ==");
+    let trace_cfg = TraceConfig {
+        rate: 8.0,
+        num_requests: 24,
+        context_min: 64,
+        context_max: 192,
+        gen_min: 8,
+        gen_max: 24,
+    };
+    let mut rng = Rng::new(7);
+    let trace = generate_trace(&trace_cfg, &mut rng);
+    let requests = to_requests(&trace, bench_model().vocab);
+    let t0 = Instant::now();
+    let out = eng.serve_open_loop(requests, &AttentionMode::Dense).expect("open loop");
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{}", ServeSummary::from_results(&out, wall).render());
 }

@@ -13,7 +13,9 @@
 //! bytes moved, and dense-vs-sparse token agreement. Recorded in
 //! EXPERIMENTS.md §E2E.
 //!
-//! Run: make artifacts && cargo run --release --example serve_engine
+//! Run: make artifacts && cargo run --release --features pjrt --example serve_engine
+//! (the default offline build links the runtime stubs, which refuse to
+//! load artifacts — the `pjrt` feature swaps in the real PJRT path).
 
 use vattn::model::{Model, ModelConfig, Sampler};
 use vattn::policies::{SizeSpec, VAttentionPolicy};
@@ -54,7 +56,18 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let _ = &mut rng;
 
-    let engine = Engine::new(pjrt, EngineConfig { max_batch: 2, sampler: Sampler::Greedy, seed: 1 });
+    // workers stays 1 on the PJRT backend until the bound xla crate's
+    // thread-safety is verified — see the SAFETY note in pjrt_model.rs.
+    let engine = Engine::new(
+        pjrt,
+        EngineConfig {
+            max_batch: 2,
+            sampler: Sampler::Greedy,
+            seed: 1,
+            workers: 1,
+            ..Default::default()
+        },
+    );
 
     // ── dense pass ──
     println!("\nserving DENSE ...");

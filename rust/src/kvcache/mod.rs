@@ -6,13 +6,27 @@
 //! the Fig. 5 bandwidth accounting is explicit, and maintain the small
 //! auxiliary caches vAttention needs (the incremental random base-sample
 //! cache; approximate-top-k bit caches live inside their scorers).
+//!
+//! Serving-engine caches are *paged*: the engine leases fixed-size token
+//! blocks from a [`BlockPool`] at admission and hands them to the
+//! request's `KvCache` as a block table (see `paged.rs`). Within a
+//! request, rows stay contiguous per (layer, head) slot — index
+//! selection scans K linearly, so contiguity is the hot-path layout —
+//! while the block table carries placement, capacity accounting and
+//! admission gating, mirroring vLLM's logical/physical split.
 
+pub mod paged;
 pub mod tiered;
 
+pub use paged::{BlockId, BlockPool, PageError};
 pub use tiered::{TierStats, TransferModel};
 
 use crate::model::ModelConfig;
 use crate::tensor::Mat;
+
+/// Block size (tokens) used when a cache is built standalone, outside an
+/// engine's block pool.
+pub const DEFAULT_BLOCK_TOKENS: usize = 16;
 
 /// Per-(layer, head) append-only KV store.
 pub struct KvCache {
@@ -24,10 +38,29 @@ pub struct KvCache {
     v: Vec<Mat>,
     /// Host→device traffic accounting.
     pub stats: TierStats,
+    /// Allocation granularity in tokens.
+    block_tokens: usize,
+    /// Physical blocks leased from a [`BlockPool`] (empty ⇒ standalone).
+    block_table: Vec<BlockId>,
+    /// Paged caches enforce the leased-capacity bound on append.
+    paged: bool,
 }
 
 impl KvCache {
+    /// Standalone (unpaged) cache — grows without a capacity bound. Used
+    /// by experiments and tests that run outside the serving engine.
     pub fn new(cfg: &ModelConfig) -> KvCache {
+        Self::build(cfg, DEFAULT_BLOCK_TOKENS, Vec::new(), false)
+    }
+
+    /// Paged cache backed by blocks leased from a [`BlockPool`]. The
+    /// caller (the engine) frees the table via [`KvCache::release_blocks`]
+    /// when the request completes.
+    pub fn paged(cfg: &ModelConfig, block_tokens: usize, blocks: Vec<BlockId>) -> KvCache {
+        Self::build(cfg, block_tokens.max(1), blocks, true)
+    }
+
+    fn build(cfg: &ModelConfig, block_tokens: usize, blocks: Vec<BlockId>, paged: bool) -> KvCache {
         // One slot per (layer, KV head) — query heads share KV slots
         // under grouped-query attention.
         let slots = cfg.n_layers * cfg.n_kv_heads;
@@ -39,6 +72,9 @@ impl KvCache {
             k: (0..slots).map(|_| Mat::zeros(0, d)).collect(),
             v: (0..slots).map(|_| Mat::zeros(0, d)).collect(),
             stats: TierStats::default(),
+            block_tokens,
+            block_table: blocks,
+            paged,
         }
     }
 
@@ -47,14 +83,27 @@ impl KvCache {
         layer * self.n_heads + head
     }
 
-    /// Append one token's (k, v) rows for a head.
+    /// Append one token's (k, v) rows for a head. Paged caches enforce
+    /// the capacity their block table was leased for — overflowing it
+    /// means the engine's admission reservation was wrong.
     pub fn append(&mut self, layer: usize, head: usize, k_row: &[f32], v_row: &[f32]) {
         let s = self.slot(layer, head);
         debug_assert_eq!(k_row.len(), self.d_head);
+        if self.paged {
+            let cap = self.block_table.len() * self.block_tokens;
+            assert!(
+                self.k[s].rows < cap,
+                "paged KvCache overflow: slot ({layer}, {head}) at {} tokens, {} blocks × {} reserved",
+                self.k[s].rows,
+                self.block_table.len(),
+                self.block_tokens
+            );
+        }
         self.k[s].data.extend_from_slice(k_row);
         self.k[s].rows += 1;
         self.v[s].data.extend_from_slice(v_row);
         self.v[s].rows += 1;
+        self.stats.record_write(2 * self.d_head * 4);
     }
 
     /// Number of cached tokens for a layer (all heads advance together).
@@ -103,6 +152,42 @@ impl KvCache {
             m.rows = 0;
             m.data.clear();
         }
+    }
+
+    /// Tokens currently cached (all slots advance together).
+    pub fn tokens(&self) -> usize {
+        self.k.first().map(|m| m.rows).unwrap_or(0)
+    }
+
+    /// Allocation granularity in tokens.
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Blocks leased to this cache.
+    pub fn blocks_reserved(&self) -> usize {
+        self.block_table.len()
+    }
+
+    /// Blocks actually filled by appended tokens.
+    pub fn blocks_used(&self) -> usize {
+        self.tokens().div_ceil(self.block_tokens)
+    }
+
+    /// Physical block holding the cached token at `pos` (None when the
+    /// position has not been appended yet).
+    pub fn block_of(&self, pos: usize) -> Option<BlockId> {
+        if pos >= self.tokens() {
+            return None;
+        }
+        self.block_table.get(pos / self.block_tokens).copied()
+    }
+
+    /// Drop all cached tokens and hand the leased block table back to
+    /// the caller (who returns it to the [`BlockPool`]).
+    pub fn release_blocks(&mut self) -> Vec<BlockId> {
+        self.clear();
+        std::mem::take(&mut self.block_table)
     }
 }
 
@@ -190,6 +275,54 @@ mod tests {
         assert_eq!(cache.resident_bytes(), 2 * b1);
         cache.clear();
         assert_eq!(cache.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn paged_cache_tracks_blocks_and_releases() {
+        let c = cfg();
+        let mut pool = BlockPool::for_model(&c, 4, None);
+        let blocks = pool.try_alloc(pool.blocks_for_tokens(10)).unwrap();
+        assert_eq!(blocks.len(), 3);
+        let mut cache = KvCache::paged(&c, 4, blocks);
+        let row = vec![1.0f32; c.d_head()];
+        for _ in 0..10 {
+            for l in 0..c.n_layers {
+                for h in 0..c.n_kv_heads {
+                    cache.append(l, h, &row, &row);
+                }
+            }
+        }
+        assert_eq!(cache.tokens(), 10);
+        assert_eq!(cache.blocks_used(), 3);
+        assert_eq!(cache.blocks_reserved(), 3);
+        assert!(cache.block_of(0).is_some());
+        assert!(cache.block_of(11).is_none());
+        let freed = cache.release_blocks();
+        assert_eq!(freed.len(), 3);
+        assert_eq!(cache.tokens(), 0);
+        pool.free(freed).unwrap();
+        assert_eq!(pool.in_use_blocks(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "paged KvCache overflow")]
+    fn paged_cache_rejects_overflow() {
+        let c = cfg();
+        let mut cache = KvCache::paged(&c, 4, vec![0]);
+        let row = vec![0.0f32; c.d_head()];
+        for _ in 0..5 {
+            cache.append(0, 0, &row, &row);
+        }
+    }
+
+    #[test]
+    fn append_charges_write_traffic() {
+        let c = cfg();
+        let mut cache = KvCache::new(&c);
+        let row = vec![0.0f32; c.d_head()];
+        cache.append(0, 0, &row, &row);
+        assert_eq!(cache.stats.bytes_written, 2 * c.d_head() * 4);
+        assert_eq!(cache.stats.writes, 1);
     }
 
     #[test]

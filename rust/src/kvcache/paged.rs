@@ -1,0 +1,236 @@
+//! Paged KV-cache block allocator (vLLM-style block manager, specialized
+//! to this testbed's host-resident caches).
+//!
+//! Memory is accounted in fixed-size *blocks* of `block_tokens` tokens;
+//! one block spans every (layer, kv-head) slot of a request, so
+//! `block_bytes = kv_bytes_per_token × block_tokens`. The engine leases
+//! a request's worst-case block count at admission (prompt + generation
+//! budget — both known up front), which makes the scheduler's capacity
+//! gate exact and keeps the decode hot path completely allocator-free:
+//! workers never touch the pool, so steps stay data-parallel and
+//! deterministic. Freed blocks return to a LIFO free list and are reused
+//! before new ids are minted.
+
+use crate::model::ModelConfig;
+
+/// Physical block handle leased from a [`BlockPool`].
+pub type BlockId = u32;
+
+/// Misuse of the allocator — both indicate an engine bookkeeping bug.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PageError {
+    /// The block was already free.
+    DoubleFree(BlockId),
+    /// The block id was never minted by this pool.
+    UnknownBlock(BlockId),
+}
+
+impl std::fmt::Display for PageError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PageError::DoubleFree(id) => write!(f, "double free of block {id}"),
+            PageError::UnknownBlock(id) => write!(f, "unknown block {id}"),
+        }
+    }
+}
+
+impl std::error::Error for PageError {}
+
+/// Fixed-size block allocator with a free list and a capacity limit.
+#[derive(Debug)]
+pub struct BlockPool {
+    block_tokens: usize,
+    block_bytes: usize,
+    /// `None` = unbounded (blocks are minted on demand).
+    capacity_blocks: Option<usize>,
+    /// Recycled ids, popped LIFO.
+    free: Vec<BlockId>,
+    /// Lease state per minted id (`true` = currently leased out).
+    live: Vec<bool>,
+    in_use: usize,
+    peak_in_use: usize,
+    reused: u64,
+}
+
+impl BlockPool {
+    pub fn new(block_tokens: usize, block_bytes: usize, capacity_blocks: Option<usize>) -> BlockPool {
+        BlockPool {
+            block_tokens: block_tokens.max(1),
+            block_bytes: block_bytes.max(1),
+            capacity_blocks,
+            free: Vec::new(),
+            live: Vec::new(),
+            in_use: 0,
+            peak_in_use: 0,
+            reused: 0,
+        }
+    }
+
+    /// Pool sized for a model: block bytes follow from the KV row shape,
+    /// and an optional byte budget becomes a block capacity (≥ 1).
+    pub fn for_model(
+        cfg: &ModelConfig,
+        block_tokens: usize,
+        capacity_bytes: Option<usize>,
+    ) -> BlockPool {
+        let bt = block_tokens.max(1);
+        let bb = (cfg.kv_bytes_per_token() * bt).max(1);
+        let cap = capacity_bytes.map(|bytes| (bytes / bb).max(1));
+        BlockPool::new(bt, bb, cap)
+    }
+
+    /// Blocks needed to hold `tokens` tokens (at least one).
+    pub fn blocks_for_tokens(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens).max(1)
+    }
+
+    /// Lease `n` blocks, reusing freed ids first. Returns `None` when the
+    /// lease would exceed capacity (the caller's admission gate).
+    pub fn try_alloc(&mut self, n: usize) -> Option<Vec<BlockId>> {
+        if let Some(cap) = self.capacity_blocks {
+            if self.in_use + n > cap {
+                return None;
+            }
+        }
+        let mut ids = Vec::with_capacity(n);
+        for _ in 0..n {
+            match self.free.pop() {
+                Some(id) => {
+                    self.live[id as usize] = true;
+                    self.reused += 1;
+                    ids.push(id);
+                }
+                None => {
+                    let id = self.live.len() as BlockId;
+                    self.live.push(true);
+                    ids.push(id);
+                }
+            }
+        }
+        self.in_use += n;
+        self.peak_in_use = self.peak_in_use.max(self.in_use);
+        Some(ids)
+    }
+
+    /// Return leased blocks to the free list. Rejects double frees and
+    /// foreign ids instead of corrupting the pool.
+    pub fn free(&mut self, ids: impl IntoIterator<Item = BlockId>) -> Result<(), PageError> {
+        for id in ids {
+            match self.live.get_mut(id as usize) {
+                None => return Err(PageError::UnknownBlock(id)),
+                Some(slot) if !*slot => return Err(PageError::DoubleFree(id)),
+                Some(slot) => {
+                    *slot = false;
+                    self.free.push(id);
+                    self.in_use -= 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn block_bytes(&self) -> usize {
+        self.block_bytes
+    }
+
+    pub fn capacity_blocks(&self) -> Option<usize> {
+        self.capacity_blocks
+    }
+
+    /// Blocks currently leased out.
+    pub fn in_use_blocks(&self) -> usize {
+        self.in_use
+    }
+
+    /// Ids ever minted (leased + recycled).
+    pub fn minted_blocks(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Length of the recycled-id free list.
+    pub fn free_list_len(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn bytes_in_use(&self) -> usize {
+        self.in_use * self.block_bytes
+    }
+
+    pub fn peak_bytes_in_use(&self) -> usize {
+        self.peak_in_use * self.block_bytes
+    }
+
+    /// How many leases were served from the free list (reuse, not mint).
+    pub fn reuse_count(&self) -> u64 {
+        self.reused
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_mints_then_reuses_lifo() {
+        let mut p = BlockPool::new(16, 1024, None);
+        let a = p.try_alloc(3).unwrap();
+        assert_eq!(a, vec![0, 1, 2]);
+        assert_eq!(p.in_use_blocks(), 3);
+        p.free([1]).unwrap();
+        assert_eq!(p.free_list_len(), 1);
+        // freed id comes back before a new one is minted
+        let b = p.try_alloc(2).unwrap();
+        assert_eq!(b, vec![1, 3]);
+        assert_eq!(p.minted_blocks(), 4);
+        assert_eq!(p.reuse_count(), 1);
+    }
+
+    #[test]
+    fn capacity_gates_allocation() {
+        let mut p = BlockPool::new(16, 1024, Some(4));
+        let a = p.try_alloc(3).unwrap();
+        assert!(p.try_alloc(2).is_none(), "3 + 2 > 4 must refuse");
+        assert_eq!(p.in_use_blocks(), 3, "refused alloc must not leak");
+        let b = p.try_alloc(1).unwrap();
+        assert!(p.try_alloc(1).is_none());
+        p.free(a).unwrap();
+        assert!(p.try_alloc(3).is_some());
+        p.free(b).unwrap();
+    }
+
+    #[test]
+    fn double_free_and_unknown_are_rejected() {
+        let mut p = BlockPool::new(16, 1024, None);
+        let a = p.try_alloc(1).unwrap();
+        p.free(a.clone()).unwrap();
+        assert_eq!(p.free(a), Err(PageError::DoubleFree(0)));
+        assert_eq!(p.free([99]), Err(PageError::UnknownBlock(99)));
+        assert_eq!(p.in_use_blocks(), 0);
+    }
+
+    #[test]
+    fn byte_accounting_and_peak() {
+        let mut p = BlockPool::new(8, 500, None);
+        let a = p.try_alloc(4).unwrap();
+        assert_eq!(p.bytes_in_use(), 2000);
+        p.free(a).unwrap();
+        assert_eq!(p.bytes_in_use(), 0);
+        assert_eq!(p.peak_bytes_in_use(), 2000);
+    }
+
+    #[test]
+    fn for_model_matches_kv_row_math() {
+        let cfg = ModelConfig::tiny();
+        let p = BlockPool::for_model(&cfg, 16, Some(4 * cfg.kv_bytes_per_token() * 16));
+        assert_eq!(p.block_bytes(), cfg.kv_bytes_per_token() * 16);
+        assert_eq!(p.capacity_blocks(), Some(4));
+        assert_eq!(p.blocks_for_tokens(1), 1);
+        assert_eq!(p.blocks_for_tokens(16), 1);
+        assert_eq!(p.blocks_for_tokens(17), 2);
+        assert_eq!(p.blocks_for_tokens(0), 1, "even empty requests hold one block");
+    }
+}

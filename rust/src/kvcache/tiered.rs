@@ -8,12 +8,21 @@ pub struct TierStats {
     pub bytes_read: usize,
     /// Number of gather operations.
     pub reads: usize,
+    /// Bytes appended into the host-resident cache.
+    pub bytes_written: usize,
+    /// Number of append operations.
+    pub writes: usize,
 }
 
 impl TierStats {
     pub fn record_read(&mut self, bytes: usize) {
         self.bytes_read += bytes;
         self.reads += 1;
+    }
+
+    pub fn record_write(&mut self, bytes: usize) {
+        self.bytes_written += bytes;
+        self.writes += 1;
     }
 
     pub fn reset(&mut self) {
@@ -53,10 +62,14 @@ mod tests {
         let mut s = TierStats::default();
         s.record_read(100);
         s.record_read(50);
+        s.record_write(30);
         assert_eq!(s.bytes_read, 150);
         assert_eq!(s.reads, 2);
+        assert_eq!(s.bytes_written, 30);
+        assert_eq!(s.writes, 1);
         s.reset();
         assert_eq!(s.bytes_read, 0);
+        assert_eq!(s.bytes_written, 0);
     }
 
     #[test]

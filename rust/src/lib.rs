@@ -3,10 +3,11 @@
 //! A three-layer reproduction of "vAttention: Verified Sparse Attention"
 //! (Desai, Agrawal, et al., 2025):
 //!
-//! * **L3 (this crate)** — the serving coordinator: KV cache management,
-//!   index-selection policies (vAttention + all evaluated baselines),
-//!   the verified budget machinery, a continuous-batching engine, and
-//!   the experiment harness reproducing every table/figure.
+//! * **L3 (this crate)** — the serving coordinator: paged KV cache
+//!   management, index-selection policies (vAttention + all evaluated
+//!   baselines), the verified budget machinery, a parallel
+//!   continuous-batching engine with open-loop trace serving, and the
+//!   experiment harness reproducing every table/figure.
 //! * **L2** — `python/compile/model.py`: JAX transformer blocks lowered
 //!   AOT to HLO text under `artifacts/`, executed from rust via PJRT.
 //! * **L1** — `python/compile/kernels/`: Pallas kernels (sparse SDPA with
@@ -29,4 +30,6 @@ pub mod tensor;
 pub mod workloads;
 pub mod util;
 
-pub fn version() -> &'static str { "0.1.0" }
+pub fn version() -> &'static str {
+    "0.1.0"
+}

@@ -4,6 +4,8 @@
 //!   exp <id> [--n N] [--trials T] [--seed S] [--quick]   run an experiment (or `all`)
 //!   list                                                  list experiments
 //!   serve [--model tiny|small] [--mode dense|vattention] [--requests R]
+//!         [--workers W] [--max-batch B] [--block-tokens T] [--kv-cap-mb M]
+//!         [--open-loop] [--rate R]
 //!                                                         run the serving engine on a trace
 //!   info                                                  build/config info
 
@@ -45,18 +47,21 @@ fn main() {
         }
         _ => {
             println!("usage: vattn <list|exp <id>|serve|info> [options]");
-            println!("  vattn exp all --quick          run every experiment (reduced trials)");
-            println!("  vattn exp table1 --trials 20   single experiment");
-            println!("  vattn serve --mode vattention  engine demo on a synthetic trace");
+            println!("  vattn exp all --quick              run every experiment (reduced trials)");
+            println!("  vattn exp table1 --trials 20       single experiment");
+            println!("  vattn serve --mode vattention      engine demo on a synthetic trace");
+            println!("  vattn serve --workers 8 --open-loop --rate 4  open-loop Poisson load");
         }
     }
 }
 
 fn serve(args: &Args) -> anyhow::Result<()> {
+    use vattn::metrics::ServeSummary;
     use vattn::model::{Model, ModelConfig, Sampler};
-    use vattn::server::{AttentionMode, Engine, EngineConfig, Request};
+    use vattn::server::{AttentionMode, Engine, EngineConfig};
+    use vattn::util::threadpool::default_parallelism;
     use vattn::util::Rng;
-    use vattn::workloads::traces::{generate_trace, TraceConfig};
+    use vattn::workloads::traces::{generate_trace, to_requests, TraceConfig};
 
     let model_name = args.get_str("model", "tiny");
     let cfg = ModelConfig::by_name(model_name)
@@ -64,25 +69,20 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     let mode_name = args.get_str("mode", "vattention");
     let n_req = args.get_usize("requests", 8);
     let seed = args.get_u64("seed", 42);
+    let workers = args.get_usize("workers", default_parallelism());
+    let open_loop = args.has_flag("open-loop");
 
     let trace_cfg = TraceConfig {
+        rate: args.get_f64("rate", 2.0),
         num_requests: n_req,
         context_min: args.get_usize("ctx-min", 128),
         context_max: args.get_usize("ctx-max", 512),
         gen_min: 8,
         gen_max: 32,
-        ..Default::default()
     };
     let mut rng = Rng::new(seed);
     let trace = generate_trace(&trace_cfg, &mut rng);
-    let requests: Vec<Request> = trace
-        .iter()
-        .map(|t| {
-            let prompt: Vec<u32> =
-                (0..t.context_len as u32).map(|i| (i * 31 + t.id as u32) % 250).collect();
-            Request::new(t.id, prompt, t.gen_len)
-        })
-        .collect();
+    let requests = to_requests(&trace, cfg.vocab);
 
     let mode = match mode_name {
         "dense" => AttentionMode::Dense,
@@ -94,31 +94,39 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown mode '{other}' (dense|vattention)"),
     };
 
+    let kv_cap_mb = args.get_usize("kv-cap-mb", 0);
     let engine = Engine::new(
         Model::new(cfg, seed),
-        EngineConfig { max_batch: args.get_usize("max-batch", 4), sampler: Sampler::Greedy, seed },
+        EngineConfig {
+            max_batch: args.get_usize("max-batch", 4),
+            sampler: Sampler::Greedy,
+            seed,
+            workers,
+            block_tokens: args.get_usize("block-tokens", 16),
+            kv_capacity_bytes: if kv_cap_mb > 0 { Some(kv_cap_mb << 20) } else { None },
+            ..Default::default()
+        },
     );
     let t0 = std::time::Instant::now();
-    let results = engine.serve(requests, &mode)?;
+    let results = if open_loop {
+        engine.serve_open_loop(requests, &mode)?
+    } else {
+        engine.serve(requests.into_iter().map(|r| r.req).collect(), &mode)?
+    };
     let wall = t0.elapsed().as_secs_f64();
 
-    let total_tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
-    let mean_density: f64 =
-        results.iter().map(|r| r.mean_density).sum::<f64>() / results.len() as f64;
-    let total_bytes: usize = results.iter().map(|r| r.kv_bytes_read).sum();
     println!(
-        "served {} requests, {} tokens in {:.2}s ({:.1} tok/s)",
-        results.len(),
-        total_tokens,
-        wall,
-        total_tokens as f64 / wall
+        "mode={mode_name} model={model_name} workers={} max_batch={} open_loop={open_loop}",
+        engine.workers(),
+        engine.cfg.max_batch
     );
-    println!("mode={mode_name} mean decode density={mean_density:.3} kv bytes read={total_bytes}");
+    println!("{}", ServeSummary::from_results(&results, wall).render());
     for r in &results {
         println!(
-            "  req {:>3}: {} tokens, ttft {:>7.1}ms, decode {:>7.1}ms, density {:.3}",
+            "  req {:>3}: {} tokens, wait {:>7.1}ms, ttft {:>7.1}ms, decode {:>7.1}ms, density {:.3}",
             r.id,
             r.tokens.len(),
+            r.wait_s * 1e3,
             r.ttft_s * 1e3,
             r.decode_s * 1e3,
             r.mean_density

@@ -1,7 +1,12 @@
 //! Statistics utilities for the experiment harness: summary stats,
 //! percentiles, correlations (Pearson/Spearman — the Fig. 1-right
 //! correlation claim), histograms, and a QQ-based normality deviation
-//! statistic for the Fig. 18 CLT-validity check.
+//! statistic for the Fig. 18 CLT-validity check. Serving-side TTFT /
+//! TPOT / throughput reporting lives in `serving.rs`.
+
+pub mod serving;
+
+pub use serving::{ascii_histogram, summarize, LatencySummary, ServeSummary};
 
 /// Mean of a slice.
 pub fn mean(xs: &[f64]) -> f64 {

@@ -1,0 +1,213 @@
+//! Serving-side metrics: TTFT / TPOT / throughput summaries and ASCII
+//! histograms over a batch of completed requests — the open-loop load
+//! report printed by `vattn serve` and `bench_engine`.
+
+use crate::metrics::{f, histogram, mean, percentile, Table};
+use crate::server::RequestResult;
+
+/// Percentile summary of one latency distribution (seconds).
+#[derive(Clone, Debug)]
+pub struct LatencySummary {
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+/// Summarize a sample of latencies (empty ⇒ all zeros).
+pub fn summarize(xs: &[f64]) -> LatencySummary {
+    LatencySummary {
+        p50: percentile(xs, 50.0),
+        p90: percentile(xs, 90.0),
+        p99: percentile(xs, 99.0),
+        mean: mean(xs),
+        max: xs.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+/// Aggregate serving report for one engine run.
+#[derive(Clone, Debug)]
+pub struct ServeSummary {
+    pub requests: usize,
+    pub tokens: usize,
+    /// End-to-end wall clock of the serve call, seconds.
+    pub wall_s: f64,
+    /// Generated tokens per second of wall clock.
+    pub throughput_tok_s: f64,
+    /// Completed requests per second of wall clock.
+    pub request_rate: f64,
+    /// Time to first token from *arrival* (queue wait + prefill).
+    pub ttft: LatencySummary,
+    /// Mean time per output token.
+    pub tpot: LatencySummary,
+    /// Queue wait before admission.
+    pub wait: LatencySummary,
+    pub mean_density: f64,
+    pub kv_bytes_read: usize,
+    ttft_samples: Vec<f64>,
+    tpot_samples: Vec<f64>,
+}
+
+impl ServeSummary {
+    pub fn from_results(results: &[RequestResult], wall_s: f64) -> ServeSummary {
+        let ttft_samples: Vec<f64> = results.iter().map(|r| r.ttft_from_arrival_s()).collect();
+        let tpot_samples: Vec<f64> = results.iter().map(|r| r.tpot_s()).collect();
+        let waits: Vec<f64> = results.iter().map(|r| r.wait_s).collect();
+        let tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
+        let n = results.len();
+        let density = if n > 0 {
+            results.iter().map(|r| r.mean_density).sum::<f64>() / n as f64
+        } else {
+            1.0
+        };
+        ServeSummary {
+            requests: n,
+            tokens,
+            wall_s,
+            throughput_tok_s: if wall_s > 0.0 { tokens as f64 / wall_s } else { 0.0 },
+            request_rate: if wall_s > 0.0 { n as f64 / wall_s } else { 0.0 },
+            ttft: summarize(&ttft_samples),
+            tpot: summarize(&tpot_samples),
+            wait: summarize(&waits),
+            mean_density: density,
+            kv_bytes_read: results.iter().map(|r| r.kv_bytes_read).sum(),
+            ttft_samples,
+            tpot_samples,
+        }
+    }
+
+    /// Render the summary table plus TTFT/TPOT histograms.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "serving summary",
+            &["requests", "tokens", "wall s", "tok/s", "req/s", "density", "kv MiB read"],
+        );
+        t.row(vec![
+            self.requests.to_string(),
+            self.tokens.to_string(),
+            f(self.wall_s, 2),
+            f(self.throughput_tok_s, 1),
+            f(self.request_rate, 2),
+            f(self.mean_density, 3),
+            f(self.kv_bytes_read as f64 / (1 << 20) as f64, 1),
+        ]);
+        let mut l = Table::new(
+            "latency (ms)",
+            &["metric", "p50", "p90", "p99", "mean", "max"],
+        );
+        for (name, s) in [("ttft", &self.ttft), ("tpot", &self.tpot), ("queue wait", &self.wait)] {
+            l.row(vec![
+                name.to_string(),
+                f(s.p50 * 1e3, 1),
+                f(s.p90 * 1e3, 1),
+                f(s.p99 * 1e3, 1),
+                f(s.mean * 1e3, 1),
+                f(s.max * 1e3, 1),
+            ]);
+        }
+        let mut out = t.render();
+        out.push('\n');
+        out.push_str(&l.render());
+        out.push('\n');
+        out.push_str(&ascii_histogram("ttft (ms)", &scale_ms(&self.ttft_samples), 8, 40));
+        out.push_str(&ascii_histogram("tpot (ms)", &scale_ms(&self.tpot_samples), 8, 40));
+        out
+    }
+}
+
+fn scale_ms(xs: &[f64]) -> Vec<f64> {
+    xs.iter().map(|x| x * 1e3).collect()
+}
+
+/// Fixed-width ASCII histogram (one line per bin, `#` bars).
+pub fn ascii_histogram(title: &str, xs: &[f64], bins: usize, width: usize) -> String {
+    let mut out = format!("## histogram: {title}\n");
+    if xs.is_empty() || bins == 0 {
+        out.push_str("(no samples)\n");
+        return out;
+    }
+    let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    // Widen a degenerate range so every sample lands in [lo, hi).
+    let hi = if hi > lo { hi + (hi - lo) * 1e-9 } else { lo + 1.0 };
+    let counts = histogram(xs, lo, hi, bins);
+    let peak = counts.iter().copied().max().unwrap_or(1).max(1);
+    let step = (hi - lo) / bins as f64;
+    for (b, &c) in counts.iter().enumerate() {
+        let bar = "#".repeat(c * width / peak);
+        out.push_str(&format!(
+            "{:>10.2} .. {:>10.2} |{:<w$}| {}\n",
+            lo + b as f64 * step,
+            lo + (b + 1) as f64 * step,
+            bar,
+            c,
+            w = width
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(id: u64, n_tok: usize, wait: f64, ttft: f64, decode: f64) -> RequestResult {
+        RequestResult {
+            id,
+            tokens: vec![0; n_tok],
+            wait_s: wait,
+            ttft_s: ttft,
+            decode_s: decode,
+            mean_density: 0.5,
+            kv_bytes_read: 1024,
+        }
+    }
+
+    #[test]
+    fn summary_aggregates_counts_and_latency() {
+        let rs = vec![result(0, 10, 0.0, 0.1, 0.9), result(1, 20, 0.5, 0.2, 1.9)];
+        let s = ServeSummary::from_results(&rs, 3.0);
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.tokens, 30);
+        assert!((s.throughput_tok_s - 10.0).abs() < 1e-9);
+        assert!((s.mean_density - 0.5).abs() < 1e-12);
+        assert_eq!(s.kv_bytes_read, 2048);
+        // ttft from arrival includes queue wait: max = 0.5 + 0.2
+        assert!((s.ttft.max - 0.7).abs() < 1e-9);
+        // tpot divides decode time over tokens - 1 (first token is
+        // prefill's): 0.9/9 and 1.9/19 -> both 0.1
+        assert!((s.tpot.p50 - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tpot_zero_for_single_token_generations() {
+        let r = result(0, 1, 0.0, 0.1, 0.0);
+        assert_eq!(r.tpot_s(), 0.0);
+    }
+
+    #[test]
+    fn render_contains_tables_and_histograms() {
+        let rs = vec![result(0, 5, 0.0, 0.05, 0.5)];
+        let out = ServeSummary::from_results(&rs, 1.0).render();
+        assert!(out.contains("## serving summary"));
+        assert!(out.contains("## latency (ms)"));
+        assert!(out.contains("## histogram: ttft (ms)"));
+        assert!(out.contains("## histogram: tpot (ms)"));
+    }
+
+    #[test]
+    fn histogram_handles_degenerate_and_empty() {
+        let h = ascii_histogram("x", &[], 4, 10);
+        assert!(h.contains("no samples"));
+        let h = ascii_histogram("x", &[1.0, 1.0, 1.0], 4, 10);
+        assert!(h.contains('#'), "{h}");
+    }
+
+    #[test]
+    fn summarize_empty_is_zero() {
+        let s = summarize(&[]);
+        assert_eq!(s.p50, 0.0);
+        assert_eq!(s.max, 0.0);
+    }
+}

@@ -1,0 +1,84 @@
+//! The real PJRT-backed artifact registry (`pjrt` feature only): compiles
+//! every `*.hlo.txt` once on the CPU PJRT client and executes them on
+//! the serving hot path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// A compiled-artifact registry over a PJRT client.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load and compile every `*.hlo.txt` under `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut exes = HashMap::new();
+        let entries = std::fs::read_dir(&dir)
+            .with_context(|| format!("artifact dir {dir:?} (run `make artifacts` first)"))?;
+        for entry in entries {
+            let path = entry?.path();
+            let name = path.file_name().unwrap().to_string_lossy().to_string();
+            if let Some(stem) = name.strip_suffix(".hlo.txt") {
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| anyhow!("parse {name}: {e:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+                exes.insert(stem.to_string(), exe);
+            }
+        }
+        if exes.is_empty() {
+            return Err(anyhow!("no .hlo.txt artifacts in {dir:?}"));
+        }
+        Ok(Runtime { client, exes, dir })
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.exes.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Upload an f32 tensor to the device.
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload {dims:?}: {e:?}"))
+    }
+
+    /// Execute an artifact on device buffers; returns the flattened
+    /// tuple elements as literals (artifacts are lowered with
+    /// return_tuple=True).
+    pub fn execute(&self, name: &str, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}' (have: {:?})", self.names()))?;
+        let out = exe.execute_b(args).map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("download {name}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Convenience: execute and read a single f32 output tensor.
+    pub fn execute_1(&self, name: &str, args: &[&xla::PjRtBuffer]) -> Result<Vec<f32>> {
+        let parts = self.execute(name, args)?;
+        parts
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{name}: empty tuple"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{name}: to_vec: {e:?}"))
+    }
+}

@@ -35,6 +35,18 @@ pub struct PjrtModel {
     emb_host: Mat,
 }
 
+// SAFETY CLAIM, NOT VERIFIED: these impls assert that the CPU PJRT
+// client, its compiled executables and the device-resident buffers are
+// internally synchronized (the PJRT C API documents its CPU client as
+// thread-safe), and the engine never mutates a PjrtModel after
+// construction — worker threads only call `decode_step(&self, ..)`
+// through a shared Arc. Whoever wires up the `xla` dependency (see
+// Cargo.toml [features]) must confirm the bound crate's thread-safety
+// before running the engine with `workers > 1`, or serialize execution
+// behind a Mutex here; until then keep `workers: 1` on PJRT engines.
+unsafe impl Send for PjrtModel {}
+unsafe impl Sync for PjrtModel {}
+
 impl PjrtModel {
     /// Upload `weights` once and bind to the artifact runtime.
     pub fn new(rt: Runtime, cfg: ModelConfig, weights: &Weights) -> Result<PjrtModel> {

@@ -1,0 +1,70 @@
+//! Offline stand-ins for the PJRT runtime (default build, without the
+//! `pjrt` feature). They present the same API surface so the engine,
+//! examples and tests compile unchanged; constructors report the missing
+//! runtime instead of executing anything.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::attention::Selection;
+use crate::kvcache::KvCache;
+use crate::model::{ModelConfig, StepOut, Weights};
+use crate::tensor::Mat;
+
+const NO_PJRT: &str = "built without the `pjrt` feature — rebuild with `--features pjrt` \
+                       (requires a local `xla` crate and xla_extension; see DESIGN.md §7)";
+
+/// Placeholder for a device-resident buffer.
+pub struct PjrtBuffer;
+
+/// Placeholder artifact registry; `load` always fails.
+pub struct Runtime {
+    pub dir: PathBuf,
+}
+
+impl Runtime {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let _ = dir.as_ref();
+        bail!(NO_PJRT)
+    }
+
+    pub fn has(&self, _name: &str) -> bool {
+        false
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    pub fn upload(&self, _data: &[f32], _dims: &[usize]) -> Result<PjrtBuffer> {
+        Err(anyhow!(NO_PJRT))
+    }
+
+    pub fn execute_1(&self, _name: &str, _args: &[&PjrtBuffer]) -> Result<Vec<f32>> {
+        Err(anyhow!(NO_PJRT))
+    }
+}
+
+/// Placeholder artifact-backed transformer; `new` always fails, and the
+/// `Backend` impl over it is never reachable in the default build.
+pub struct PjrtModel {
+    pub cfg: ModelConfig,
+}
+
+impl PjrtModel {
+    pub fn new(_rt: Runtime, cfg: ModelConfig, _weights: &Weights) -> Result<PjrtModel> {
+        let _ = cfg;
+        Err(anyhow!(NO_PJRT))
+    }
+
+    pub fn decode_step(
+        &self,
+        _token: u32,
+        _pos: usize,
+        _cache: &mut KvCache,
+        _select: Option<&mut dyn FnMut(usize, usize, &Mat, &Mat, &[f32]) -> Selection>,
+    ) -> Result<StepOut> {
+        Err(anyhow!(NO_PJRT))
+    }
+}

@@ -1,22 +1,38 @@
-//! The generation engine: continuous batching over a compute backend.
+//! The generation engine: parallel continuous batching over a compute
+//! backend, with a paged KV cache.
 //!
-//! Scheduling model (vLLM-style, specialized to this testbed): a FIFO
-//! waiting queue; up to `max_batch` active requests; each scheduler round
-//! advances every active request by one decode step (prefill first,
-//! token by token, dense per the paper's Setup B); completed requests
-//! free their slot immediately and the queue backfills.
+//! Scheduling model (vLLM-style, specialized to this testbed), as three
+//! phases per scheduler round:
+//!
+//! 1. **Admission** — FIFO over the waiting queue, gated by batch
+//!    capacity (`max_batch`), arrival time (open-loop traces), and the
+//!    paged-KV block pool: a request is admitted only when its
+//!    worst-case block count (prompt + generation budget, both known up
+//!    front) can be leased. Reserving worst-case at admission keeps the
+//!    decode hot path allocator-free and the capacity gate exact.
+//! 2. **Step execution** — every active request advances one step (a
+//!    prefill chunk, or one decode token). Each request owns its
+//!    `KvCache`, policies and `Rng`, so steps are data-parallel: they
+//!    fan out across the engine's `util::ThreadPool`.
+//! 3. **Merge** — results return in submission order; completed
+//!    requests free their blocks and their slot, and the queue
+//!    backfills. Because per-request state never crosses requests and
+//!    merge order is fixed, token streams are byte-identical at any
+//!    worker count.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 
-use super::{Request, RequestResult};
+use super::{ArrivingRequest, Request, RequestResult};
 use crate::attention::Selection;
-use crate::kvcache::KvCache;
+use crate::kvcache::{BlockId, BlockPool, KvCache};
 use crate::model::{Model, ModelConfig, Sampler, StepOut};
 use crate::policies::{IndexPolicy, PolicyCtx};
 use crate::tensor::Mat;
+use crate::util::threadpool::ThreadPool;
 use crate::util::Rng;
 
 /// Compute backend abstraction: the rust-native model or the PJRT path.
@@ -71,18 +87,37 @@ pub enum AttentionMode {
 }
 
 pub struct EngineConfig {
+    /// Maximum concurrently active requests.
     pub max_batch: usize,
     pub sampler: Sampler,
     pub seed: u64,
+    /// Worker threads for the step-execution phase. 1 = sequential.
+    pub workers: usize,
+    /// Prompt tokens a prefilling request may ingest per round.
+    pub prefill_chunk: usize,
+    /// Paged-KV allocation granularity (tokens per block).
+    pub block_tokens: usize,
+    /// Engine-wide KV memory budget; admission stalls when the paged
+    /// pool cannot cover a request's worst case. `None` = unbounded.
+    pub kv_capacity_bytes: Option<usize>,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { max_batch: 4, sampler: Sampler::Greedy, seed: 0 }
+        EngineConfig {
+            max_batch: 4,
+            sampler: Sampler::Greedy,
+            seed: 0,
+            workers: 1,
+            prefill_chunk: 32,
+            block_tokens: 16,
+            kv_capacity_bytes: None,
+        }
     }
 }
 
-/// One active request's serving state.
+/// One active request's serving state. Fully self-contained (cache,
+/// policies, RNG), which is what makes step execution data-parallel.
 struct Active {
     req: Request,
     cache: KvCache,
@@ -93,6 +128,7 @@ struct Active {
     pos: usize,
     prefill_left: usize,
     started: Instant,
+    wait_s: f64,
     ttft_s: f64,
     decode_s: f64,
     density_sum: f64,
@@ -100,133 +136,259 @@ struct Active {
     step: usize,
 }
 
-pub struct Engine<B: Backend> {
-    pub backend: B,
-    pub cfg: EngineConfig,
-}
-
-impl<B: Backend> Engine<B> {
-    pub fn new(backend: B, cfg: EngineConfig) -> Engine<B> {
-        Engine { backend, cfg }
+impl Active {
+    fn finished(&self) -> bool {
+        self.prefill_left == 0 && self.tokens.len() >= self.req.gen_len
     }
 
-    /// Serve a batch of requests to completion with continuous batching.
+    fn into_result(self) -> RequestResult {
+        RequestResult {
+            id: self.req.id,
+            tokens: self.tokens,
+            wait_s: self.wait_s,
+            ttft_s: self.ttft_s,
+            decode_s: self.decode_s,
+            mean_density: if self.density_n > 0 {
+                self.density_sum / self.density_n as f64
+            } else {
+                1.0
+            },
+            kv_bytes_read: self.cache.stats.bytes_read,
+        }
+    }
+}
+
+pub struct Engine<B: Backend> {
+    pub backend: Arc<B>,
+    pub cfg: EngineConfig,
+    pool: ThreadPool,
+}
+
+impl<B: Backend + Send + Sync + 'static> Engine<B> {
+    pub fn new(backend: B, cfg: EngineConfig) -> Engine<B> {
+        let pool = ThreadPool::new(cfg.workers.max(1));
+        Engine { backend: Arc::new(backend), cfg, pool }
+    }
+
+    /// Step-execution worker threads.
+    pub fn workers(&self) -> usize {
+        self.pool.num_workers()
+    }
+
+    /// Serve a batch of requests to completion with continuous batching
+    /// (closed loop: everything is queued at t = 0).
     pub fn serve(&self, requests: Vec<Request>, mode: &AttentionMode) -> Result<Vec<RequestResult>> {
+        let arriving = requests.into_iter().map(ArrivingRequest::immediate).collect();
+        self.serve_arrivals(arriving, mode)
+    }
+
+    /// Serve an open-loop trace: requests become visible to the
+    /// scheduler at their arrival times (e.g. Poisson arrivals from
+    /// `workloads::traces`), so queueing delay is measured for real.
+    pub fn serve_open_loop(
+        &self,
+        mut requests: Vec<ArrivingRequest>,
+        mode: &AttentionMode,
+    ) -> Result<Vec<RequestResult>> {
+        requests.sort_by(|a, b| {
+            a.arrival_s
+                .partial_cmp(&b.arrival_s)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.req.id.cmp(&b.req.id))
+        });
+        self.serve_arrivals(requests, mode)
+    }
+
+    fn serve_arrivals(
+        &self,
+        requests: Vec<ArrivingRequest>,
+        mode: &AttentionMode,
+    ) -> Result<Vec<RequestResult>> {
         let mcfg = self.backend.config().clone();
-        let mut waiting: VecDeque<Request> = requests.into();
+        let max_batch = self.cfg.max_batch.max(1);
+        let mut blocks =
+            BlockPool::for_model(&mcfg, self.cfg.block_tokens, self.cfg.kv_capacity_bytes);
+        // Fail fast on unsatisfiable requests: a worst case beyond total
+        // pool capacity could never be admitted, and discovering that
+        // mid-run would discard every already-completed result.
+        if let Some(cap) = blocks.capacity_blocks() {
+            for ar in &requests {
+                let needed = blocks.blocks_for_tokens(ar.req.prompt.len() + ar.req.gen_len);
+                if needed > cap {
+                    bail!(
+                        "request {} needs {needed} KV blocks but pool capacity is {cap} \
+                         blocks ({} bytes/block); raise kv_capacity_bytes or shorten the request",
+                        ar.req.id,
+                        blocks.block_bytes()
+                    );
+                }
+            }
+        }
+        let mut waiting: VecDeque<ArrivingRequest> = requests.into();
         let mut active: Vec<Active> = Vec::new();
         let mut done: Vec<RequestResult> = Vec::new();
         let mut seed_rng = Rng::new(self.cfg.seed);
+        let start = Instant::now();
 
         loop {
-            // ── admission: backfill free slots FIFO ──
-            while active.len() < self.cfg.max_batch {
-                let Some(req) = waiting.pop_front() else { break };
-                let policies = match mode {
-                    AttentionMode::Dense => Vec::new(),
-                    AttentionMode::Sparse(factory) => {
-                        let mut v = Vec::with_capacity(mcfg.n_layers * mcfg.n_heads);
-                        for l in 0..mcfg.n_layers {
-                            for h in 0..mcfg.n_heads {
-                                v.push(factory(l, h));
-                            }
-                        }
-                        v
-                    }
+            // ── phase 1: admission (FIFO; arrival-, batch- and KV-gated) ──
+            let now = start.elapsed().as_secs_f64();
+            while active.len() < max_batch {
+                let Some(front) = waiting.front() else { break };
+                if front.arrival_s > now {
+                    break;
+                }
+                let needed =
+                    blocks.blocks_for_tokens(front.req.prompt.len() + front.req.gen_len);
+                let Some(lease) = blocks.try_alloc(needed) else {
+                    // Upfront validation guarantees `needed` fits total
+                    // capacity, so some active request holds the missing
+                    // blocks: head-of-line waits for a completion.
+                    debug_assert!(
+                        !active.is_empty(),
+                        "admission stalled with an empty batch despite capacity validation"
+                    );
+                    break;
                 };
-                let first = *req.prompt.first().unwrap_or(&0);
-                active.push(Active {
-                    prefill_left: req.prompt.len(),
-                    cache: KvCache::new(&mcfg),
-                    policies,
-                    rng: seed_rng.fork(req.id),
-                    tokens: Vec::new(),
-                    next_token: first,
-                    pos: 0,
-                    started: Instant::now(),
-                    ttft_s: 0.0,
-                    decode_s: 0.0,
-                    density_sum: 0.0,
-                    density_n: 0,
-                    step: 0,
-                    req,
-                });
-            }
-            if active.is_empty() {
-                break;
+                let ar = waiting.pop_front().expect("front() was Some");
+                active.push(self.admit(ar, lease, mode, &mcfg, &mut seed_rng, now));
             }
 
-            // ── one scheduler round: each active request advances a step ──
-            let mut i = 0;
-            while i < active.len() {
-                let a = &mut active[i];
-                let t0 = Instant::now();
-                let out = if a.prefill_left > 0 {
-                    // Prefill (dense, Setup B: context via full attention).
-                    let tok = a.req.prompt[a.pos];
-                    let out = self.backend.step(tok, a.pos, &mut a.cache, None)?;
-                    a.prefill_left -= 1;
-                    a.pos += 1;
-                    if a.prefill_left == 0 {
-                        a.ttft_s = a.started.elapsed().as_secs_f64();
-                        a.cache.stats.reset(); // count decode traffic only
-                    }
-                    out
+            if active.is_empty() {
+                let Some(front) = waiting.front() else { break };
+                // Open-loop idle gap: nothing runnable until the next arrival.
+                let gap = front.arrival_s - start.elapsed().as_secs_f64();
+                if gap > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(gap.min(0.02)));
+                }
+                continue;
+            }
+
+            // ── phase 2: fan the batch's steps out across the pool ──
+            let batch: Vec<Active> = std::mem::take(&mut active);
+            let backend = Arc::clone(&self.backend);
+            let sampler = self.cfg.sampler.clone();
+            let prefill_chunk = self.cfg.prefill_chunk.max(1);
+            let stepped: Vec<Result<Active>> = self.pool.map(batch, move |mut a| {
+                advance(&*backend, &sampler, prefill_chunk, &mut a).map(|_| a)
+            });
+
+            // ── phase 3: deterministic merge, in submission order ──
+            for res in stepped {
+                let mut a = res?;
+                if a.finished() {
+                    let lease = a.cache.release_blocks();
+                    blocks.free(lease).map_err(|e| anyhow!("kv block pool: {e}"))?;
+                    done.push(a.into_result());
                 } else {
-                    // Decode (sparse per policy).
-                    let n_heads = mcfg.n_heads;
-                    let sparse = !a.policies.is_empty();
-                    let policies = &mut a.policies;
-                    let rng = &mut a.rng;
-                    let step = a.step;
-                    let mut select = |l: usize, h: usize, k: &Mat, v: &Mat, q: &[f32]| {
-                        let mut ctx = PolicyCtx { k, v, q_scaled: q, rng, step };
-                        policies[l * n_heads + h].select(&mut ctx)
-                    };
-                    let sel_opt: Option<&mut dyn FnMut(usize, usize, &Mat, &Mat, &[f32]) -> Selection> =
-                        if sparse { Some(&mut select) } else { None };
-                    let out = self.backend.step(a.next_token, a.pos, &mut a.cache, sel_opt)?;
-                    a.decode_s += t0.elapsed().as_secs_f64();
-                    a.pos += 1;
-                    a.step += 1;
-                    a.density_sum += out.mean_density;
-                    a.density_n += 1;
-                    out
-                };
-                // Sample the next token once the prompt is fully ingested.
-                if a.prefill_left == 0 {
-                    let tok = self.cfg.sampler.sample(&out.logits, &mut a.rng);
-                    if a.tokens.len() < a.req.gen_len {
-                        // The token just generated becomes the next input.
-                        if a.step > 0 || a.pos == a.req.prompt.len() {
-                            a.tokens.push(tok);
-                            a.next_token = tok;
-                        }
-                    }
+                    active.push(a);
                 }
-                // ── completion ──
-                if a.prefill_left == 0 && a.tokens.len() >= a.req.gen_len {
-                    let a = active.swap_remove(i);
-                    done.push(RequestResult {
-                        id: a.req.id,
-                        tokens: a.tokens,
-                        ttft_s: a.ttft_s,
-                        decode_s: a.decode_s,
-                        mean_density: if a.density_n > 0 {
-                            a.density_sum / a.density_n as f64
-                        } else {
-                            1.0
-                        },
-                        kv_bytes_read: a.cache.stats.bytes_read,
-                    });
-                    continue; // don't advance i: swapped element takes slot
-                }
-                i += 1;
             }
         }
         done.sort_by_key(|r| r.id);
         Ok(done)
     }
+
+    fn admit(
+        &self,
+        ar: ArrivingRequest,
+        lease: Vec<BlockId>,
+        mode: &AttentionMode,
+        mcfg: &ModelConfig,
+        seed_rng: &mut Rng,
+        now: f64,
+    ) -> Active {
+        let ArrivingRequest { arrival_s, req } = ar;
+        let policies = match mode {
+            AttentionMode::Dense => Vec::new(),
+            AttentionMode::Sparse(factory) => {
+                let mut v = Vec::with_capacity(mcfg.n_layers * mcfg.n_heads);
+                for l in 0..mcfg.n_layers {
+                    for h in 0..mcfg.n_heads {
+                        v.push(factory(l, h));
+                    }
+                }
+                v
+            }
+        };
+        let first = *req.prompt.first().unwrap_or(&0);
+        Active {
+            prefill_left: req.prompt.len(),
+            cache: KvCache::paged(mcfg, self.cfg.block_tokens.max(1), lease),
+            policies,
+            rng: seed_rng.fork(req.id),
+            tokens: Vec::new(),
+            next_token: first,
+            pos: 0,
+            started: Instant::now(),
+            wait_s: (now - arrival_s).max(0.0),
+            ttft_s: 0.0,
+            decode_s: 0.0,
+            density_sum: 0.0,
+            density_n: 0,
+            step: 0,
+            req,
+        }
+    }
+}
+
+/// Advance one request by one scheduler round: up to `prefill_chunk`
+/// prompt tokens while prefilling (dense, Setup B: context via full
+/// attention), or exactly one decode step (sparse per policy). Runs on a
+/// worker thread; touches only this request's state.
+fn advance<B: Backend>(
+    backend: &B,
+    sampler: &Sampler,
+    prefill_chunk: usize,
+    a: &mut Active,
+) -> Result<()> {
+    let n_heads = backend.config().n_heads;
+    let t0 = Instant::now();
+    let out: StepOut;
+    if a.prefill_left > 0 {
+        let take = a.prefill_left.min(prefill_chunk);
+        let mut last: Option<StepOut> = None;
+        for _ in 0..take {
+            let tok = a.req.prompt[a.pos];
+            last = Some(backend.step(tok, a.pos, &mut a.cache, None)?);
+            a.prefill_left -= 1;
+            a.pos += 1;
+        }
+        if a.prefill_left > 0 {
+            return Ok(()); // still prefilling: nothing to sample yet
+        }
+        a.ttft_s = a.started.elapsed().as_secs_f64();
+        a.cache.stats.reset(); // count decode traffic only
+        out = last.expect("prefill_chunk >= 1");
+    } else {
+        let sparse = !a.policies.is_empty();
+        let policies = &mut a.policies;
+        let rng = &mut a.rng;
+        let step = a.step;
+        let mut select = |l: usize, h: usize, k: &Mat, v: &Mat, q: &[f32]| -> Selection {
+            let mut ctx = PolicyCtx { k, v, q_scaled: q, rng: &mut *rng, step };
+            policies[l * n_heads + h].select(&mut ctx)
+        };
+        let sel_opt: Option<&mut dyn FnMut(usize, usize, &Mat, &Mat, &[f32]) -> Selection> =
+            if sparse { Some(&mut select) } else { None };
+        let stepped = backend.step(a.next_token, a.pos, &mut a.cache, sel_opt)?;
+        a.decode_s += t0.elapsed().as_secs_f64();
+        a.pos += 1;
+        a.step += 1;
+        a.density_sum += stepped.mean_density;
+        a.density_n += 1;
+        out = stepped;
+    }
+    // Sample the next token once the prompt is fully ingested. The
+    // sampler consumes this request's private RNG, so the draw sequence
+    // is identical no matter how rounds are scheduled across workers.
+    let tok = sampler.sample(&out.logits, &mut a.rng);
+    if a.tokens.len() < a.req.gen_len && (a.step > 0 || a.pos == a.req.prompt.len()) {
+        // The token just generated becomes the next input.
+        a.tokens.push(tok);
+        a.next_token = tok;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -242,7 +404,8 @@ mod tests {
     fn reqs(n: usize, prompt_len: usize, gen_len: usize) -> Vec<Request> {
         (0..n as u64)
             .map(|i| {
-                let prompt: Vec<u32> = (0..prompt_len as u32).map(|t| (i as u32 * 7 + t) % 250).collect();
+                let prompt: Vec<u32> =
+                    (0..prompt_len as u32).map(|t| (i as u32 * 7 + t) % 250).collect();
                 Request::new(i, prompt, gen_len)
             })
             .collect()
@@ -257,6 +420,7 @@ mod tests {
             assert_eq!(r.tokens.len(), 5);
             assert!((r.mean_density - 1.0).abs() < 1e-9);
             assert!(r.ttft_s >= 0.0);
+            assert!(r.wait_s >= 0.0);
         }
         // FIFO ids preserved in output ordering
         let ids: Vec<u64> = results.iter().map(|r| r.id).collect();
@@ -270,6 +434,23 @@ mod tests {
         let b = eng.serve(reqs(2, 10, 6), &AttentionMode::Dense).unwrap();
         for (x, y) in a.iter().zip(b.iter()) {
             assert_eq!(x.tokens, y.tokens);
+        }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_tokens() {
+        let run = |workers: usize| {
+            let eng = Engine::new(
+                Model::new(ModelConfig::tiny(), 42),
+                EngineConfig { workers, max_batch: 3, ..Default::default() },
+            );
+            eng.serve(reqs(7, 9, 5), &AttentionMode::Dense).unwrap()
+        };
+        let seq = run(1);
+        let par = run(4);
+        for (a, b) in seq.iter().zip(par.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens);
         }
     }
 
@@ -309,6 +490,47 @@ mod tests {
         let results = eng.serve(reqs(7, 6, 3), &AttentionMode::Dense).unwrap();
         assert_eq!(results.len(), 7);
         assert!(results.iter().all(|r| r.tokens.len() == 3));
+    }
+
+    #[test]
+    fn kv_capacity_limits_admission_without_changing_tokens() {
+        let cfg = ModelConfig::tiny();
+        // Room for exactly two requests' worst case (16 tokens → 1 block).
+        let capped = Engine::new(
+            Model::new(cfg.clone(), 1),
+            EngineConfig {
+                max_batch: 4,
+                block_tokens: 16,
+                kv_capacity_bytes: Some(2 * 16 * cfg.kv_bytes_per_token()),
+                ..Default::default()
+            },
+        );
+        let free = Engine::new(
+            Model::new(cfg, 1),
+            EngineConfig { max_batch: 4, block_tokens: 16, ..Default::default() },
+        );
+        let a = capped.serve(reqs(5, 10, 4), &AttentionMode::Dense).unwrap();
+        let b = free.serve(reqs(5, 10, 4), &AttentionMode::Dense).unwrap();
+        assert_eq!(a.len(), 5);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.tokens, y.tokens, "capacity gating must not change outputs");
+        }
+    }
+
+    #[test]
+    fn oversized_request_is_rejected_not_deadlocked() {
+        let cfg = ModelConfig::tiny();
+        let eng = Engine::new(
+            Model::new(cfg.clone(), 1),
+            EngineConfig {
+                block_tokens: 16,
+                kv_capacity_bytes: Some(16 * cfg.kv_bytes_per_token()),
+                ..Default::default()
+            },
+        );
+        // 40 + 8 tokens → 3 blocks, but the pool holds 1.
+        let err = eng.serve(reqs(1, 40, 8), &AttentionMode::Dense).unwrap_err();
+        assert!(format!("{err}").contains("KV blocks"), "{err}");
     }
 
     #[test]

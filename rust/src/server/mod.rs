@@ -3,13 +3,17 @@
 //! model or the PJRT artifact path).
 //!
 //! Responsibilities mirror a vLLM-style router specialized to the
-//! paper's deployment: the KV cache is host-resident per request; every
+//! paper's deployment: every request's KV cache is host-resident and
+//! backed by blocks leased from the engine's paged allocator; every
 //! decode step runs index selection per (layer, head) through the
-//! configured policy; attention reads only the selected rows.
+//! configured policy; attention reads only the selected rows. Step
+//! execution fans out across a worker pool (requests are data-parallel
+//! within a scheduler round) and merges deterministically, so token
+//! streams are byte-identical at any worker count.
 
 pub mod engine;
 
-pub use engine::{AttentionMode, Engine, EngineConfig, PolicyFactory};
+pub use engine::{AttentionMode, Backend, Engine, EngineConfig, PolicyFactory};
 
 /// An inference request.
 #[derive(Clone, Debug)]
@@ -25,12 +29,34 @@ impl Request {
     }
 }
 
+/// A request with an arrival time, for open-loop (trace-driven) serving.
+#[derive(Clone, Debug)]
+pub struct ArrivingRequest {
+    /// Seconds from trace start at which the request becomes visible to
+    /// the scheduler.
+    pub arrival_s: f64,
+    pub req: Request,
+}
+
+impl ArrivingRequest {
+    /// A request that is already queued at t = 0 (closed-loop serving).
+    pub fn immediate(req: Request) -> ArrivingRequest {
+        ArrivingRequest { arrival_s: 0.0, req }
+    }
+
+    pub fn at(arrival_s: f64, req: Request) -> ArrivingRequest {
+        ArrivingRequest { arrival_s, req }
+    }
+}
+
 /// Completion record with serving metrics.
 #[derive(Clone, Debug)]
 pub struct RequestResult {
     pub id: u64,
     pub tokens: Vec<u32>,
-    /// Time to first token (prefill), seconds.
+    /// Queue wait before admission (arrival → first prefill), seconds.
+    pub wait_s: f64,
+    /// Time to first token measured from admission (prefill), seconds.
     pub ttft_s: f64,
     /// Total decode wall-clock, seconds.
     pub decode_s: f64,
@@ -47,5 +73,22 @@ impl RequestResult {
         } else {
             0.0
         }
+    }
+
+    /// Mean time per output token (TPOT), seconds. The first token comes
+    /// out of prefill (counted in TTFT), so decode time is divided over
+    /// the remaining `tokens - 1` steps, per the usual convention.
+    pub fn tpot_s(&self) -> f64 {
+        if self.tokens.len() <= 1 {
+            0.0
+        } else {
+            self.decode_s / (self.tokens.len() - 1) as f64
+        }
+    }
+
+    /// Time to first token measured from *arrival* (queue wait included)
+    /// — the user-visible TTFT under open-loop load.
+    pub fn ttft_from_arrival_s(&self) -> f64 {
+        self.wait_s + self.ttft_s
     }
 }

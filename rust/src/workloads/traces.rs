@@ -1,7 +1,9 @@
 //! Serving traces: Poisson arrivals with configurable context-length and
 //! generation-length distributions, for the engine benchmarks (Fig. 5 and
-//! the end-to-end example).
+//! the end-to-end example), plus materialization of a trace into engine
+//! requests for the open-loop load mode.
 
+use crate::server::{ArrivingRequest, Request};
 use crate::util::Rng;
 
 /// One request in a workload trace.
@@ -57,6 +59,28 @@ pub fn generate_trace(cfg: &TraceConfig, rng: &mut Rng) -> Vec<TraceRequest> {
         .collect()
 }
 
+/// Deterministic synthetic prompt for a trace request — keyed off the
+/// request id so regenerating a trace reproduces identical streams.
+pub fn synthetic_prompt(id: u64, len: usize, vocab: usize) -> Vec<u32> {
+    let v = vocab.max(1) as u32;
+    (0..len as u32)
+        .map(|i| i.wrapping_mul(131).wrapping_add((id as u32).wrapping_mul(7)) % v)
+        .collect()
+}
+
+/// Materialize engine requests (with arrival times) from a trace.
+pub fn to_requests(trace: &[TraceRequest], vocab: usize) -> Vec<ArrivingRequest> {
+    trace
+        .iter()
+        .map(|t| {
+            ArrivingRequest::at(
+                t.arrival_s,
+                Request::new(t.id, synthetic_prompt(t.id, t.context_len, vocab), t.gen_len),
+            )
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -74,6 +98,25 @@ mod tests {
             assert!(r.context_len >= cfg.context_min && r.context_len <= cfg.context_max);
             assert!(r.gen_len >= cfg.gen_min && r.gen_len <= cfg.gen_max);
         }
+    }
+
+    #[test]
+    fn to_requests_preserves_trace_shape() {
+        let cfg = TraceConfig { num_requests: 8, ..Default::default() };
+        let mut rng = Rng::new(3);
+        let trace = generate_trace(&cfg, &mut rng);
+        let reqs = to_requests(&trace, 250);
+        assert_eq!(reqs.len(), 8);
+        for (t, r) in trace.iter().zip(reqs.iter()) {
+            assert_eq!(r.req.id, t.id);
+            assert_eq!(r.req.prompt.len(), t.context_len);
+            assert_eq!(r.req.gen_len, t.gen_len);
+            assert!((r.arrival_s - t.arrival_s).abs() < 1e-12);
+            assert!(r.req.prompt.iter().all(|&tok| tok < 250));
+        }
+        // regenerating the same trace gives identical prompts
+        let again = to_requests(&trace, 250);
+        assert_eq!(reqs[3].req.prompt, again[3].req.prompt);
     }
 
     #[test]

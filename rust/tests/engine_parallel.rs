@@ -1,0 +1,148 @@
+//! Determinism and paging behavior of the parallel continuous-batching
+//! engine: token streams must be byte-identical across worker counts and
+//! prefill chunk sizes (dense and sparse, greedy and stochastic
+//! sampling), KV capacity must gate admission without changing outputs,
+//! and the open-loop trace mode must serve every request.
+
+use vattn::model::{Model, ModelConfig, Sampler};
+use vattn::policies::SizeSpec;
+use vattn::server::{AttentionMode, Engine, EngineConfig, Request};
+use vattn::workloads::traces::{generate_trace, to_requests, TraceConfig};
+use vattn::util::Rng;
+
+fn reqs(n: usize) -> Vec<Request> {
+    (0..n as u64)
+        .map(|i| {
+            let plen = 8 + 5 * (i as usize % 4); // mixed prompt lengths
+            let glen = 3 + (i as usize % 3); // mixed generation lengths
+            let prompt: Vec<u32> = (0..plen as u32).map(|t| (t * 13 + i as u32) % 250).collect();
+            Request::new(i, prompt, glen)
+        })
+        .collect()
+}
+
+fn sparse_mode() -> AttentionMode {
+    AttentionMode::Sparse(Box::new(|_l, _h| {
+        let mut c = vattn::policies::VAttentionConfig::default();
+        c.sink = SizeSpec::Abs(4);
+        c.window = SizeSpec::Abs(8);
+        c.heavy = SizeSpec::Frac(0.05);
+        c.verify = vattn::budget::Verify::Denominator;
+        c.eps = 0.2;
+        c.delta = 0.2;
+        Box::new(vattn::policies::VAttentionPolicy::oracle(c))
+    }))
+}
+
+fn streams(
+    workers: usize,
+    prefill_chunk: usize,
+    sampler: Sampler,
+    mode: &AttentionMode,
+) -> Vec<(u64, Vec<u32>)> {
+    let eng = Engine::new(
+        Model::new(ModelConfig::tiny(), 42),
+        EngineConfig {
+            max_batch: 3,
+            sampler,
+            seed: 7,
+            workers,
+            prefill_chunk,
+            ..Default::default()
+        },
+    );
+    eng.serve(reqs(9), mode)
+        .unwrap()
+        .into_iter()
+        .map(|r| (r.id, r.tokens))
+        .collect()
+}
+
+#[test]
+fn dense_tokens_identical_across_worker_counts() {
+    let base = streams(1, 32, Sampler::Greedy, &AttentionMode::Dense);
+    for workers in [2usize, 4, 8] {
+        let got = streams(workers, 32, Sampler::Greedy, &AttentionMode::Dense);
+        assert_eq!(base, got, "workers={workers} diverged from sequential run");
+    }
+}
+
+#[test]
+fn sparse_tokens_identical_across_worker_counts() {
+    // Sparse decoding draws from per-request RNGs inside worker threads;
+    // the streams must still match the single-worker run exactly.
+    let base = streams(1, 32, Sampler::Greedy, &sparse_mode());
+    let par = streams(4, 32, Sampler::Greedy, &sparse_mode());
+    assert_eq!(base, par);
+}
+
+#[test]
+fn stochastic_sampling_identical_across_worker_counts() {
+    let base = streams(1, 32, Sampler::Temperature(0.8), &AttentionMode::Dense);
+    let par = streams(4, 32, Sampler::Temperature(0.8), &AttentionMode::Dense);
+    assert_eq!(base, par);
+}
+
+#[test]
+fn prefill_chunking_does_not_change_tokens() {
+    let one = streams(2, 1, Sampler::Greedy, &AttentionMode::Dense);
+    let big = streams(2, 64, Sampler::Greedy, &AttentionMode::Dense);
+    assert_eq!(one, big);
+}
+
+#[test]
+fn kv_capacity_gates_admission_but_serves_everything() {
+    let cfg = ModelConfig::tiny();
+    let mk = |cap_bytes: Option<usize>| {
+        Engine::new(
+            Model::new(cfg.clone(), 42),
+            EngineConfig {
+                max_batch: 4,
+                seed: 7,
+                workers: 2,
+                block_tokens: 16,
+                kv_capacity_bytes: cap_bytes,
+                ..Default::default()
+            },
+        )
+    };
+    // Every request needs 1 block (≤ 16 tokens); cap the pool at 2.
+    let capped = mk(Some(2 * 16 * cfg.kv_bytes_per_token()));
+    let unbounded = mk(None);
+    let a = capped.serve(reqs(6), &AttentionMode::Dense).unwrap();
+    let b = unbounded.serve(reqs(6), &AttentionMode::Dense).unwrap();
+    assert_eq!(a.len(), 6);
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.tokens, y.tokens, "capacity gating changed request {}", x.id);
+    }
+}
+
+#[test]
+fn open_loop_trace_serves_all_requests() {
+    let cfg = ModelConfig::tiny();
+    let trace_cfg = TraceConfig {
+        rate: 200.0, // fast arrivals so the test stays quick
+        num_requests: 10,
+        context_min: 8,
+        context_max: 32,
+        gen_min: 2,
+        gen_max: 5,
+    };
+    let mut rng = Rng::new(11);
+    let trace = generate_trace(&trace_cfg, &mut rng);
+    let requests = to_requests(&trace, cfg.vocab);
+    let want: Vec<(u64, usize)> = requests.iter().map(|r| (r.req.id, r.req.gen_len)).collect();
+    let eng = Engine::new(
+        Model::new(cfg, 42),
+        EngineConfig { max_batch: 3, workers: 2, ..Default::default() },
+    );
+    let out = eng.serve_open_loop(requests, &AttentionMode::Dense).unwrap();
+    assert_eq!(out.len(), 10);
+    for (r, (id, glen)) in out.iter().zip(want.iter()) {
+        assert_eq!(r.id, *id, "results sorted by id");
+        assert_eq!(r.tokens.len(), *glen);
+        assert!(r.wait_s >= 0.0);
+        assert!(r.ttft_from_arrival_s() >= r.ttft_s);
+    }
+}

@@ -157,7 +157,7 @@ fn dense_vs_full_selection_engine_equivalence() {
 fn temperature_sampling_end_to_end() {
     let eng = Engine::new(
         Model::new(ModelConfig::tiny(), 42),
-        EngineConfig { max_batch: 2, sampler: Sampler::Temperature(0.8), seed: 77 },
+        EngineConfig { max_batch: 2, sampler: Sampler::Temperature(0.8), seed: 77, ..Default::default() },
     );
     let out = eng
         .serve(vec![Request::new(0, vec![1, 2, 3, 4], 12)], &AttentionMode::Dense)

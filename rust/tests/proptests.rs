@@ -4,6 +4,7 @@
 
 use vattn::attention::{dense_sdpa, sparse_sdpa, Selection};
 use vattn::budget::{budget_denominator, budget_numerator, BaseStats, Bound};
+use vattn::kvcache::{BlockId, BlockPool, KvCache, PageError};
 use vattn::model::{Model, ModelConfig};
 use vattn::policies::*;
 use vattn::server::{AttentionMode, Engine, EngineConfig, Request};
@@ -155,6 +156,126 @@ fn prop_vattention_density_never_exceeds_one_and_respects_floor() {
         assert!(dec.budget <= dec.n_s);
         assert!(sel.len() == dec.n_fixed + dec.budget);
         assert!(sel.density(n) <= 1.0 + 1e-9);
+    });
+}
+
+#[test]
+fn prop_block_pool_invariants_under_random_alloc_free() {
+    // Random alloc/free sequences against a model of the pool: ids held
+    // out are unique, capacity is never exceeded, refusals only happen
+    // when the lease truly would not fit, double frees always error, and
+    // the byte accounting tracks the held set exactly.
+    Prop::new("block-pool-invariants").cases(40).run(|rng| {
+        let cap = rng.range(4, 64);
+        let block_bytes = 256 * rng.range(1, 8);
+        let mut pool = BlockPool::new(16, block_bytes, Some(cap));
+        let mut held: Vec<Vec<BlockId>> = Vec::new();
+        for _ in 0..150 {
+            if rng.below(2) == 0 || held.is_empty() {
+                let n = rng.range(1, 6);
+                let in_use_before = pool.in_use_blocks();
+                match pool.try_alloc(n) {
+                    Some(ids) => {
+                        assert_eq!(ids.len(), n);
+                        let mut all: std::collections::HashSet<BlockId> =
+                            held.iter().flatten().copied().collect();
+                        for &id in &ids {
+                            assert!(all.insert(id), "pool leased live block {id} twice");
+                        }
+                        held.push(ids);
+                    }
+                    None => {
+                        assert!(in_use_before + n > cap, "refused a lease that fit");
+                        assert_eq!(pool.in_use_blocks(), in_use_before, "refusal leaked");
+                    }
+                }
+            } else {
+                let i = rng.below(held.len());
+                let ids = held.swap_remove(i);
+                pool.free(ids.iter().copied()).expect("legal free");
+                // the same ids are now stale: freeing again must error
+                assert!(matches!(
+                    pool.free([ids[0]]),
+                    Err(PageError::DoubleFree(_))
+                ));
+            }
+            let held_count: usize = held.iter().map(|v| v.len()).sum();
+            assert_eq!(pool.in_use_blocks(), held_count);
+            assert!(pool.in_use_blocks() <= cap);
+            assert_eq!(pool.bytes_in_use(), held_count * block_bytes);
+        }
+    });
+}
+
+#[test]
+fn prop_block_pool_reuses_before_minting() {
+    // After any free, subsequent leases must drain the free list before
+    // new ids are minted: minted_blocks never exceeds the high-water mark
+    // of concurrently held blocks.
+    Prop::new("block-pool-reuse").cases(40).run(|rng| {
+        let mut pool = BlockPool::new(8, 128, None);
+        let mut held: Vec<Vec<BlockId>> = Vec::new();
+        let mut peak_held = 0usize;
+        for _ in 0..120 {
+            if rng.below(2) == 0 || held.is_empty() {
+                let n = rng.range(1, 5);
+                held.push(pool.try_alloc(n).expect("unbounded pool"));
+                let cur: usize = held.iter().map(|v| v.len()).sum();
+                peak_held = peak_held.max(cur);
+            } else {
+                let i = rng.below(held.len());
+                pool.free(held.swap_remove(i)).expect("legal free");
+            }
+            assert!(
+                pool.minted_blocks() <= peak_held,
+                "minted {} > peak concurrent {} — free list not reused",
+                pool.minted_blocks(),
+                peak_held
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_paged_cache_accounting_consistent() {
+    // Appends into a paged cache: token/block accounting agrees with the
+    // reservation, gather charges exactly the gathered bytes, and
+    // release returns every leased block to the pool.
+    Prop::new("paged-cache-accounting").cases(25).run(|rng| {
+        let cfg = ModelConfig::tiny();
+        let block_tokens = [4usize, 8, 16][rng.below(3)];
+        let mut pool = BlockPool::for_model(&cfg, block_tokens, None);
+        let total_tokens = rng.range(1, 40);
+        let lease = pool.try_alloc(pool.blocks_for_tokens(total_tokens)).unwrap();
+        let reserved = lease.len();
+        let mut cache = KvCache::paged(&cfg, block_tokens, lease);
+        let row = vec![0.5f32; cfg.d_head()];
+        let tokens = rng.range(1, total_tokens + 1);
+        for _ in 0..tokens {
+            for l in 0..cfg.n_layers {
+                for h in 0..cfg.n_kv_heads {
+                    cache.append(l, h, &row, &row);
+                }
+            }
+        }
+        assert_eq!(cache.tokens(), tokens);
+        assert_eq!(cache.blocks_used(), tokens.div_ceil(block_tokens));
+        assert!(cache.blocks_used() <= cache.blocks_reserved());
+        assert_eq!(cache.blocks_reserved(), reserved);
+
+        let before = cache.stats.bytes_read;
+        let m = rng.range(1, tokens + 1);
+        let idx: Vec<usize> = (0..m).collect();
+        let (gk, gv) = cache.gather(0, 0, &idx);
+        assert_eq!(gk.rows, m);
+        assert_eq!(gv.rows, m);
+        assert_eq!(cache.stats.bytes_read - before, 2 * m * cfg.d_head() * 4);
+
+        let freed = cache.release_blocks();
+        assert_eq!(freed.len(), reserved);
+        assert_eq!(cache.tokens(), 0);
+        pool.free(freed).expect("release then free");
+        assert_eq!(pool.in_use_blocks(), 0);
     });
 }
 

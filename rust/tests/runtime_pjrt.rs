@@ -15,6 +15,10 @@ fn artifacts_dir() -> std::path::PathBuf {
 }
 
 fn runtime_or_skip() -> Option<Runtime> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("skipping: built without the `pjrt` feature (stub runtime)");
+        return None;
+    }
     let dir = artifacts_dir();
     if !dir.join("manifest.txt").exists() {
         eprintln!("skipping: no artifacts (run `make artifacts`)");

@@ -1,0 +1,167 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The build environment for this repository is fully offline, so the
+//! real crates.io `anyhow` cannot be resolved. This shim implements the
+//! subset of its API the workspace uses — `Error`, `Result`, the
+//! `anyhow!` / `bail!` macros and the `Context` extension trait — with
+//! the same semantics: any `std::error::Error` converts into `Error`
+//! via `?`, `{:#}` renders the full context chain, and `Error` itself
+//! deliberately does *not* implement `std::error::Error` so the blanket
+//! `From` impl stays coherent.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A dynamic error with a chain of context messages (outermost first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message (used by `anyhow!`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost message first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` renders the whole chain, like anyhow.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Any std error converts into `Error`, capturing its source chain. This
+// is why `Error` must not implement `std::error::Error` itself: the
+// reflexive `From<T> for T` impl in std would otherwise overlap.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// results whose error type is a std error.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(format!("{e}").contains("missing file"));
+    }
+
+    #[test]
+    fn alternate_display_shows_context_chain() {
+        let e: Result<(), std::io::Error> = Err(io_err());
+        let e = e.with_context(|| "loading config").unwrap_err();
+        let s = format!("{e:#}");
+        assert!(s.starts_with("loading config: "), "{s}");
+        assert!(s.contains("missing file"), "{s}");
+        // plain display shows only the outermost message
+        assert_eq!(format!("{e}"), "loading config");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let name = "tiny";
+        let e = anyhow!("unknown model '{name}'");
+        assert_eq!(format!("{e}"), "unknown model 'tiny'");
+        let e = anyhow!("coded {}", 7);
+        assert_eq!(format!("{e}"), "coded 7");
+
+        fn bails() -> Result<()> {
+            bail!("nope: {}", 3);
+        }
+        assert_eq!(format!("{}", bails().unwrap_err()), "nope: 3");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}
