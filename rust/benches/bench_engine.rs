@@ -5,14 +5,20 @@
 //! with the TTFT/TPOT summary. The L3 coordinator numbers for
 //! EXPERIMENTS.md §Perf.
 //!
+//! Besides the human-readable report, writes `BENCH_engine.json`
+//! (tokens/s plus TTFT/TPOT percentiles per worker count, and the
+//! open-loop summary) so the perf trajectory is machine-trackable PR
+//! over PR; CI checks the file is produced and well-formed.
+//!
 //! Run: cargo bench --bench bench_engine
 
 use std::time::Instant;
 
-use vattn::metrics::ServeSummary;
+use vattn::metrics::{summarize, LatencySummary, ServeSummary};
 use vattn::model::{Model, ModelConfig, Sampler};
 use vattn::policies::{SizeSpec, VAttentionPolicy};
-use vattn::server::{AttentionMode, Engine, EngineConfig, Request};
+use vattn::server::{AttentionMode, Engine, EngineConfig, Request, RequestResult};
+use vattn::util::json::Json;
 use vattn::workloads::traces::{generate_trace, to_requests, TraceConfig};
 use vattn::util::Rng;
 
@@ -45,35 +51,73 @@ fn engine(workers: usize) -> Engine<Model> {
     )
 }
 
+fn latency_json(s: &LatencySummary) -> Json {
+    Json::obj()
+        .field("p50", Json::num(s.p50))
+        .field("p90", Json::num(s.p90))
+        .field("p99", Json::num(s.p99))
+        .field("mean", Json::num(s.mean))
+        .field("max", Json::num(s.max))
+}
+
 fn main() {
     println!("== engine scaling: 16-request batch, gen 24, d=256 model ==");
-    let run = |workers: usize| -> (f64, usize, Vec<Vec<u32>>) {
+    let run = |workers: usize| -> (f64, Vec<RequestResult>) {
         let eng = engine(workers);
         let t0 = Instant::now();
         let out = eng.serve(requests_16(), &AttentionMode::Dense).expect("serve");
-        let wall = t0.elapsed().as_secs_f64();
-        let tokens: usize = out.iter().map(|r| r.tokens.len()).sum();
-        let streams: Vec<Vec<u32>> = out.into_iter().map(|r| r.tokens).collect();
-        (wall, tokens, streams)
+        (t0.elapsed().as_secs_f64(), out)
     };
-    let (base_wall, base_tokens, base_streams) = run(1);
+    let report = |out: &[RequestResult]| -> (usize, Vec<Vec<u32>>, Json, Json) {
+        let tokens: usize = out.iter().map(|r| r.tokens.len()).sum();
+        let streams: Vec<Vec<u32>> = out.iter().map(|r| r.tokens.clone()).collect();
+        let ttft: Vec<f64> = out.iter().map(|r| r.ttft_s).collect();
+        let tpot: Vec<f64> = out.iter().map(|r| r.tpot_s()).collect();
+        (tokens, streams, latency_json(&summarize(&ttft)), latency_json(&summarize(&tpot)))
+    };
+
+    let mut scaling_rows: Vec<Json> = Vec::new();
+    let (base_wall, base_out) = run(1);
+    let (base_tokens, base_streams, base_ttft, base_tpot) = report(&base_out);
     println!(
         "workers  1  wall {base_wall:>6.2}s  throughput {:>7.1} tok/s  speedup vs 1 worker  1.00x",
         base_tokens as f64 / base_wall
     );
+    scaling_rows.push(
+        Json::obj()
+            .field("workers", Json::num(1))
+            .field("wall_s", Json::num(base_wall))
+            .field("tokens", Json::num(base_tokens as f64))
+            .field("tok_s", Json::num(base_tokens as f64 / base_wall))
+            .field("speedup", Json::num(1.0))
+            .field("ttft_s", base_ttft)
+            .field("tpot_s", base_tpot),
+    );
     for workers in [2usize, 4, 8] {
-        let (wall, tokens, streams) = run(workers);
+        let (wall, out) = run(workers);
+        let (tokens, streams, ttft, tpot) = report(&out);
         assert_eq!(base_streams, streams, "token streams diverged at {workers} workers");
         println!(
             "workers {workers:>2}  wall {wall:>6.2}s  throughput {:>7.1} tok/s  speedup vs 1 worker {:>5.2}x",
             tokens as f64 / wall,
             base_wall / wall
         );
+        scaling_rows.push(
+            Json::obj()
+                .field("workers", Json::num(workers as f64))
+                .field("wall_s", Json::num(wall))
+                .field("tokens", Json::num(tokens as f64))
+                .field("tok_s", Json::num(tokens as f64 / wall))
+                .field("speedup", Json::num(base_wall / wall))
+                .field("ttft_s", ttft)
+                .field("tpot_s", tpot),
+        );
     }
     println!("token streams identical across all worker counts: OK");
 
     println!("\n== dense vs vAttention decode (8 workers) ==");
     let eng = engine(8);
+    let mut mode_rows: Vec<Json> = Vec::new();
     for (label, mode) in [
         ("dense".to_string(), AttentionMode::Dense),
         (
@@ -98,6 +142,14 @@ fn main() {
             "{label:<22} wall {wall:>6.2}s  decode-tok/s {:>8.1}  density {density:>6.3}  kv-read {bytes:>12}",
             tokens as f64 / decode_s,
         );
+        mode_rows.push(
+            Json::obj()
+                .field("mode", Json::str(label))
+                .field("wall_s", Json::num(wall))
+                .field("decode_tok_s", Json::num(tokens as f64 / decode_s))
+                .field("density", Json::num(density))
+                .field("kv_bytes_read", Json::num(bytes as f64)),
+        );
     }
 
     println!("\n== open-loop Poisson trace (rate 8 req/s, 24 requests, 8 workers) ==");
@@ -115,5 +167,27 @@ fn main() {
     let t0 = Instant::now();
     let out = eng.serve_open_loop(requests, &AttentionMode::Dense).expect("open loop");
     let wall = t0.elapsed().as_secs_f64();
-    println!("{}", ServeSummary::from_results(&out, wall).render());
+    let summary = ServeSummary::from_results(&out, wall);
+    println!("{}", summary.render());
+
+    let json = Json::obj()
+        .field("bench", Json::str("engine"))
+        .field("batch", Json::num(16))
+        .field("gen_len", Json::num(24))
+        .field("d_model", Json::num(bench_model().d_model as f64))
+        .field("scaling", Json::arr(scaling_rows))
+        .field("modes", Json::arr(mode_rows))
+        .field(
+            "open_loop",
+            Json::obj()
+                .field("rate", Json::num(8.0))
+                .field("requests", Json::num(summary.requests as f64))
+                .field("tokens", Json::num(summary.tokens as f64))
+                .field("throughput_tok_s", Json::num(summary.throughput_tok_s))
+                .field("ttft_s", latency_json(&summary.ttft))
+                .field("tpot_s", latency_json(&summary.tpot)),
+        );
+    let path = "BENCH_engine.json";
+    std::fs::write(path, json.to_string() + "\n").expect("write BENCH_engine.json");
+    println!("wrote {path}");
 }

@@ -17,7 +17,7 @@ pub use selection::Selection;
 
 use crate::tensor::{dot, Mat};
 
-/// Raw query–key logits ⟨K[i], q·scale⟩ for all i. `scale` is typically
+/// Raw query–key logits `⟨K[i], q·scale⟩` for all i. `scale` is typically
 /// 1/√d (callers pre-scale q once instead of scaling every logit).
 pub fn logits_all(k: &Mat, q_scaled: &[f32]) -> Vec<f32> {
     (0..k.rows).map(|i| dot(k.row(i), q_scaled)).collect()

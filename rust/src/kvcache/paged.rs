@@ -146,6 +146,14 @@ impl BlockPool {
         self.in_use
     }
 
+    /// True when no lease is outstanding (every minted block is back on
+    /// the free list). The serving session debug-asserts this whenever
+    /// a tick leaves it idle: any submit/cancel/tick interleaving that
+    /// drains the session must end quiescent, or blocks leaked.
+    pub fn is_quiescent(&self) -> bool {
+        self.in_use == 0
+    }
+
     /// Ids ever minted (leased + recycled).
     pub fn minted_blocks(&self) -> usize {
         self.live.len()
@@ -220,6 +228,19 @@ mod tests {
         p.free(a).unwrap();
         assert_eq!(p.bytes_in_use(), 0);
         assert_eq!(p.peak_bytes_in_use(), 2000);
+    }
+
+    #[test]
+    fn quiescence_tracks_outstanding_leases() {
+        let mut p = BlockPool::new(8, 128, None);
+        assert!(p.is_quiescent(), "fresh pool has no leases");
+        let a = p.try_alloc(2).unwrap();
+        let b = p.try_alloc(1).unwrap();
+        assert!(!p.is_quiescent());
+        p.free(a).unwrap();
+        assert!(!p.is_quiescent(), "one lease still out");
+        p.free(b).unwrap();
+        assert!(p.is_quiescent(), "all leases returned");
     }
 
     #[test]

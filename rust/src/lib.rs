@@ -16,6 +16,10 @@
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured record.
 
+// The serving API is consumed by doc readers first; a broken intra-doc
+// link is a build failure (CI runs a blocking `cargo doc --no-deps`).
+#![deny(rustdoc::broken_intra_doc_links)]
+
 pub mod attention;
 pub mod budget;
 pub mod experiments;

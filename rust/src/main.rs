@@ -4,18 +4,42 @@
 //!   exp <id> [--n N] [--trials T] [--seed S] [--quick]   run an experiment (or `all`)
 //!   list                                                  list experiments
 //!   serve [--model tiny|small] [--mode dense|vattention] [--requests R]
-//!         [--workers W] [--max-batch B] [--block-tokens T] [--kv-cap-mb M]
-//!         [--open-loop] [--rate R]
-//!                                                         run the serving engine on a trace
+//!         [--eps E] [--delta D] [--workers W] [--max-batch B]
+//!         [--block-tokens T] [--kv-cap-mb M] [--open-loop] [--rate R]
+//!                                                         drive the streaming session on a trace
 //!   info                                                  build/config info
+//!
+//! `serve`, `list` and `info` have a closed flag vocabulary and reject
+//! unknown `--flags` with a listing of the known ones (a typo like
+//! `--worker 8` used to silently no-op). `exp` stays permissive because
+//! each experiment defines its own knobs.
 
 use vattn::util::cli::Args;
+
+/// Everything `vattn serve` understands (options and bare flags alike).
+const SERVE_KEYS: &[&str] = &[
+    "model",
+    "mode",
+    "requests",
+    "seed",
+    "workers",
+    "max-batch",
+    "block-tokens",
+    "kv-cap-mb",
+    "open-loop",
+    "rate",
+    "ctx-min",
+    "ctx-max",
+    "eps",
+    "delta",
+];
 
 fn main() {
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "list" => {
+            reject_unknown(&args, &[]);
             println!("experiments:");
             for (id, desc, _) in vattn::experiments::registry() {
                 println!("  {id:<12} {desc}");
@@ -32,12 +56,14 @@ fn main() {
             }
         }
         "serve" => {
+            reject_unknown(&args, SERVE_KEYS);
             if let Err(e) = serve(&args) {
                 eprintln!("error: {e:#}");
                 std::process::exit(2);
             }
         }
         "info" => {
+            reject_unknown(&args, &[]);
             println!(
                 "vattn {} — vAttention: Verified Sparse Attention (reproduction)",
                 vattn::version()
@@ -49,16 +75,23 @@ fn main() {
             println!("usage: vattn <list|exp <id>|serve|info> [options]");
             println!("  vattn exp all --quick              run every experiment (reduced trials)");
             println!("  vattn exp table1 --trials 20       single experiment");
-            println!("  vattn serve --mode vattention      engine demo on a synthetic trace");
+            println!("  vattn serve --mode vattention --eps 0.1 --delta 0.1   streaming session demo");
             println!("  vattn serve --workers 8 --open-loop --rate 4  open-loop Poisson load");
         }
     }
 }
 
+fn reject_unknown(args: &Args, known: &[&str]) {
+    if let Err(e) = args.check_known(known) {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
+}
+
 fn serve(args: &Args) -> anyhow::Result<()> {
-    use vattn::metrics::ServeSummary;
-    use vattn::model::{Model, ModelConfig, Sampler};
-    use vattn::server::{AttentionMode, Engine, EngineConfig};
+    use vattn::metrics::EventLog;
+    use vattn::model::{Model, ModelConfig};
+    use vattn::server::{AttentionOpt, Engine, EngineConfig, GenOptions, Session, SubmitRequest};
     use vattn::util::threadpool::default_parallelism;
     use vattn::util::Rng;
     use vattn::workloads::traces::{generate_trace, to_requests, TraceConfig};
@@ -71,6 +104,8 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     let seed = args.get_u64("seed", 42);
     let workers = args.get_usize("workers", default_parallelism());
     let open_loop = args.has_flag("open-loop");
+    let eps = args.get_f64("eps", 0.1);
+    let delta = args.get_f64("delta", eps);
 
     let trace_cfg = TraceConfig {
         rate: args.get_f64("rate", 2.0),
@@ -84,43 +119,62 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     let trace = generate_trace(&trace_cfg, &mut rng);
     let requests = to_requests(&trace, cfg.vocab);
 
-    let mode = match mode_name {
-        "dense" => AttentionMode::Dense,
-        "vattention" => AttentionMode::Sparse(Box::new(|_l, _h| {
-            Box::new(vattn::policies::VAttentionPolicy::oracle(
-                vattn::experiments::common::vcfg(0.1),
-            ))
-        })),
+    // The per-request attention contract: every submitted request
+    // carries its own (ε, δ) — this CLI just gives them all the same one.
+    let attention = match mode_name {
+        "dense" => AttentionOpt::Dense,
+        "vattention" => AttentionOpt::Verified(
+            vattn::experiments::common::vcfg(eps).with_guarantee(eps, delta),
+        ),
         other => anyhow::bail!("unknown mode '{other}' (dense|vattention)"),
     };
 
+    let mut builder = EngineConfig::builder()
+        .max_batch(args.get_usize("max-batch", 4))
+        .seed(seed)
+        .workers(workers)
+        .block_tokens(args.get_usize("block-tokens", 16));
     let kv_cap_mb = args.get_usize("kv-cap-mb", 0);
-    let engine = Engine::new(
-        Model::new(cfg, seed),
-        EngineConfig {
-            max_batch: args.get_usize("max-batch", 4),
-            sampler: Sampler::Greedy,
-            seed,
-            workers,
-            block_tokens: args.get_usize("block-tokens", 16),
-            kv_capacity_bytes: if kv_cap_mb > 0 { Some(kv_cap_mb << 20) } else { None },
-            ..Default::default()
-        },
-    );
+    if kv_cap_mb > 0 {
+        builder = builder.kv_capacity_bytes(kv_cap_mb << 20);
+    }
+    let engine = Engine::new(Model::new(cfg, seed), builder.build());
+    let mut session: Session<Model> = engine.session();
+
+    for ar in requests {
+        let opts = GenOptions::new(ar.req.gen_len).seed(ar.req.id).attention(attention.clone());
+        let mut sub = SubmitRequest::new(ar.req.prompt).options(opts);
+        if open_loop {
+            sub = sub.arrival(ar.arrival_s);
+        }
+        session.submit(sub);
+    }
+
     let t0 = std::time::Instant::now();
-    let results = if open_loop {
-        engine.serve_open_loop(requests, &mode)?
-    } else {
-        engine.serve(requests.into_iter().map(|r| r.req).collect(), &mode)?
-    };
+    let mut log = EventLog::new();
+    let mut rejected = 0usize;
+    while !session.is_idle() {
+        for ev in session.tick()? {
+            if let vattn::server::Event::Rejected { id, reason, .. } = &ev {
+                eprintln!("request {id} rejected: {reason}");
+                rejected += 1;
+            }
+            log.record(&ev);
+        }
+    }
     let wall = t0.elapsed().as_secs_f64();
+    if rejected > 0 && log.results().is_empty() {
+        anyhow::bail!("all {rejected} request(s) rejected — see reasons above");
+    }
 
     println!(
-        "mode={mode_name} model={model_name} workers={} max_batch={} open_loop={open_loop}",
+        "mode={mode_name} eps={eps} delta={delta} model={model_name} workers={} max_batch={} open_loop={open_loop}",
         engine.workers(),
         engine.cfg.max_batch
     );
-    println!("{}", ServeSummary::from_results(&results, wall).render());
+    println!("{}", log.summary(wall).render());
+    let mut results: Vec<_> = log.results().to_vec();
+    results.sort_by_key(|r| r.id);
     for r in &results {
         println!(
             "  req {:>3}: {} tokens, wait {:>7.1}ms, ttft {:>7.1}ms, decode {:>7.1}ms, density {:.3}",

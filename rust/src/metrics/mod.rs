@@ -6,7 +6,9 @@
 
 pub mod serving;
 
-pub use serving::{ascii_histogram, summarize, LatencySummary, ServeSummary};
+pub use serving::{
+    ascii_histogram, summarize, EventLog, LatencySummary, RequestTimeline, ServeSummary,
+};
 
 /// Mean of a slice.
 pub fn mean(xs: &[f64]) -> f64 {

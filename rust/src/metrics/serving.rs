@@ -1,9 +1,13 @@
 //! Serving-side metrics: TTFT / TPOT / throughput summaries and ASCII
 //! histograms over a batch of completed requests — the open-loop load
-//! report printed by `vattn serve` and `bench_engine`.
+//! report printed by `vattn serve` and `bench_engine` — plus
+//! [`EventLog`], the streaming-side recorder that derives the same
+//! latency picture from per-event timestamps as a `Session` ticks.
+
+use std::collections::BTreeMap;
 
 use crate::metrics::{f, histogram, mean, percentile, Table};
-use crate::server::RequestResult;
+use crate::server::{Event, RequestId, RequestResult};
 
 /// Percentile summary of one latency distribution (seconds).
 #[derive(Clone, Debug)]
@@ -148,6 +152,116 @@ pub fn ascii_histogram(title: &str, xs: &[f64], bins: usize, width: usize) -> St
     out
 }
 
+/// Timing of one request as observed through session events (all times
+/// are the session clock, seconds since session creation).
+#[derive(Clone, Debug, Default)]
+pub struct RequestTimeline {
+    pub admitted_s: Option<f64>,
+    pub first_token_s: Option<f64>,
+    pub last_token_s: Option<f64>,
+    /// `Token` events observed so far.
+    pub tokens: usize,
+    pub finished_s: Option<f64>,
+    pub rejected: bool,
+}
+
+impl RequestTimeline {
+    /// Admission → first token, if both were observed.
+    pub fn ttft_s(&self) -> Option<f64> {
+        Some(self.first_token_s? - self.admitted_s?)
+    }
+
+    /// Observed inter-token pacing: (last − first) / (tokens − 1).
+    pub fn tpot_s(&self) -> Option<f64> {
+        if self.tokens < 2 {
+            return None;
+        }
+        Some((self.last_token_s? - self.first_token_s?) / (self.tokens - 1) as f64)
+    }
+}
+
+/// Streaming-side metrics recorder: feed every `Event` a `Session::tick`
+/// returns and read per-request timelines (or batch-level TTFT/TPOT
+/// summaries) at any point — no need to wait for completion, which is
+/// the whole point of the token-event interface.
+#[derive(Debug, Default)]
+pub struct EventLog {
+    timelines: BTreeMap<RequestId, RequestTimeline>,
+    results: Vec<RequestResult>,
+}
+
+impl EventLog {
+    pub fn new() -> EventLog {
+        EventLog::default()
+    }
+
+    pub fn record(&mut self, ev: &Event) {
+        match ev {
+            Event::Admitted { id, t_s } => {
+                self.entry(*id).admitted_s = Some(*t_s);
+            }
+            Event::Token { id, t_s, .. } => {
+                let t = self.entry(*id);
+                if t.first_token_s.is_none() {
+                    t.first_token_s = Some(*t_s);
+                }
+                t.last_token_s = Some(*t_s);
+                t.tokens += 1;
+            }
+            Event::Finished { id, result, t_s } => {
+                self.entry(*id).finished_s = Some(*t_s);
+                self.results.push(result.clone());
+            }
+            Event::Rejected { id, .. } => {
+                self.entry(*id).rejected = true;
+            }
+        }
+    }
+
+    fn entry(&mut self, id: RequestId) -> &mut RequestTimeline {
+        self.timelines.entry(id).or_default()
+    }
+
+    pub fn timeline(&self, id: RequestId) -> Option<&RequestTimeline> {
+        self.timelines.get(&id)
+    }
+
+    /// Completion records collected from `Finished` events, in finish
+    /// order.
+    pub fn results(&self) -> &[RequestResult] {
+        &self.results
+    }
+
+    /// Total `Token` events observed (finished or not).
+    pub fn tokens(&self) -> usize {
+        self.timelines.values().map(|t| t.tokens).sum()
+    }
+
+    /// Event-observed TTFT samples (admission → first token), in
+    /// request-id order.
+    pub fn ttft_samples(&self) -> Vec<f64> {
+        self.timelines.values().filter_map(RequestTimeline::ttft_s).collect()
+    }
+
+    /// Event-observed TPOT samples, in request-id order.
+    pub fn tpot_samples(&self) -> Vec<f64> {
+        self.timelines.values().filter_map(RequestTimeline::tpot_s).collect()
+    }
+
+    pub fn ttft(&self) -> LatencySummary {
+        summarize(&self.ttft_samples())
+    }
+
+    pub fn tpot(&self) -> LatencySummary {
+        summarize(&self.tpot_samples())
+    }
+
+    /// The batch-style summary over all finished requests.
+    pub fn summary(&self, wall_s: f64) -> ServeSummary {
+        ServeSummary::from_results(&self.results, wall_s)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -209,5 +323,41 @@ mod tests {
         let s = summarize(&[]);
         assert_eq!(s.p50, 0.0);
         assert_eq!(s.max, 0.0);
+    }
+
+    #[test]
+    fn event_log_derives_ttft_and_tpot_from_timestamps() {
+        let mut log = EventLog::new();
+        log.record(&Event::Admitted { id: 0, t_s: 1.0 });
+        log.record(&Event::Token { id: 0, token: 5, step: 0, t_s: 1.25 });
+        log.record(&Event::Token { id: 0, token: 6, step: 1, t_s: 1.35 });
+        log.record(&Event::Token { id: 0, token: 7, step: 2, t_s: 1.45 });
+        log.record(&Event::Finished { id: 0, result: result(0, 3, 0.0, 0.25, 0.2), t_s: 1.45 });
+        let t = log.timeline(0).unwrap();
+        assert!((t.ttft_s().unwrap() - 0.25).abs() < 1e-9);
+        assert!((t.tpot_s().unwrap() - 0.1).abs() < 1e-9);
+        assert_eq!(t.finished_s, Some(1.45));
+        assert_eq!(log.tokens(), 3);
+        assert_eq!(log.results().len(), 1);
+        assert!((log.ttft().p50 - 0.25).abs() < 1e-9);
+        assert_eq!(log.summary(1.0).requests, 1);
+    }
+
+    #[test]
+    fn event_log_partial_streams_and_rejections() {
+        let mut log = EventLog::new();
+        log.record(&Event::Admitted { id: 3, t_s: 0.5 });
+        log.record(&Event::Token { id: 3, token: 1, step: 0, t_s: 0.75 });
+        log.record(&Event::Rejected {
+            id: 4,
+            reason: crate::server::EngineError::UnknownRequest(4),
+            t_s: 0.1,
+        });
+        let t = log.timeline(3).unwrap();
+        assert!(t.ttft_s().is_some());
+        assert!(t.tpot_s().is_none(), "one token is not enough for pacing");
+        assert!(log.timeline(4).unwrap().rejected);
+        assert!(log.tpot_samples().is_empty());
+        assert_eq!(log.tokens(), 1);
     }
 }

@@ -20,7 +20,7 @@ pub use heavy::{HeavyHitterPolicy, SinkWindowPolicy, SnapKvPolicy, H2OPolicy};
 pub use magicpig::MagicPigPolicy;
 pub use oracle::{HybridTopSamplePolicy, OracleTopKPolicy, OracleTopPPolicy, RandomSamplePolicy};
 pub use scorers::TopkScorer;
-pub use vattention::{VAttentionConfig, VAttentionPolicy};
+pub use vattention::{BudgetDecision, VAttentionConfig, VAttentionPolicy};
 
 use crate::attention::Selection;
 use crate::tensor::Mat;

@@ -47,6 +47,28 @@ impl Default for VAttentionConfig {
     }
 }
 
+impl VAttentionConfig {
+    /// Same config under a different user contract (ε, δ). This is the
+    /// per-request override the serving session applies when a request
+    /// carries its own guarantee (`AttentionOpt::Verified` /
+    /// `GenOptions::verified`): everything structural — sink, window,
+    /// heavy-hitter budget, base rate, verified computation, bound —
+    /// stays put; only the tolerance the budget machinery must certify
+    /// changes.
+    pub fn with_guarantee(mut self, eps: f64, delta: f64) -> Self {
+        self.eps = eps;
+        self.delta = delta;
+        self
+    }
+
+    /// Same config with a different verified computation (denominator,
+    /// numerator, or full SDPA).
+    pub fn with_verify(mut self, verify: Verify) -> Self {
+        self.verify = verify;
+        self
+    }
+}
+
 /// vAttention composed with a pluggable top-k predictor (oracle,
 /// HashAttention, …). Produces a `Selection` with p = 1 on the
 /// deterministic part and p = b/n_s on the sampled residual, plus a

@@ -1,8 +1,8 @@
-//! The generation engine: parallel continuous batching over a compute
-//! backend, with a paged KV cache.
+//! The generation engine: batch serving wrappers over the event-driven
+//! [`Session`] core (see `session.rs` for the scheduler itself).
 //!
 //! Scheduling model (vLLM-style, specialized to this testbed), as three
-//! phases per scheduler round:
+//! phases per scheduler round (= one `Session::tick`):
 //!
 //! 1. **Admission** — FIFO over the waiting queue, gated by batch
 //!    capacity (`max_batch`), arrival time (open-loop traces), and the
@@ -12,28 +12,32 @@
 //!    decode hot path allocator-free and the capacity gate exact.
 //! 2. **Step execution** — every active request advances one step (a
 //!    prefill chunk, or one decode token). Each request owns its
-//!    `KvCache`, policies and `Rng`, so steps are data-parallel: they
-//!    fan out across the engine's `util::ThreadPool`.
+//!    `KvCache`, policies, sampler and `Rng`, so steps are
+//!    data-parallel: they fan out across the engine's
+//!    `util::ThreadPool`.
 //! 3. **Merge** — results return in submission order; completed
 //!    requests free their blocks and their slot, and the queue
 //!    backfills. Because per-request state never crosses requests and
 //!    merge order is fixed, token streams are byte-identical at any
 //!    worker count.
+//!
+//! `Engine::serve` and `Engine::serve_open_loop` submit a whole batch
+//! into a fresh session and drive `tick` to completion — there is no
+//! second scheduling loop. Streaming callers use [`Engine::session`]
+//! (or `Session::new`) directly and consume token events as they land.
 
-use std::collections::VecDeque;
 use std::sync::Arc;
-use std::time::Instant;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::Result;
 
+use super::session::{Event, GenOptions, RequestId, Session, SubmitRequest};
 use super::{ArrivingRequest, Request, RequestResult};
 use crate::attention::Selection;
-use crate::kvcache::{BlockId, BlockPool, KvCache};
+use crate::kvcache::KvCache;
 use crate::model::{Model, ModelConfig, Sampler, StepOut};
-use crate::policies::{IndexPolicy, PolicyCtx};
+use crate::policies::IndexPolicy;
 use crate::tensor::Mat;
 use crate::util::threadpool::ThreadPool;
-use crate::util::Rng;
 
 /// Compute backend abstraction: the rust-native model or the PJRT path.
 pub trait Backend {
@@ -77,18 +81,25 @@ impl Backend for crate::runtime::PjrtModel {
     }
 }
 
-/// Creates a fresh policy per (layer, head) for each admitted request.
-pub type PolicyFactory = Box<dyn Fn(usize, usize) -> Box<dyn IndexPolicy>>;
+/// Engine-global policy factory: one fresh policy per (layer, head) for
+/// each admitted request, with no per-request context. The batch-mode
+/// (`AttentionMode`) counterpart of the session's options-aware
+/// `server::PolicyFactory`.
+pub type BatchPolicyFactory = Box<dyn Fn(usize, usize) -> Box<dyn IndexPolicy>>;
 
-/// How decode attention is computed.
+/// How decode attention is computed for a whole batch call. Requests
+/// submitted through a [`Session`] choose per request instead
+/// (`GenOptions` / `AttentionOpt`).
 pub enum AttentionMode {
     Dense,
-    Sparse(PolicyFactory),
+    Sparse(BatchPolicyFactory),
 }
 
+#[derive(Clone, Debug)]
 pub struct EngineConfig {
     /// Maximum concurrently active requests.
     pub max_batch: usize,
+    /// Default sampler; requests may override via `GenOptions::sampler`.
     pub sampler: Sampler,
     pub seed: u64,
     /// Worker threads for the step-execution phase. 1 = sequential.
@@ -100,6 +111,9 @@ pub struct EngineConfig {
     /// Engine-wide KV memory budget; admission stalls when the paged
     /// pool cannot cover a request's worst case. `None` = unbounded.
     pub kv_capacity_bytes: Option<usize>,
+    /// Reject requests whose prompt + generation budget exceeds this
+    /// (`EngineError::PromptTooLong`). `None` = unlimited.
+    pub max_seq_len: Option<usize>,
 }
 
 impl Default for EngineConfig {
@@ -112,67 +126,93 @@ impl Default for EngineConfig {
             prefill_chunk: 32,
             block_tokens: 16,
             kv_capacity_bytes: None,
+            max_seq_len: None,
         }
     }
 }
 
-/// One active request's serving state. Fully self-contained (cache,
-/// policies, RNG), which is what makes step execution data-parallel.
-struct Active {
-    req: Request,
-    cache: KvCache,
-    policies: Vec<Box<dyn IndexPolicy>>, // L*H, empty in dense mode
-    rng: Rng,
-    tokens: Vec<u32>,
-    next_token: u32,
-    pos: usize,
-    prefill_left: usize,
-    started: Instant,
-    wait_s: f64,
-    ttft_s: f64,
-    decode_s: f64,
-    density_sum: f64,
-    density_n: usize,
-    step: usize,
+impl EngineConfig {
+    /// Fluent construction; fields not set keep their defaults.
+    pub fn builder() -> EngineConfigBuilder {
+        EngineConfigBuilder { cfg: EngineConfig::default() }
+    }
 }
 
-impl Active {
-    fn finished(&self) -> bool {
-        self.prefill_left == 0 && self.tokens.len() >= self.req.gen_len
+/// Builder for [`EngineConfig`] (`EngineConfig::builder()`).
+#[derive(Clone, Debug)]
+pub struct EngineConfigBuilder {
+    cfg: EngineConfig,
+}
+
+impl EngineConfigBuilder {
+    pub fn max_batch(mut self, v: usize) -> Self {
+        self.cfg.max_batch = v;
+        self
     }
 
-    fn into_result(self) -> RequestResult {
-        RequestResult {
-            id: self.req.id,
-            tokens: self.tokens,
-            wait_s: self.wait_s,
-            ttft_s: self.ttft_s,
-            decode_s: self.decode_s,
-            mean_density: if self.density_n > 0 {
-                self.density_sum / self.density_n as f64
-            } else {
-                1.0
-            },
-            kv_bytes_read: self.cache.stats.bytes_read,
-        }
+    pub fn sampler(mut self, v: Sampler) -> Self {
+        self.cfg.sampler = v;
+        self
+    }
+
+    pub fn seed(mut self, v: u64) -> Self {
+        self.cfg.seed = v;
+        self
+    }
+
+    pub fn workers(mut self, v: usize) -> Self {
+        self.cfg.workers = v;
+        self
+    }
+
+    pub fn prefill_chunk(mut self, v: usize) -> Self {
+        self.cfg.prefill_chunk = v;
+        self
+    }
+
+    pub fn block_tokens(mut self, v: usize) -> Self {
+        self.cfg.block_tokens = v;
+        self
+    }
+
+    pub fn kv_capacity_bytes(mut self, v: usize) -> Self {
+        self.cfg.kv_capacity_bytes = Some(v);
+        self
+    }
+
+    pub fn max_seq_len(mut self, v: usize) -> Self {
+        self.cfg.max_seq_len = Some(v);
+        self
+    }
+
+    pub fn build(self) -> EngineConfig {
+        self.cfg
     }
 }
 
 pub struct Engine<B: Backend> {
     pub backend: Arc<B>,
     pub cfg: EngineConfig,
-    pool: ThreadPool,
+    pool: Arc<ThreadPool>,
 }
 
 impl<B: Backend + Send + Sync + 'static> Engine<B> {
     pub fn new(backend: B, cfg: EngineConfig) -> Engine<B> {
-        let pool = ThreadPool::new(cfg.workers.max(1));
+        let pool = Arc::new(ThreadPool::new(cfg.workers.max(1)));
         Engine { backend: Arc::new(backend), cfg, pool }
     }
 
     /// Step-execution worker threads.
     pub fn workers(&self) -> usize {
         self.pool.num_workers()
+    }
+
+    /// Open a streaming session sharing this engine's backend, config
+    /// and worker pool. Requests default to dense attention and the
+    /// engine's sampler; override per request via `GenOptions`, or
+    /// session-wide via `Session::set_default_attention`.
+    pub fn session(&self) -> Session<B> {
+        Session::with_pool(Arc::clone(&self.backend), self.cfg.clone(), Arc::clone(&self.pool))
     }
 
     /// Serve a batch of requests to completion with continuous batching
@@ -199,196 +239,45 @@ impl<B: Backend + Send + Sync + 'static> Engine<B> {
         self.serve_arrivals(requests, mode)
     }
 
+    /// The batch wrappers' shared drive loop: submit everything into a
+    /// fresh [`Session`], tick it dry, surface the first rejection as a
+    /// typed error, and return results keyed by the caller's ids.
     fn serve_arrivals(
         &self,
         requests: Vec<ArrivingRequest>,
         mode: &AttentionMode,
     ) -> Result<Vec<RequestResult>> {
-        let mcfg = self.backend.config().clone();
-        let max_batch = self.cfg.max_batch.max(1);
-        let mut blocks =
-            BlockPool::for_model(&mcfg, self.cfg.block_tokens, self.cfg.kv_capacity_bytes);
-        // Fail fast on unsatisfiable requests: a worst case beyond total
-        // pool capacity could never be admitted, and discovering that
-        // mid-run would discard every already-completed result.
-        if let Some(cap) = blocks.capacity_blocks() {
-            for ar in &requests {
-                let needed = blocks.blocks_for_tokens(ar.req.prompt.len() + ar.req.gen_len);
-                if needed > cap {
-                    bail!(
-                        "request {} needs {needed} KV blocks but pool capacity is {cap} \
-                         blocks ({} bytes/block); raise kv_capacity_bytes or shorten the request",
-                        ar.req.id,
-                        blocks.block_bytes()
-                    );
+        let mut session = self.session();
+        // Session ids are minted 0.. in submission order; remember the
+        // caller's ids so results come back under them. The caller id
+        // also tags the per-request RNG stream, so a request's draws
+        // depend only on (engine seed, its own id), not on batch
+        // composition.
+        let mut caller_ids: Vec<u64> = Vec::with_capacity(requests.len());
+        for ArrivingRequest { arrival_s, req } in requests {
+            caller_ids.push(req.id);
+            let sub = SubmitRequest::new(req.prompt)
+                .arrival(arrival_s)
+                .options(GenOptions::new(req.gen_len).seed(req.id));
+            let sid: RequestId = session.submit_with_mode(sub, mode);
+            debug_assert_eq!(sid as usize + 1, caller_ids.len());
+        }
+        let mut done: Vec<RequestResult> = Vec::new();
+        while !session.is_idle() {
+            for ev in session.tick()? {
+                match ev {
+                    Event::Finished { result, .. } => done.push(result),
+                    Event::Rejected { reason, .. } => return Err(anyhow::Error::from(reason)),
+                    Event::Admitted { .. } | Event::Token { .. } => {}
                 }
             }
         }
-        let mut waiting: VecDeque<ArrivingRequest> = requests.into();
-        let mut active: Vec<Active> = Vec::new();
-        let mut done: Vec<RequestResult> = Vec::new();
-        let mut seed_rng = Rng::new(self.cfg.seed);
-        let start = Instant::now();
-
-        loop {
-            // ── phase 1: admission (FIFO; arrival-, batch- and KV-gated) ──
-            let now = start.elapsed().as_secs_f64();
-            while active.len() < max_batch {
-                let Some(front) = waiting.front() else { break };
-                if front.arrival_s > now {
-                    break;
-                }
-                let needed =
-                    blocks.blocks_for_tokens(front.req.prompt.len() + front.req.gen_len);
-                let Some(lease) = blocks.try_alloc(needed) else {
-                    // Upfront validation guarantees `needed` fits total
-                    // capacity, so some active request holds the missing
-                    // blocks: head-of-line waits for a completion.
-                    debug_assert!(
-                        !active.is_empty(),
-                        "admission stalled with an empty batch despite capacity validation"
-                    );
-                    break;
-                };
-                let ar = waiting.pop_front().expect("front() was Some");
-                active.push(self.admit(ar, lease, mode, &mcfg, &mut seed_rng, now));
-            }
-
-            if active.is_empty() {
-                let Some(front) = waiting.front() else { break };
-                // Open-loop idle gap: nothing runnable until the next arrival.
-                let gap = front.arrival_s - start.elapsed().as_secs_f64();
-                if gap > 0.0 {
-                    std::thread::sleep(std::time::Duration::from_secs_f64(gap.min(0.02)));
-                }
-                continue;
-            }
-
-            // ── phase 2: fan the batch's steps out across the pool ──
-            let batch: Vec<Active> = std::mem::take(&mut active);
-            let backend = Arc::clone(&self.backend);
-            let sampler = self.cfg.sampler.clone();
-            let prefill_chunk = self.cfg.prefill_chunk.max(1);
-            let stepped: Vec<Result<Active>> = self.pool.map(batch, move |mut a| {
-                advance(&*backend, &sampler, prefill_chunk, &mut a).map(|_| a)
-            });
-
-            // ── phase 3: deterministic merge, in submission order ──
-            for res in stepped {
-                let mut a = res?;
-                if a.finished() {
-                    let lease = a.cache.release_blocks();
-                    blocks.free(lease).map_err(|e| anyhow!("kv block pool: {e}"))?;
-                    done.push(a.into_result());
-                } else {
-                    active.push(a);
-                }
-            }
+        for r in &mut done {
+            r.id = caller_ids[r.id as usize];
         }
         done.sort_by_key(|r| r.id);
         Ok(done)
     }
-
-    fn admit(
-        &self,
-        ar: ArrivingRequest,
-        lease: Vec<BlockId>,
-        mode: &AttentionMode,
-        mcfg: &ModelConfig,
-        seed_rng: &mut Rng,
-        now: f64,
-    ) -> Active {
-        let ArrivingRequest { arrival_s, req } = ar;
-        let policies = match mode {
-            AttentionMode::Dense => Vec::new(),
-            AttentionMode::Sparse(factory) => {
-                let mut v = Vec::with_capacity(mcfg.n_layers * mcfg.n_heads);
-                for l in 0..mcfg.n_layers {
-                    for h in 0..mcfg.n_heads {
-                        v.push(factory(l, h));
-                    }
-                }
-                v
-            }
-        };
-        let first = *req.prompt.first().unwrap_or(&0);
-        Active {
-            prefill_left: req.prompt.len(),
-            cache: KvCache::paged(mcfg, self.cfg.block_tokens.max(1), lease),
-            policies,
-            rng: seed_rng.fork(req.id),
-            tokens: Vec::new(),
-            next_token: first,
-            pos: 0,
-            started: Instant::now(),
-            wait_s: (now - arrival_s).max(0.0),
-            ttft_s: 0.0,
-            decode_s: 0.0,
-            density_sum: 0.0,
-            density_n: 0,
-            step: 0,
-            req,
-        }
-    }
-}
-
-/// Advance one request by one scheduler round: up to `prefill_chunk`
-/// prompt tokens while prefilling (dense, Setup B: context via full
-/// attention), or exactly one decode step (sparse per policy). Runs on a
-/// worker thread; touches only this request's state.
-fn advance<B: Backend>(
-    backend: &B,
-    sampler: &Sampler,
-    prefill_chunk: usize,
-    a: &mut Active,
-) -> Result<()> {
-    let n_heads = backend.config().n_heads;
-    let t0 = Instant::now();
-    let out: StepOut;
-    if a.prefill_left > 0 {
-        let take = a.prefill_left.min(prefill_chunk);
-        let mut last: Option<StepOut> = None;
-        for _ in 0..take {
-            let tok = a.req.prompt[a.pos];
-            last = Some(backend.step(tok, a.pos, &mut a.cache, None)?);
-            a.prefill_left -= 1;
-            a.pos += 1;
-        }
-        if a.prefill_left > 0 {
-            return Ok(()); // still prefilling: nothing to sample yet
-        }
-        a.ttft_s = a.started.elapsed().as_secs_f64();
-        a.cache.stats.reset(); // count decode traffic only
-        out = last.expect("prefill_chunk >= 1");
-    } else {
-        let sparse = !a.policies.is_empty();
-        let policies = &mut a.policies;
-        let rng = &mut a.rng;
-        let step = a.step;
-        let mut select = |l: usize, h: usize, k: &Mat, v: &Mat, q: &[f32]| -> Selection {
-            let mut ctx = PolicyCtx { k, v, q_scaled: q, rng: &mut *rng, step };
-            policies[l * n_heads + h].select(&mut ctx)
-        };
-        let sel_opt: Option<&mut dyn FnMut(usize, usize, &Mat, &Mat, &[f32]) -> Selection> =
-            if sparse { Some(&mut select) } else { None };
-        let stepped = backend.step(a.next_token, a.pos, &mut a.cache, sel_opt)?;
-        a.decode_s += t0.elapsed().as_secs_f64();
-        a.pos += 1;
-        a.step += 1;
-        a.density_sum += stepped.mean_density;
-        a.density_n += 1;
-        out = stepped;
-    }
-    // Sample the next token once the prompt is fully ingested. The
-    // sampler consumes this request's private RNG, so the draw sequence
-    // is identical no matter how rounds are scheduled across workers.
-    let tok = sampler.sample(&out.logits, &mut a.rng);
-    if a.tokens.len() < a.req.gen_len && (a.step > 0 || a.pos == a.req.prompt.len()) {
-        // The token just generated becomes the next input.
-        a.tokens.push(tok);
-        a.next_token = tok;
-    }
-    Ok(())
 }
 
 #[cfg(test)]
@@ -537,5 +426,50 @@ mod tests {
     fn empty_request_list_ok() {
         let eng = tiny_engine();
         assert!(eng.serve(vec![], &AttentionMode::Dense).unwrap().is_empty());
+    }
+
+    #[test]
+    fn builder_covers_every_knob() {
+        let cfg = EngineConfig::builder()
+            .max_batch(7)
+            .sampler(Sampler::Temperature(0.5))
+            .seed(9)
+            .workers(3)
+            .prefill_chunk(8)
+            .block_tokens(32)
+            .kv_capacity_bytes(1 << 20)
+            .max_seq_len(4096)
+            .build();
+        assert_eq!(cfg.max_batch, 7);
+        assert!(matches!(cfg.sampler, Sampler::Temperature(t) if (t - 0.5).abs() < 1e-9));
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.prefill_chunk, 8);
+        assert_eq!(cfg.block_tokens, 32);
+        assert_eq!(cfg.kv_capacity_bytes, Some(1 << 20));
+        assert_eq!(cfg.max_seq_len, Some(4096));
+    }
+
+    #[test]
+    fn engine_session_streams_the_same_tokens_as_serve() {
+        let eng = tiny_engine();
+        let served = eng.serve(reqs(3, 10, 4), &AttentionMode::Dense).unwrap();
+        let mut session = eng.session();
+        for r in reqs(3, 10, 4) {
+            session.submit(
+                SubmitRequest::new(r.prompt).options(GenOptions::new(r.gen_len).seed(r.id)),
+            );
+        }
+        let mut streamed: Vec<Vec<u32>> = vec![Vec::new(); 3];
+        while !session.is_idle() {
+            for ev in session.tick().unwrap() {
+                if let Event::Token { id, token, .. } = ev {
+                    streamed[id as usize].push(token);
+                }
+            }
+        }
+        for (r, s) in served.iter().zip(streamed.iter()) {
+            assert_eq!(&r.tokens, s, "request {} diverged between serve and session", r.id);
+        }
     }
 }

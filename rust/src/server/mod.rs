@@ -10,10 +10,26 @@
 //! execution fans out across a worker pool (requests are data-parallel
 //! within a scheduler round) and merges deterministically, so token
 //! streams are byte-identical at any worker count.
+//!
+//! Two entry points share one scheduler:
+//!
+//! * **Streaming** — [`Session`]: `submit` / `cancel` / `tick`, with
+//!   per-request [`GenOptions`] (sampler, generation length, seed, and
+//!   an attention contract including per-request (ε, δ)) and typed
+//!   [`EngineError`]s. Each `tick` emits [`Event`]s as they happen.
+//! * **Batch** — [`Engine::serve`] / [`Engine::serve_open_loop`]: thin
+//!   drive-the-session loops that return `Vec<RequestResult>` at the
+//!   end, kept for experiments, benches and tests.
 
 pub mod engine;
+pub mod session;
 
-pub use engine::{AttentionMode, Backend, Engine, EngineConfig, PolicyFactory};
+pub use engine::{
+    AttentionMode, Backend, BatchPolicyFactory, Engine, EngineConfig, EngineConfigBuilder,
+};
+pub use session::{
+    AttentionOpt, EngineError, Event, GenOptions, PolicyFactory, RequestId, Session, SubmitRequest,
+};
 
 /// An inference request.
 #[derive(Clone, Debug)]

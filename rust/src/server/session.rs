@@ -1,0 +1,898 @@
+//! Event-driven serving session: the scheduler core behind the engine.
+//!
+//! [`Session`] owns the serving state — FIFO waiting queue, active batch,
+//! paged [`BlockPool`] — and exposes the streaming interface real serving
+//! needs: [`Session::submit`] enqueues a request and returns its
+//! [`RequestId`], [`Session::tick`] runs one scheduler round and returns
+//! the [`Event`]s it produced (admissions, per-token emissions,
+//! completions, rejections — each stamped with the session clock), and
+//! [`Session::cancel`] tears a request down mid-flight, returning every
+//! leased KV block to the pool immediately.
+//!
+//! One `tick` is exactly one round of the engine's scheduling model —
+//! admission, parallel step execution across the worker pool, then a
+//! deterministic merge in submission order — so the per-request token
+//! streams observed through `Event::Token` are byte-identical at any
+//! worker count, and `Engine::serve` / `Engine::serve_open_loop` are
+//! nothing but drive-the-session loops over this type.
+//!
+//! Heterogeneity lives on the request, not the engine: [`GenOptions`]
+//! carries a per-request sampler, generation length, RNG seed, and
+//! attention contract ([`AttentionOpt`]) — including a per-request
+//! (ε, δ) guarantee for verified sparse attention, which is the paper's
+//! deployment story: users pick their own accuracy contract at serving
+//! time.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::engine::{AttentionMode, Backend, EngineConfig};
+use super::RequestResult;
+use crate::attention::Selection;
+use crate::kvcache::{BlockId, BlockPool, KvCache, PageError};
+use crate::model::{ModelConfig, Sampler, StepOut};
+use crate::policies::{IndexPolicy, PolicyCtx, VAttentionConfig, VAttentionPolicy};
+use crate::tensor::Mat;
+use crate::util::threadpool::ThreadPool;
+use crate::util::Rng;
+
+/// Identifier minted by [`Session::submit`]; stable for the lifetime of
+/// the session (ids are never reused).
+pub type RequestId = u64;
+
+/// Typed errors on the serving path (replacing the stringly `anyhow`
+/// errors the batch API used). Converts into `anyhow::Error` via `?`
+/// where callers still speak `anyhow`.
+#[derive(Debug)]
+pub enum EngineError {
+    /// The request's worst-case KV reservation can never fit the pool.
+    KvCapacityExceeded { needed: usize, available: usize },
+    /// prompt + generation budget exceeds `EngineConfig::max_seq_len`.
+    PromptTooLong { len: usize, max: usize },
+    /// The id was never submitted, or already finished / cancelled.
+    UnknownRequest(RequestId),
+    /// Block-pool bookkeeping violation — an engine bug, not user error.
+    Page(PageError),
+    /// The compute backend failed mid-step.
+    Backend(anyhow::Error),
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::KvCapacityExceeded { needed, available } => write!(
+                f,
+                "request needs {needed} KV blocks but pool capacity is {available} blocks; \
+                 raise kv_capacity_bytes or shorten the request"
+            ),
+            EngineError::PromptTooLong { len, max } => write!(
+                f,
+                "prompt + generation budget is {len} tokens but max_seq_len is {max}"
+            ),
+            EngineError::UnknownRequest(id) => {
+                write!(f, "unknown request {id} (never submitted, finished, or cancelled)")
+            }
+            EngineError::Page(e) => write!(f, "kv block pool: {e}"),
+            EngineError::Backend(e) => write!(f, "backend: {e:#}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// Per-request policy factory: builds one policy per (layer, head) for a
+/// request, with access to that request's [`GenOptions`] — this is how a
+/// per-request accuracy contract reaches the policy layer.
+pub type PolicyFactory =
+    Arc<dyn Fn(usize, usize, &GenOptions) -> Box<dyn IndexPolicy> + Send + Sync>;
+
+/// Per-request decode-attention contract.
+#[derive(Clone, Default)]
+pub enum AttentionOpt {
+    /// Use the session's default attention (dense unless overridden via
+    /// [`Session::set_default_attention`]).
+    #[default]
+    Inherit,
+    /// Full attention for this request.
+    Dense,
+    /// vAttention with this request's own config — ε and δ live inside,
+    /// so two requests in the same batch can run different guarantees.
+    Verified(VAttentionConfig),
+    /// Arbitrary per-request policy factory.
+    Custom(PolicyFactory),
+}
+
+impl std::fmt::Debug for AttentionOpt {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AttentionOpt::Inherit => write!(f, "Inherit"),
+            AttentionOpt::Dense => write!(f, "Dense"),
+            AttentionOpt::Verified(cfg) => {
+                write!(f, "Verified(eps={}, delta={})", cfg.eps, cfg.delta)
+            }
+            AttentionOpt::Custom(_) => write!(f, "Custom(..)"),
+        }
+    }
+}
+
+/// Per-request generation options. Everything the batch engine used to
+/// fix globally — sampler, attention mode, seed — is chosen here, per
+/// request; `None` / `Inherit` fall back to the session defaults.
+#[derive(Clone, Debug)]
+pub struct GenOptions {
+    /// Number of tokens to generate.
+    pub gen_len: usize,
+    /// Sampler override; `None` uses `EngineConfig::sampler`.
+    pub sampler: Option<Sampler>,
+    /// RNG stream tag; `None` derives the stream from the request id.
+    /// The actual stream is forked from the session's seeded root RNG,
+    /// so (engine seed, request seed) fully determine the draw sequence.
+    pub seed: Option<u64>,
+    /// Decode-attention contract for this request.
+    pub attention: AttentionOpt,
+}
+
+impl Default for GenOptions {
+    fn default() -> Self {
+        GenOptions { gen_len: 16, sampler: None, seed: None, attention: AttentionOpt::Inherit }
+    }
+}
+
+impl GenOptions {
+    pub fn new(gen_len: usize) -> GenOptions {
+        GenOptions { gen_len, ..Default::default() }
+    }
+
+    pub fn sampler(mut self, sampler: Sampler) -> Self {
+        self.sampler = Some(sampler);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    pub fn attention(mut self, attention: AttentionOpt) -> Self {
+        self.attention = attention;
+        self
+    }
+
+    /// Force full attention for this request.
+    pub fn dense(self) -> Self {
+        self.attention(AttentionOpt::Dense)
+    }
+
+    /// Verified sparse attention at a per-request (ε, δ) contract over
+    /// the paper's natural config.
+    pub fn verified(self, eps: f64, delta: f64) -> Self {
+        self.attention(AttentionOpt::Verified(
+            VAttentionConfig::default().with_guarantee(eps, delta),
+        ))
+    }
+
+    /// Verified sparse attention with a fully custom config.
+    pub fn verified_with(self, cfg: VAttentionConfig) -> Self {
+        self.attention(AttentionOpt::Verified(cfg))
+    }
+}
+
+/// A request handed to [`Session::submit`].
+#[derive(Clone, Debug)]
+pub struct SubmitRequest {
+    pub prompt: Vec<u32>,
+    /// Seconds from session start at which the request becomes visible
+    /// to the scheduler (0 = immediately; used for trace replay).
+    pub arrival_s: f64,
+    pub opts: GenOptions,
+}
+
+impl SubmitRequest {
+    pub fn new(prompt: Vec<u32>) -> SubmitRequest {
+        SubmitRequest { prompt, arrival_s: 0.0, opts: GenOptions::default() }
+    }
+
+    /// Trace-replay arrival time (seconds from session start).
+    pub fn arrival(mut self, arrival_s: f64) -> Self {
+        self.arrival_s = arrival_s;
+        self
+    }
+
+    pub fn options(mut self, opts: GenOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+}
+
+/// What one scheduler round reported. Every variant carries `t_s`, the
+/// session clock (seconds since session creation) at which the event
+/// was observed — the raw material for streaming TTFT/TPOT metrics
+/// (`metrics::EventLog`).
+#[derive(Debug)]
+pub enum Event {
+    /// The request moved from the waiting queue into the active batch.
+    Admitted { id: RequestId, t_s: f64 },
+    /// One generated token; `step` counts from 0 per request, so a
+    /// request's token stream is the sequence of its `Token` events.
+    Token { id: RequestId, token: u32, step: usize, t_s: f64 },
+    /// The request completed; carries the same record `Engine::serve`
+    /// returns (tokens, wait/TTFT/decode timings, density, KV traffic).
+    Finished { id: RequestId, result: RequestResult, t_s: f64 },
+    /// The request terminated without a result: it can never be served
+    /// under the session's configuration (capacity / length validation),
+    /// or the backend failed mid-flight (`EngineError::Backend`). Any
+    /// leased KV blocks have already been returned to the pool.
+    Rejected { id: RequestId, reason: EngineError, t_s: f64 },
+}
+
+/// A submitted request waiting for admission. Policies are resolved at
+/// submit time (policy construction is deterministic and draws no
+/// randomness), so admission stays allocation-gated only.
+struct Waiting {
+    id: RequestId,
+    arrival_s: f64,
+    prompt: Vec<u32>,
+    gen_len: usize,
+    sampler: Sampler,
+    seed_tag: u64,
+    policies: Vec<Box<dyn IndexPolicy>>,
+}
+
+/// One active request's serving state. Fully self-contained (cache,
+/// policies, sampler, RNG), which is what makes step execution
+/// data-parallel.
+struct Active {
+    id: RequestId,
+    prompt: Vec<u32>,
+    gen_len: usize,
+    sampler: Sampler,
+    cache: KvCache,
+    policies: Vec<Box<dyn IndexPolicy>>, // L*H, empty in dense mode
+    rng: Rng,
+    tokens: Vec<u32>,
+    /// How many of `tokens` have been emitted as `Event::Token`.
+    reported: usize,
+    next_token: u32,
+    pos: usize,
+    prefill_left: usize,
+    started: Instant,
+    wait_s: f64,
+    ttft_s: f64,
+    decode_s: f64,
+    density_sum: f64,
+    density_n: usize,
+    step: usize,
+}
+
+impl Active {
+    fn finished(&self) -> bool {
+        self.prefill_left == 0 && self.tokens.len() >= self.gen_len
+    }
+
+    fn into_result(self) -> RequestResult {
+        RequestResult {
+            id: self.id,
+            tokens: self.tokens,
+            wait_s: self.wait_s,
+            ttft_s: self.ttft_s,
+            decode_s: self.decode_s,
+            mean_density: if self.density_n > 0 {
+                self.density_sum / self.density_n as f64
+            } else {
+                1.0
+            },
+            kv_bytes_read: self.cache.stats.bytes_read,
+        }
+    }
+}
+
+/// The streaming scheduler core. See the module docs for the contract;
+/// see `Engine` for the batch wrappers layered on top.
+pub struct Session<B: Backend> {
+    backend: Arc<B>,
+    cfg: EngineConfig,
+    mcfg: ModelConfig,
+    pool: Arc<ThreadPool>,
+    blocks: BlockPool,
+    default_attention: AttentionOpt,
+    waiting: VecDeque<Waiting>,
+    active: Vec<Active>,
+    /// Rejections queued at submit time, drained by the next `tick`.
+    pending_events: Vec<Event>,
+    /// Pristine seeded root; never advanced. Per-request streams are
+    /// derived by clone-then-fork (see `Session::request_rng`).
+    seed_rng: Rng,
+    start: Instant,
+    next_id: RequestId,
+}
+
+impl<B: Backend + Send + Sync + 'static> Session<B> {
+    /// Standalone session with its own worker pool.
+    pub fn new(backend: B, cfg: EngineConfig) -> Session<B> {
+        let pool = Arc::new(ThreadPool::new(cfg.workers.max(1)));
+        Session::with_pool(Arc::new(backend), cfg, pool)
+    }
+
+    /// Session sharing an existing backend and worker pool (the
+    /// `Engine::session` / `Engine::serve` path).
+    pub(crate) fn with_pool(
+        backend: Arc<B>,
+        cfg: EngineConfig,
+        pool: Arc<ThreadPool>,
+    ) -> Session<B> {
+        let mcfg = backend.config().clone();
+        let blocks = BlockPool::for_model(&mcfg, cfg.block_tokens, cfg.kv_capacity_bytes);
+        let seed_rng = Rng::new(cfg.seed);
+        Session {
+            backend,
+            cfg,
+            mcfg,
+            pool,
+            blocks,
+            default_attention: AttentionOpt::Dense,
+            waiting: VecDeque::new(),
+            active: Vec::new(),
+            pending_events: Vec::new(),
+            seed_rng,
+            start: Instant::now(),
+            next_id: 0,
+        }
+    }
+
+    /// Attention applied to requests that submit `AttentionOpt::Inherit`.
+    /// `Inherit` here means dense.
+    pub fn set_default_attention(&mut self, attention: AttentionOpt) {
+        self.default_attention = attention;
+    }
+
+    /// Seconds since the session was created (the event clock).
+    pub fn now_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Requests submitted but not yet finished, cancelled, or rejected.
+    pub fn outstanding(&self) -> usize {
+        self.waiting.len() + self.active.len()
+    }
+
+    /// True when a `tick` would have nothing to do: no queued work and
+    /// no pending events. The drive loop's termination condition.
+    pub fn is_idle(&self) -> bool {
+        self.waiting.is_empty() && self.active.is_empty() && self.pending_events.is_empty()
+    }
+
+    /// KV blocks currently leased to waiting-for-nothing — i.e. active —
+    /// requests. Zero once the session drains (the no-leak invariant the
+    /// cancellation tests assert).
+    pub fn kv_blocks_in_use(&self) -> usize {
+        self.blocks.in_use_blocks()
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// Enqueue a request and return its id. Never fails: a request that
+    /// can never be served yields an `Event::Rejected` on the next
+    /// [`Session::tick`] instead, so the id is always valid to observe.
+    pub fn submit(&mut self, req: SubmitRequest) -> RequestId {
+        let policies = self.resolve_policies(&req.opts);
+        self.enqueue(req, policies)
+    }
+
+    /// Legacy path for `Engine::serve`: resolve attention from the
+    /// engine-global [`AttentionMode`] instead of the request options.
+    pub(crate) fn submit_with_mode(
+        &mut self,
+        req: SubmitRequest,
+        mode: &AttentionMode,
+    ) -> RequestId {
+        let policies = match mode {
+            AttentionMode::Dense => Vec::new(),
+            AttentionMode::Sparse(factory) => self.policy_grid(|l, h| factory(l, h)),
+        };
+        self.enqueue(req, policies)
+    }
+
+    /// Remove a request, wherever it is. An active request's leased KV
+    /// blocks return to the pool immediately; a waiting request simply
+    /// leaves the queue (it never held blocks). Finished, rejected,
+    /// already-cancelled, or never-submitted ids yield `UnknownRequest`.
+    pub fn cancel(&mut self, id: RequestId) -> Result<(), EngineError> {
+        if let Some(pos) = self.waiting.iter().position(|w| w.id == id) {
+            self.waiting.remove(pos);
+            return Ok(());
+        }
+        if let Some(pos) = self.active.iter().position(|a| a.id == id) {
+            let mut a = self.active.remove(pos);
+            let lease = a.cache.release_blocks();
+            self.blocks.free(lease).map_err(EngineError::Page)?;
+            return Ok(());
+        }
+        Err(EngineError::UnknownRequest(id))
+    }
+
+    /// Run one scheduler round and return the events it produced, in
+    /// deterministic order: queued rejections first, then admissions,
+    /// then per-request `Token` / `Finished` events in submission order.
+    ///
+    /// Failures are isolated per request: a backend error terminates
+    /// only the request it hit (its KV blocks return to the pool and a
+    /// `Rejected` event carries the `EngineError::Backend` reason); the
+    /// rest of the batch keeps streaming. `tick` itself only errors on
+    /// block-pool bookkeeping violations, which are engine bugs.
+    ///
+    /// When nothing is active and the queue's head has not arrived yet
+    /// (trace replay), the call sleeps for at most 20 ms so drive loops
+    /// do not spin; interactive sessions (arrival 0) never sleep.
+    pub fn tick(&mut self) -> Result<Vec<Event>, EngineError> {
+        let mut events = std::mem::take(&mut self.pending_events);
+
+        // ── phase 1: admission (FIFO; arrival-, batch- and KV-gated) ──
+        let now = self.now_s();
+        let max_batch = self.cfg.max_batch.max(1);
+        while self.active.len() < max_batch {
+            let Some(front) = self.waiting.front() else { break };
+            if front.arrival_s > now {
+                break;
+            }
+            let needed = self.blocks.blocks_for_tokens(front.prompt.len() + front.gen_len);
+            let Some(lease) = self.blocks.try_alloc(needed) else {
+                // Submit-time validation guarantees `needed` fits total
+                // capacity, so some active request holds the missing
+                // blocks: head-of-line waits for a completion.
+                debug_assert!(
+                    !self.active.is_empty(),
+                    "admission stalled with an empty batch despite submit validation"
+                );
+                break;
+            };
+            let w = self.waiting.pop_front().expect("front() was Some");
+            events.push(Event::Admitted { id: w.id, t_s: now });
+            let active = self.admit(w, lease, now);
+            self.active.push(active);
+        }
+
+        if self.active.is_empty() {
+            if let Some(front) = self.waiting.front() {
+                // Trace-replay idle gap: nothing runnable until the next
+                // arrival.
+                let gap = front.arrival_s - self.now_s();
+                if gap > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(gap.min(0.02)));
+                }
+            }
+            return Ok(events);
+        }
+
+        // ── phase 2: fan the batch's steps out across the pool ──
+        // The Active rides alongside the step result so a failing
+        // request still comes back (its block lease must be returned,
+        // not dropped on a worker thread).
+        let batch: Vec<Active> = std::mem::take(&mut self.active);
+        let backend = Arc::clone(&self.backend);
+        let prefill_chunk = self.cfg.prefill_chunk.max(1);
+        let stepped: Vec<(Active, Result<(), EngineError>)> =
+            self.pool.map(batch, move |mut a| {
+                let res = advance(&*backend, prefill_chunk, &mut a);
+                (a, res)
+            });
+
+        // ── phase 3: deterministic merge, in submission order ──
+        let t_s = self.now_s();
+        for (mut a, res) in stepped {
+            if let Err(reason) = res {
+                // Per-request failure isolation: a backend error kills
+                // this request (blocks returned, `Rejected` emitted) and
+                // no one else — the session stays serviceable.
+                let lease = a.cache.release_blocks();
+                self.blocks.free(lease).map_err(EngineError::Page)?;
+                events.push(Event::Rejected { id: a.id, reason, t_s });
+                continue;
+            }
+            while a.reported < a.tokens.len() {
+                events.push(Event::Token {
+                    id: a.id,
+                    token: a.tokens[a.reported],
+                    step: a.reported,
+                    t_s,
+                });
+                a.reported += 1;
+            }
+            if a.finished() {
+                let lease = a.cache.release_blocks();
+                self.blocks.free(lease).map_err(EngineError::Page)?;
+                let id = a.id;
+                events.push(Event::Finished { id, result: a.into_result(), t_s });
+            } else {
+                self.active.push(a);
+            }
+        }
+        debug_assert!(
+            !(self.waiting.is_empty() && self.active.is_empty()) || self.blocks.is_quiescent(),
+            "idle session must hold zero KV block leases"
+        );
+        Ok(events)
+    }
+
+    /// Resolve a request's attention contract into per-(layer, head)
+    /// policies. Empty vector = dense.
+    fn resolve_policies(&self, opts: &GenOptions) -> Vec<Box<dyn IndexPolicy>> {
+        let att = match &opts.attention {
+            AttentionOpt::Inherit => &self.default_attention,
+            other => other,
+        };
+        match att {
+            AttentionOpt::Inherit | AttentionOpt::Dense => Vec::new(),
+            AttentionOpt::Verified(vcfg) => {
+                self.policy_grid(|_l, _h| Box::new(VAttentionPolicy::oracle(vcfg.clone())))
+            }
+            AttentionOpt::Custom(factory) => self.policy_grid(|l, h| factory(l, h, opts)),
+        }
+    }
+
+    fn policy_grid(
+        &self,
+        mut mk: impl FnMut(usize, usize) -> Box<dyn IndexPolicy>,
+    ) -> Vec<Box<dyn IndexPolicy>> {
+        let mut v = Vec::with_capacity(self.mcfg.n_layers * self.mcfg.n_heads);
+        for l in 0..self.mcfg.n_layers {
+            for h in 0..self.mcfg.n_heads {
+                v.push(mk(l, h));
+            }
+        }
+        v
+    }
+
+    fn enqueue(&mut self, req: SubmitRequest, policies: Vec<Box<dyn IndexPolicy>>) -> RequestId {
+        let id = self.next_id;
+        self.next_id += 1;
+        let SubmitRequest { prompt, arrival_s, opts } = req;
+        let total = prompt.len() + opts.gen_len;
+
+        let mut reject: Option<EngineError> = None;
+        if let Some(max) = self.cfg.max_seq_len {
+            if total > max {
+                reject = Some(EngineError::PromptTooLong { len: total, max });
+            }
+        }
+        if reject.is_none() {
+            if let Some(cap) = self.blocks.capacity_blocks() {
+                let needed = self.blocks.blocks_for_tokens(total);
+                if needed > cap {
+                    reject = Some(EngineError::KvCapacityExceeded { needed, available: cap });
+                }
+            }
+        }
+        if let Some(reason) = reject {
+            let t_s = self.now_s();
+            self.pending_events.push(Event::Rejected { id, reason, t_s });
+            return id;
+        }
+
+        let sampler = opts.sampler.unwrap_or_else(|| self.cfg.sampler.clone());
+        let seed_tag = opts.seed.unwrap_or(id);
+        self.waiting.push_back(Waiting {
+            id,
+            arrival_s,
+            prompt,
+            gen_len: opts.gen_len,
+            sampler,
+            seed_tag,
+            policies,
+        });
+        id
+    }
+
+    /// Per-request RNG stream, a pure function of (engine seed, request
+    /// seed tag): the root is cloned before forking so no shared state
+    /// advances. This is what makes `GenOptions::seed` a real contract —
+    /// the stream does not depend on admission order, batch composition,
+    /// or what was cancelled before this request ran.
+    fn request_rng(&self, tag: u64) -> Rng {
+        let mut root = self.seed_rng.clone();
+        root.fork(tag)
+    }
+
+    fn admit(&self, w: Waiting, lease: Vec<BlockId>, now: f64) -> Active {
+        let prefill_left = w.prompt.len();
+        let first = *w.prompt.first().unwrap_or(&0);
+        Active {
+            id: w.id,
+            gen_len: w.gen_len,
+            sampler: w.sampler,
+            cache: KvCache::paged(&self.mcfg, self.cfg.block_tokens.max(1), lease),
+            policies: w.policies,
+            rng: self.request_rng(w.seed_tag),
+            tokens: Vec::new(),
+            reported: 0,
+            next_token: first,
+            pos: 0,
+            prefill_left,
+            prompt: w.prompt,
+            started: Instant::now(),
+            wait_s: (now - w.arrival_s).max(0.0),
+            ttft_s: 0.0,
+            decode_s: 0.0,
+            density_sum: 0.0,
+            density_n: 0,
+            step: 0,
+        }
+    }
+}
+
+/// Advance one request by one scheduler round: up to `prefill_chunk`
+/// prompt tokens while prefilling (dense, Setup B: context via full
+/// attention), or exactly one decode step (sparse per policy). Runs on a
+/// worker thread; touches only this request's state.
+fn advance<B: Backend>(
+    backend: &B,
+    prefill_chunk: usize,
+    a: &mut Active,
+) -> Result<(), EngineError> {
+    let n_heads = backend.config().n_heads;
+    let t0 = Instant::now();
+    let out: StepOut;
+    if a.prefill_left > 0 {
+        let take = a.prefill_left.min(prefill_chunk);
+        let mut last: Option<StepOut> = None;
+        for _ in 0..take {
+            let tok = a.prompt[a.pos];
+            last = Some(
+                backend.step(tok, a.pos, &mut a.cache, None).map_err(EngineError::Backend)?,
+            );
+            a.prefill_left -= 1;
+            a.pos += 1;
+        }
+        if a.prefill_left > 0 {
+            return Ok(()); // still prefilling: nothing to sample yet
+        }
+        a.ttft_s = a.started.elapsed().as_secs_f64();
+        a.cache.stats.reset(); // count decode traffic only
+        out = last.expect("prefill_chunk >= 1");
+    } else {
+        let sparse = !a.policies.is_empty();
+        let policies = &mut a.policies;
+        let rng = &mut a.rng;
+        let step = a.step;
+        let mut select = |l: usize, h: usize, k: &Mat, v: &Mat, q: &[f32]| -> Selection {
+            let mut ctx = PolicyCtx { k, v, q_scaled: q, rng: &mut *rng, step };
+            policies[l * n_heads + h].select(&mut ctx)
+        };
+        let sel_opt: Option<&mut dyn FnMut(usize, usize, &Mat, &Mat, &[f32]) -> Selection> =
+            if sparse { Some(&mut select) } else { None };
+        let stepped = backend
+            .step(a.next_token, a.pos, &mut a.cache, sel_opt)
+            .map_err(EngineError::Backend)?;
+        a.decode_s += t0.elapsed().as_secs_f64();
+        a.pos += 1;
+        a.step += 1;
+        a.density_sum += stepped.mean_density;
+        a.density_n += 1;
+        out = stepped;
+    }
+    // Sample the next token once the prompt is fully ingested. The
+    // sampler consumes this request's private RNG, so the draw sequence
+    // is identical no matter how rounds are scheduled across workers.
+    let tok = a.sampler.sample(&out.logits, &mut a.rng);
+    if a.tokens.len() < a.gen_len && (a.step > 0 || a.pos == a.prompt.len()) {
+        // The token just generated becomes the next input.
+        a.tokens.push(tok);
+        a.next_token = tok;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Model;
+    use crate::policies::SizeSpec;
+
+    fn tiny_session(cfg: EngineConfig) -> Session<Model> {
+        Session::new(Model::new(ModelConfig::tiny(), 42), cfg)
+    }
+
+    fn prompt(len: usize, salt: u32) -> Vec<u32> {
+        (0..len as u32).map(|t| (t * 13 + salt) % 250).collect()
+    }
+
+    /// Drive to idle, collecting all events.
+    fn drain(session: &mut Session<Model>) -> Vec<Event> {
+        let mut evs = Vec::new();
+        while !session.is_idle() {
+            evs.extend(session.tick().expect("tick"));
+        }
+        evs
+    }
+
+    #[test]
+    fn submit_tick_emits_admitted_tokens_finished() {
+        let mut s = tiny_session(EngineConfig::default());
+        let id = s.submit(SubmitRequest::new(prompt(12, 1)).options(GenOptions::new(5)));
+        let evs = drain(&mut s);
+        let mut tokens = Vec::new();
+        let mut admitted = false;
+        let mut finished = None;
+        let mut last_t = 0.0;
+        for ev in evs {
+            match ev {
+                Event::Admitted { id: i, t_s } => {
+                    assert_eq!(i, id);
+                    admitted = true;
+                    last_t = t_s;
+                }
+                Event::Token { id: i, token, step, t_s } => {
+                    assert_eq!(i, id);
+                    assert_eq!(step, tokens.len());
+                    assert!(t_s >= last_t);
+                    last_t = t_s;
+                    tokens.push(token);
+                }
+                Event::Finished { id: i, result, .. } => {
+                    assert_eq!(i, id);
+                    finished = Some(result);
+                }
+                Event::Rejected { reason, .. } => panic!("unexpected rejection: {reason}"),
+            }
+        }
+        assert!(admitted);
+        let result = finished.expect("finished event");
+        assert_eq!(result.tokens.len(), 5);
+        assert_eq!(result.tokens, tokens, "Token events must replay the result stream");
+        assert_eq!(s.kv_blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn per_request_sampler_and_seed_are_isolated() {
+        // Two identical prompts with different samplers in one batch:
+        // the greedy one must match a solo greedy run exactly.
+        let solo = {
+            let mut s = tiny_session(EngineConfig::default());
+            s.submit(SubmitRequest::new(prompt(10, 3)).options(GenOptions::new(6)));
+            drain(&mut s)
+                .into_iter()
+                .find_map(|e| match e {
+                    Event::Finished { result, .. } => Some(result.tokens),
+                    _ => None,
+                })
+                .unwrap()
+        };
+        let mut s = tiny_session(EngineConfig::default());
+        let greedy = s.submit(SubmitRequest::new(prompt(10, 3)).options(GenOptions::new(6)));
+        let hot = s.submit(
+            SubmitRequest::new(prompt(10, 3))
+                .options(GenOptions::new(6).sampler(Sampler::Temperature(2.0)).seed(999)),
+        );
+        let mut results = std::collections::BTreeMap::new();
+        for ev in drain(&mut s) {
+            if let Event::Finished { id, result, .. } = ev {
+                results.insert(id, result.tokens);
+            }
+        }
+        assert_eq!(results[&greedy], solo, "sampler override must not perturb neighbors");
+        assert_eq!(results[&hot].len(), 6);
+    }
+
+    #[test]
+    fn oversized_request_is_rejected_as_event() {
+        let mcfg = ModelConfig::tiny();
+        let cfg = EngineConfig::builder()
+            .block_tokens(16)
+            .kv_capacity_bytes(16 * mcfg.kv_bytes_per_token())
+            .build();
+        let mut s = tiny_session(cfg);
+        let ok = s.submit(SubmitRequest::new(prompt(6, 0)).options(GenOptions::new(3)));
+        let doomed = s.submit(SubmitRequest::new(prompt(40, 0)).options(GenOptions::new(8)));
+        let evs = drain(&mut s);
+        let rejected: Vec<_> = evs
+            .iter()
+            .filter_map(|e| match e {
+                Event::Rejected { id, reason, .. } => Some((*id, format!("{reason}"))),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(rejected.len(), 1);
+        assert_eq!(rejected[0].0, doomed);
+        assert!(rejected[0].1.contains("KV blocks"), "{}", rejected[0].1);
+        assert!(
+            evs.iter().any(
+                |e| matches!(e, Event::Finished { id, result, .. } if *id == ok && result.tokens.len() == 3)
+            ),
+            "the serveable request must still complete"
+        );
+        assert_eq!(s.kv_blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn max_seq_len_rejects_with_prompt_too_long() {
+        let cfg = EngineConfig::builder().max_seq_len(16).build();
+        let mut s = tiny_session(cfg);
+        let id = s.submit(SubmitRequest::new(prompt(20, 0)).options(GenOptions::new(4)));
+        let evs = s.tick().unwrap();
+        assert!(matches!(
+            &evs[..],
+            [Event::Rejected { id: i, reason: EngineError::PromptTooLong { len: 24, max: 16 }, .. }]
+                if *i == id
+        ));
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn cancel_waiting_and_active_and_unknown() {
+        let cfg = EngineConfig::builder().max_batch(1).build();
+        let mut s = tiny_session(cfg);
+        let a = s.submit(SubmitRequest::new(prompt(8, 1)).options(GenOptions::new(40)));
+        let b = s.submit(SubmitRequest::new(prompt(8, 2)).options(GenOptions::new(4)));
+        s.tick().unwrap(); // admits only `a` (max_batch 1); `b` waits
+        assert_eq!(s.active_len(), 1);
+        assert_eq!(s.waiting_len(), 1);
+        let held = s.kv_blocks_in_use();
+        assert!(held > 0);
+        s.cancel(b).expect("cancel waiting");
+        s.cancel(a).expect("cancel active");
+        assert_eq!(s.kv_blocks_in_use(), 0, "cancel must return the active lease");
+        assert!(matches!(s.cancel(a), Err(EngineError::UnknownRequest(_))));
+        assert!(matches!(s.cancel(77), Err(EngineError::UnknownRequest(77))));
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn verified_override_runs_sparser_than_dense_neighbor() {
+        let mut s = tiny_session(EngineConfig::default());
+        let vcfg = VAttentionConfig {
+            sink: SizeSpec::Abs(4),
+            window: SizeSpec::Abs(8),
+            heavy: SizeSpec::Frac(0.05),
+            verify: crate::budget::Verify::Denominator,
+            ..Default::default()
+        }
+        .with_guarantee(0.2, 0.2);
+        let dense = s.submit(SubmitRequest::new(prompt(192, 5)).options(GenOptions::new(8)));
+        let sparse =
+            s.submit(SubmitRequest::new(prompt(192, 5)).options(GenOptions::new(8).verified_with(vcfg)));
+        let mut results = std::collections::BTreeMap::new();
+        for ev in drain(&mut s) {
+            if let Event::Finished { id, result, .. } = ev {
+                results.insert(id, result);
+            }
+        }
+        assert!((results[&dense].mean_density - 1.0).abs() < 1e-9);
+        assert!(results[&sparse].mean_density < 1.0);
+        assert!(results[&sparse].kv_bytes_read < results[&dense].kv_bytes_read);
+    }
+
+    #[test]
+    fn session_default_attention_applies_to_inherit() {
+        let mut s = tiny_session(EngineConfig::default());
+        let vcfg = VAttentionConfig {
+            sink: SizeSpec::Abs(4),
+            window: SizeSpec::Abs(8),
+            heavy: SizeSpec::Frac(0.05),
+            verify: crate::budget::Verify::Denominator,
+            ..Default::default()
+        }
+        .with_guarantee(0.2, 0.2);
+        s.set_default_attention(AttentionOpt::Verified(vcfg));
+        let inherit = s.submit(SubmitRequest::new(prompt(192, 6)).options(GenOptions::new(6)));
+        let dense =
+            s.submit(SubmitRequest::new(prompt(192, 6)).options(GenOptions::new(6).dense()));
+        let mut results = std::collections::BTreeMap::new();
+        for ev in drain(&mut s) {
+            if let Event::Finished { id, result, .. } = ev {
+                results.insert(id, result);
+            }
+        }
+        assert!(results[&inherit].mean_density < 1.0, "inherit must pick up the default");
+        assert!((results[&dense].mean_density - 1.0).abs() < 1e-9);
+    }
+}

@@ -64,6 +64,35 @@ impl Args {
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+
+    /// Validate every provided `--key` (option or bare flag) against a
+    /// closed set. Typos like `--worker 8` for `--workers 8` used to
+    /// no-op silently; commands with a fixed vocabulary call this and
+    /// fail loudly instead, listing what they do understand.
+    pub fn check_known(&self, known: &[&str]) -> Result<(), String> {
+        let mut unknown: Vec<&str> = self
+            .options
+            .keys()
+            .map(String::as_str)
+            .chain(self.flags.iter().map(String::as_str))
+            .filter(|k| !known.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            return Ok(());
+        }
+        unknown.sort_unstable();
+        let mut known: Vec<&str> = known.to_vec();
+        known.sort_unstable();
+        let fmt = |keys: &[&str]| {
+            keys.iter().map(|k| format!("--{k}")).collect::<Vec<_>>().join(", ")
+        };
+        Err(format!(
+            "unknown option{} {}; known options: {}",
+            if unknown.len() > 1 { "s" } else { "" },
+            fmt(&unknown),
+            if known.is_empty() { "(none)".to_string() } else { fmt(&known) }
+        ))
+    }
 }
 
 #[cfg(test)]
@@ -102,5 +131,34 @@ mod tests {
     fn negative_number_value() {
         let a = parse("--shift -3"); // "-3" does not start with --, so value
         assert_eq!(a.get("shift"), Some("-3"));
+    }
+
+    #[test]
+    fn check_known_accepts_exact_vocabulary() {
+        let a = parse("serve --workers 8 --open-loop --rate 4");
+        assert!(a.check_known(&["workers", "open-loop", "rate", "mode"]).is_ok());
+    }
+
+    #[test]
+    fn check_known_rejects_typoed_option_with_listing() {
+        let a = parse("serve --worker 8"); // typo for --workers
+        let err = a.check_known(&["workers", "mode"]).unwrap_err();
+        assert!(err.contains("unknown option --worker"), "{err}");
+        assert!(err.contains("--workers"), "listing must name the real key: {err}");
+        assert!(err.contains("--mode"), "{err}");
+    }
+
+    #[test]
+    fn check_known_rejects_typoed_flag_and_pluralizes() {
+        let a = parse("serve --open-lop --quiet");
+        let err = a.check_known(&["open-loop"]).unwrap_err();
+        assert!(err.contains("unknown options"), "{err}");
+        assert!(err.contains("--open-lop") && err.contains("--quiet"), "{err}");
+    }
+
+    #[test]
+    fn check_known_ignores_positionals() {
+        let a = parse("exp fig2 extra");
+        assert!(a.check_known(&[]).is_ok());
     }
 }

@@ -2,11 +2,19 @@
 //! engine: token streams must be byte-identical across worker counts and
 //! prefill chunk sizes (dense and sparse, greedy and stochastic
 //! sampling), KV capacity must gate admission without changing outputs,
-//! and the open-loop trace mode must serve every request.
+//! and the open-loop trace mode must serve every request. The streaming
+//! `Session` is held to the same bar: its interleaved `Token` event
+//! streams must be byte-identical to `Engine::serve` output at any
+//! worker count, and mid-stream cancellation must leak nothing.
+
+use std::collections::BTreeMap;
 
 use vattn::model::{Model, ModelConfig, Sampler};
-use vattn::policies::SizeSpec;
-use vattn::server::{AttentionMode, Engine, EngineConfig, Request};
+use vattn::policies::{SizeSpec, VAttentionConfig};
+use vattn::server::{
+    AttentionMode, Engine, EngineConfig, EngineError, Event, GenOptions, Request, Session,
+    SubmitRequest,
+};
 use vattn::workloads::traces::{generate_trace, to_requests, TraceConfig};
 use vattn::util::Rng;
 
@@ -116,6 +124,121 @@ fn kv_capacity_gates_admission_but_serves_everything() {
         assert_eq!(x.id, y.id);
         assert_eq!(x.tokens, y.tokens, "capacity gating changed request {}", x.id);
     }
+}
+
+/// Drive a `Session` tick-by-tick over the same workload as `streams`
+/// and collect each request's `Token` event stream.
+fn session_streams(workers: usize) -> Vec<(u64, Vec<u32>)> {
+    let cfg = EngineConfig::builder()
+        .max_batch(3)
+        .seed(7)
+        .workers(workers)
+        .prefill_chunk(32)
+        .build();
+    let mut session = Session::new(Model::new(ModelConfig::tiny(), 42), cfg);
+    let mut streams: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+    for r in reqs(9) {
+        let id = session
+            .submit(SubmitRequest::new(r.prompt).options(GenOptions::new(r.gen_len).seed(r.id)));
+        streams.insert(id, Vec::new());
+    }
+    while !session.is_idle() {
+        for ev in session.tick().expect("tick") {
+            match ev {
+                Event::Token { id, token, step, .. } => {
+                    let s = streams.get_mut(&id).expect("token for known request");
+                    assert_eq!(s.len(), step, "step indices must be gapless and in order");
+                    s.push(token);
+                }
+                Event::Finished { id, result, .. } => {
+                    assert_eq!(
+                        result.tokens, streams[&id],
+                        "Token events must replay the final stream exactly"
+                    );
+                }
+                Event::Admitted { .. } => {}
+                Event::Rejected { reason, .. } => panic!("unexpected rejection: {reason}"),
+            }
+        }
+    }
+    streams.into_iter().collect()
+}
+
+#[test]
+fn session_token_events_match_serve_at_any_worker_count() {
+    // The acceptance bar for the streaming redesign: the event-driven
+    // session, ticked by hand, emits per-request token streams that are
+    // byte-identical to the batch `Engine::serve` output — sequentially
+    // and with a worker pool.
+    let batch = streams(1, 32, Sampler::Greedy, &AttentionMode::Dense);
+    for workers in [1usize, 4] {
+        let streamed = session_streams(workers);
+        assert_eq!(batch, streamed, "session(workers={workers}) diverged from Engine::serve");
+    }
+}
+
+#[test]
+fn per_request_guarantees_and_midstream_cancellation() {
+    // One batch, three contracts: a dense request, a verified request
+    // with its own (ε, δ), and a long dense request cancelled
+    // mid-stream. Cancellation must return every leased KV block.
+    let cfg = EngineConfig::builder().max_batch(3).seed(7).workers(2).block_tokens(16).build();
+    let mut session = Session::new(Model::new(ModelConfig::tiny(), 42), cfg);
+    let long_prompt: Vec<u32> = (0..192u32).map(|t| (t * 13) % 250).collect();
+
+    let dense = session
+        .submit(SubmitRequest::new(long_prompt.clone()).options(GenOptions::new(8)));
+    let vcfg = VAttentionConfig {
+        sink: SizeSpec::Abs(4),
+        window: SizeSpec::Abs(8),
+        heavy: SizeSpec::Frac(0.05),
+        verify: vattn::budget::Verify::Denominator,
+        ..Default::default()
+    }
+    .with_guarantee(0.2, 0.2);
+    let verified = session.submit(
+        SubmitRequest::new(long_prompt.clone()).options(GenOptions::new(8).verified_with(vcfg)),
+    );
+    let doomed =
+        session.submit(SubmitRequest::new(long_prompt).options(GenOptions::new(64)));
+
+    let mut doomed_tokens = 0usize;
+    let mut results = BTreeMap::new();
+    let mut cancelled = false;
+    while !session.is_idle() {
+        for ev in session.tick().expect("tick") {
+            match ev {
+                Event::Token { id, .. } if id == doomed => doomed_tokens += 1,
+                Event::Finished { id, result, .. } => {
+                    results.insert(id, result);
+                }
+                _ => {}
+            }
+        }
+        if !cancelled && doomed_tokens >= 2 {
+            let before = session.kv_blocks_in_use();
+            session.cancel(doomed).expect("cancel active request");
+            assert!(
+                session.kv_blocks_in_use() < before,
+                "cancellation must return the request's KV blocks immediately"
+            );
+            assert!(matches!(
+                session.cancel(doomed),
+                Err(EngineError::UnknownRequest(_))
+            ));
+            cancelled = true;
+        }
+    }
+    assert!(cancelled, "the long request must have streamed tokens before finishing");
+    assert_eq!(session.kv_blocks_in_use(), 0, "drained session must hold zero blocks");
+    assert!(!results.contains_key(&doomed), "cancelled request must not finish");
+    // Per-request contracts held within one batch: dense neighbor reads
+    // everything, the verified one genuinely sparsifies.
+    assert!((results[&dense].mean_density - 1.0).abs() < 1e-9);
+    assert!(results[&verified].mean_density < 1.0);
+    assert!(results[&verified].kv_bytes_read < results[&dense].kv_bytes_read);
+    assert_eq!(results[&dense].tokens.len(), 8);
+    assert_eq!(results[&verified].tokens.len(), 8);
 }
 
 #[test]

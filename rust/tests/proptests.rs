@@ -7,7 +7,10 @@ use vattn::budget::{budget_denominator, budget_numerator, BaseStats, Bound};
 use vattn::kvcache::{BlockId, BlockPool, KvCache, PageError};
 use vattn::model::{Model, ModelConfig};
 use vattn::policies::*;
-use vattn::server::{AttentionMode, Engine, EngineConfig, Request};
+use vattn::server::{
+    AttentionMode, Engine, EngineConfig, EngineError, Event, GenOptions, Request, Session,
+    SubmitRequest,
+};
 use vattn::tensor::{rel_l2_error, Mat};
 use vattn::util::proptest::Prop;
 use vattn::util::Rng;
@@ -276,6 +279,72 @@ fn prop_paged_cache_accounting_consistent() {
         assert_eq!(cache.tokens(), 0);
         pool.free(freed).expect("release then free");
         assert_eq!(pool.in_use_blocks(), 0);
+    });
+}
+
+#[test]
+fn prop_session_submit_cancel_interleaving_leaks_no_blocks() {
+    // Random interleavings of submit / cancel / tick against a
+    // capacity-bounded session: leased blocks never exceed the pool cap,
+    // cancelling a live request always succeeds exactly once (the second
+    // attempt is `UnknownRequest`, never a pool double-free), and a
+    // drained session holds zero blocks.
+    Prop::new("session-cancel-no-leak").cases(10).run(|rng| {
+        let mcfg = ModelConfig::tiny();
+        let cap_blocks = rng.range(2, 6);
+        let cfg = EngineConfig::builder()
+            .max_batch(rng.range(1, 4))
+            .seed(rng.next_u64())
+            .block_tokens(16)
+            .kv_capacity_bytes(cap_blocks * 16 * mcfg.kv_bytes_per_token())
+            .build();
+        let mut session = Session::new(Model::new(mcfg, 42), cfg);
+        // Requests stay ≤ 2 blocks (≤ cap) so none is ever rejected.
+        let mut live: Vec<u64> = Vec::new();
+        for _ in 0..60 {
+            match rng.below(4) {
+                0 => {
+                    let plen = rng.range(1, 20);
+                    let glen = rng.range(1, 6);
+                    let prompt: Vec<u32> = (0..plen as u32).map(|t| t % 250).collect();
+                    let id = session
+                        .submit(SubmitRequest::new(prompt).options(GenOptions::new(glen)));
+                    live.push(id);
+                }
+                1 if !live.is_empty() => {
+                    let id = live.swap_remove(rng.below(live.len()));
+                    session.cancel(id).expect("cancelling a live request must succeed");
+                    assert!(
+                        matches!(session.cancel(id), Err(EngineError::UnknownRequest(_))),
+                        "second cancel must be UnknownRequest, not a double free"
+                    );
+                }
+                _ => {
+                    for ev in session.tick().expect("tick must not hit pool errors") {
+                        if let Event::Finished { id, result, .. } = ev {
+                            assert!(live.contains(&id), "finished request must be live");
+                            assert!(!result.tokens.is_empty());
+                            live.retain(|&x| x != id);
+                        }
+                    }
+                }
+            }
+            assert!(
+                session.kv_blocks_in_use() <= cap_blocks,
+                "leases exceeded pool capacity"
+            );
+            assert_eq!(
+                session.outstanding(),
+                live.len(),
+                "session and model of live requests diverged"
+            );
+        }
+        // Cancel whatever is still in flight, then verify quiescence.
+        for id in live.drain(..) {
+            session.cancel(id).expect("cancelling a live request must succeed");
+        }
+        assert!(session.is_idle());
+        assert_eq!(session.kv_blocks_in_use(), 0, "drained session leaked blocks");
     });
 }
 
