@@ -5,19 +5,31 @@
 //! with the TTFT/TPOT summary. The L3 coordinator numbers for
 //! EXPERIMENTS.md §Perf.
 //!
+//! Also runs the shared-prefix demand-paging scenario: 16 requests with
+//! a common 512-token system prompt served from a pool sized well below
+//! the sum of worst-case leases — asserting completion, byte-identical
+//! streams at 1 and 4 workers, a peak-block footprint under the
+//! unshared baseline, and quiescence after drain + prefix flush.
+//!
 //! Besides the human-readable report, writes `BENCH_engine.json`
-//! (tokens/s plus TTFT/TPOT percentiles per worker count, and the
-//! open-loop summary) so the perf trajectory is machine-trackable PR
-//! over PR; CI checks the file is produced and well-formed.
+//! (tokens/s plus TTFT/TPOT percentiles per worker count, the
+//! `demand_paging` block with prefix-hit-rate / preemptions /
+//! peak-block-utilization, and the open-loop summary) so the perf
+//! trajectory is machine-trackable PR over PR; CI checks the file is
+//! produced and well-formed.
 //!
 //! Run: cargo bench --bench bench_engine
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
-use vattn::metrics::{summarize, LatencySummary, ServeSummary};
+use vattn::metrics::{summarize, LatencySummary, PagingSummary, ServeSummary};
 use vattn::model::{Model, ModelConfig, Sampler};
 use vattn::policies::{SizeSpec, VAttentionPolicy};
-use vattn::server::{AttentionMode, Engine, EngineConfig, Request, RequestResult};
+use vattn::server::{
+    AttentionMode, Engine, EngineConfig, Event, GenOptions, Request, RequestResult, Session,
+    SubmitRequest,
+};
 use vattn::util::json::Json;
 use vattn::workloads::traces::{generate_trace, to_requests, TraceConfig};
 use vattn::util::Rng;
@@ -152,6 +164,85 @@ fn main() {
         );
     }
 
+    println!("\n== shared-prefix demand paging: 16 requests, 512-token system prompt ==");
+    // 16 requests share a 512-token system prompt (32 full blocks at 16
+    // tokens/block) with distinct 32-token user suffixes and a 24-token
+    // generation budget. Worst case is 36 blocks each — 576 in total —
+    // but the pool holds only 128: demand paging + prefix sharing must
+    // serve everyone anyway, byte-identically at 1 and 4 workers, and
+    // end quiescent.
+    let system_prompt: Vec<u32> = (0..512u32).map(|t| (t * 37 + 11) % 1024).collect();
+    let prefix_prompts: Vec<Vec<u32>> = (0..16u32)
+        .map(|i| {
+            let mut p = system_prompt.clone();
+            p.extend((0..32u32).map(|t| (t * 13 + i * 29 + 1) % 1024));
+            p
+        })
+        .collect();
+    let worst_case_blocks = 16 * (512 + 32 + 24usize).div_ceil(16);
+    let cap_blocks = 128usize;
+    assert!(cap_blocks < worst_case_blocks, "the scenario must undercut worst-case leasing");
+    let run_paged = |workers: usize, cap: Option<usize>, prefix: bool| {
+        let mut b = EngineConfig::builder()
+            .max_batch(16)
+            .seed(1)
+            .workers(workers)
+            .block_tokens(16)
+            .prefix_cache(prefix);
+        if let Some(cap) = cap {
+            b = b.kv_capacity_bytes(cap * 16 * bench_model().kv_bytes_per_token());
+        }
+        let mut session = Session::new(Model::new(bench_model(), 42), b.build());
+        let mut streams: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+        for p in &prefix_prompts {
+            let id = session.submit(SubmitRequest::new(p.clone()).options(GenOptions::new(24)));
+            streams.insert(id, Vec::new());
+        }
+        let t0 = Instant::now();
+        while !session.is_idle() {
+            for ev in session.tick().expect("tick") {
+                match ev {
+                    Event::Token { id, token, step, .. } => {
+                        let st = streams.get_mut(&id).expect("known id");
+                        assert_eq!(st.len(), step, "gapless streams across preemption");
+                        st.push(token);
+                    }
+                    Event::Rejected { reason, .. } => panic!("unexpected rejection: {reason}"),
+                    _ => {}
+                }
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = session.stats();
+        session.flush_prefix_cache().expect("flush");
+        assert_eq!(session.kv_blocks_in_use(), 0, "quiescence: zero blocks after drain+flush");
+        assert!(streams.values().all(|s| s.len() == 24), "all 16 must complete");
+        (streams, stats, wall)
+    };
+    let (unshared_streams, unshared_stats, unshared_wall) = run_paged(8, None, false);
+    let (shared1, shared_stats, shared_wall) = run_paged(1, Some(cap_blocks), true);
+    let (shared4, shared_stats4, _) = run_paged(4, Some(cap_blocks), true);
+    assert_eq!(shared1, shared4, "token streams diverged between 1 and 4 workers");
+    assert_eq!(shared1, unshared_streams, "prefix forking changed a token stream");
+    assert!(
+        shared_stats.peak_blocks_in_use < unshared_stats.peak_blocks_in_use,
+        "shared-prefix peak {} must undercut the unshared baseline {}",
+        shared_stats.peak_blocks_in_use,
+        unshared_stats.peak_blocks_in_use
+    );
+    let paging = PagingSummary::from(&shared_stats);
+    println!(
+        "pool {cap_blocks} blocks (worst-case sum {worst_case_blocks}): all 16 served; \
+         peak {} vs unshared {}; wall {shared_wall:.2}s vs unshared {unshared_wall:.2}s (8 workers)",
+        shared_stats.peak_blocks_in_use, unshared_stats.peak_blocks_in_use
+    );
+    println!("{}", paging.render());
+    assert_eq!(
+        shared_stats.preemptions, shared_stats4.preemptions,
+        "paging decisions must be tick-deterministic, independent of workers"
+    );
+    assert_eq!(shared_stats.prefix_hit_blocks, shared_stats4.prefix_hit_blocks);
+
     println!("\n== open-loop Poisson trace (rate 8 req/s, 24 requests, 8 workers) ==");
     let trace_cfg = TraceConfig {
         rate: 8.0,
@@ -177,6 +268,23 @@ fn main() {
         .field("d_model", Json::num(bench_model().d_model as f64))
         .field("scaling", Json::arr(scaling_rows))
         .field("modes", Json::arr(mode_rows))
+        .field(
+            "demand_paging",
+            Json::obj()
+                .field("requests", Json::num(16.0))
+                .field("shared_prompt_tokens", Json::num(512.0))
+                .field("capacity_blocks", Json::num(cap_blocks as f64))
+                .field("worst_case_blocks", Json::num(worst_case_blocks as f64))
+                .field("prefix_hit_rate", Json::num(paging.prefix_hit_rate))
+                .field("preemptions", Json::num(paging.preemptions as f64))
+                .field("peak_blocks_in_use", Json::num(paging.peak_blocks_in_use as f64))
+                .field(
+                    "unshared_peak_blocks_in_use",
+                    Json::num(unshared_stats.peak_blocks_in_use as f64),
+                )
+                .field("cow_copies", Json::num(paging.cow_copies as f64))
+                .field("wall_s", Json::num(shared_wall)),
+        )
         .field(
             "open_loop",
             Json::obj()

@@ -12,7 +12,10 @@
 //!
 //! Token events are printed as the scheduler emits them, and an
 //! `EventLog` turns the event timestamps into TTFT/TPOT numbers at the
-//! end.
+//! end. The loop also handles `Event::Preempted` — with a bounded pool
+//! (`EngineConfig::kv_capacity_bytes`) demand paging may park a request
+//! mid-stream and deterministically resume it later; consumers just keep
+//! reading, the token stream stays gapless.
 //!
 //! Run: cargo run --release --example streaming_session
 
@@ -72,6 +75,15 @@ fn main() -> anyhow::Result<()> {
                         result.tokens.len(),
                         result.mean_density,
                         result.kv_bytes_read
+                    );
+                }
+                Event::Preempted { id, t_s } => {
+                    // Pool exhaustion sent the request back to the front
+                    // of the queue; it will re-run deterministically and
+                    // resume its token stream where it left off.
+                    println!(
+                        "[{t_s:8.4}s] {:<20} preempted (KV pool full) — will resume",
+                        name(*id)
                     );
                 }
                 Event::Rejected { id, reason, t_s } => {

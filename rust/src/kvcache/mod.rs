@@ -7,18 +7,25 @@
 //! auxiliary caches vAttention needs (the incremental random base-sample
 //! cache; approximate-top-k bit caches live inside their scorers).
 //!
-//! Serving-engine caches are *paged*: the engine leases fixed-size token
-//! blocks from a [`BlockPool`] at admission and hands them to the
-//! request's `KvCache` as a block table (see `paged.rs`). Within a
+//! Serving-engine caches are *paged* and **demand-paged**: the engine
+//! leases a request's prompt blocks from a [`BlockPool`] at admission
+//! and then grows the block table one block at a time as generation
+//! crosses block boundaries (`KvCache::grow`), instead of reserving the
+//! worst case up front. Blocks are reference counted: requests with
+//! identical prompt prefixes share physical blocks through the
+//! [`PrefixCache`] radix (fork = refcount bump; a divergent write
+//! promotes the block to private via [`BlockPool::cow`]). Within a
 //! request, rows stay contiguous per (layer, head) slot — index
 //! selection scans K linearly, so contiguity is the hot-path layout —
 //! while the block table carries placement, capacity accounting and
 //! admission gating, mirroring vLLM's logical/physical split.
 
 pub mod paged;
+pub mod prefix;
 pub mod tiered;
 
-pub use paged::{BlockId, BlockPool, PageError};
+pub use paged::{BlockId, BlockPool, CowOutcome, PageError};
+pub use prefix::{ChainKey, PrefixCache};
 pub use tiered::{TierStats, TransferModel};
 
 use crate::model::ModelConfig;
@@ -125,16 +132,39 @@ impl KvCache {
     /// transfer of the serving path. Also charges the byte traffic to
     /// `stats` (2 matrices × b rows × d floats).
     pub fn gather(&mut self, layer: usize, head: usize, idx: &[usize]) -> (Mat, Mat) {
+        let mut gk = Mat::zeros(0, 0);
+        let mut gv = Mat::zeros(0, 0);
+        self.gather_into(layer, head, idx, &mut gk, &mut gv);
+        (gk, gv)
+    }
+
+    /// [`KvCache::gather`] into caller-owned scratch buffers: `gk` / `gv`
+    /// are reshaped in place (allocation reused), so a decode loop that
+    /// hoists two `Mat`s pays zero allocations per (layer, head, step).
+    /// Charges the same read traffic as `gather`.
+    pub fn gather_into(
+        &mut self,
+        layer: usize,
+        head: usize,
+        idx: &[usize],
+        gk: &mut Mat,
+        gv: &mut Mat,
+    ) {
         let s = self.slot(layer, head);
         let d = self.d_head;
-        let mut gk = Mat::zeros(idx.len(), d);
-        let mut gv = Mat::zeros(idx.len(), d);
-        for (j, &i) in idx.iter().enumerate() {
-            gk.row_mut(j).copy_from_slice(self.k[s].row(i));
-            gv.row_mut(j).copy_from_slice(self.v[s].row(i));
+        // clear + extend (not a zeroing resize): every row is about to
+        // be overwritten, so the only work left is the memcpy itself.
+        gk.rows = idx.len();
+        gk.cols = d;
+        gk.data.clear();
+        gv.rows = idx.len();
+        gv.cols = d;
+        gv.data.clear();
+        for &i in idx {
+            gk.data.extend_from_slice(self.k[s].row(i));
+            gv.data.extend_from_slice(self.v[s].row(i));
         }
         self.stats.record_read(2 * idx.len() * d * 4);
-        (gk, gv)
     }
 
     /// Total resident bytes.
@@ -167,6 +197,75 @@ impl KvCache {
     /// Blocks leased to this cache.
     pub fn blocks_reserved(&self) -> usize {
         self.block_table.len()
+    }
+
+    /// The leased block table, position-ordered (block `i` backs tokens
+    /// `[i·block_tokens, (i+1)·block_tokens)`).
+    pub fn block_table(&self) -> &[BlockId] {
+        &self.block_table
+    }
+
+    /// Extend the block table with freshly leased blocks — the
+    /// demand-paging growth path: the engine allocates a block only when
+    /// the next append would cross a block boundary, instead of
+    /// reserving the worst case at admission.
+    pub fn grow(&mut self, blocks: impl IntoIterator<Item = BlockId>) {
+        self.block_table.extend(blocks);
+    }
+
+    /// Swap the physical block at table index `idx` for `id` and return
+    /// the previous id — the cache side of a copy-on-write promotion
+    /// (`BlockPool::cow`): the engine moved this request's reference
+    /// from a shared block to a private one; row data is per-request
+    /// contiguous, so only the placement changes.
+    pub fn replace_block(&mut self, idx: usize, id: BlockId) -> BlockId {
+        std::mem::replace(&mut self.block_table[idx], id)
+    }
+
+    /// Snapshot one *filled* block's rows: per (layer, kv-head) slot, the
+    /// flat `block_tokens × d_head` K and V buffers. Used by the prefix
+    /// cache to keep shared prompt blocks alive beyond their donor.
+    pub fn snapshot_block(&self, block: usize) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let lo = block * self.block_tokens;
+        let hi = lo + self.block_tokens;
+        assert!(hi <= self.tokens(), "snapshot of an unfilled block {block}");
+        let d = self.d_head;
+        let mut ks = Vec::with_capacity(self.k.len());
+        let mut vs = Vec::with_capacity(self.v.len());
+        for s in 0..self.k.len() {
+            ks.push(self.k[s].data[lo * d..hi * d].to_vec());
+            vs.push(self.v[s].data[lo * d..hi * d].to_vec());
+        }
+        (ks, vs)
+    }
+
+    /// Bulk-append one shared block's rows (the layout produced by
+    /// [`KvCache::snapshot_block`]) — the fork's copy-in of a cached
+    /// prompt prefix, replacing that block's prefill compute with a
+    /// memcpy. Paged caches enforce their leased capacity as in
+    /// [`KvCache::append`].
+    pub fn load_block(&mut self, k_slots: &[Vec<f32>], v_slots: &[Vec<f32>]) {
+        assert_eq!(k_slots.len(), self.k.len(), "slot count mismatch on prefix load");
+        let d = self.d_head;
+        let tokens = k_slots.first().map_or(0, |b| b.len() / d);
+        if self.paged {
+            let cap = self.block_table.len() * self.block_tokens;
+            assert!(
+                self.tokens() + tokens <= cap,
+                "paged KvCache overflow on prefix load: {} + {tokens} tokens into {} blocks × {}",
+                self.tokens(),
+                self.block_table.len(),
+                self.block_tokens
+            );
+        }
+        for (s, (kb, vb)) in k_slots.iter().zip(v_slots.iter()).enumerate() {
+            debug_assert_eq!(kb.len(), tokens * d);
+            self.k[s].data.extend_from_slice(kb);
+            self.k[s].rows += tokens;
+            self.v[s].data.extend_from_slice(vb);
+            self.v[s].rows += tokens;
+        }
+        self.stats.record_write(2 * k_slots.len() * tokens * d * 4);
     }
 
     /// Blocks actually filled by appended tokens.
@@ -302,6 +401,102 @@ mod tests {
         assert_eq!(cache.tokens(), 0);
         pool.free(freed).unwrap();
         assert_eq!(pool.in_use_blocks(), 0);
+    }
+
+    #[test]
+    fn grow_extends_capacity_and_replace_swaps_placement() {
+        let c = cfg();
+        let mut pool = BlockPool::for_model(&c, 4, None);
+        let lease = pool.try_alloc(1).unwrap();
+        let mut cache = KvCache::paged(&c, 4, lease);
+        let row = vec![1.0f32; c.d_head()];
+        let fill = |cache: &mut KvCache, n: usize| {
+            for _ in 0..n {
+                for l in 0..c.n_layers {
+                    for h in 0..c.n_kv_heads {
+                        cache.append(l, h, &row, &row);
+                    }
+                }
+            }
+        };
+        fill(&mut cache, 4);
+        assert_eq!(cache.blocks_reserved(), 1);
+        // Demand paging: lease the next block only when needed.
+        cache.grow(pool.try_alloc(1).unwrap());
+        fill(&mut cache, 4);
+        assert_eq!(cache.tokens(), 8);
+        assert_eq!(cache.blocks_reserved(), 2);
+        assert_eq!(cache.block_table(), &[0, 1]);
+        // CoW swap: placement changes, data does not.
+        let fresh = pool.try_alloc(1).unwrap()[0];
+        assert_eq!(cache.replace_block(0, fresh), 0);
+        assert_eq!(cache.block_table(), &[fresh, 1]);
+        assert_eq!(cache.tokens(), 8);
+    }
+
+    #[test]
+    fn gather_into_reuses_scratch_and_matches_gather() {
+        let c = cfg();
+        let mut cache = KvCache::new(&c);
+        for i in 0..10 {
+            let row = vec![i as f32; c.d_head()];
+            cache.append(0, 0, &row, &row);
+        }
+        let (gk, gv) = cache.gather(0, 0, &[1, 4, 9]);
+        let mut sk = Mat::zeros(0, 0);
+        let mut sv = Mat::zeros(0, 0);
+        cache.gather_into(0, 0, &[1, 4, 9], &mut sk, &mut sv);
+        assert_eq!(gk.data, sk.data);
+        assert_eq!(gv.data, sv.data);
+        // Reuse with a different shape: no stale rows, same accounting.
+        let reads_before = cache.stats.reads;
+        let ptr = sk.data.as_ptr();
+        cache.gather_into(0, 0, &[7], &mut sk, &mut sv);
+        assert_eq!(sk.rows, 1);
+        assert_eq!(sk.row(0)[0], 7.0);
+        assert_eq!(cache.stats.reads, reads_before + 1);
+        assert_eq!(sk.data.as_ptr(), ptr, "scratch must not reallocate when shrinking");
+    }
+
+    #[test]
+    fn snapshot_and_load_block_round_trip() {
+        let c = cfg();
+        let mut pool = BlockPool::for_model(&c, 4, None);
+        let lease = pool.try_alloc(2).unwrap();
+        let mut src = KvCache::paged(&c, 4, lease);
+        for i in 0..8 {
+            for l in 0..c.n_layers {
+                for h in 0..c.n_kv_heads {
+                    let row = vec![(i * 10 + l + h) as f32; c.d_head()];
+                    src.append(l, h, &row, &row);
+                }
+            }
+        }
+        let (k0, v0) = src.snapshot_block(0);
+        let (k1, v1) = src.snapshot_block(1);
+        let lease2 = pool.try_alloc(2).unwrap();
+        let mut dst = KvCache::paged(&c, 4, lease2);
+        dst.load_block(&k0, &v0);
+        dst.load_block(&k1, &v1);
+        assert_eq!(dst.tokens(), 8);
+        for l in 0..c.n_layers {
+            for h in 0..c.n_kv_heads {
+                let (sk, svm) = src.head(l, h);
+                let (dk, dvm) = dst.head(l, h);
+                assert_eq!(sk.data, dk.data);
+                assert_eq!(svm.data, dvm.data);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "paged KvCache overflow on prefix load")]
+    fn load_block_rejects_overflow() {
+        let c = cfg();
+        let mut cache = KvCache::paged(&c, 4, vec![0]);
+        let slots = c.n_layers * c.n_kv_heads;
+        let block: Vec<Vec<f32>> = (0..slots).map(|_| vec![0.0; 8 * c.d_head()]).collect();
+        cache.load_block(&block, &block);
     }
 
     #[test]

@@ -3,12 +3,23 @@
 //!
 //! Memory is accounted in fixed-size *blocks* of `block_tokens` tokens;
 //! one block spans every (layer, kv-head) slot of a request, so
-//! `block_bytes = kv_bytes_per_token × block_tokens`. The engine leases
-//! a request's worst-case block count at admission (prompt + generation
-//! budget — both known up front), which makes the scheduler's capacity
-//! gate exact and keeps the decode hot path completely allocator-free:
-//! workers never touch the pool, so steps stay data-parallel and
-//! deterministic. Freed blocks return to a LIFO free list and are reused
+//! `block_bytes = kv_bytes_per_token × block_tokens`. Since the
+//! demand-paging redesign the pool is *reference counted*: a block is
+//! leased with one reference ([`BlockPool::try_alloc`]), additional
+//! owners attach with [`BlockPool::retain`] (prefix sharing: forking a
+//! request onto a cached prompt prefix is a refcount bump, not a copy),
+//! and [`BlockPool::free`] drops one reference — the block returns to
+//! the free list only when the last owner lets go. A writer that holds
+//! a *shared* block promotes it to private with [`BlockPool::cow`]
+//! (copy-on-write: the old block keeps its other owners, the writer
+//! gets a fresh block).
+//!
+//! The engine allocates blocks **on demand** — prompt blocks at
+//! admission, then one block at a time as generation crosses block
+//! boundaries — instead of leasing a request's worst case up front.
+//! Allocation happens only in the serial phases of a scheduler tick, so
+//! workers still never touch the pool and steps stay data-parallel and
+//! deterministic. Freed ids return to a LIFO free list and are reused
 //! before new ids are minted.
 
 use crate::model::ModelConfig;
@@ -16,10 +27,10 @@ use crate::model::ModelConfig;
 /// Physical block handle leased from a [`BlockPool`].
 pub type BlockId = u32;
 
-/// Misuse of the allocator — both indicate an engine bookkeeping bug.
+/// Misuse of the allocator — all indicate an engine bookkeeping bug.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum PageError {
-    /// The block was already free.
+    /// The block was already free (refcount underflow).
     DoubleFree(BlockId),
     /// The block id was never minted by this pool.
     UnknownBlock(BlockId),
@@ -36,7 +47,21 @@ impl std::fmt::Display for PageError {
 
 impl std::error::Error for PageError {}
 
-/// Fixed-size block allocator with a free list and a capacity limit.
+/// What a copy-on-write promotion did (see [`BlockPool::cow`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CowOutcome {
+    /// The caller was the sole owner — write in place, same id.
+    InPlace,
+    /// The block was shared: the caller's reference moved to this fresh
+    /// private block (the caller copies the payload if it keeps any).
+    Copied(BlockId),
+    /// The block is shared but the pool has no free block for the copy;
+    /// the caller must reclaim memory (evict / preempt) and retry.
+    OutOfBlocks,
+}
+
+/// Fixed-size reference-counted block allocator with a free list and a
+/// capacity limit.
 #[derive(Debug)]
 pub struct BlockPool {
     block_tokens: usize,
@@ -45,11 +70,14 @@ pub struct BlockPool {
     capacity_blocks: Option<usize>,
     /// Recycled ids, popped LIFO.
     free: Vec<BlockId>,
-    /// Lease state per minted id (`true` = currently leased out).
-    live: Vec<bool>,
+    /// Reference count per minted id (`0` = on the free list).
+    refs: Vec<u32>,
+    /// Blocks with at least one reference (each counted once however
+    /// many owners it has — sharing is what makes this < Σ leases).
     in_use: usize,
     peak_in_use: usize,
     reused: u64,
+    cow_copies: u64,
 }
 
 impl BlockPool {
@@ -59,10 +87,11 @@ impl BlockPool {
             block_bytes: block_bytes.max(1),
             capacity_blocks,
             free: Vec::new(),
-            live: Vec::new(),
+            refs: Vec::new(),
             in_use: 0,
             peak_in_use: 0,
             reused: 0,
+            cow_copies: 0,
         }
     }
 
@@ -84,8 +113,9 @@ impl BlockPool {
         tokens.div_ceil(self.block_tokens).max(1)
     }
 
-    /// Lease `n` blocks, reusing freed ids first. Returns `None` when the
-    /// lease would exceed capacity (the caller's admission gate).
+    /// Lease `n` blocks (refcount 1 each), reusing freed ids first.
+    /// Returns `None` when the lease would exceed capacity (the caller's
+    /// admission / growth gate — reclaim memory and retry, or wait).
     pub fn try_alloc(&mut self, n: usize) -> Option<Vec<BlockId>> {
         if let Some(cap) = self.capacity_blocks {
             if self.in_use + n > cap {
@@ -96,13 +126,13 @@ impl BlockPool {
         for _ in 0..n {
             match self.free.pop() {
                 Some(id) => {
-                    self.live[id as usize] = true;
+                    self.refs[id as usize] = 1;
                     self.reused += 1;
                     ids.push(id);
                 }
                 None => {
-                    let id = self.live.len() as BlockId;
-                    self.live.push(true);
+                    let id = self.refs.len() as BlockId;
+                    self.refs.push(1);
                     ids.push(id);
                 }
             }
@@ -112,21 +142,70 @@ impl BlockPool {
         Some(ids)
     }
 
-    /// Return leased blocks to the free list. Rejects double frees and
-    /// foreign ids instead of corrupting the pool.
+    /// Attach one more owner to a live block (prefix-sharing fork).
+    /// Costs no capacity: the block is already resident.
+    pub fn retain(&mut self, id: BlockId) -> Result<(), PageError> {
+        match self.refs.get_mut(id as usize) {
+            None => Err(PageError::UnknownBlock(id)),
+            Some(0) => Err(PageError::DoubleFree(id)),
+            Some(r) => {
+                *r += 1;
+                Ok(())
+            }
+        }
+    }
+
+    /// Drop one reference per id. A block returns to the free list only
+    /// when its last owner frees it; freeing a free block or a foreign
+    /// id is rejected instead of corrupting the pool.
     pub fn free(&mut self, ids: impl IntoIterator<Item = BlockId>) -> Result<(), PageError> {
         for id in ids {
-            match self.live.get_mut(id as usize) {
+            match self.refs.get_mut(id as usize) {
                 None => return Err(PageError::UnknownBlock(id)),
-                Some(slot) if !*slot => return Err(PageError::DoubleFree(id)),
-                Some(slot) => {
-                    *slot = false;
-                    self.free.push(id);
-                    self.in_use -= 1;
+                Some(0) => return Err(PageError::DoubleFree(id)),
+                Some(r) => {
+                    *r -= 1;
+                    if *r == 0 {
+                        self.free.push(id);
+                        self.in_use -= 1;
+                    }
                 }
             }
         }
         Ok(())
+    }
+
+    /// Copy-on-write promotion: make the caller's reference to `id`
+    /// privately writable. Sole owner → [`CowOutcome::InPlace`]; shared →
+    /// the caller's reference moves to a fresh block
+    /// ([`CowOutcome::Copied`]; the caller copies any payload it keeps),
+    /// or [`CowOutcome::OutOfBlocks`] when the pool cannot host the copy.
+    pub fn cow(&mut self, id: BlockId) -> Result<CowOutcome, PageError> {
+        match self.refs.get(id as usize).copied() {
+            None => Err(PageError::UnknownBlock(id)),
+            Some(0) => Err(PageError::DoubleFree(id)),
+            Some(1) => Ok(CowOutcome::InPlace),
+            Some(_) => {
+                let Some(fresh) = self.try_alloc(1) else {
+                    return Ok(CowOutcome::OutOfBlocks);
+                };
+                // Detach the caller from the shared block; other owners
+                // keep it alive, so this cannot free it.
+                self.refs[id as usize] -= 1;
+                self.cow_copies += 1;
+                Ok(CowOutcome::Copied(fresh[0]))
+            }
+        }
+    }
+
+    /// References currently held on a block (0 for free or unknown ids).
+    pub fn ref_count(&self, id: BlockId) -> u32 {
+        self.refs.get(id as usize).copied().unwrap_or(0)
+    }
+
+    /// True when more than one owner holds the block.
+    pub fn is_shared(&self, id: BlockId) -> bool {
+        self.ref_count(id) > 1
     }
 
     pub fn block_tokens(&self) -> usize {
@@ -141,22 +220,40 @@ impl BlockPool {
         self.capacity_blocks
     }
 
-    /// Blocks currently leased out.
+    /// Blocks currently resident (each counted once, however shared).
     pub fn in_use_blocks(&self) -> usize {
         self.in_use
     }
 
+    /// Blocks still allocatable before the capacity gate refuses
+    /// (`None` = unbounded).
+    pub fn free_blocks(&self) -> Option<usize> {
+        self.capacity_blocks.map(|cap| cap.saturating_sub(self.in_use))
+    }
+
+    /// Watermark check: can `n` blocks be allocated while leaving at
+    /// least `reserve` blocks free afterwards? Always true when the pool
+    /// is unbounded.
+    pub fn can_alloc(&self, n: usize, reserve: usize) -> bool {
+        match self.capacity_blocks {
+            None => true,
+            Some(cap) => self.in_use + n + reserve <= cap,
+        }
+    }
+
     /// True when no lease is outstanding (every minted block is back on
-    /// the free list). The serving session debug-asserts this whenever
-    /// a tick leaves it idle: any submit/cancel/tick interleaving that
-    /// drains the session must end quiescent, or blocks leaked.
+    /// the free list). The serving session debug-asserts the matching
+    /// invariant whenever a tick leaves it idle: any submit/cancel/tick
+    /// interleaving that drains the session must end with only
+    /// prefix-cache-held blocks resident, and none at all once the
+    /// prefix cache is flushed — or blocks leaked.
     pub fn is_quiescent(&self) -> bool {
         self.in_use == 0
     }
 
     /// Ids ever minted (leased + recycled).
     pub fn minted_blocks(&self) -> usize {
-        self.live.len()
+        self.refs.len()
     }
 
     /// Length of the recycled-id free list.
@@ -168,6 +265,11 @@ impl BlockPool {
         self.in_use * self.block_bytes
     }
 
+    /// High-water mark of resident blocks.
+    pub fn peak_in_use_blocks(&self) -> usize {
+        self.peak_in_use
+    }
+
     pub fn peak_bytes_in_use(&self) -> usize {
         self.peak_in_use * self.block_bytes
     }
@@ -175,6 +277,11 @@ impl BlockPool {
     /// How many leases were served from the free list (reuse, not mint).
     pub fn reuse_count(&self) -> u64 {
         self.reused
+    }
+
+    /// Copy-on-write promotions that actually copied (shared → private).
+    pub fn cow_count(&self) -> u64 {
+        self.cow_copies
     }
 }
 
@@ -228,6 +335,7 @@ mod tests {
         p.free(a).unwrap();
         assert_eq!(p.bytes_in_use(), 0);
         assert_eq!(p.peak_bytes_in_use(), 2000);
+        assert_eq!(p.peak_in_use_blocks(), 4);
     }
 
     #[test]
@@ -253,5 +361,67 @@ mod tests {
         assert_eq!(p.blocks_for_tokens(16), 1);
         assert_eq!(p.blocks_for_tokens(17), 2);
         assert_eq!(p.blocks_for_tokens(0), 1, "even empty requests hold one block");
+    }
+
+    #[test]
+    fn retain_keeps_block_alive_until_last_owner_frees() {
+        let mut p = BlockPool::new(16, 1024, None);
+        let a = p.try_alloc(1).unwrap();
+        let id = a[0];
+        p.retain(id).unwrap();
+        p.retain(id).unwrap();
+        assert_eq!(p.ref_count(id), 3);
+        assert!(p.is_shared(id));
+        assert_eq!(p.in_use_blocks(), 1, "sharing costs no capacity");
+        p.free([id]).unwrap();
+        p.free([id]).unwrap();
+        assert_eq!(p.in_use_blocks(), 1, "two owners down, one to go");
+        assert_eq!(p.free_list_len(), 0);
+        p.free([id]).unwrap();
+        assert!(p.is_quiescent(), "last owner frees for real");
+        assert_eq!(p.free(vec![id]), Err(PageError::DoubleFree(id)));
+        assert_eq!(p.retain(id), Err(PageError::DoubleFree(id)));
+        assert_eq!(p.retain(42), Err(PageError::UnknownBlock(42)));
+    }
+
+    #[test]
+    fn cow_in_place_when_sole_owner_copies_when_shared() {
+        let mut p = BlockPool::new(16, 1024, Some(3));
+        let a = p.try_alloc(1).unwrap();
+        let id = a[0];
+        assert_eq!(p.cow(id).unwrap(), CowOutcome::InPlace);
+        p.retain(id).unwrap();
+        let out = p.cow(id).unwrap();
+        let CowOutcome::Copied(fresh) = out else { panic!("expected copy, got {out:?}") };
+        assert_ne!(fresh, id);
+        assert_eq!(p.ref_count(id), 1, "writer detached from the shared block");
+        assert_eq!(p.ref_count(fresh), 1);
+        assert_eq!(p.in_use_blocks(), 2);
+        assert_eq!(p.cow_count(), 1);
+        // Fill the pool, then a shared cow must report exhaustion.
+        let b = p.try_alloc(1).unwrap();
+        p.retain(fresh).unwrap();
+        assert_eq!(p.cow(fresh).unwrap(), CowOutcome::OutOfBlocks);
+        assert_eq!(p.ref_count(fresh), 2, "failed cow must not drop the reference");
+        // Errors for dead / foreign ids.
+        p.free(b.clone()).unwrap();
+        assert_eq!(p.cow(b[0]), Err(PageError::DoubleFree(b[0])));
+        assert_eq!(p.cow(999), Err(PageError::UnknownBlock(999)));
+    }
+
+    #[test]
+    fn watermark_and_free_block_accounting() {
+        let mut p = BlockPool::new(16, 1024, Some(5));
+        assert_eq!(p.free_blocks(), Some(5));
+        assert!(p.can_alloc(3, 2));
+        assert!(!p.can_alloc(4, 2));
+        let a = p.try_alloc(2).unwrap();
+        assert_eq!(p.free_blocks(), Some(3));
+        assert!(p.can_alloc(1, 2));
+        assert!(!p.can_alloc(2, 2));
+        p.free(a).unwrap();
+        let unbounded = BlockPool::new(16, 1024, None);
+        assert_eq!(unbounded.free_blocks(), None);
+        assert!(unbounded.can_alloc(1_000_000, 1_000_000));
     }
 }

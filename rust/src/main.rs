@@ -5,7 +5,8 @@
 //!   list                                                  list experiments
 //!   serve [--model tiny|small] [--mode dense|vattention] [--requests R]
 //!         [--eps E] [--delta D] [--workers W] [--max-batch B]
-//!         [--block-tokens T] [--kv-cap-mb M] [--open-loop] [--rate R]
+//!         [--block-tokens T] [--kv-cap-mb M] [--kv-headroom H]
+//!         [--prefix-cache] [--open-loop] [--rate R]
 //!                                                         drive the streaming session on a trace
 //!   info                                                  build/config info
 //!
@@ -26,6 +27,8 @@ const SERVE_KEYS: &[&str] = &[
     "max-batch",
     "block-tokens",
     "kv-cap-mb",
+    "kv-headroom",
+    "prefix-cache",
     "open-loop",
     "rate",
     "ctx-min",
@@ -77,6 +80,7 @@ fn main() {
             println!("  vattn exp table1 --trials 20       single experiment");
             println!("  vattn serve --mode vattention --eps 0.1 --delta 0.1   streaming session demo");
             println!("  vattn serve --workers 8 --open-loop --rate 4  open-loop Poisson load");
+            println!("  vattn serve --prefix-cache --kv-cap-mb 64     shared-prefix demand paging");
         }
     }
 }
@@ -133,7 +137,9 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         .max_batch(args.get_usize("max-batch", 4))
         .seed(seed)
         .workers(workers)
-        .block_tokens(args.get_usize("block-tokens", 16));
+        .block_tokens(args.get_usize("block-tokens", 16))
+        .kv_headroom_blocks(args.get_usize("kv-headroom", 0))
+        .prefix_cache(args.has_flag("prefix-cache"));
     let kv_cap_mb = args.get_usize("kv-cap-mb", 0);
     if kv_cap_mb > 0 {
         builder = builder.kv_capacity_bytes(kv_cap_mb << 20);
@@ -173,6 +179,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         engine.cfg.max_batch
     );
     println!("{}", log.summary(wall).render());
+    println!("{}", vattn::metrics::PagingSummary::from(&session.stats()).render());
     let mut results: Vec<_> = log.results().to_vec();
     results.sort_by_key(|r| r.id);
     for r in &results {

@@ -7,7 +7,8 @@
 pub mod serving;
 
 pub use serving::{
-    ascii_histogram, summarize, EventLog, LatencySummary, RequestTimeline, ServeSummary,
+    ascii_histogram, summarize, EventLog, LatencySummary, PagingSummary, RequestTimeline,
+    ServeSummary,
 };
 
 /// Mean of a slice.

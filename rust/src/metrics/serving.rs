@@ -7,7 +7,7 @@
 use std::collections::BTreeMap;
 
 use crate::metrics::{f, histogram, mean, percentile, Table};
-use crate::server::{Event, RequestId, RequestResult};
+use crate::server::{Event, RequestId, RequestResult, SessionStats};
 
 /// Percentile summary of one latency distribution (seconds).
 #[derive(Clone, Debug)]
@@ -152,6 +152,58 @@ pub fn ascii_histogram(title: &str, xs: &[f64], bins: usize, width: usize) -> St
     out
 }
 
+/// Memory-manager report for one serving run: how well demand paging
+/// and prefix sharing did. Built from [`SessionStats`]; rendered by
+/// `vattn serve` and written into `BENCH_engine.json` by `bench_engine`.
+#[derive(Clone, Debug, Default)]
+pub struct PagingSummary {
+    /// Fraction of prompt blocks served from the prefix cache.
+    pub prefix_hit_rate: f64,
+    pub prefix_hit_blocks: u64,
+    pub prefix_lookup_blocks: u64,
+    /// Active requests forced back to the queue by pool exhaustion.
+    pub preemptions: u64,
+    /// High-water mark of resident KV blocks (shared blocks count once).
+    pub peak_blocks_in_use: usize,
+    /// Pool capacity in blocks (`None` = unbounded).
+    pub capacity_blocks: Option<usize>,
+    /// Copy-on-write promotions that actually copied a block.
+    pub cow_copies: u64,
+}
+
+impl From<&SessionStats> for PagingSummary {
+    fn from(s: &SessionStats) -> PagingSummary {
+        PagingSummary {
+            prefix_hit_rate: s.prefix_hit_rate(),
+            prefix_hit_blocks: s.prefix_hit_blocks,
+            prefix_lookup_blocks: s.prefix_lookup_blocks,
+            preemptions: s.preemptions,
+            peak_blocks_in_use: s.peak_blocks_in_use,
+            capacity_blocks: s.capacity_blocks,
+            cow_copies: s.cow_copies,
+        }
+    }
+}
+
+impl PagingSummary {
+    /// One-line table: KV paging counters for the run.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "kv paging",
+            &["prefix hit", "hit/lookup blocks", "preemptions", "peak blocks", "capacity", "cow"],
+        );
+        t.row(vec![
+            format!("{:.1}%", self.prefix_hit_rate * 100.0),
+            format!("{}/{}", self.prefix_hit_blocks, self.prefix_lookup_blocks),
+            self.preemptions.to_string(),
+            self.peak_blocks_in_use.to_string(),
+            self.capacity_blocks.map_or("unbounded".to_string(), |c| c.to_string()),
+            self.cow_copies.to_string(),
+        ]);
+        t.render()
+    }
+}
+
 /// Timing of one request as observed through session events (all times
 /// are the session clock, seconds since session creation).
 #[derive(Clone, Debug, Default)]
@@ -162,6 +214,8 @@ pub struct RequestTimeline {
     /// `Token` events observed so far.
     pub tokens: usize,
     pub finished_s: Option<f64>,
+    /// Times this request was preempted (re-admissions follow).
+    pub preemptions: usize,
     pub rejected: bool,
 }
 
@@ -198,7 +252,13 @@ impl EventLog {
     pub fn record(&mut self, ev: &Event) {
         match ev {
             Event::Admitted { id, t_s } => {
-                self.entry(*id).admitted_s = Some(*t_s);
+                // Re-admissions after preemption must not move the
+                // admission stamp, or TTFT (first token − admission)
+                // could go negative for replayed requests.
+                let t = self.entry(*id);
+                if t.admitted_s.is_none() {
+                    t.admitted_s = Some(*t_s);
+                }
             }
             Event::Token { id, t_s, .. } => {
                 let t = self.entry(*id);
@@ -212,10 +272,18 @@ impl EventLog {
                 self.entry(*id).finished_s = Some(*t_s);
                 self.results.push(result.clone());
             }
+            Event::Preempted { id, .. } => {
+                self.entry(*id).preemptions += 1;
+            }
             Event::Rejected { id, .. } => {
                 self.entry(*id).rejected = true;
             }
         }
+    }
+
+    /// Total preemptions observed across all requests.
+    pub fn preemptions(&self) -> usize {
+        self.timelines.values().map(|t| t.preemptions).sum()
     }
 
     fn entry(&mut self, id: RequestId) -> &mut RequestTimeline {
@@ -341,6 +409,47 @@ mod tests {
         assert_eq!(log.results().len(), 1);
         assert!((log.ttft().p50 - 0.25).abs() < 1e-9);
         assert_eq!(log.summary(1.0).requests, 1);
+    }
+
+    #[test]
+    fn event_log_counts_preemptions_per_request() {
+        let mut log = EventLog::new();
+        log.record(&Event::Admitted { id: 0, t_s: 0.1 });
+        log.record(&Event::Token { id: 0, token: 9, step: 0, t_s: 0.15 });
+        log.record(&Event::Preempted { id: 0, t_s: 0.2 });
+        log.record(&Event::Admitted { id: 0, t_s: 0.3 });
+        log.record(&Event::Preempted { id: 0, t_s: 0.4 });
+        log.record(&Event::Preempted { id: 1, t_s: 0.4 });
+        let t = log.timeline(0).unwrap();
+        assert_eq!(t.preemptions, 2);
+        assert_eq!(t.admitted_s, Some(0.1), "re-admission must not move the stamp");
+        assert!(t.ttft_s().unwrap() > 0.0, "TTFT stays positive across replay");
+        assert_eq!(log.timeline(1).unwrap().preemptions, 1);
+        assert_eq!(log.preemptions(), 3);
+    }
+
+    #[test]
+    fn paging_summary_renders_from_session_stats() {
+        let stats = SessionStats {
+            preemptions: 3,
+            prefix_hit_blocks: 60,
+            prefix_lookup_blocks: 80,
+            prefix_blocks_held: 32,
+            blocks_in_use: 32,
+            peak_blocks_in_use: 96,
+            capacity_blocks: Some(128),
+            cow_copies: 1,
+        };
+        let s = PagingSummary::from(&stats);
+        assert!((s.prefix_hit_rate - 0.75).abs() < 1e-12);
+        let out = s.render();
+        assert!(out.contains("## kv paging"));
+        assert!(out.contains("75.0%"), "{out}");
+        assert!(out.contains("60/80"));
+        assert!(out.contains("128"));
+        let unbounded = PagingSummary::from(&SessionStats::default());
+        assert!(unbounded.render().contains("unbounded"));
+        assert_eq!(unbounded.prefix_hit_rate, 0.0);
     }
 
     #[test]

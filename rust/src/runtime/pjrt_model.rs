@@ -100,6 +100,10 @@ impl PjrtModel {
         let sin_b = self.rt.upload(&sin, &[dh / 2])?;
         let mut x = self.emb_host.row(token as usize % cfg.vocab).to_vec();
         let mut densities: Vec<f64> = Vec::new();
+        // Scratch gather buffers, reshaped in place per head — the
+        // decode hot path allocates zero fresh `Mat`s per (layer, head).
+        let mut gk = Mat::zeros(0, 0);
+        let mut gv = Mat::zeros(0, 0);
 
         for (l, lb) in self.layers.iter().enumerate() {
             // ── qkv artifact ──
@@ -147,7 +151,7 @@ impl PjrtModel {
                     sel.truncate(bucket);
                 }
                 densities.push(sel.density(n));
-                let (gk, gv) = cache.gather(l, head, &sel.idx);
+                cache.gather_into(l, head, &sel.idx, &mut gk, &mut gv);
                 let base = head * bucket;
                 kg[base * dh..(base + sel.len()) * dh].copy_from_slice(&gk.data);
                 vg[base * dh..(base + sel.len()) * dh].copy_from_slice(&gv.data);

@@ -1,25 +1,32 @@
 //! The generation engine: batch serving wrappers over the event-driven
 //! [`Session`] core (see `session.rs` for the scheduler itself).
 //!
-//! Scheduling model (vLLM-style, specialized to this testbed), as three
+//! Scheduling model (vLLM-style, specialized to this testbed), as four
 //! phases per scheduler round (= one `Session::tick`):
 //!
-//! 1. **Admission** — FIFO over the waiting queue, gated by batch
+//! 1. **Block accounting** — every active request is handed, on demand,
+//!    the blocks its next round of appends needs (demand paging); pool
+//!    exhaustion reclaims idle prefix-cache blocks first and then
+//!    deterministically preempts the most-recently-admitted request.
+//!    This runs serially, so workers never touch the allocator.
+//! 2. **Admission** — FIFO over the waiting queue, gated by batch
 //!    capacity (`max_batch`), arrival time (open-loop traces), and the
-//!    paged-KV block pool: a request is admitted only when its
-//!    worst-case block count (prompt + generation budget, both known up
-//!    front) can be leased. Reserving worst-case at admission keeps the
-//!    decode hot path allocator-free and the capacity gate exact.
-//! 2. **Step execution** — every active request advances one step (a
+//!    paged-KV block pool: a request is admitted when its *prompt*
+//!    blocks (minus any shared-prefix hit) fit alongside the configured
+//!    headroom — generation blocks arrive later via phase 1, which is
+//!    what lets batch density exceed worst-case reservations.
+//! 3. **Step execution** — every active request advances one step (a
 //!    prefill chunk, or one decode token). Each request owns its
 //!    `KvCache`, policies, sampler and `Rng`, so steps are
 //!    data-parallel: they fan out across the engine's
 //!    `util::ThreadPool`.
-//! 3. **Merge** — results return in submission order; completed
-//!    requests free their blocks and their slot, and the queue
-//!    backfills. Because per-request state never crosses requests and
-//!    merge order is fixed, token streams are byte-identical at any
-//!    worker count.
+//! 4. **Merge** — results return in submission order; completed
+//!    requests free their blocks and their slot, freshly prefilled
+//!    prompts publish their full blocks to the prefix cache, and the
+//!    queue backfills. Because per-request state never crosses requests
+//!    and merge order is fixed, token streams are byte-identical at any
+//!    worker count — including across preemptions, whose re-runs replay
+//!    deterministically.
 //!
 //! `Engine::serve` and `Engine::serve_open_loop` submit a whole batch
 //! into a fresh session and drive `tick` to completion — there is no
@@ -108,9 +115,19 @@ pub struct EngineConfig {
     pub prefill_chunk: usize,
     /// Paged-KV allocation granularity (tokens per block).
     pub block_tokens: usize,
-    /// Engine-wide KV memory budget; admission stalls when the paged
-    /// pool cannot cover a request's worst case. `None` = unbounded.
+    /// Engine-wide KV memory budget. Admission reserves a request's
+    /// *prompt* blocks only; generation blocks are demand-paged, and
+    /// exhaustion triggers deterministic preemption. `None` = unbounded.
     pub kv_capacity_bytes: Option<usize>,
+    /// Blocks the admission gate keeps free as growth headroom (waived
+    /// when the batch is empty). Larger values trade batch density for
+    /// fewer preemptions.
+    pub kv_headroom_blocks: usize,
+    /// Share identical prompt prefixes across requests through the
+    /// hash-keyed prefix radix (`kvcache::PrefixCache`): matching full
+    /// prompt blocks are forked (refcount bump + row memcpy) instead of
+    /// recomputed and re-stored per request.
+    pub prefix_cache: bool,
     /// Reject requests whose prompt + generation budget exceeds this
     /// (`EngineError::PromptTooLong`). `None` = unlimited.
     pub max_seq_len: Option<usize>,
@@ -126,6 +143,8 @@ impl Default for EngineConfig {
             prefill_chunk: 32,
             block_tokens: 16,
             kv_capacity_bytes: None,
+            kv_headroom_blocks: 0,
+            prefix_cache: false,
             max_seq_len: None,
         }
     }
@@ -177,6 +196,16 @@ impl EngineConfigBuilder {
 
     pub fn kv_capacity_bytes(mut self, v: usize) -> Self {
         self.cfg.kv_capacity_bytes = Some(v);
+        self
+    }
+
+    pub fn kv_headroom_blocks(mut self, v: usize) -> Self {
+        self.cfg.kv_headroom_blocks = v;
+        self
+    }
+
+    pub fn prefix_cache(mut self, v: bool) -> Self {
+        self.cfg.prefix_cache = v;
         self
     }
 
@@ -268,7 +297,9 @@ impl<B: Backend + Send + Sync + 'static> Engine<B> {
                 match ev {
                     Event::Finished { result, .. } => done.push(result),
                     Event::Rejected { reason, .. } => return Err(anyhow::Error::from(reason)),
-                    Event::Admitted { .. } | Event::Token { .. } => {}
+                    // Preempted requests re-run deterministically and
+                    // finish later; nothing to record here.
+                    Event::Admitted { .. } | Event::Token { .. } | Event::Preempted { .. } => {}
                 }
             }
         }
@@ -438,6 +469,8 @@ mod tests {
             .prefill_chunk(8)
             .block_tokens(32)
             .kv_capacity_bytes(1 << 20)
+            .kv_headroom_blocks(4)
+            .prefix_cache(true)
             .max_seq_len(4096)
             .build();
         assert_eq!(cfg.max_batch, 7);
@@ -447,6 +480,8 @@ mod tests {
         assert_eq!(cfg.prefill_chunk, 8);
         assert_eq!(cfg.block_tokens, 32);
         assert_eq!(cfg.kv_capacity_bytes, Some(1 << 20));
+        assert_eq!(cfg.kv_headroom_blocks, 4);
+        assert!(cfg.prefix_cache);
         assert_eq!(cfg.max_seq_len, Some(4096));
     }
 

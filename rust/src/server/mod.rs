@@ -4,12 +4,16 @@
 //!
 //! Responsibilities mirror a vLLM-style router specialized to the
 //! paper's deployment: every request's KV cache is host-resident and
-//! backed by blocks leased from the engine's paged allocator; every
-//! decode step runs index selection per (layer, head) through the
-//! configured policy; attention reads only the selected rows. Step
-//! execution fans out across a worker pool (requests are data-parallel
-//! within a scheduler round) and merges deterministically, so token
-//! streams are byte-identical at any worker count.
+//! backed by *demand-paged* blocks from the engine's reference-counted
+//! allocator — prompt blocks at admission (shared with other requests
+//! through the prefix cache where prompts coincide), generation blocks
+//! one at a time as decoding crosses block boundaries, and
+//! deterministic LIFO preemption when the pool runs dry; every decode
+//! step runs index selection per (layer, head) through the configured
+//! policy; attention reads only the selected rows. Step execution fans
+//! out across a worker pool (requests are data-parallel within a
+//! scheduler round) and merges deterministically, so token streams are
+//! byte-identical at any worker count.
 //!
 //! Two entry points share one scheduler:
 //!
@@ -28,7 +32,8 @@ pub use engine::{
     AttentionMode, Backend, BatchPolicyFactory, Engine, EngineConfig, EngineConfigBuilder,
 };
 pub use session::{
-    AttentionOpt, EngineError, Event, GenOptions, PolicyFactory, RequestId, Session, SubmitRequest,
+    AttentionOpt, EngineError, Event, GenOptions, PolicyFactory, RequestId, Session, SessionStats,
+    SubmitRequest,
 };
 
 /// An inference request.

@@ -1,20 +1,45 @@
 //! Event-driven serving session: the scheduler core behind the engine.
 //!
 //! [`Session`] owns the serving state — FIFO waiting queue, active batch,
-//! paged [`BlockPool`] — and exposes the streaming interface real serving
-//! needs: [`Session::submit`] enqueues a request and returns its
-//! [`RequestId`], [`Session::tick`] runs one scheduler round and returns
-//! the [`Event`]s it produced (admissions, per-token emissions,
-//! completions, rejections — each stamped with the session clock), and
-//! [`Session::cancel`] tears a request down mid-flight, returning every
-//! leased KV block to the pool immediately.
+//! demand-paged [`BlockPool`], optional [`PrefixCache`] — and exposes the
+//! streaming interface real serving needs: [`Session::submit`] enqueues a
+//! request and returns its [`RequestId`], [`Session::tick`] runs one
+//! scheduler round and returns the [`Event`]s it produced (admissions,
+//! per-token emissions, completions, preemptions, rejections — each
+//! stamped with the session clock), and [`Session::cancel`] tears a
+//! request down mid-flight, returning every leased KV block to the pool
+//! immediately.
+//!
+//! **Demand paging.** Admission reserves a request's *prompt* blocks
+//! only (plus a configurable headroom left free in the pool); generation
+//! blocks are allocated one at a time, in the serial phase of the tick,
+//! as decoding crosses block boundaries — so batch density is set by
+//! what requests actually hold, not by worst-case leases. When the pool
+//! runs dry the session first reclaims idle prefix-cache blocks, then
+//! deterministically preempts the most-recently-admitted active request:
+//! its blocks are freed, an [`Event::Preempted`] is emitted, and it is
+//! requeued at the *front* of the waiting queue. Because its RNG stream
+//! is a pure function of (engine seed, seed tag) and its policies are
+//! reset, the re-run replays a byte-identical token stream — already
+//! emitted `Token` events are suppressed, so consumers observe one
+//! gapless stream per request regardless of preemption.
+//!
+//! **Prefix sharing.** With `EngineConfig::prefix_cache` enabled, full
+//! prompt-token blocks are published to a hash-keyed radix when a
+//! request finishes prefill; later requests with the same prompt prefix
+//! *fork* off the cached blocks — a refcount bump in the pool plus a
+//! host memcpy of the cached K/V rows — and prefill only their suffix. A
+//! write into a block that is still shared promotes it to a private copy
+//! first ([`BlockPool::cow`]); with full-block sharing the tail is never
+//! shared, so the promotion is a guarded no-op in steady state.
 //!
 //! One `tick` is exactly one round of the engine's scheduling model —
-//! admission, parallel step execution across the worker pool, then a
-//! deterministic merge in submission order — so the per-request token
-//! streams observed through `Event::Token` are byte-identical at any
-//! worker count, and `Engine::serve` / `Engine::serve_open_loop` are
-//! nothing but drive-the-session loops over this type.
+//! block accounting + admission, parallel step execution across the
+//! worker pool, then a deterministic merge in submission order — so the
+//! per-request token streams observed through `Event::Token` are
+//! byte-identical at any worker count, and `Engine::serve` /
+//! `Engine::serve_open_loop` are nothing but drive-the-session loops
+//! over this type.
 //!
 //! Heterogeneity lives on the request, not the engine: [`GenOptions`]
 //! carries a per-request sampler, generation length, RNG seed, and
@@ -30,7 +55,7 @@ use std::time::Instant;
 use super::engine::{AttentionMode, Backend, EngineConfig};
 use super::RequestResult;
 use crate::attention::Selection;
-use crate::kvcache::{BlockId, BlockPool, KvCache, PageError};
+use crate::kvcache::{BlockId, BlockPool, CowOutcome, KvCache, PageError, PrefixCache};
 use crate::model::{ModelConfig, Sampler, StepOut};
 use crate::policies::{IndexPolicy, PolicyCtx, VAttentionConfig, VAttentionPolicy};
 use crate::tensor::Mat;
@@ -46,7 +71,9 @@ pub type RequestId = u64;
 /// where callers still speak `anyhow`.
 #[derive(Debug)]
 pub enum EngineError {
-    /// The request's worst-case KV reservation can never fit the pool.
+    /// The request's worst-case KV footprint can never fit the pool,
+    /// even with every other block reclaimed (conservative: shared
+    /// prefix blocks are not credited, so admission can never livelock).
     KvCapacityExceeded { needed: usize, available: usize },
     /// prompt + generation budget exceeds `EngineConfig::max_seq_len`.
     PromptTooLong { len: usize, max: usize },
@@ -219,6 +246,12 @@ pub enum Event {
     /// The request completed; carries the same record `Engine::serve`
     /// returns (tokens, wait/TTFT/decode timings, density, KV traffic).
     Finished { id: RequestId, result: RequestResult, t_s: f64 },
+    /// Pool exhaustion forced this active request back to the front of
+    /// the waiting queue; its KV blocks were freed. It will be
+    /// re-admitted and replay deterministically — tokens it already
+    /// streamed are *not* re-emitted, so the `Token` stream stays
+    /// gapless and byte-identical to an uncontended run.
+    Preempted { id: RequestId, t_s: f64 },
     /// The request terminated without a result: it can never be served
     /// under the session's configuration (capacity / length validation),
     /// or the backend failed mid-flight (`EngineError::Backend`). Any
@@ -226,9 +259,45 @@ pub enum Event {
     Rejected { id: RequestId, reason: EngineError, t_s: f64 },
 }
 
-/// A submitted request waiting for admission. Policies are resolved at
-/// submit time (policy construction is deterministic and draws no
-/// randomness), so admission stays allocation-gated only.
+/// Paging and scheduling counters for one session ([`Session::stats`]).
+/// `bench_engine` writes these into `BENCH_engine.json` and the `serve`
+/// CLI prints them after a run.
+#[derive(Clone, Debug, Default)]
+pub struct SessionStats {
+    /// Active requests forced back to the queue by pool exhaustion.
+    pub preemptions: u64,
+    /// Prompt blocks served from the prefix cache (fork, not prefill).
+    pub prefix_hit_blocks: u64,
+    /// Prompt blocks presented to the prefix cache across all lookups.
+    pub prefix_lookup_blocks: u64,
+    /// Blocks currently owned by the prefix cache.
+    pub prefix_blocks_held: usize,
+    /// Blocks currently resident in the pool (requests + prefix cache;
+    /// a shared block counts once).
+    pub blocks_in_use: usize,
+    /// High-water mark of resident blocks.
+    pub peak_blocks_in_use: usize,
+    /// Pool capacity in blocks (`None` = unbounded).
+    pub capacity_blocks: Option<usize>,
+    /// Copy-on-write promotions that actually copied a block.
+    pub cow_copies: u64,
+}
+
+impl SessionStats {
+    /// Block-granular prefix hit rate (0 when the cache never ran).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookup_blocks == 0 {
+            0.0
+        } else {
+            self.prefix_hit_blocks as f64 / self.prefix_lookup_blocks as f64
+        }
+    }
+}
+
+/// A submitted request waiting for admission (or re-admission after a
+/// preemption). Policies are resolved at submit time (policy
+/// construction is deterministic and draws no randomness) and *reset* on
+/// preemption, so a re-run replays the same selections.
 struct Waiting {
     id: RequestId,
     arrival_s: f64,
@@ -237,6 +306,15 @@ struct Waiting {
     sampler: Sampler,
     seed_tag: u64,
     policies: Vec<Box<dyn IndexPolicy>>,
+    /// Tokens already emitted as `Event::Token` before a preemption
+    /// (0 for fresh requests); the re-run suppresses these.
+    reported: usize,
+    /// Queue wait recorded at a *first* admission whose token stream
+    /// already started; carried so a replayed request's `RequestResult`
+    /// keeps the user-visible timing of its original run.
+    wait_s: Option<f64>,
+    /// TTFT of the original run (0.0 until the first token streamed).
+    ttft_s: f64,
 }
 
 /// One active request's serving state. Fully self-contained (cache,
@@ -256,6 +334,14 @@ struct Active {
     next_token: u32,
     pos: usize,
     prefill_left: usize,
+    /// Original arrival (kept across preemptions for wait accounting).
+    arrival_s: f64,
+    /// RNG stream tag (kept across preemptions for deterministic replay).
+    seed_tag: u64,
+    /// Set by `advance` in the round prefill completes; the merge phase
+    /// publishes the prompt's full blocks to the prefix cache and clears
+    /// it.
+    just_prefilled: bool,
     started: Instant,
     wait_s: f64,
     ttft_s: f64,
@@ -295,6 +381,9 @@ pub struct Session<B: Backend> {
     mcfg: ModelConfig,
     pool: Arc<ThreadPool>,
     blocks: BlockPool,
+    /// Shared-prompt radix (`EngineConfig::prefix_cache`).
+    prefix: Option<PrefixCache>,
+    preemptions: u64,
     default_attention: AttentionOpt,
     waiting: VecDeque<Waiting>,
     active: Vec<Active>,
@@ -323,6 +412,7 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
     ) -> Session<B> {
         let mcfg = backend.config().clone();
         let blocks = BlockPool::for_model(&mcfg, cfg.block_tokens, cfg.kv_capacity_bytes);
+        let prefix = cfg.prefix_cache.then(|| PrefixCache::new(cfg.block_tokens.max(1)));
         let seed_rng = Rng::new(cfg.seed);
         Session {
             backend,
@@ -330,6 +420,8 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             mcfg,
             pool,
             blocks,
+            prefix,
+            preemptions: 0,
             default_attention: AttentionOpt::Dense,
             waiting: VecDeque::new(),
             active: Vec::new(),
@@ -370,11 +462,42 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
         self.waiting.is_empty() && self.active.is_empty() && self.pending_events.is_empty()
     }
 
-    /// KV blocks currently leased to waiting-for-nothing — i.e. active —
-    /// requests. Zero once the session drains (the no-leak invariant the
-    /// cancellation tests assert).
+    /// KV blocks currently resident: leased to active requests plus
+    /// retained by the prefix cache (shared blocks count once). Once the
+    /// session drains, only prefix-cache blocks remain, and
+    /// [`Session::flush_prefix_cache`] brings this to zero — the no-leak
+    /// invariant the cancellation tests assert.
     pub fn kv_blocks_in_use(&self) -> usize {
         self.blocks.in_use_blocks()
+    }
+
+    /// Blocks currently owned by the prefix cache (0 when disabled).
+    pub fn prefix_blocks_held(&self) -> usize {
+        self.prefix.as_ref().map_or(0, |p| p.blocks_held())
+    }
+
+    /// Drop every prefix-cache entry, returning its blocks to the pool.
+    /// Returns the number of blocks released. With no requests in
+    /// flight, the pool is quiescent afterwards.
+    pub fn flush_prefix_cache(&mut self) -> Result<usize, EngineError> {
+        match self.prefix.as_mut() {
+            Some(p) => p.flush(&mut self.blocks).map_err(EngineError::Page),
+            None => Ok(0),
+        }
+    }
+
+    /// Paging / scheduling counters (cumulative since session creation).
+    pub fn stats(&self) -> SessionStats {
+        SessionStats {
+            preemptions: self.preemptions,
+            prefix_hit_blocks: self.prefix.as_ref().map_or(0, |p| p.hit_blocks()),
+            prefix_lookup_blocks: self.prefix.as_ref().map_or(0, |p| p.lookup_blocks()),
+            prefix_blocks_held: self.prefix_blocks_held(),
+            blocks_in_use: self.blocks.in_use_blocks(),
+            peak_blocks_in_use: self.blocks.peak_in_use_blocks(),
+            capacity_blocks: self.blocks.capacity_blocks(),
+            cow_copies: self.blocks.cow_count(),
+        }
     }
 
     pub fn config(&self) -> &EngineConfig {
@@ -422,8 +545,9 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
     }
 
     /// Run one scheduler round and return the events it produced, in
-    /// deterministic order: queued rejections first, then admissions,
-    /// then per-request `Token` / `Finished` events in submission order.
+    /// deterministic order: queued rejections first, then preemptions
+    /// (block accounting for the active batch), then admissions, then
+    /// per-request `Token` / `Finished` events in submission order.
     ///
     /// Failures are isolated per request: a backend error terminates
     /// only the request it hit (its KV blocks return to the pool and a
@@ -436,31 +560,14 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
     /// do not spin; interactive sessions (arrival 0) never sleep.
     pub fn tick(&mut self) -> Result<Vec<Event>, EngineError> {
         let mut events = std::mem::take(&mut self.pending_events);
-
-        // ── phase 1: admission (FIFO; arrival-, batch- and KV-gated) ──
         let now = self.now_s();
-        let max_batch = self.cfg.max_batch.max(1);
-        while self.active.len() < max_batch {
-            let Some(front) = self.waiting.front() else { break };
-            if front.arrival_s > now {
-                break;
-            }
-            let needed = self.blocks.blocks_for_tokens(front.prompt.len() + front.gen_len);
-            let Some(lease) = self.blocks.try_alloc(needed) else {
-                // Submit-time validation guarantees `needed` fits total
-                // capacity, so some active request holds the missing
-                // blocks: head-of-line waits for a completion.
-                debug_assert!(
-                    !self.active.is_empty(),
-                    "admission stalled with an empty batch despite submit validation"
-                );
-                break;
-            };
-            let w = self.waiting.pop_front().expect("front() was Some");
-            events.push(Event::Admitted { id: w.id, t_s: now });
-            let active = self.admit(w, lease, now);
-            self.active.push(active);
-        }
+
+        // ── phase 1: demand-paged block accounting (serial — workers
+        // never touch the pool). May preempt on exhaustion.
+        self.ensure_block_capacity(&mut events, now)?;
+
+        // ── phase 2: admission (FIFO; arrival-, batch- and KV-gated) ──
+        self.admit_waiting(&mut events, now)?;
 
         if self.active.is_empty() {
             if let Some(front) = self.waiting.front() {
@@ -474,7 +581,7 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             return Ok(events);
         }
 
-        // ── phase 2: fan the batch's steps out across the pool ──
+        // ── phase 3: fan the batch's steps out across the pool ──
         // The Active rides alongside the step result so a failing
         // request still comes back (its block lease must be returned,
         // not dropped on a worker thread).
@@ -487,7 +594,7 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
                 (a, res)
             });
 
-        // ── phase 3: deterministic merge, in submission order ──
+        // ── phase 4: deterministic merge, in submission order ──
         let t_s = self.now_s();
         for (mut a, res) in stepped {
             if let Err(reason) = res {
@@ -498,6 +605,15 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
                 self.blocks.free(lease).map_err(EngineError::Page)?;
                 events.push(Event::Rejected { id: a.id, reason, t_s });
                 continue;
+            }
+            if a.just_prefilled {
+                // Publish the freshly computed full prompt blocks so
+                // later identical prefixes fork instead of recomputing.
+                a.just_prefilled = false;
+                if let Some(p) = self.prefix.as_mut() {
+                    p.insert_chain(&a.prompt, &a.cache, &mut self.blocks)
+                        .map_err(EngineError::Page)?;
+                }
             }
             while a.reported < a.tokens.len() {
                 events.push(Event::Token {
@@ -518,10 +634,214 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             }
         }
         debug_assert!(
-            !(self.waiting.is_empty() && self.active.is_empty()) || self.blocks.is_quiescent(),
-            "idle session must hold zero KV block leases"
+            !(self.waiting.is_empty() && self.active.is_empty())
+                || self.blocks.in_use_blocks() == self.prefix_blocks_held(),
+            "idle session must hold only prefix-cache blocks"
         );
         Ok(events)
+    }
+
+    /// Phase-1 worker: give every active request the blocks its next
+    /// round of appends needs (a prefill chunk or one decode token),
+    /// promoting any still-shared write-target block to private first.
+    /// On pool exhaustion: reclaim idle prefix-cache blocks, then
+    /// preempt the most-recently-admitted active request (LIFO — the
+    /// deterministic victim rule) and retry.
+    fn ensure_block_capacity(
+        &mut self,
+        events: &mut Vec<Event>,
+        now: f64,
+    ) -> Result<(), EngineError> {
+        let chunk = self.cfg.prefill_chunk.max(1);
+        let mut i = 0;
+        'requests: while i < self.active.len() {
+            let a = &self.active[i];
+            let appends = if a.prefill_left > 0 { a.prefill_left.min(chunk) } else { 1 };
+            loop {
+                if self.prepare_for_appends(i, appends)? {
+                    i += 1;
+                    continue 'requests;
+                }
+                // Exhausted even after eviction: preempt. Every active
+                // request owns ≥ 1 private block (the final prompt token
+                // is never shared), so each preemption makes progress.
+                let victim = self.active.len() - 1;
+                let self_preempted = victim == i;
+                self.preempt(victim, events, now)?;
+                if self_preempted {
+                    // `i` now indexes the next request (or the end).
+                    continue 'requests;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Make request `i` safe to append `appends` tokens: CoW-promote any
+    /// shared block in the write range, then grow the block table on
+    /// demand. Returns false when the pool cannot cover it even after
+    /// evicting idle prefix blocks (the caller preempts).
+    fn prepare_for_appends(&mut self, i: usize, appends: usize) -> Result<bool, EngineError> {
+        let bt = self.cfg.block_tokens.max(1);
+        let tokens = self.active[i].cache.tokens();
+        let target = tokens + appends;
+        // Copy-on-write guard over the blocks this round writes into.
+        // Full-block prefix sharing never shares the writable tail, so
+        // this is a safety net, not a steady-state path.
+        let write_lo = tokens / bt;
+        let write_hi = (target - 1) / bt;
+        let mut idx = write_lo;
+        while idx <= write_hi && idx < self.active[i].cache.blocks_reserved() {
+            let id = self.active[i].cache.block_table()[idx];
+            if self.blocks.is_shared(id) {
+                loop {
+                    match self.blocks.cow(id).map_err(EngineError::Page)? {
+                        CowOutcome::InPlace => break,
+                        CowOutcome::Copied(fresh) => {
+                            self.active[i].cache.replace_block(idx, fresh);
+                            break;
+                        }
+                        CowOutcome::OutOfBlocks => {
+                            if !self.evict_prefix_block()? {
+                                return Ok(false);
+                            }
+                        }
+                    }
+                }
+            }
+            idx += 1;
+        }
+        // Demand growth: lease exactly the blocks the new tokens need.
+        let need = self
+            .blocks
+            .blocks_for_tokens(target)
+            .saturating_sub(self.active[i].cache.blocks_reserved());
+        if need == 0 {
+            return Ok(true);
+        }
+        loop {
+            if let Some(ids) = self.blocks.try_alloc(need) {
+                self.active[i].cache.grow(ids);
+                return Ok(true);
+            }
+            if !self.evict_prefix_block()? {
+                return Ok(false);
+            }
+        }
+    }
+
+    /// Reclaim one idle prefix-cache block (LRU leaf the cache solely
+    /// owns). False when nothing is reclaimable.
+    fn evict_prefix_block(&mut self) -> Result<bool, EngineError> {
+        match self.prefix.as_mut() {
+            Some(p) => p.evict_one(&mut self.blocks).map_err(EngineError::Page),
+            None => Ok(false),
+        }
+    }
+
+    /// Deterministic preemption: drop active request `idx` (always the
+    /// most recently admitted), free every block it holds, reset its
+    /// policies, and requeue it at the *front* of the waiting queue. Its
+    /// re-run re-derives the same RNG stream from (engine seed, seed
+    /// tag), so the replayed token stream is byte-identical; `reported`
+    /// rides along so already-emitted tokens are not re-emitted.
+    fn preempt(&mut self, idx: usize, events: &mut Vec<Event>, now: f64) -> Result<(), EngineError> {
+        let mut a = self.active.remove(idx);
+        let lease = a.cache.release_blocks();
+        self.blocks.free(lease).map_err(EngineError::Page)?;
+        for p in a.policies.iter_mut() {
+            p.reset();
+        }
+        self.preemptions += 1;
+        events.push(Event::Preempted { id: a.id, t_s: now });
+        // Timing carries over only once the stream has started: the
+        // original wait/TTFT are what the user observed. A request
+        // preempted mid-prefill instead re-measures at re-admission, so
+        // wait + TTFT still spans arrival → (eventual) first token.
+        let streamed = a.reported > 0;
+        self.waiting.push_front(Waiting {
+            id: a.id,
+            arrival_s: a.arrival_s,
+            prompt: a.prompt,
+            gen_len: a.gen_len,
+            sampler: a.sampler,
+            seed_tag: a.seed_tag,
+            policies: a.policies,
+            reported: a.reported,
+            wait_s: streamed.then_some(a.wait_s),
+            ttft_s: if streamed { a.ttft_s } else { 0.0 },
+        });
+        Ok(())
+    }
+
+    /// Phase-2 worker: FIFO admission, gated by batch capacity, arrival
+    /// time, and the pool — a request needs its *prompt* blocks (minus
+    /// any prefix-cache hit) plus `kv_headroom_blocks` left free; the
+    /// headroom is waived when the batch is empty so it can never starve
+    /// the session.
+    fn admit_waiting(&mut self, events: &mut Vec<Event>, now: f64) -> Result<(), EngineError> {
+        let bt = self.cfg.block_tokens.max(1);
+        let max_batch = self.cfg.max_batch.max(1);
+        while self.active.len() < max_batch {
+            match self.waiting.front() {
+                None => break,
+                Some(front) if front.arrival_s > now => break,
+                Some(_) => {}
+            }
+            let w = self.waiting.pop_front().expect("front was Some");
+            // Prefix fork: attach to matched blocks (refcount bump)
+            // before any eviction below could reclaim them.
+            let matched = match self.prefix.as_mut() {
+                Some(p) => p.lookup(&w.prompt),
+                None => Vec::new(),
+            };
+            let matched_ids = match self.prefix.as_ref() {
+                Some(p) => p.blocks(&matched),
+                None => Vec::new(),
+            };
+            for &id in &matched_ids {
+                self.blocks.retain(id).map_err(EngineError::Page)?;
+            }
+            let prompt_blocks = self.blocks.blocks_for_tokens(w.prompt.len());
+            let need = prompt_blocks - matched_ids.len();
+            let reserve = if self.active.is_empty() { 0 } else { self.cfg.kv_headroom_blocks };
+            let lease = loop {
+                if self.blocks.can_alloc(need, reserve) {
+                    if let Some(l) = self.blocks.try_alloc(need) {
+                        break Some(l);
+                    }
+                }
+                if !self.evict_prefix_block()? {
+                    break None;
+                }
+            };
+            let Some(lease) = lease else {
+                // Head-of-line waits for a completion; undo the fork.
+                self.blocks.free(matched_ids).map_err(EngineError::Page)?;
+                debug_assert!(
+                    !self.active.is_empty(),
+                    "admission stalled with an empty batch despite submit validation"
+                );
+                self.waiting.push_front(w);
+                break;
+            };
+            events.push(Event::Admitted { id: w.id, t_s: now });
+            if let Some(p) = self.prefix.as_mut() {
+                // Commit the hit-rate sample now that the fork is real
+                // (stalled retries must not inflate the counters).
+                p.record_use(matched.len(), prompt_blocks);
+            }
+            let mut table = matched_ids;
+            table.extend(lease);
+            let matched_tokens = matched.len() * bt;
+            let mut active = self.admit(w, table, matched_tokens, now);
+            if let Some(p) = self.prefix.as_ref() {
+                // The fork's one-time memcpy of the shared prefix rows.
+                p.copy_into(&matched, &mut active.cache);
+            }
+            self.active.push(active);
+        }
+        Ok(())
     }
 
     /// Resolve a request's attention contract into per-(layer, head)
@@ -566,6 +886,11 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             }
         }
         if reject.is_none() {
+            // Worst-case validation stays conservative under demand
+            // paging: a request whose full footprint cannot fit even an
+            // otherwise-empty pool would preempt-livelock once admitted,
+            // so it is rejected up front (prefix sharing is not
+            // credited — entries may be evicted at any time).
             if let Some(cap) = self.blocks.capacity_blocks() {
                 let needed = self.blocks.blocks_for_tokens(total);
                 if needed > cap {
@@ -589,6 +914,9 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             sampler,
             seed_tag,
             policies,
+            reported: 0,
+            wait_s: None,
+            ttft_s: 0.0,
         });
         id
     }
@@ -597,31 +925,38 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
     /// seed tag): the root is cloned before forking so no shared state
     /// advances. This is what makes `GenOptions::seed` a real contract —
     /// the stream does not depend on admission order, batch composition,
-    /// or what was cancelled before this request ran.
+    /// what was cancelled before this request ran, or whether the
+    /// request was preempted and replayed.
     fn request_rng(&self, tag: u64) -> Rng {
         let mut root = self.seed_rng.clone();
         root.fork(tag)
     }
 
-    fn admit(&self, w: Waiting, lease: Vec<BlockId>, now: f64) -> Active {
-        let prefill_left = w.prompt.len();
-        let first = *w.prompt.first().unwrap_or(&0);
+    /// Build the active-state for an admitted request. `matched_tokens`
+    /// prompt tokens are already covered by shared prefix blocks (the
+    /// caller copies their rows in); prefill resumes after them.
+    fn admit(&self, w: Waiting, table: Vec<BlockId>, matched_tokens: usize, now: f64) -> Active {
+        let prefill_left = w.prompt.len() - matched_tokens;
+        let first = *w.prompt.get(matched_tokens).unwrap_or(&0);
         Active {
             id: w.id,
             gen_len: w.gen_len,
             sampler: w.sampler,
-            cache: KvCache::paged(&self.mcfg, self.cfg.block_tokens.max(1), lease),
+            cache: KvCache::paged(&self.mcfg, self.cfg.block_tokens.max(1), table),
             policies: w.policies,
             rng: self.request_rng(w.seed_tag),
             tokens: Vec::new(),
-            reported: 0,
+            reported: w.reported,
             next_token: first,
-            pos: 0,
+            pos: matched_tokens,
             prefill_left,
             prompt: w.prompt,
+            arrival_s: w.arrival_s,
+            seed_tag: w.seed_tag,
+            just_prefilled: false,
             started: Instant::now(),
-            wait_s: (now - w.arrival_s).max(0.0),
-            ttft_s: 0.0,
+            wait_s: w.wait_s.unwrap_or((now - w.arrival_s).max(0.0)),
+            ttft_s: w.ttft_s,
             decode_s: 0.0,
             density_sum: 0.0,
             density_n: 0,
@@ -633,7 +968,8 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
 /// Advance one request by one scheduler round: up to `prefill_chunk`
 /// prompt tokens while prefilling (dense, Setup B: context via full
 /// attention), or exactly one decode step (sparse per policy). Runs on a
-/// worker thread; touches only this request's state.
+/// worker thread; touches only this request's state (phase 1 already
+/// leased every block this round's appends need).
 fn advance<B: Backend>(
     backend: &B,
     prefill_chunk: usize,
@@ -656,8 +992,13 @@ fn advance<B: Backend>(
         if a.prefill_left > 0 {
             return Ok(()); // still prefilling: nothing to sample yet
         }
-        a.ttft_s = a.started.elapsed().as_secs_f64();
+        if a.reported == 0 {
+            // A preemption replay (reported > 0) re-runs prefill, but
+            // the user saw their first token long ago — keep that TTFT.
+            a.ttft_s = a.started.elapsed().as_secs_f64();
+        }
         a.cache.stats.reset(); // count decode traffic only
+        a.just_prefilled = true; // merge phase publishes prompt blocks
         out = last.expect("prefill_chunk >= 1");
     } else {
         let sparse = !a.policies.is_empty();
@@ -742,6 +1083,7 @@ mod tests {
                     assert_eq!(i, id);
                     finished = Some(result);
                 }
+                Event::Preempted { .. } => panic!("unbounded pool must not preempt"),
                 Event::Rejected { reason, .. } => panic!("unexpected rejection: {reason}"),
             }
         }
@@ -894,5 +1236,143 @@ mod tests {
         }
         assert!(results[&inherit].mean_density < 1.0, "inherit must pick up the default");
         assert!((results[&dense].mean_density - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn demand_paging_grows_blocks_with_generation() {
+        // 4-token blocks, 4-token prompt, 12 generated tokens: the
+        // request is admitted holding 1 block and must end holding 4 —
+        // without any up-front worst-case lease.
+        let cfg = EngineConfig::builder().block_tokens(4).build();
+        let mut s = tiny_session(cfg);
+        s.submit(SubmitRequest::new(prompt(4, 1)).options(GenOptions::new(12)));
+        s.tick().unwrap(); // admission + prefill
+        assert_eq!(s.kv_blocks_in_use(), 1, "admission leases prompt blocks only");
+        let mut peak = 0;
+        while !s.is_idle() {
+            s.tick().unwrap();
+            peak = peak.max(s.kv_blocks_in_use());
+        }
+        assert_eq!(peak, 4, "16 tokens at block 4 = 4 blocks, grown on demand");
+        assert_eq!(s.kv_blocks_in_use(), 0);
+        assert_eq!(s.stats().preemptions, 0);
+    }
+
+    #[test]
+    fn headroom_delays_admission_but_everything_completes() {
+        // Pool of 4 blocks, 1-block requests, headroom 2: at most two
+        // requests may be resident at once (2 held + 2 reserve), even
+        // though max_batch would allow four.
+        let mcfg = ModelConfig::tiny();
+        let cfg = EngineConfig::builder()
+            .max_batch(4)
+            .block_tokens(16)
+            .kv_capacity_bytes(4 * 16 * mcfg.kv_bytes_per_token())
+            .kv_headroom_blocks(2)
+            .build();
+        let mut s = tiny_session(cfg);
+        for i in 0..4u32 {
+            s.submit(SubmitRequest::new(prompt(6, i)).options(GenOptions::new(3)));
+        }
+        let mut max_active = 0;
+        let mut finished = 0;
+        while !s.is_idle() {
+            for ev in s.tick().unwrap() {
+                if let Event::Finished { .. } = ev {
+                    finished += 1;
+                }
+            }
+            max_active = max_active.max(s.active_len());
+        }
+        assert_eq!(finished, 4, "headroom must not starve anyone");
+        assert!(max_active <= 2, "headroom of 2 in a 4-block pool caps residency at 2");
+        assert_eq!(s.kv_blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn pool_exhaustion_preempts_lifo_and_replays_identically() {
+        // Two long-generation requests in a pool that cannot hold both
+        // to completion: the later-admitted one must be preempted
+        // (Event::Preempted), re-run, and still produce exactly the
+        // stream an uncontended run produces.
+        let mcfg = ModelConfig::tiny();
+        let contended = EngineConfig::builder()
+            .max_batch(2)
+            .block_tokens(4)
+            .kv_capacity_bytes(7 * 4 * mcfg.kv_bytes_per_token()) // 7 blocks < 2 × 5
+            .build();
+        let free = EngineConfig::builder().max_batch(2).block_tokens(4).build();
+        let run = |cfg: EngineConfig| {
+            let mut s = tiny_session(cfg);
+            let a = s.submit(SubmitRequest::new(prompt(8, 1)).options(GenOptions::new(12)));
+            let b = s.submit(SubmitRequest::new(prompt(8, 2)).options(GenOptions::new(12)));
+            let mut streams: std::collections::BTreeMap<u64, Vec<u32>> = Default::default();
+            let mut preempted = Vec::new();
+            for ev in drain(&mut s) {
+                match ev {
+                    Event::Token { id, token, step, .. } => {
+                        let st = streams.entry(id).or_default();
+                        assert_eq!(st.len(), step, "stream must stay gapless across preemption");
+                        st.push(token);
+                    }
+                    Event::Preempted { id, .. } => preempted.push(id),
+                    Event::Finished { id, result, .. } => {
+                        assert_eq!(result.tokens, streams[&id], "events must replay the result");
+                    }
+                    Event::Rejected { reason, .. } => panic!("unexpected rejection: {reason}"),
+                    Event::Admitted { .. } => {}
+                }
+            }
+            assert_eq!(s.kv_blocks_in_use(), 0);
+            ((streams[&a].clone(), streams[&b].clone()), preempted, s.stats().preemptions)
+        };
+        let (free_streams, no_preempts, n0) = run(free);
+        assert!(no_preempts.is_empty());
+        assert_eq!(n0, 0);
+        let (contended_streams, preempts, n1) = run(contended);
+        assert!(!preempts.is_empty(), "7 < 10 worst-case blocks must force preemption");
+        assert!(n1 > 0);
+        // LIFO victim rule: the most recently admitted request (b, id 1)
+        // is always the first victim.
+        assert_eq!(preempts[0], 1);
+        assert_eq!(
+            free_streams, contended_streams,
+            "preempted replay must be byte-identical to the uncontended run"
+        );
+    }
+
+    #[test]
+    fn prefix_cache_forks_identical_prompts_and_flushes_clean() {
+        let cfg = EngineConfig::builder().block_tokens(4).prefix_cache(true).build();
+        let mut s = tiny_session(cfg);
+        let p = prompt(16, 9);
+        let a = s.submit(SubmitRequest::new(p.clone()).options(GenOptions::new(4)));
+        let mut results = std::collections::BTreeMap::new();
+        for ev in drain(&mut s) {
+            if let Event::Finished { id, result, .. } = ev {
+                results.insert(id, result.tokens);
+            }
+        }
+        assert!(s.prefix_blocks_held() > 0, "prompt blocks published after prefill");
+        let hits_before = s.stats().prefix_hit_blocks;
+        // Same prompt again: forks off the cached prefix...
+        let b = s.submit(SubmitRequest::new(p).options(GenOptions::new(4)));
+        for ev in drain(&mut s) {
+            if let Event::Finished { id, result, .. } = ev {
+                results.insert(id, result.tokens);
+            }
+        }
+        assert!(s.stats().prefix_hit_blocks > hits_before, "second run must hit the radix");
+        // ...and must produce the same greedy stream (same model, same
+        // prompt, same engine seed tagging by id? — ids differ, but
+        // greedy sampling is RNG-free, so streams must match exactly).
+        assert_eq!(results[&a], results[&b], "forked prefill must not change tokens");
+        // Cache retains blocks past quiescence until flushed.
+        assert!(s.is_idle());
+        assert_eq!(s.kv_blocks_in_use(), s.prefix_blocks_held());
+        let released = s.flush_prefix_cache().unwrap();
+        assert!(released > 0);
+        assert_eq!(s.kv_blocks_in_use(), 0, "flushed idle session is quiescent");
+        assert!(s.stats().prefix_hit_rate() > 0.0);
     }
 }

@@ -42,6 +42,16 @@ impl Mat {
         Mat { rows, cols, data }
     }
 
+    /// Reshape in place to (rows × cols), zero-filled, reusing the
+    /// existing allocation — the scratch-buffer primitive behind
+    /// `KvCache::gather_into` (no fresh `Vec` on the decode hot path).
+    pub fn resize(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
     #[inline]
     pub fn row(&self, r: usize) -> &[f32] {
         &self.data[r * self.cols..(r + 1) * self.cols]
@@ -204,6 +214,18 @@ pub fn softmax_inplace(x: &mut [f32]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn resize_reuses_allocation_and_zeroes() {
+        let mut m = Mat::from_vec(2, 3, vec![1.0; 6]);
+        let cap = m.data.capacity();
+        m.resize(1, 2);
+        assert_eq!((m.rows, m.cols), (1, 2));
+        assert_eq!(m.data, vec![0.0, 0.0]);
+        assert_eq!(m.data.capacity(), cap, "shrinking must keep the buffer");
+        m.resize(3, 2);
+        assert_eq!(m.row(2), &[0.0, 0.0]);
+    }
 
     #[test]
     fn matmul_identity() {

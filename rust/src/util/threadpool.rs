@@ -77,6 +77,55 @@ impl ThreadPool {
     pub fn num_workers(&self) -> usize {
         self.workers.len()
     }
+
+    /// Run `f(0..n)` on the pool's *persistent* workers while borrowing
+    /// from the caller's stack — the scoped-threadpool pattern, so hot
+    /// paths (e.g. chunked dense SDPA) stop paying a thread spawn per
+    /// call. Blocks until every task has finished; a panicking task is
+    /// re-raised here after the rest complete.
+    ///
+    /// SAFETY of the internal lifetime erasure (borrows ride into the
+    /// 'static job queue as raw addresses): the closure and output slots
+    /// outlive this call, every task sends a completion message *after*
+    /// it finishes (or unwinds), and we do not return until all `n`
+    /// messages arrive — so no task can touch the borrowed data after
+    /// `scoped_map` returns, and each task writes a distinct output slot.
+    pub fn scoped_map<'env, R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send + 'env,
+        F: Fn(usize) -> R + Sync + 'env,
+    {
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let out_addr = out.as_mut_ptr() as usize;
+        let f_addr = &f as *const F as usize;
+        let (tx, rx) = channel::<std::thread::Result<()>>();
+        for i in 0..n {
+            let tx = tx.clone();
+            self.execute(move || {
+                let res = std::panic::catch_unwind(|| {
+                    let f = unsafe { &*(f_addr as *const F) };
+                    let r = f(i);
+                    // Distinct index ⇒ distinct slot; the slot holds
+                    // None (trivial drop), so a raw overwrite is fine.
+                    unsafe { (out_addr as *mut Option<R>).add(i).write(Some(r)) };
+                });
+                let _ = tx.send(res);
+            });
+        }
+        drop(tx);
+        let mut first_panic = None;
+        for _ in 0..n {
+            match rx.recv().expect("worker hung up mid-scope") {
+                Ok(()) => {}
+                Err(p) if first_panic.is_none() => first_panic = Some(p),
+                Err(_) => {}
+            }
+        }
+        if let Some(p) = first_panic {
+            std::panic::resume_unwind(p);
+        }
+        out.into_iter().map(|o| o.expect("every task completed")).collect()
+    }
 }
 
 impl Drop for ThreadPool {
@@ -124,5 +173,36 @@ mod tests {
         let pool = ThreadPool::new(2);
         let out: Vec<i32> = pool.map(Vec::<i32>::new(), |x| x);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn scoped_map_borrows_the_stack_and_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let data: Vec<u64> = (0..40).collect(); // borrowed, not moved
+        let out = pool.scoped_map(8, |i| data[i * 5..(i + 1) * 5].iter().sum::<u64>());
+        let want: Vec<u64> = (0..8).map(|i| (0..40).filter(|x| x / 5 == i).sum()).collect();
+        assert_eq!(out, want);
+        assert_eq!(data.len(), 40, "borrow survives the scope");
+        // Reuse the same pool back to back (no spawn per call).
+        let out2 = pool.scoped_map(3, |i| data[i]);
+        assert_eq!(out2, vec![0, 1, 2]);
+        let empty: Vec<u64> = pool.scoped_map(0, |i| data[i]);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn scoped_map_propagates_panics_after_the_scope_drains() {
+        let pool = ThreadPool::new(2);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scoped_map(4, |i| {
+                if i == 2 {
+                    panic!("boom");
+                }
+                i
+            })
+        }));
+        assert!(res.is_err(), "panic must cross the scope");
+        // The pool must still be serviceable afterwards.
+        assert_eq!(pool.scoped_map(2, |i| i + 1), vec![1, 2]);
     }
 }

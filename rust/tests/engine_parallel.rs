@@ -157,6 +157,7 @@ fn session_streams(workers: usize) -> Vec<(u64, Vec<u32>)> {
                     );
                 }
                 Event::Admitted { .. } => {}
+                Event::Preempted { .. } => panic!("unbounded pool must not preempt"),
                 Event::Rejected { reason, .. } => panic!("unexpected rejection: {reason}"),
             }
         }

@@ -240,6 +240,97 @@ fn prop_block_pool_reuses_before_minting() {
 }
 
 #[test]
+fn prop_block_pool_refcount_fork_cow_free_interleavings() {
+    // Random interleavings of alloc / retain (fork) / cow / free against
+    // a reference model of per-block refcounts: a block is freed exactly
+    // once (when its count hits zero — later frees are DoubleFree, never
+    // silent), sharing never costs capacity, cow detaches exactly one
+    // reference, and the pool ends quiescent once the model drains.
+    use std::collections::HashMap;
+    use vattn::kvcache::CowOutcome;
+    Prop::new("block-pool-refcounts").cases(40).run(|rng| {
+        let cap = rng.range(4, 32);
+        let mut pool = BlockPool::new(16, 512, Some(cap));
+        // Model: live block id -> expected refcount.
+        let mut model: HashMap<BlockId, u32> = HashMap::new();
+        let pick = |model: &HashMap<BlockId, u32>, rng: &mut Rng| -> BlockId {
+            let mut ids: Vec<BlockId> = model.keys().copied().collect();
+            ids.sort_unstable();
+            ids[rng.below(ids.len())]
+        };
+        for _ in 0..200 {
+            match rng.below(4) {
+                0 => {
+                    let n = rng.range(1, 4);
+                    match pool.try_alloc(n) {
+                        Some(ids) => {
+                            assert_eq!(ids.len(), n);
+                            for id in ids {
+                                assert!(
+                                    model.insert(id, 1).is_none(),
+                                    "pool leased live block {id} twice"
+                                );
+                            }
+                        }
+                        None => assert!(model.len() + n > cap, "refused a lease that fit"),
+                    }
+                }
+                1 if !model.is_empty() => {
+                    let id = pick(&model, rng);
+                    pool.retain(id).expect("retain of live block");
+                    *model.get_mut(&id).unwrap() += 1;
+                }
+                2 if !model.is_empty() => {
+                    let id = pick(&model, rng);
+                    let refs = model[&id];
+                    match pool.cow(id).expect("cow of live block") {
+                        CowOutcome::InPlace => {
+                            assert_eq!(refs, 1, "in-place write requires sole ownership")
+                        }
+                        CowOutcome::Copied(fresh) => {
+                            assert!(refs > 1, "copy implies the block was shared");
+                            *model.get_mut(&id).unwrap() -= 1;
+                            assert!(model.insert(fresh, 1).is_none(), "cow reused a live id");
+                        }
+                        CowOutcome::OutOfBlocks => {
+                            assert!(refs > 1 && model.len() + 1 > cap, "spurious exhaustion");
+                        }
+                    }
+                }
+                _ if !model.is_empty() => {
+                    let id = pick(&model, rng);
+                    pool.free([id]).expect("free of live block");
+                    let r = model.get_mut(&id).unwrap();
+                    *r -= 1;
+                    if *r == 0 {
+                        model.remove(&id);
+                        // The id is dead: another free must error, not
+                        // double-release.
+                        assert!(matches!(pool.free([id]), Err(PageError::DoubleFree(_))));
+                        assert!(matches!(pool.retain(id), Err(PageError::DoubleFree(_))));
+                    }
+                }
+                _ => {}
+            }
+            assert_eq!(pool.in_use_blocks(), model.len(), "resident-block accounting drifted");
+            assert!(pool.in_use_blocks() <= cap);
+            for (&id, &refs) in &model {
+                assert_eq!(pool.ref_count(id), refs, "refcount of block {id} drifted");
+            }
+        }
+        // Drain: every reference released exactly once ⇒ quiescent.
+        let mut ids: Vec<(BlockId, u32)> = model.into_iter().collect();
+        ids.sort_unstable();
+        for (id, refs) in ids {
+            for _ in 0..refs {
+                pool.free([id]).expect("draining free");
+            }
+        }
+        assert!(pool.is_quiescent(), "drained pool must be quiescent");
+    });
+}
+
+#[test]
 fn prop_paged_cache_accounting_consistent() {
     // Appends into a paged cache: token/block accounting agrees with the
     // reservation, gather charges exactly the gathered bytes, and
