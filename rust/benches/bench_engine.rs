@@ -11,10 +11,18 @@
 //! streams at 1 and 4 workers, a peak-block footprint under the
 //! unshared baseline, and quiescence after drain + prefix flush.
 //!
+//! Also runs the temporal heavy-hitter reuse scenarios: a 4-request
+//! 64-token-generation vAttention batch asserting reuse-on streams are
+//! byte-identical to reuse-off at workers {1, 4}, and a planted
+//! temporally-stable stream at the policy level asserting the drift
+//! certificate cuts underlying top-k scans by ≥ 2× while selecting
+//! exactly what a fresh policy selects.
+//!
 //! Besides the human-readable report, writes `BENCH_engine.json`
 //! (tokens/s plus TTFT/TPOT percentiles per worker count, the
 //! `demand_paging` block with prefix-hit-rate / preemptions /
-//! peak-block-utilization, and the open-loop summary) so the perf
+//! peak-block-utilization, the `reuse` block with hit rate / refresh
+//! causes / scan reduction, and the open-loop summary) so the perf
 //! trajectory is machine-trackable PR over PR; CI checks the file is
 //! produced and well-formed.
 //!
@@ -23,13 +31,17 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use vattn::metrics::{summarize, LatencySummary, PagingSummary, ServeSummary};
+use vattn::metrics::{summarize, LatencySummary, PagingSummary, ReuseSummary, ServeSummary};
 use vattn::model::{Model, ModelConfig, Sampler};
-use vattn::policies::{SizeSpec, VAttentionPolicy};
-use vattn::server::{
-    AttentionMode, Engine, EngineConfig, Event, GenOptions, Request, RequestResult, Session,
-    SubmitRequest,
+use vattn::policies::{
+    IndexPolicy, PolicyCtx, ReuseConfig, ReuseStats, SizeSpec, TemporalReusePolicy,
+    VAttentionPolicy,
 };
+use vattn::server::{
+    AttentionMode, AttentionOpt, Engine, EngineConfig, Event, GenOptions, Request, RequestResult,
+    Session, SubmitRequest,
+};
+use vattn::tensor::Mat;
 use vattn::util::json::Json;
 use vattn::workloads::traces::{generate_trace, to_requests, TraceConfig};
 use vattn::util::Rng;
@@ -243,6 +255,133 @@ fn main() {
     );
     assert_eq!(shared_stats.prefix_hit_blocks, shared_stats4.prefix_hit_blocks);
 
+    println!("\n== temporal heavy-hitter reuse: 4 requests, 64-token generation ==");
+    // Long-generation vAttention serving with cross-step index reuse:
+    // the per-(layer, head) heavy-hitter selection is cached and only
+    // re-scored when the drift certificate fails, so the streams must be
+    // byte-identical to reuse-off runs — at 1 and 4 workers — while the
+    // underlying top-k scorer runs strictly less often.
+    let reuse_prompts: Vec<Vec<u32>> = (0..4u32)
+        .map(|i| (0..192u32).map(|t| (t * 31 + i * 7) % 1024).collect())
+        .collect();
+    let reuse_vcfg = {
+        let mut c = vattn::experiments::common::vcfg(0.2);
+        c.sink = SizeSpec::Abs(16);
+        c.window = SizeSpec::Abs(32);
+        c.verify = vattn::budget::Verify::Denominator;
+        c
+    };
+    let run_reuse = |workers: usize, reuse: bool| -> (BTreeMap<u64, Vec<u32>>, ReuseStats) {
+        let cfg = EngineConfig::builder().max_batch(4).seed(1).workers(workers).build();
+        let mut session = Session::new(Model::new(bench_model(), 42), cfg);
+        let mut streams: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+        for p in &reuse_prompts {
+            let att = if reuse {
+                AttentionOpt::VerifiedReuse(reuse_vcfg.clone(), ReuseConfig::default())
+            } else {
+                AttentionOpt::Verified(reuse_vcfg.clone())
+            };
+            let id = session
+                .submit(SubmitRequest::new(p.clone()).options(GenOptions::new(64).attention(att)));
+            streams.insert(id, Vec::new());
+        }
+        while !session.is_idle() {
+            for ev in session.tick().expect("tick") {
+                match ev {
+                    Event::Token { id, token, .. } => streams.get_mut(&id).expect("id").push(token),
+                    Event::Rejected { reason, .. } => panic!("unexpected rejection: {reason}"),
+                    _ => {}
+                }
+            }
+        }
+        (streams, session.stats().reuse)
+    };
+    let (off1, _) = run_reuse(1, false);
+    let (off4, _) = run_reuse(4, false);
+    let (on1, reuse_on1) = run_reuse(1, true);
+    let (on4, reuse_on4) = run_reuse(4, true);
+    assert_eq!(off1, off4, "reuse-off streams diverged across workers");
+    assert_eq!(on1, on4, "reuse-on streams diverged across workers");
+    assert_eq!(on1, off1, "temporal reuse changed a token stream");
+    assert_eq!(reuse_on1, reuse_on4, "reuse decisions must be worker-count invariant");
+    assert!(
+        reuse_on1.scorer_calls <= reuse_on1.selects,
+        "reuse can never scan more than once per select"
+    );
+    let engine_reuse = ReuseSummary::from(&reuse_on1);
+    println!(
+        "streams byte-identical reuse-on vs reuse-off at workers {{1, 4}}: OK \
+         ({} tokens/request)",
+        on1.values().next().map_or(0, Vec::len)
+    );
+    println!("{}", engine_reuse.render());
+
+    // The certificate's headline saving on a temporally-stable stream,
+    // at the policy level where it is provable: planted heavy hitters
+    // plus a slowly drifting query. The wrapped scorer runs once (the
+    // cold anchor); every later step is certified from the cache, so
+    // the scan reduction equals the step count. Fresh-policy selections
+    // are asserted identical along the way.
+    println!("\n== temporal reuse, planted-stable stream (policy level) ==");
+    let (synth_reduction, synth_stats) = {
+        let n = 2048;
+        let d = 32;
+        let steps = 64;
+        let mut rng = Rng::new(3);
+        let mut k = Mat::randn(n, d, 0.1, &mut rng);
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+        for j in 0..16 {
+            let row = 200 + j * 5;
+            for c in 0..d {
+                k.set(row, c, if c == 0 { 10.0 } else { 0.0 });
+            }
+        }
+        let mut cfg = vattn::experiments::common::vcfg(0.2);
+        cfg.sink = SizeSpec::Abs(8);
+        cfg.window = SizeSpec::Abs(16);
+        cfg.heavy = SizeSpec::Abs(16);
+        cfg.verify = vattn::budget::Verify::Denominator;
+        let mut fresh = VAttentionPolicy::oracle(cfg.clone());
+        let mut reused = TemporalReusePolicy::new(
+            VAttentionPolicy::oracle(cfg),
+            ReuseConfig { max_age: steps + 1, ..Default::default() },
+        );
+        let mut rng_a = Rng::new(7);
+        let mut rng_b = Rng::new(7);
+        for step in 0..steps {
+            let mut qr = Rng::new(1000 + step as u64);
+            let q: Vec<f32> = (0..d)
+                .map(|c| if c == 0 { 1.0 } else { 0.0 } + 0.01 * qr.normal32(0.0, 1.0))
+                .collect();
+            let sa = fresh.select(&mut PolicyCtx {
+                k: &k,
+                v: &v,
+                q_scaled: &q,
+                rng: &mut rng_a,
+                step,
+            });
+            let sb = reused.select(&mut PolicyCtx {
+                k: &k,
+                v: &v,
+                q_scaled: &q,
+                rng: &mut rng_b,
+                step,
+            });
+            assert_eq!(sa.idx, sb.idx, "planted-stream selection diverged at step {step}");
+            assert_eq!(sa.prob, sb.prob, "planted-stream probabilities diverged at step {step}");
+        }
+        (reused.stats().scorer_reduction(), reused.stats().clone())
+    };
+    assert!(
+        synth_reduction >= 2.0,
+        "stable stream must at least halve scorer invocations, got {synth_reduction:.2}x \
+         ({synth_stats:?})"
+    );
+    println!(
+        "selections identical to fresh policy; scorer invocations {} -> {} ({synth_reduction:.1}x fewer)",
+        synth_stats.selects, synth_stats.scorer_calls
+    );
+
     println!("\n== open-loop Poisson trace (rate 8 req/s, 24 requests, 8 workers) ==");
     let trace_cfg = TraceConfig {
         rate: 8.0,
@@ -284,6 +423,29 @@ fn main() {
                 )
                 .field("cow_copies", Json::num(paging.cow_copies as f64))
                 .field("wall_s", Json::num(shared_wall)),
+        )
+        .field(
+            "reuse",
+            Json::obj()
+                .field("requests", Json::num(4.0))
+                .field("gen_len", Json::num(64.0))
+                .field("selects", Json::num(engine_reuse.selects as f64))
+                .field("hits", Json::num(engine_reuse.hits as f64))
+                .field("hit_rate", Json::num(engine_reuse.hit_rate))
+                .field("scorer_calls", Json::num(engine_reuse.scorer_calls as f64))
+                .field("scorer_reduction", Json::num(engine_reuse.scorer_reduction))
+                .field("refreshes", Json::num(engine_reuse.refreshes as f64))
+                .field("refresh_cold", Json::num(engine_reuse.refresh_cold as f64))
+                .field("refresh_max_age", Json::num(engine_reuse.refresh_max_age as f64))
+                .field("refresh_drift", Json::num(engine_reuse.refresh_drift as f64))
+                .field("refresh_budget", Json::num(engine_reuse.refresh_budget as f64))
+                .field("refresh_grown", Json::num(engine_reuse.refresh_grown as f64))
+                .field(
+                    "refresh_unsupported",
+                    Json::num(engine_reuse.refresh_unsupported as f64),
+                )
+                .field("survivors_scored", Json::num(engine_reuse.survivors_scored as f64))
+                .field("synthetic_reduction", Json::num(synth_reduction)),
         )
         .field(
             "open_loop",

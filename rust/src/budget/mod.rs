@@ -11,6 +11,35 @@
 //! All exponentials are taken relative to a reference logit `m_ref`
 //! supplied by the caller; every budget formula is scale-invariant in
 //! `m_ref` because it only involves ratios (σ/D, √Tr(Σ)/‖N‖).
+//!
+//! The written derivation — CLT vs Hoeffding, the per-computation
+//! verification targets, and the symbol map from the paper's
+//! Algorithm 1/2 (f_s, f_l, f_t, f_b) to
+//! [`crate::policies::VAttentionConfig`] fields and the functions in
+//! this module — lives in `docs/GUARANTEES.md`. Empirical (ε, δ)
+//! coverage is asserted by `tests/budget_coverage.rs` and, with
+//! temporal reuse enabled, `tests/temporal_reuse.rs`.
+//!
+//! ```
+//! use vattn::budget::{budget_for, BaseStats, Bound, Verify};
+//!
+//! // Statistics as `estimate_stats` would report them for a moderately
+//! // concentrated residual of 1000 tokens.
+//! let stats = BaseStats {
+//!     n_s: 1000,
+//!     sigma2_d: 0.25,
+//!     trace_sigma_n: 4.0,
+//!     d_hat: 2000.0,
+//!     n_hat_norm: 3000.0,
+//!     range_d: 3.0,
+//!     range_n: 10.0,
+//!     base_size: 50,
+//! };
+//! let clt = budget_for(&stats, Verify::Denominator, 0.05, 0.05, Bound::Clt);
+//! let hoeffding = budget_for(&stats, Verify::Denominator, 0.05, 0.05, Bound::Hoeffding);
+//! assert!(clt > 0 && clt <= hoeffding); // Hoeffding is the conservative recipe
+//! assert!(hoeffding <= stats.n_s); // budgets never exceed the residual
+//! ```
 
 use crate::attention;
 use crate::tensor::Mat;

@@ -1,5 +1,20 @@
 //! Two-tier KV placement accounting + the bandwidth transfer model used
 //! to extrapolate Fig. 5 to 8B-scale shapes.
+//!
+//! Who consumes what, so none of this looks dead:
+//!
+//! * [`TierStats`] rides on every [`crate::kvcache::KvCache`]
+//!   (`cache.stats`): the model charges a read per gathered K/V row and
+//!   a write per append. The serving path surfaces both —
+//!   `RequestResult::kv_bytes_read` / `kv_bytes_written` per request,
+//!   summed into `metrics::ServeSummary` and printed by `vattn serve`
+//!   (the per-request counters reset when prefill completes, so they
+//!   report decode traffic only).
+//! * [`TransferModel`] is **extrapolation-only**: no live code path
+//!   sleeps on it. `sim::` and the Fig. 5 speedup experiment convert
+//!   measured byte counts into projected transfer seconds for
+//!   8B-scale shapes over a PCIe-class host→device link. Treat its
+//!   defaults as the paper's deployment assumption, not a measurement.
 
 /// Byte-traffic counters for the host (CPU RAM) tier.
 #[derive(Clone, Debug, Default)]

@@ -7,6 +7,7 @@
 //!         [--eps E] [--delta D] [--workers W] [--max-batch B]
 //!         [--block-tokens T] [--kv-cap-mb M] [--kv-headroom H]
 //!         [--prefix-cache] [--open-loop] [--rate R]
+//!         [--reuse] [--reuse-max-age A]
 //!                                                         drive the streaming session on a trace
 //!   info                                                  build/config info
 //!
@@ -35,6 +36,8 @@ const SERVE_KEYS: &[&str] = &[
     "ctx-max",
     "eps",
     "delta",
+    "reuse",
+    "reuse-max-age",
 ];
 
 fn main() {
@@ -81,6 +84,7 @@ fn main() {
             println!("  vattn serve --mode vattention --eps 0.1 --delta 0.1   streaming session demo");
             println!("  vattn serve --workers 8 --open-loop --rate 4  open-loop Poisson load");
             println!("  vattn serve --prefix-cache --kv-cap-mb 64     shared-prefix demand paging");
+            println!("  vattn serve --reuse --reuse-max-age 32        cross-step heavy-hitter reuse");
         }
     }
 }
@@ -124,12 +128,33 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     let requests = to_requests(&trace, cfg.vocab);
 
     // The per-request attention contract: every submitted request
-    // carries its own (ε, δ) — this CLI just gives them all the same one.
+    // carries its own (ε, δ) — this CLI just gives them all the same
+    // one. With --reuse, the per-(layer, head) heavy-hitter selection
+    // is cached across decode steps and re-scored only on certified
+    // drift (token streams are unchanged; see docs/GUARANTEES.md §6).
+    let reuse = args.has_flag("reuse");
     let attention = match mode_name {
-        "dense" => AttentionOpt::Dense,
-        "vattention" => AttentionOpt::Verified(
-            vattn::experiments::common::vcfg(eps).with_guarantee(eps, delta),
-        ),
+        "dense" => {
+            if reuse || args.get("reuse-max-age").is_some() {
+                anyhow::bail!(
+                    "--reuse/--reuse-max-age cache heavy-hitter selections and only apply \
+                     to --mode vattention; dense attention has no selections to reuse"
+                );
+            }
+            AttentionOpt::Dense
+        }
+        "vattention" => {
+            let vcfg = vattn::experiments::common::vcfg(eps).with_guarantee(eps, delta);
+            if reuse {
+                let rcfg = vattn::policies::ReuseConfig {
+                    max_age: args.get_usize("reuse-max-age", 32),
+                    ..Default::default()
+                };
+                AttentionOpt::VerifiedReuse(vcfg, rcfg)
+            } else {
+                AttentionOpt::Verified(vcfg)
+            }
+        }
         other => anyhow::bail!("unknown mode '{other}' (dense|vattention)"),
     };
 
@@ -179,7 +204,11 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         engine.cfg.max_batch
     );
     println!("{}", log.summary(wall).render());
-    println!("{}", vattn::metrics::PagingSummary::from(&session.stats()).render());
+    let stats = session.stats();
+    println!("{}", vattn::metrics::PagingSummary::from(&stats).render());
+    if stats.reuse.selects > 0 {
+        println!("{}", vattn::metrics::ReuseSummary::from(&stats.reuse).render());
+    }
     let mut results: Vec<_> = log.results().to_vec();
     results.sort_by_key(|r| r.id);
     for r in &results {

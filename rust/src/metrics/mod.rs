@@ -8,7 +8,7 @@ pub mod serving;
 
 pub use serving::{
     ascii_histogram, summarize, EventLog, LatencySummary, PagingSummary, RequestTimeline,
-    ServeSummary,
+    ReuseSummary, ServeSummary,
 };
 
 /// Mean of a slice.

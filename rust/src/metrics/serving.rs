@@ -7,6 +7,7 @@
 use std::collections::BTreeMap;
 
 use crate::metrics::{f, histogram, mean, percentile, Table};
+use crate::policies::ReuseStats;
 use crate::server::{Event, RequestId, RequestResult, SessionStats};
 
 /// Percentile summary of one latency distribution (seconds).
@@ -49,6 +50,8 @@ pub struct ServeSummary {
     pub wait: LatencySummary,
     pub mean_density: f64,
     pub kv_bytes_read: usize,
+    /// Decode-path KV append traffic (host tier), summed over requests.
+    pub kv_bytes_written: usize,
     ttft_samples: Vec<f64>,
     tpot_samples: Vec<f64>,
 }
@@ -76,6 +79,7 @@ impl ServeSummary {
             wait: summarize(&waits),
             mean_density: density,
             kv_bytes_read: results.iter().map(|r| r.kv_bytes_read).sum(),
+            kv_bytes_written: results.iter().map(|r| r.kv_bytes_written).sum(),
             ttft_samples,
             tpot_samples,
         }
@@ -85,7 +89,16 @@ impl ServeSummary {
     pub fn render(&self) -> String {
         let mut t = Table::new(
             "serving summary",
-            &["requests", "tokens", "wall s", "tok/s", "req/s", "density", "kv MiB read"],
+            &[
+                "requests",
+                "tokens",
+                "wall s",
+                "tok/s",
+                "req/s",
+                "density",
+                "kv MiB read",
+                "kv MiB written",
+            ],
         );
         t.row(vec![
             self.requests.to_string(),
@@ -95,6 +108,7 @@ impl ServeSummary {
             f(self.request_rate, 2),
             f(self.mean_density, 3),
             f(self.kv_bytes_read as f64 / (1 << 20) as f64, 1),
+            f(self.kv_bytes_written as f64 / (1 << 20) as f64, 1),
         ]);
         let mut l = Table::new(
             "latency (ms)",
@@ -199,6 +213,98 @@ impl PagingSummary {
             self.peak_blocks_in_use.to_string(),
             self.capacity_blocks.map_or("unbounded".to_string(), |c| c.to_string()),
             self.cow_copies.to_string(),
+        ]);
+        t.render()
+    }
+}
+
+/// Temporal heavy-hitter reuse report for one serving run: how often
+/// the drift certificate served the cached selection instead of
+/// re-running the top-k scorer, and what forced the full re-scores.
+/// Built from the [`ReuseStats`] aggregated in [`SessionStats`];
+/// rendered by `vattn serve --reuse` and written into
+/// `BENCH_engine.json` by `bench_engine`.
+#[derive(Clone, Debug, Default)]
+pub struct ReuseSummary {
+    /// Policy `select` calls across all (request, layer, head) policies.
+    pub selects: u64,
+    /// Selects served from the cached heavy set.
+    pub hits: u64,
+    /// hits / selects (0 when reuse never ran).
+    pub hit_rate: f64,
+    /// Full top-k scans actually issued.
+    pub scorer_calls: u64,
+    /// selects / scorer_calls — how many times fewer scans than a
+    /// reuse-free run (which scans once per select). ≥ 1 structurally.
+    pub scorer_reduction: f64,
+    /// Total full re-scores, split by cause below.
+    pub refreshes: u64,
+    pub refresh_cold: u64,
+    pub refresh_max_age: u64,
+    pub refresh_drift: u64,
+    pub refresh_budget: u64,
+    pub refresh_grown: u64,
+    pub refresh_unsupported: u64,
+    /// Uncached tokens the certificate exact-scored instead of pruning.
+    pub survivors_scored: u64,
+}
+
+impl From<&ReuseStats> for ReuseSummary {
+    fn from(s: &ReuseStats) -> ReuseSummary {
+        ReuseSummary {
+            selects: s.selects,
+            hits: s.hits,
+            hit_rate: s.hit_rate(),
+            scorer_calls: s.scorer_calls,
+            scorer_reduction: s.scorer_reduction(),
+            refreshes: s.refreshes(),
+            refresh_cold: s.refresh_cold,
+            refresh_max_age: s.refresh_max_age,
+            refresh_drift: s.refresh_drift,
+            refresh_budget: s.refresh_budget,
+            refresh_grown: s.refresh_grown,
+            refresh_unsupported: s.refresh_unsupported,
+            survivors_scored: s.survivors_scored,
+        }
+    }
+}
+
+impl From<&SessionStats> for ReuseSummary {
+    fn from(s: &SessionStats) -> ReuseSummary {
+        ReuseSummary::from(&s.reuse)
+    }
+}
+
+impl ReuseSummary {
+    /// One-line table: reuse counters for the run.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "temporal reuse",
+            &[
+                "hit rate",
+                "hits/selects",
+                "scorer calls",
+                "reduction",
+                "refreshes (cold/age/drift/budget/grown/opaque)",
+                "survivors",
+            ],
+        );
+        t.row(vec![
+            format!("{:.1}%", self.hit_rate * 100.0),
+            format!("{}/{}", self.hits, self.selects),
+            self.scorer_calls.to_string(),
+            format!("{:.1}x", self.scorer_reduction),
+            format!(
+                "{} ({}/{}/{}/{}/{}/{})",
+                self.refreshes,
+                self.refresh_cold,
+                self.refresh_max_age,
+                self.refresh_drift,
+                self.refresh_budget,
+                self.refresh_grown,
+                self.refresh_unsupported
+            ),
+            self.survivors_scored.to_string(),
         ]);
         t.render()
     }
@@ -343,6 +449,7 @@ mod tests {
             decode_s: decode,
             mean_density: 0.5,
             kv_bytes_read: 1024,
+            kv_bytes_written: 256,
         }
     }
 
@@ -355,6 +462,7 @@ mod tests {
         assert!((s.throughput_tok_s - 10.0).abs() < 1e-9);
         assert!((s.mean_density - 0.5).abs() < 1e-12);
         assert_eq!(s.kv_bytes_read, 2048);
+        assert_eq!(s.kv_bytes_written, 512);
         // ttft from arrival includes queue wait: max = 0.5 + 0.2
         assert!((s.ttft.max - 0.7).abs() < 1e-9);
         // tpot divides decode time over tokens - 1 (first token is
@@ -439,6 +547,7 @@ mod tests {
             peak_blocks_in_use: 96,
             capacity_blocks: Some(128),
             cow_copies: 1,
+            reuse: Default::default(),
         };
         let s = PagingSummary::from(&stats);
         assert!((s.prefix_hit_rate - 0.75).abs() < 1e-12);
@@ -450,6 +559,35 @@ mod tests {
         let unbounded = PagingSummary::from(&SessionStats::default());
         assert!(unbounded.render().contains("unbounded"));
         assert_eq!(unbounded.prefix_hit_rate, 0.0);
+    }
+
+    #[test]
+    fn reuse_summary_derives_rates_and_renders() {
+        let stats = ReuseStats {
+            selects: 100,
+            hits: 88,
+            survivors_scored: 40,
+            scorer_calls: 12,
+            refresh_cold: 4,
+            refresh_max_age: 2,
+            refresh_drift: 3,
+            refresh_budget: 1,
+            refresh_grown: 2,
+            refresh_unsupported: 0,
+        };
+        let s = ReuseSummary::from(&stats);
+        assert!((s.hit_rate - 0.88).abs() < 1e-12);
+        assert!((s.scorer_reduction - 100.0 / 12.0).abs() < 1e-12);
+        assert_eq!(s.refreshes, 12);
+        assert_eq!(s.hits + s.refreshes, s.selects);
+        let out = s.render();
+        assert!(out.contains("## temporal reuse"));
+        assert!(out.contains("88.0%"), "{out}");
+        assert!(out.contains("88/100"));
+        // Reuse never ran: rates degrade gracefully.
+        let idle = ReuseSummary::from(&ReuseStats::default());
+        assert_eq!(idle.hit_rate, 0.0);
+        assert_eq!(idle.scorer_reduction, 1.0);
     }
 
     #[test]

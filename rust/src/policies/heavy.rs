@@ -7,6 +7,19 @@ use super::{sink_window_indices, top_indices_excluding, IndexPolicy, PolicyCtx, 
 use crate::attention::Selection;
 
 /// StreamingLLM: attention sinks + sliding window, nothing else.
+///
+/// ```
+/// use vattn::policies::{IndexPolicy, PolicyCtx, SinkWindowPolicy};
+/// use vattn::tensor::Mat;
+/// use vattn::util::Rng;
+///
+/// let mut rng = Rng::new(0);
+/// let (k, v) = (Mat::randn(128, 8, 1.0, &mut rng), Mat::randn(128, 8, 1.0, &mut rng));
+/// let q = vec![0.1; 8];
+/// let mut policy = SinkWindowPolicy::new(4, 16);
+/// let sel = policy.select(&mut PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 });
+/// assert_eq!(sel.len(), 20); // 4 sink + 16 window, query-independent
+/// ```
 pub struct SinkWindowPolicy {
     pub sink: SizeSpec,
     pub window: SizeSpec,
@@ -33,8 +46,26 @@ impl IndexPolicy for SinkWindowPolicy {
 }
 
 /// Generic approximate-top-k policy: sink + window + the `heavy` highest
-/// tokens according to a pluggable scorer (HashAttention, DoubleSparsity,
-/// Quest, PQCache, InfLLM, or the oracle). Deterministic attention.
+/// tokens according to a pluggable [`TopkScorer`] (HashAttention,
+/// DoubleSparsity, Quest, PQCache, InfLLM, or the oracle).
+/// Deterministic attention (Eq. 2) — no residual sample, no guarantee.
+///
+/// ```
+/// use vattn::policies::scorers::OracleScorer;
+/// use vattn::policies::{HeavyHitterPolicy, IndexPolicy, PolicyCtx, SizeSpec};
+/// use vattn::tensor::Mat;
+/// use vattn::util::Rng;
+///
+/// let mut rng = Rng::new(0);
+/// let (k, v) = (Mat::randn(256, 8, 1.0, &mut rng), Mat::randn(256, 8, 1.0, &mut rng));
+/// let q = vec![0.1; 8];
+/// let mut policy = HeavyHitterPolicy::new(Box::new(OracleScorer), SizeSpec::Abs(16));
+/// policy.sink = SizeSpec::Abs(4);
+/// policy.window = SizeSpec::Abs(8);
+/// let sel = policy.select(&mut PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 });
+/// assert_eq!(sel.len(), 4 + 8 + 16);
+/// assert!(sel.prob.iter().all(|&p| p == 1.0)); // fully deterministic
+/// ```
 pub struct HeavyHitterPolicy {
     pub sink: SizeSpec,
     pub window: SizeSpec,
@@ -73,6 +104,22 @@ impl IndexPolicy for HeavyHitterPolicy {
 /// queries seen so far. Irreversible in spirit — once a token has low
 /// accumulated mass it keeps losing — which is exactly the failure mode
 /// the paper calls out for multi-turn relevance shifts.
+///
+/// ```
+/// use vattn::policies::{H2OPolicy, IndexPolicy, PolicyCtx, SizeSpec};
+/// use vattn::tensor::Mat;
+/// use vattn::util::Rng;
+///
+/// let mut rng = Rng::new(0);
+/// let (k, v) = (Mat::randn(300, 8, 1.0, &mut rng), Mat::randn(300, 8, 1.0, &mut rng));
+/// let mut policy = H2OPolicy::new(SizeSpec::Abs(20));
+/// for step in 0..2 {
+///     let q = vec![0.05 * (step as f32 + 1.0); 8];
+///     let sel = policy.select(&mut PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step });
+///     assert!(sel.validate(300).is_ok());
+/// }
+/// policy.reset(); // per-sequence accumulator cleared between requests
+/// ```
 pub struct H2OPolicy {
     pub window: SizeSpec,
     pub heavy: SizeSpec,
@@ -115,7 +162,20 @@ impl IndexPolicy for H2OPolicy {
 }
 
 /// SnapKV: selection driven by attention pooled over an observation
-/// window of the most recent queries.
+/// window of the `obs_window` most recent queries.
+///
+/// ```
+/// use vattn::policies::{IndexPolicy, PolicyCtx, SizeSpec, SnapKvPolicy};
+/// use vattn::tensor::Mat;
+/// use vattn::util::Rng;
+///
+/// let mut rng = Rng::new(0);
+/// let (k, v) = (Mat::randn(200, 8, 1.0, &mut rng), Mat::randn(200, 8, 1.0, &mut rng));
+/// let q = vec![0.1; 8];
+/// let mut policy = SnapKvPolicy::new(SizeSpec::Abs(16), 3);
+/// let sel = policy.select(&mut PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 });
+/// assert!(sel.validate(200).is_ok());
+/// ```
 pub struct SnapKvPolicy {
     pub window: SizeSpec,
     pub heavy: SizeSpec,

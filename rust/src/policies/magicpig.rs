@@ -17,6 +17,25 @@ use crate::attention::Selection;
 use crate::tensor::{dot, norm2, Mat};
 use crate::util::Rng;
 
+/// MagicPig: LSH-sampled sparse attention with per-token collision
+/// probabilities feeding the Eq. 3 importance weights (see the module
+/// docs for the transform and the fidelity modes).
+///
+/// ```
+/// use vattn::policies::{IndexPolicy, MagicPigPolicy, PolicyCtx, SizeSpec};
+/// use vattn::tensor::Mat;
+/// use vattn::util::Rng;
+///
+/// let mut rng = Rng::new(0);
+/// let (k, v) = (Mat::randn(600, 16, 1.0, &mut rng), Mat::randn(600, 16, 1.0, &mut rng));
+/// let q = vec![0.1; 16];
+/// let mut policy = MagicPigPolicy::new(6, 32, 3);
+/// policy.sink = SizeSpec::Abs(8);
+/// policy.window = SizeSpec::Abs(8);
+/// let sel = policy.select(&mut PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 });
+/// assert!(sel.validate(600).is_ok());
+/// assert!(sel.len() >= 16); // anchors always present; LSH adds candidates
+/// ```
 pub struct MagicPigPolicy {
     pub k_bits: usize,
     pub l_tables: usize,

@@ -5,20 +5,27 @@
 //! approximate-top-k family (HashAttention, DoubleSparsity, Quest,
 //! PQCache, InfLLM), plus history-based H2O and SnapKV.
 //!
-//! A policy maps (KV cache, query) → `Selection` (indices +
+//! A policy maps (KV cache, query) → [`Selection`] (indices +
 //! probabilities). Attention itself is computed by
-//! `attention::sparse_sdpa` over that selection; quality metrics compare
-//! against `attention::dense_sdpa`.
+//! [`crate::attention::sparse_sdpa`] over that selection; quality
+//! metrics compare against [`crate::attention::dense_sdpa`].
+//!
+//! Cross-step *temporal reuse* of heavy-hitter selections lives in
+//! [`reuse`]: [`TemporalReusePolicy`] wraps a [`VAttentionPolicy`] and
+//! skips the full top-k re-score whenever a drift certificate proves
+//! the cached selection is still exact (see `docs/GUARANTEES.md` §6).
 
 pub mod heavy;
 pub mod magicpig;
 pub mod oracle;
+pub mod reuse;
 pub mod scorers;
 pub mod vattention;
 
 pub use heavy::{HeavyHitterPolicy, SinkWindowPolicy, SnapKvPolicy, H2OPolicy};
 pub use magicpig::MagicPigPolicy;
 pub use oracle::{HybridTopSamplePolicy, OracleTopKPolicy, OracleTopPPolicy, RandomSamplePolicy};
+pub use reuse::{ReuseConfig, ReuseStats, TemporalReusePolicy};
 pub use scorers::TopkScorer;
 pub use vattention::{BudgetDecision, VAttentionConfig, VAttentionPolicy};
 
@@ -47,11 +54,34 @@ impl<'a> PolicyCtx<'a> {
 
 /// An index-selection policy. `select` may mutate internal state
 /// (auxiliary caches, accumulated scores); `reset` clears per-sequence
-/// state between requests.
+/// state between requests — and between a preemption and its replay,
+/// which is what keeps replayed token streams byte-identical.
+///
+/// ```
+/// use vattn::policies::{IndexPolicy, PolicyCtx, SinkWindowPolicy};
+/// use vattn::tensor::Mat;
+/// use vattn::util::Rng;
+///
+/// let mut rng = Rng::new(0);
+/// let k = Mat::randn(64, 8, 1.0, &mut rng);
+/// let v = Mat::randn(64, 8, 1.0, &mut rng);
+/// let q = vec![0.1; 8];
+/// let mut policy = SinkWindowPolicy::new(4, 8);
+/// let sel = policy.select(&mut PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 });
+/// assert_eq!(sel.len(), 12);
+/// assert!(sel.validate(64).is_ok());
+/// ```
 pub trait IndexPolicy: Send {
     fn name(&self) -> String;
     fn select(&mut self, ctx: &mut PolicyCtx) -> Selection;
     fn reset(&mut self) {}
+    /// Cross-step reuse counters, for policies that cache selections
+    /// across decode steps ([`TemporalReusePolicy`]). `None` for
+    /// stateless policies; the serving session aggregates `Some`
+    /// returns into [`crate::server::SessionStats`].
+    fn reuse_stats(&self) -> Option<&ReuseStats> {
+        None
+    }
 }
 
 /// Size given either as an absolute token count or a fraction of n.

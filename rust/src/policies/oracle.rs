@@ -8,6 +8,19 @@ use crate::attention::{attention_scores, logits_all, Selection};
 
 /// Oracle top-k: exact query–key logits, pick the `heavy` largest plus
 /// sink and window tokens. Deterministic attention (Eq. 2).
+///
+/// ```
+/// use vattn::policies::{IndexPolicy, OracleTopKPolicy, PolicyCtx};
+/// use vattn::tensor::Mat;
+/// use vattn::util::Rng;
+///
+/// let mut rng = Rng::new(0);
+/// let (k, v) = (Mat::randn(600, 8, 1.0, &mut rng), Mat::randn(600, 8, 1.0, &mut rng));
+/// let q = vec![0.1; 8];
+/// let mut policy = OracleTopKPolicy::with_fraction(0.05);
+/// let sel = policy.select(&mut PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 });
+/// assert_eq!(sel.len(), 128 + 128 + 30); // sink + window + 5% of 600
+/// ```
 pub struct OracleTopKPolicy {
     pub sink: SizeSpec,
     pub window: SizeSpec,
@@ -41,6 +54,19 @@ impl IndexPolicy for OracleTopKPolicy {
 
 /// Oracle top-p: smallest set of highest-score tokens whose cumulative
 /// full-attention scores exceed `p`, plus sink/window.
+///
+/// ```
+/// use vattn::policies::{IndexPolicy, OracleTopPPolicy, PolicyCtx};
+/// use vattn::tensor::Mat;
+/// use vattn::util::Rng;
+///
+/// let mut rng = Rng::new(0);
+/// let (k, v) = (Mat::randn(300, 8, 1.0, &mut rng), Mat::randn(300, 8, 1.0, &mut rng));
+/// let q = vec![0.1; 8];
+/// let mut policy = OracleTopPPolicy::new(0.9);
+/// let sel = policy.select(&mut PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 });
+/// assert!(sel.validate(300).is_ok());
+/// ```
 pub struct OracleTopPPolicy {
     pub sink: SizeSpec,
     pub window: SizeSpec,
@@ -84,6 +110,23 @@ impl IndexPolicy for OracleTopPPolicy {
 
 /// Uniform random sampling of `budget` tokens (plus sink/window as
 /// deterministic anchors), estimated with Eq. 3 importance weights.
+///
+/// ```
+/// use vattn::policies::{IndexPolicy, PolicyCtx, RandomSamplePolicy, SizeSpec};
+/// use vattn::tensor::Mat;
+/// use vattn::util::Rng;
+///
+/// let mut rng = Rng::new(0);
+/// let (k, v) = (Mat::randn(1000, 8, 1.0, &mut rng), Mat::randn(1000, 8, 1.0, &mut rng));
+/// let q = vec![0.1; 8];
+/// let mut policy = RandomSamplePolicy::with_fraction(0.1);
+/// policy.sink = SizeSpec::Abs(8);
+/// policy.window = SizeSpec::Abs(8);
+/// let sel = policy.select(&mut PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 });
+/// // 16 anchors at p = 1 plus 100 sampled tokens at p = 100 / 984.
+/// assert_eq!(sel.len(), 116);
+/// assert_eq!(sel.prob.iter().filter(|&&p| p < 1.0).count(), 100);
+/// ```
 pub struct RandomSamplePolicy {
     pub sink: SizeSpec,
     pub window: SizeSpec,
@@ -123,6 +166,20 @@ impl IndexPolicy for RandomSamplePolicy {
 
 /// The §3 hybrid: half the budget on oracle-top, half on uniform
 /// sampling of the residual — the simplified precursor of vAttention.
+///
+/// ```
+/// use vattn::policies::{HybridTopSamplePolicy, IndexPolicy, PolicyCtx};
+/// use vattn::tensor::Mat;
+/// use vattn::util::Rng;
+///
+/// let mut rng = Rng::new(0);
+/// let (k, v) = (Mat::randn(1000, 8, 1.0, &mut rng), Mat::randn(1000, 8, 1.0, &mut rng));
+/// let q = vec![0.1; 8];
+/// let mut policy = HybridTopSamplePolicy::new(0.1); // 100-token budget
+/// let sel = policy.select(&mut PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 });
+/// assert_eq!(sel.len(), 100);
+/// assert_eq!(sel.prob.iter().filter(|&&p| p == 1.0).count(), 50); // oracle-top half
+/// ```
 pub struct HybridTopSamplePolicy {
     pub budget: SizeSpec,
     /// Fraction of the budget spent on oracle-top (paper uses 0.5).

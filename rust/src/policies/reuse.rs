@@ -1,0 +1,756 @@
+//! Temporal heavy-hitter reuse with verified refresh.
+//!
+//! The decode hot path re-runs the top-k predictor from scratch every
+//! step, yet heavy-hitter sets are strongly temporally correlated across
+//! adjacent decode steps — the observation behind Guess-Verify-Refine
+//! and SpecAttn. [`TemporalReusePolicy`] wraps a [`VAttentionPolicy`]
+//! and caches the previous step's heavy-hitter selection per
+//! (request, layer, head); on each subsequent step it *certifies* the
+//! cached set against the current query with a cheap drift bound and
+//! only re-invokes the underlying [`TopkScorer`] (a full O(n·d) scan)
+//! when certification fails.
+//!
+//! # The drift certificate
+//!
+//! At the last full re-score ("refresh") the policy anchors the exact
+//! logits `L0[i] = ⟨k_i, q₀⟩` for every cached token, the anchor query
+//! `q₀`, and the selected heavy set `C`. For a later query `q_t`, every
+//! logit is bracketed without touching K again:
+//!
+//! ```text
+//! |⟨k_i, q_t⟩ − L0[i]| = |⟨k_i, q_t − q₀⟩| ≤ ‖k_i‖·‖q_t − q₀‖   (Cauchy–Schwarz)
+//! ```
+//!
+//! so `⟨k_i, q_t⟩ ≤ L0[i] + ‖k_i‖·Δ` with `Δ = ‖q_t − q₀‖`. Per-token
+//! key norms `‖k_i‖` are maintained incrementally. The reuse step
+//! exact-scores the cached set `C` (h·d work), takes the h-th largest
+//! of those logits as a threshold θ — a lower bound on the fresh top-k
+//! cut — and scans the upper bounds of every other residual token
+//! (O(n) work, d× cheaper than scoring). Tokens whose bound clears θ
+//! ("survivors") are exact-scored and compete; everything else is
+//! *provably* outside the fresh top-k. The resulting heavy set is
+//! therefore **identical to what a full re-score would select** (up to
+//! exact floating-point ties), which is what makes reuse-enabled token
+//! streams byte-identical to reuse-disabled runs — asserted by
+//! `tests/temporal_reuse.rs` and `bench_engine`.
+//!
+//! # Why the (ε, δ) contract is never weakened
+//!
+//! Certification (base sample → statistics → budget, Algorithm 2 via
+//! [`crate::budget`]) is re-run on *every* step from a fresh residual
+//! sample; only the heavy-set computation is reused, and the certificate
+//! makes it exact. When the certificate cannot prune (query drift, cache
+//! growth, age), the policy falls back to a full re-score — it never
+//! serves an unverified guess. See `docs/GUARANTEES.md` §6 for the
+//! full argument.
+//!
+//! Reuse requires a scorer whose scores are exact logits
+//! ([`TopkScorer::scores_are_logits`], i.e. the oracle predictor);
+//! other scorers are legal but refresh on every step (counted under
+//! [`ReuseStats::refresh_unsupported`]).
+
+use super::scorers::TopkScorer;
+use super::vattention::VAttentionPolicy;
+use super::{IndexPolicy, PolicyCtx};
+use crate::attention::Selection;
+use crate::tensor::{dot, norm2};
+
+/// Absolute slack added to the drift bound before a token may be pruned,
+/// absorbing f32 rounding in the dot products, norms and products that
+/// enter the certificate. Pruning is only ever made *more* conservative
+/// by slack — a spuriously surviving token is exact-scored and loses on
+/// its true logit, so correctness never depends on this constant being
+/// tight.
+pub const REUSE_DRIFT_SLACK_ABS: f32 = 1e-3;
+
+/// Relative slack component, scaled by the magnitudes entering the
+/// pruning comparison (see [`REUSE_DRIFT_SLACK_ABS`]).
+pub const REUSE_DRIFT_SLACK_REL: f32 = 1e-4;
+
+/// Tuning knobs for [`TemporalReusePolicy`].
+#[derive(Clone, Debug)]
+pub struct ReuseConfig {
+    /// Steps a cached heavy set may be served before a forced full
+    /// re-score (`vattn serve --reuse-max-age`). Bounds how long the
+    /// anchor logits may age even when the certificate keeps passing.
+    pub max_age: usize,
+    /// Fraction of the cache the bound scan may rescue as survivors
+    /// before reuse is abandoned for a full re-score: past this point
+    /// certification costs as much as scoring.
+    pub survivor_cap_frac: f64,
+    /// Verified-refresh trigger from the budget machinery: when the
+    /// certified sample budget (as a fraction of the residual) grows by
+    /// this factor over its value at the last refresh — evidence that
+    /// the residual variance, and hence the observed error bound, has
+    /// drifted — the next step re-scores in full and re-anchors.
+    /// `None` disables the trigger.
+    pub budget_drift_factor: Option<f64>,
+}
+
+impl Default for ReuseConfig {
+    fn default() -> Self {
+        ReuseConfig { max_age: 32, survivor_cap_frac: 0.25, budget_drift_factor: Some(4.0) }
+    }
+}
+
+/// Cross-step reuse counters. `selects == hits + refreshes()` and
+/// `scorer_calls == refreshes()` are invariants: every select is either
+/// served from the certificate or escalated to exactly one scorer call.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ReuseStats {
+    /// [`IndexPolicy::select`] calls observed.
+    pub selects: u64,
+    /// Selects served from the cached heavy set (certificate passed).
+    pub hits: u64,
+    /// Tokens outside the cached set that the certificate could not
+    /// prune and therefore exact-scored (includes tokens appended since
+    /// the anchor). A health metric: high survivor counts with a high
+    /// hit rate mean the bound is doing real work.
+    pub survivors_scored: u64,
+    /// Underlying [`TopkScorer::score`] invocations (full K scans).
+    pub scorer_calls: u64,
+    /// Refreshes because no anchor existed (first decode step, after
+    /// [`IndexPolicy::reset`] — e.g. a preemption replay — or a shrunk
+    /// cache).
+    pub refresh_cold: u64,
+    /// Refreshes forced by [`ReuseConfig::max_age`].
+    pub refresh_max_age: u64,
+    /// Refreshes because query drift left too many tokens uncertified
+    /// ([`ReuseConfig::survivor_cap_frac`]).
+    pub refresh_drift: u64,
+    /// Verified refreshes triggered by certified-budget growth
+    /// ([`ReuseConfig::budget_drift_factor`]).
+    pub refresh_budget: u64,
+    /// Refreshes because the heavy budget outgrew the cached set (e.g.
+    /// a `SizeSpec::Frac` heavy budget as n grows).
+    pub refresh_grown: u64,
+    /// Refreshes because the underlying scorer does not expose exact
+    /// logits, so the certificate cannot apply.
+    pub refresh_unsupported: u64,
+}
+
+impl ReuseStats {
+    /// Total full re-scores, across all causes.
+    pub fn refreshes(&self) -> u64 {
+        self.refresh_cold
+            + self.refresh_max_age
+            + self.refresh_drift
+            + self.refresh_budget
+            + self.refresh_grown
+            + self.refresh_unsupported
+    }
+
+    /// Fraction of selects served from the cached set.
+    pub fn hit_rate(&self) -> f64 {
+        if self.selects == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.selects as f64
+        }
+    }
+
+    /// How many times fewer full scans ran than a reuse-free policy
+    /// would have issued (which scores once per select). ≥ 1 by
+    /// construction.
+    pub fn scorer_reduction(&self) -> f64 {
+        if self.scorer_calls == 0 {
+            1.0
+        } else {
+            self.selects as f64 / self.scorer_calls as f64
+        }
+    }
+
+    /// Accumulate another policy's counters (per-request / per-session
+    /// aggregation).
+    pub fn merge(&mut self, other: &ReuseStats) {
+        self.selects += other.selects;
+        self.hits += other.hits;
+        self.survivors_scored += other.survivors_scored;
+        self.scorer_calls += other.scorer_calls;
+        self.refresh_cold += other.refresh_cold;
+        self.refresh_max_age += other.refresh_max_age;
+        self.refresh_drift += other.refresh_drift;
+        self.refresh_budget += other.refresh_budget;
+        self.refresh_grown += other.refresh_grown;
+        self.refresh_unsupported += other.refresh_unsupported;
+    }
+}
+
+enum RefreshCause {
+    Cold,
+    MaxAge,
+    Drift,
+    Budget,
+    Grown,
+    Unsupported,
+}
+
+/// Everything anchored at the last full re-score. Cleared by
+/// [`IndexPolicy::reset`], so a preemption replay re-certifies from a
+/// cold start and replays the exact selection sequence of its first
+/// run.
+struct ReuseAnchor {
+    /// Exact logits ⟨k_i, q₀⟩ for every token cached at anchor time
+    /// (length = tokens at anchor).
+    l0: Vec<f32>,
+    /// Largest cache length this anchor has certified against (grows
+    /// with hits; the cached heavy set may reference indices up to
+    /// this). Any select at a smaller n means the cache shrank without
+    /// a reset — the anchor is discarded (cold refresh).
+    n_seen: usize,
+    /// The anchor query (pre-scaled, like every `PolicyCtx::q_scaled`).
+    q0: Vec<f32>,
+    /// The cached heavy set, sorted ascending; refreshed to the served
+    /// set after every hit (the "previous step's selection").
+    heavy: Vec<usize>,
+    /// Certified budget / residual size at anchor time, for the
+    /// budget-drift trigger (0 when the anchor step had no residual).
+    budget_frac0: f64,
+    /// Steps served since the anchor.
+    age: usize,
+    /// Set when the budget-drift trigger fired; the next select
+    /// re-scores in full.
+    force_refresh: bool,
+}
+
+/// Cross-step index reuse around a [`VAttentionPolicy`]: serve the
+/// previous step's heavy-hitter selection whenever a drift certificate
+/// proves it still *is* the fresh top-k, and fall back to the wrapped
+/// policy's full re-score otherwise. See the module docs for the
+/// certificate and the guarantee argument.
+///
+/// ```
+/// use vattn::policies::{
+///     IndexPolicy, PolicyCtx, ReuseConfig, TemporalReusePolicy, VAttentionConfig,
+///     VAttentionPolicy,
+/// };
+/// use vattn::tensor::Mat;
+/// use vattn::util::Rng;
+///
+/// let mut rng = Rng::new(0);
+/// let k = Mat::randn(512, 8, 1.0, &mut rng);
+/// let v = Mat::randn(512, 8, 1.0, &mut rng);
+/// let q = vec![0.1; 8];
+/// let inner = VAttentionPolicy::oracle(VAttentionConfig::default().with_guarantee(0.2, 0.2));
+/// let mut policy = TemporalReusePolicy::new(inner, ReuseConfig::default());
+/// // First select: no anchor yet — full score ("cold" refresh).
+/// let a = policy.select(&mut PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 });
+/// // Same query again: zero drift, the certificate passes — no scorer call.
+/// let b = policy.select(&mut PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 1 });
+/// assert!(a.validate(512).is_ok() && b.validate(512).is_ok());
+/// assert_eq!(policy.stats().scorer_calls, 1);
+/// assert_eq!(policy.stats().hits, 1);
+/// ```
+pub struct TemporalReusePolicy {
+    /// The wrapped policy; its [`VAttentionPolicy::last`] diagnostics
+    /// stay live (reuse routes every step through its budget tail).
+    pub inner: VAttentionPolicy,
+    rcfg: ReuseConfig,
+    anchor: Option<ReuseAnchor>,
+    /// Incrementally maintained per-token key norms ‖k_i‖.
+    norms: Vec<f32>,
+    stats: ReuseStats,
+}
+
+impl TemporalReusePolicy {
+    pub fn new(inner: VAttentionPolicy, rcfg: ReuseConfig) -> TemporalReusePolicy {
+        TemporalReusePolicy { inner, rcfg, anchor: None, norms: Vec::new(), stats: ReuseStats::default() }
+    }
+
+    /// Cumulative reuse counters for this (request, layer, head) policy.
+    pub fn stats(&self) -> &ReuseStats {
+        &self.stats
+    }
+
+    fn count(&mut self, cause: &RefreshCause) {
+        match cause {
+            RefreshCause::Cold => self.stats.refresh_cold += 1,
+            RefreshCause::MaxAge => self.stats.refresh_max_age += 1,
+            RefreshCause::Drift => self.stats.refresh_drift += 1,
+            RefreshCause::Budget => self.stats.refresh_budget += 1,
+            RefreshCause::Grown => self.stats.refresh_grown += 1,
+            RefreshCause::Unsupported => self.stats.refresh_unsupported += 1,
+        }
+    }
+
+    /// Extend (or rebuild, if the cache shrank) the incremental key
+    /// norms up to the current cache length.
+    fn sync_norms(&mut self, k: &crate::tensor::Mat) {
+        if self.norms.len() > k.rows {
+            self.norms.clear();
+        }
+        for i in self.norms.len()..k.rows {
+            self.norms.push(norm2(k.row(i)));
+        }
+    }
+
+    /// Mandatory-refresh check, run before any reuse attempt. `None`
+    /// means the certificate may be tried.
+    fn forced_refresh(&mut self, n: usize) -> Option<RefreshCause> {
+        if !self.inner.scorer.scores_are_logits() {
+            return Some(RefreshCause::Unsupported);
+        }
+        let Some(anchor) = self.anchor.as_mut() else {
+            return Some(RefreshCause::Cold);
+        };
+        if anchor.n_seen > n {
+            // The cache shrank without a reset — treat as cold, and
+            // drop the norms too: rows may be rewritten before the
+            // cache regrows, and sync_norms only ever extends. (Rows
+            // rewritten *without* the length ever dropping are
+            // undetectable here — like every incremental scorer in
+            // this crate, the policy assumes an append-only cache
+            // between [`IndexPolicy::reset`] calls, which is the
+            // serving session's contract.)
+            self.norms.clear();
+            return Some(RefreshCause::Cold);
+        }
+        if anchor.force_refresh {
+            return Some(RefreshCause::Budget);
+        }
+        anchor.age += 1;
+        if anchor.age > self.rcfg.max_age {
+            return Some(RefreshCause::MaxAge);
+        }
+        None
+    }
+
+    /// The heavy part of a just-computed selection: the deterministic
+    /// prefix of `sel` is I_f (sorted); drop the sink/window region and
+    /// what remains is the (sorted) heavy set. Shared by the refresh
+    /// and hit paths so the anchor stays consistent between them.
+    fn extract_heavy(&self, sel: &Selection, sink: usize, win_start: usize) -> Vec<usize> {
+        let last = self.inner.last.as_ref().expect("select_from_scores records a decision");
+        sel.idx[..last.n_fixed]
+            .iter()
+            .copied()
+            .filter(|&i| i >= sink && i < win_start)
+            .collect()
+    }
+
+    /// Full re-score through the wrapped policy, then (when the scorer
+    /// is logit-exact) anchor the certificate state for later steps.
+    fn refresh(&mut self, ctx: &mut PolicyCtx, cause: RefreshCause) -> Selection {
+        self.count(&cause);
+        self.stats.scorer_calls += 1;
+        let scores = self.inner.scorer.score(ctx);
+        let logit_exact = self.inner.scorer.scores_are_logits();
+        let sel = self.inner.select_from_scores(ctx, &scores, logit_exact);
+        self.anchor = None;
+        if logit_exact {
+            let n = ctx.n();
+            let cfg = &self.inner.cfg;
+            let sink = cfg.sink.resolve(n);
+            let win_start = n.saturating_sub(cfg.window.resolve(n)).max(sink);
+            let heavy = self.extract_heavy(&sel, sink, win_start);
+            let last = self.inner.last.as_ref().expect("select_from_scores records a decision");
+            let budget_frac0 = if last.n_s > 0 { last.budget as f64 / last.n_s as f64 } else { 0.0 };
+            self.anchor = Some(ReuseAnchor {
+                l0: scores,
+                n_seen: n,
+                q0: ctx.q_scaled.to_vec(),
+                heavy,
+                budget_frac0,
+                age: 0,
+                force_refresh: false,
+            });
+        }
+        sel
+    }
+
+    /// The certificate fast path. Returns the selection — provably equal
+    /// to a full re-score's — or the refresh cause that prevented
+    /// certification.
+    fn try_reuse(&mut self, ctx: &mut PolicyCtx) -> Result<Selection, RefreshCause> {
+        let n = ctx.n();
+        let cfg = &self.inner.cfg;
+        let sink = cfg.sink.resolve(n);
+        let win_start = n.saturating_sub(cfg.window.resolve(n)).max(sink);
+        let in_fixed = |i: usize| i < sink || i >= win_start;
+        let h_now = cfg.heavy.resolve(n);
+
+        let anchor = self.anchor.take().expect("forced_refresh checked the anchor");
+        let n0 = anchor.l0.len();
+
+        // Exact-score the cached heavy set; its h-th largest current
+        // logit lower-bounds the fresh top-k cut.
+        let mut scores = vec![f32::NEG_INFINITY; n];
+        let mut c_logits: Vec<f32> = Vec::with_capacity(anchor.heavy.len());
+        for &i in &anchor.heavy {
+            if in_fixed(i) {
+                continue; // swallowed by a grown sink/window region
+            }
+            let l = dot(ctx.k.row(i), ctx.q_scaled);
+            scores[i] = l;
+            c_logits.push(l);
+        }
+        if c_logits.len() < h_now {
+            // The anchor is stale either way; `refresh` rebuilds it.
+            return Err(RefreshCause::Grown);
+        }
+        let theta = if h_now == 0 {
+            f32::INFINITY
+        } else {
+            let mut sorted = c_logits.clone();
+            sorted.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+            sorted[h_now - 1]
+        };
+
+        // Tokens appended since the anchor have no L0 — exact-score the
+        // (few) non-fixed ones unconditionally. Ones already scored as
+        // cached-set members are skipped (an appended token can win a
+        // heavy slot and land in `anchor.heavy` on a later hit).
+        let mut scored_nonfixed = c_logits.len();
+        for i in n0..n {
+            if !in_fixed(i) && scores[i] == f32::NEG_INFINITY {
+                scores[i] = dot(ctx.k.row(i), ctx.q_scaled);
+                scored_nonfixed += 1;
+            }
+        }
+        let new_scored = scored_nonfixed - c_logits.len();
+
+        // Drift-bound scan over every other anchored token.
+        let delta = {
+            let mut d2 = 0.0f32;
+            for (a, b) in ctx.q_scaled.iter().zip(anchor.q0.iter()) {
+                let t = a - b;
+                d2 += t * t;
+            }
+            d2.sqrt()
+        };
+        let cap = ((self.rcfg.survivor_cap_frac * n as f64) as usize).max(8);
+        let mut survivors = 0usize;
+        let mut cached = anchor.heavy.iter().peekable();
+        for i in 0..n0 {
+            if cached.peek() == Some(&&i) {
+                cached.next();
+                continue;
+            }
+            if in_fixed(i) {
+                continue;
+            }
+            let reach = self.norms[i] * delta;
+            let ub = anchor.l0[i] + reach;
+            let slack = REUSE_DRIFT_SLACK_ABS
+                + REUSE_DRIFT_SLACK_REL * (theta.abs() + anchor.l0[i].abs() + reach);
+            if ub + slack > theta {
+                survivors += 1;
+                if survivors > cap {
+                    return Err(RefreshCause::Drift);
+                }
+                scores[i] = dot(ctx.k.row(i), ctx.q_scaled);
+            }
+        }
+        scored_nonfixed += survivors;
+        if scored_nonfixed < h_now {
+            return Err(RefreshCause::Grown);
+        }
+        self.stats.survivors_scored += (survivors + new_scored) as u64;
+
+        // Certified: the top-h of the scored candidates is the fresh
+        // top-h. Route the budget/sampling tail through the wrapped
+        // policy (scores_are_logits = false — the vector is only
+        // partially exact, so the statistics re-derive logits from K).
+        let sel = self.inner.select_from_scores(ctx, &scores, false);
+        let heavy_new = self.extract_heavy(&sel, sink, win_start);
+        let mut anchor = anchor;
+        anchor.heavy = heavy_new;
+        anchor.n_seen = n;
+        if let Some(factor) = self.rcfg.budget_drift_factor {
+            let last = self.inner.last.as_ref().expect("select_from_scores records a decision");
+            if last.n_s > 0 && anchor.budget_frac0 > 0.0 {
+                let frac = last.budget as f64 / last.n_s as f64;
+                if frac > factor * anchor.budget_frac0 {
+                    anchor.force_refresh = true;
+                }
+            }
+        }
+        self.anchor = Some(anchor);
+        Ok(sel)
+    }
+}
+
+impl IndexPolicy for TemporalReusePolicy {
+    fn name(&self) -> String {
+        format!("temporal-reuse({})", self.inner.name())
+    }
+
+    fn select(&mut self, ctx: &mut PolicyCtx) -> Selection {
+        self.stats.selects += 1;
+        if let Some(cause) = self.forced_refresh(ctx.n()) {
+            return self.refresh(ctx, cause);
+        }
+        self.sync_norms(ctx.k);
+        match self.try_reuse(ctx) {
+            Ok(sel) => {
+                self.stats.hits += 1;
+                sel
+            }
+            Err(cause) => self.refresh(ctx, cause),
+        }
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+        self.anchor = None;
+        self.norms.clear();
+    }
+
+    fn reuse_stats(&self) -> Option<&ReuseStats> {
+        Some(&self.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::{SizeSpec, VAttentionConfig};
+    use crate::tensor::Mat;
+    use crate::util::Rng;
+
+    fn vcfg(sink: usize, window: usize, heavy: SizeSpec) -> VAttentionConfig {
+        VAttentionConfig {
+            sink: SizeSpec::Abs(sink),
+            window: SizeSpec::Abs(window),
+            heavy,
+            base_rate: 0.05,
+            eps: 0.2,
+            delta: 0.2,
+            verify: crate::budget::Verify::Denominator,
+            bound: crate::budget::Bound::Clt,
+            floor_at_base: true,
+        }
+    }
+
+    /// K with `n_heavy` planted rows strongly aligned to e0 and a weak
+    /// random background: a temporally stable heavy-hitter structure.
+    fn planted(n: usize, d: usize, n_heavy: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let mut k = Mat::randn(n, d, 0.1, &mut rng);
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+        for j in 0..n_heavy {
+            let row = 100 + j * 3;
+            for c in 0..d {
+                k.set(row, c, if c == 0 { 10.0 } else { 0.0 });
+            }
+        }
+        (k, v)
+    }
+
+    /// A slowly drifting query stream around e0.
+    fn drifting_query(d: usize, step: usize, scale: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed ^ (step as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        (0..d)
+            .map(|c| if c == 0 { 1.0 } else { 0.0 } + scale * rng.normal32(0.0, 1.0))
+            .collect()
+    }
+
+    #[test]
+    fn reuse_selections_equal_fresh_policy_on_stable_stream() {
+        let (k, v) = planted(512, 16, 8, 1);
+        let cfg = vcfg(4, 8, SizeSpec::Abs(8));
+        let mut fresh = VAttentionPolicy::oracle(cfg.clone());
+        let mut reuse = TemporalReusePolicy::new(
+            VAttentionPolicy::oracle(cfg),
+            ReuseConfig { max_age: 1000, ..Default::default() },
+        );
+        let mut rng_a = Rng::new(7);
+        let mut rng_b = Rng::new(7);
+        for step in 0..32 {
+            let q = drifting_query(16, step, 0.01, 3);
+            let sa = fresh.select(&mut PolicyCtx {
+                k: &k,
+                v: &v,
+                q_scaled: &q,
+                rng: &mut rng_a,
+                step,
+            });
+            let sb = reuse.select(&mut PolicyCtx {
+                k: &k,
+                v: &v,
+                q_scaled: &q,
+                rng: &mut rng_b,
+                step,
+            });
+            assert_eq!(sa.idx, sb.idx, "index divergence at step {step}");
+            assert_eq!(sa.prob, sb.prob, "probability divergence at step {step}");
+        }
+        let st = reuse.stats();
+        assert_eq!(st.selects, 32);
+        assert_eq!(st.scorer_calls, 1, "only the cold refresh may scan: {st:?}");
+        assert_eq!(st.hits, 31);
+        assert!(st.scorer_reduction() >= 2.0);
+        assert_eq!(st.selects, st.hits + st.refreshes());
+    }
+
+    #[test]
+    fn reuse_selections_equal_fresh_policy_under_adversarial_drift() {
+        // Unstructured keys and fully random queries: the certificate
+        // mostly fails, reuse degenerates to refresh-every-step — and
+        // the selections still match the fresh policy exactly.
+        let mut rng = Rng::new(11);
+        let k = Mat::randn(400, 16, 1.0, &mut rng);
+        let v = Mat::randn(400, 16, 1.0, &mut rng);
+        let cfg = vcfg(8, 8, SizeSpec::Frac(0.05));
+        let mut fresh = VAttentionPolicy::oracle(cfg.clone());
+        let mut reuse = TemporalReusePolicy::new(VAttentionPolicy::oracle(cfg), ReuseConfig::default());
+        let mut rng_a = Rng::new(13);
+        let mut rng_b = Rng::new(13);
+        for step in 0..20 {
+            let q: Vec<f32> = {
+                let mut qr = Rng::new(100 + step as u64);
+                (0..16).map(|_| qr.normal32(0.0, 0.25)).collect()
+            };
+            let sa = fresh.select(&mut PolicyCtx {
+                k: &k,
+                v: &v,
+                q_scaled: &q,
+                rng: &mut rng_a,
+                step,
+            });
+            let sb = reuse.select(&mut PolicyCtx {
+                k: &k,
+                v: &v,
+                q_scaled: &q,
+                rng: &mut rng_b,
+                step,
+            });
+            assert_eq!(sa.idx, sb.idx, "index divergence at step {step}");
+            assert_eq!(sa.prob, sb.prob, "probability divergence at step {step}");
+        }
+        let st = reuse.stats().clone();
+        assert_eq!(st.selects, st.hits + st.refreshes());
+        assert_eq!(st.scorer_calls, st.refreshes());
+    }
+
+    #[test]
+    fn reuse_tracks_growing_cache() {
+        // Rows appended between selects (the decode pattern): new tokens
+        // are exact-scored until a refresh re-anchors them.
+        let (k_full, v_full) = planted(256, 16, 6, 5);
+        let cfg = vcfg(4, 16, SizeSpec::Abs(6));
+        let mut fresh = VAttentionPolicy::oracle(cfg.clone());
+        let mut reuse = TemporalReusePolicy::new(
+            VAttentionPolicy::oracle(cfg),
+            ReuseConfig { max_age: 1000, ..Default::default() },
+        );
+        let mut rng_a = Rng::new(17);
+        let mut rng_b = Rng::new(17);
+        for step in 0..32 {
+            let n_t = 192 + 2 * step; // grows by 2 rows per step
+            let k = Mat::from_vec(n_t, 16, k_full.data[..n_t * 16].to_vec());
+            let v = Mat::from_vec(n_t, 16, v_full.data[..n_t * 16].to_vec());
+            let q = drifting_query(16, step, 0.01, 23);
+            let sa = fresh.select(&mut PolicyCtx {
+                k: &k,
+                v: &v,
+                q_scaled: &q,
+                rng: &mut rng_a,
+                step,
+            });
+            let sb = reuse.select(&mut PolicyCtx {
+                k: &k,
+                v: &v,
+                q_scaled: &q,
+                rng: &mut rng_b,
+                step,
+            });
+            assert_eq!(sa.idx, sb.idx, "index divergence at step {step}");
+            assert_eq!(sa.prob, sb.prob, "probability divergence at step {step}");
+        }
+        assert!(reuse.stats().hits > 0, "{:?}", reuse.stats());
+    }
+
+    #[test]
+    fn max_age_forces_refresh() {
+        let (k, v) = planted(512, 16, 8, 9);
+        let cfg = vcfg(4, 8, SizeSpec::Abs(8));
+        let mut reuse = TemporalReusePolicy::new(
+            VAttentionPolicy::oracle(cfg),
+            ReuseConfig { max_age: 4, budget_drift_factor: None, ..Default::default() },
+        );
+        let mut rng = Rng::new(31);
+        let q = drifting_query(16, 0, 0.0, 1);
+        for step in 0..16 {
+            reuse.select(&mut PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step });
+        }
+        let st = reuse.stats();
+        assert!(st.refresh_max_age >= 2, "{st:?}");
+        assert_eq!(st.selects, st.hits + st.refreshes());
+    }
+
+    #[test]
+    fn adversarial_query_jump_triggers_drift_refresh() {
+        let mut rng = Rng::new(41);
+        let k = Mat::randn(512, 16, 1.0, &mut rng);
+        let v = Mat::randn(512, 16, 1.0, &mut rng);
+        let cfg = vcfg(4, 8, SizeSpec::Abs(16));
+        let mut reuse = TemporalReusePolicy::new(
+            VAttentionPolicy::oracle(cfg),
+            ReuseConfig { budget_drift_factor: None, ..Default::default() },
+        );
+        let q0: Vec<f32> = (0..16).map(|c| if c == 0 { 1.0 } else { 0.0 }).collect();
+        let q1: Vec<f32> = q0.iter().map(|x| -x).collect(); // 180° flip
+        reuse.select(&mut PolicyCtx { k: &k, v: &v, q_scaled: &q0, rng: &mut rng, step: 0 });
+        reuse.select(&mut PolicyCtx { k: &k, v: &v, q_scaled: &q1, rng: &mut rng, step: 1 });
+        let st = reuse.stats();
+        assert_eq!(st.refresh_cold, 1);
+        assert_eq!(st.refresh_drift, 1, "{st:?}");
+        assert_eq!(st.hits, 0);
+    }
+
+    #[test]
+    fn reset_clears_anchor_and_replays_identically() {
+        let (k, v) = planted(384, 16, 8, 13);
+        let cfg = vcfg(4, 8, SizeSpec::Abs(8));
+        let run = |policy: &mut TemporalReusePolicy| -> Vec<Vec<usize>> {
+            let mut rng = Rng::new(19);
+            (0..8)
+                .map(|step| {
+                    let q = drifting_query(16, step, 0.01, 29);
+                    policy
+                        .select(&mut PolicyCtx {
+                            k: &k,
+                            v: &v,
+                            q_scaled: &q,
+                            rng: &mut rng,
+                            step,
+                        })
+                        .idx
+                })
+                .collect()
+        };
+        let mut policy = TemporalReusePolicy::new(
+            VAttentionPolicy::oracle(cfg),
+            ReuseConfig { max_age: 1000, ..Default::default() },
+        );
+        let first = run(&mut policy);
+        let cold_before = policy.stats().refresh_cold;
+        policy.reset();
+        let replay = run(&mut policy);
+        assert_eq!(first, replay, "reset must make the replay byte-identical");
+        assert_eq!(policy.stats().refresh_cold, cold_before + 1, "replay restarts cold");
+    }
+
+    #[test]
+    fn unsupported_scorer_refreshes_every_step() {
+        let mut rng = Rng::new(43);
+        let k = Mat::randn(256, 32, 1.0, &mut rng);
+        let v = Mat::randn(256, 32, 1.0, &mut rng);
+        let cfg = vcfg(4, 8, SizeSpec::Abs(8));
+        let inner = VAttentionPolicy::new(
+            cfg,
+            Box::new(crate::policies::scorers::HashSignScorer::new(32, 5)),
+        );
+        let mut reuse = TemporalReusePolicy::new(inner, ReuseConfig::default());
+        let q = vec![0.1f32; 32];
+        for step in 0..4 {
+            let sel = reuse.select(&mut PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step });
+            assert!(sel.validate(256).is_ok());
+        }
+        let st = reuse.stats();
+        assert_eq!(st.refresh_unsupported, 4);
+        assert_eq!(st.scorer_calls, 4);
+        assert_eq!(st.hits, 0);
+    }
+}

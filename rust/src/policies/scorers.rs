@@ -22,6 +22,22 @@ use crate::tensor::{dot, Mat};
 use crate::util::Rng;
 
 /// A token scorer used for approximate top-k selection.
+///
+/// ```
+/// use vattn::policies::scorers::{OracleScorer, TopkScorer};
+/// use vattn::policies::PolicyCtx;
+/// use vattn::tensor::Mat;
+/// use vattn::util::Rng;
+///
+/// let mut rng = Rng::new(0);
+/// let (k, v) = (Mat::randn(64, 8, 1.0, &mut rng), Mat::randn(64, 8, 1.0, &mut rng));
+/// let q = vec![0.1; 8];
+/// let mut scorer = OracleScorer;
+/// let scores =
+///     scorer.score(&mut PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 });
+/// assert_eq!(scores.len(), 64);
+/// assert!(scorer.scores_are_logits()); // oracle scores ARE the exact logits
+/// ```
 pub trait TopkScorer: Send {
     fn name(&self) -> String;
     /// Score every token in the cache (higher = more likely top-k).

@@ -10,7 +10,12 @@ use crate::attention::Selection;
 use crate::budget::{self, Bound, Verify};
 
 /// Configuration for vAttention — mirrors the paper's parameterization
-/// (f_s, f_l, f_t, f_b, ε, δ) plus the verified computation and bound.
+/// (f_s, f_l, f_t, f_b, ε, δ) plus the verified computation
+/// ([`Verify`]) and concentration bound ([`Bound`]).
+///
+/// The symbol-by-symbol map from the paper's Algorithm 1/2 to these
+/// fields (and to the `crate::budget` functions behind them) is written
+/// out in `docs/GUARANTEES.md`.
 #[derive(Clone, Debug)]
 pub struct VAttentionConfig {
     pub sink: SizeSpec,
@@ -70,9 +75,31 @@ impl VAttentionConfig {
 }
 
 /// vAttention composed with a pluggable top-k predictor (oracle,
-/// HashAttention, …). Produces a `Selection` with p = 1 on the
+/// HashAttention, …). Produces a [`Selection`] with p = 1 on the
 /// deterministic part and p = b/n_s on the sampled residual, plus a
-/// diagnostics record of the adaptive budget decision.
+/// diagnostics record ([`BudgetDecision`]) of the adaptive budget
+/// decision.
+///
+/// For cross-step heavy-hitter reuse, wrap this policy in
+/// [`crate::policies::TemporalReusePolicy`].
+///
+/// ```
+/// use vattn::policies::{IndexPolicy, PolicyCtx, VAttentionConfig, VAttentionPolicy};
+/// use vattn::tensor::Mat;
+/// use vattn::util::Rng;
+///
+/// let mut rng = Rng::new(0);
+/// let k = Mat::randn(512, 8, 1.0, &mut rng);
+/// let v = Mat::randn(512, 8, 1.0, &mut rng);
+/// let q = vec![0.1; 8];
+/// let mut policy =
+///     VAttentionPolicy::oracle(VAttentionConfig::default().with_guarantee(0.1, 0.1));
+/// let sel = policy.select(&mut PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 });
+/// assert!(sel.validate(512).is_ok());
+/// let decision = policy.last.as_ref().unwrap();
+/// assert_eq!(decision.n_fixed + decision.n_s, 512);
+/// assert_eq!(sel.len(), decision.n_fixed + decision.budget);
+/// ```
 pub struct VAttentionPolicy {
     pub cfg: VAttentionConfig,
     pub scorer: Box<dyn TopkScorer>,
@@ -105,39 +132,33 @@ impl VAttentionPolicy {
         Self::new(cfg, Box::new(OracleScorer))
     }
 
-    /// Reference logit for stabilized budget statistics: the max logit
-    /// over the deterministic set (heavy hitters dominate, so this keeps
-    /// every exp() ≤ ~1 and the ratios well-scaled).
-    fn m_ref(&self, ctx: &PolicyCtx, i_f: &[usize]) -> f32 {
-        let mut m = f32::NEG_INFINITY;
-        for &i in i_f {
-            let l = crate::tensor::dot(ctx.k.row(i), ctx.q_scaled);
-            if l > m {
-                m = l;
-            }
-        }
-        if m.is_finite() {
-            m
-        } else {
-            0.0
-        }
-    }
-}
-
-impl IndexPolicy for VAttentionPolicy {
-    fn name(&self) -> String {
-        format!("vattention({})", self.scorer.name())
-    }
-
-    fn select(&mut self, ctx: &mut PolicyCtx) -> Selection {
+    /// Everything of [`IndexPolicy::select`] downstream of the scorer:
+    /// deterministic-set assembly (Algorithm 1, lines 1–4), base sample,
+    /// budget (Algorithm 2), and the residual draw — driven by a
+    /// caller-supplied score vector over all `n` tokens.
+    ///
+    /// `scores_are_logits` must be `true` only when every entry of
+    /// `scores` is the *exact* query–key logit (the oracle scorer); the
+    /// budget statistics are then computed from `scores` directly
+    /// instead of re-scanning K. A caller holding exact logits for only
+    /// a *subset* of tokens (`crate::policies::TemporalReusePolicy`'s
+    /// verified-reuse fast path, which fills the rest with `-inf`) must
+    /// pass `false`, so the statistics re-derive each needed logit from
+    /// K — bitwise the same values, since both paths evaluate the same
+    /// `tensor::dot`.
+    pub fn select_from_scores(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        scores: &[f32],
+        scores_are_logits: bool,
+    ) -> Selection {
         let n = ctx.n();
         let cfg = &self.cfg;
 
         // ── Algorithm 1, lines 1–4: deterministic index set I_f ──
         let fixed = sink_window_indices(n, cfg.sink.resolve(n), cfg.window.resolve(n));
-        let scores = self.scorer.score(ctx);
         let mut i_f = fixed;
-        let top = top_indices_excluding(&scores, cfg.heavy.resolve(n), &i_f);
+        let top = top_indices_excluding(scores, cfg.heavy.resolve(n), &i_f);
         i_f.extend(top);
         i_f.sort_unstable();
 
@@ -161,8 +182,7 @@ impl IndexPolicy for VAttentionPolicy {
         // When the scorer already produced exact logits (oracle), reuse
         // them for m_ref and the stats — K is scanned exactly once per
         // select (§Perf iteration 4).
-        let logits_reusable = self.scorer.scores_are_logits();
-        let m_ref = if logits_reusable {
+        let m_ref = if scores_are_logits {
             let m = i_f.iter().map(|&i| scores[i]).fold(f32::NEG_INFINITY, f32::max);
             if m.is_finite() {
                 m
@@ -173,8 +193,8 @@ impl IndexPolicy for VAttentionPolicy {
             self.m_ref(ctx, &i_f)
         };
         let base = budget::draw_base_sample(n, &i_f, cfg.base_rate, ctx.rng);
-        let stats = if logits_reusable {
-            budget::estimate_stats_from_logits(&scores, ctx.v, &i_f, &base, m_ref)
+        let stats = if scores_are_logits {
+            budget::estimate_stats_from_logits(scores, ctx.v, &i_f, &base, m_ref)
         } else {
             budget::estimate_stats(ctx.k, ctx.v, ctx.q_scaled, &i_f, &base, m_ref)
         };
@@ -203,6 +223,36 @@ impl IndexPolicy for VAttentionPolicy {
         let dyn_idx = ctx.rng.sample_excluding(n, b, &i_f);
         let p_dyn = b as f32 / n_s as f32;
         Selection::compose(i_f, dyn_idx, p_dyn)
+    }
+
+    /// Reference logit for stabilized budget statistics: the max logit
+    /// over the deterministic set (heavy hitters dominate, so this keeps
+    /// every exp() ≤ ~1 and the ratios well-scaled).
+    fn m_ref(&self, ctx: &PolicyCtx, i_f: &[usize]) -> f32 {
+        let mut m = f32::NEG_INFINITY;
+        for &i in i_f {
+            let l = crate::tensor::dot(ctx.k.row(i), ctx.q_scaled);
+            if l > m {
+                m = l;
+            }
+        }
+        if m.is_finite() {
+            m
+        } else {
+            0.0
+        }
+    }
+}
+
+impl IndexPolicy for VAttentionPolicy {
+    fn name(&self) -> String {
+        format!("vattention({})", self.scorer.name())
+    }
+
+    fn select(&mut self, ctx: &mut PolicyCtx) -> Selection {
+        let scores = self.scorer.score(ctx);
+        let scores_are_logits = self.scorer.scores_are_logits();
+        self.select_from_scores(ctx, &scores, scores_are_logits)
     }
 
     fn reset(&mut self) {

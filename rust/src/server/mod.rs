@@ -85,6 +85,10 @@ pub struct RequestResult {
     pub mean_density: f64,
     /// Bytes of KV gathered from the host tier during decode.
     pub kv_bytes_read: usize,
+    /// Bytes of KV appended into the host tier during decode (prefill
+    /// writes are excluded — the per-request counters reset when
+    /// prefill completes, so both traffic numbers cover decode only).
+    pub kv_bytes_written: usize,
 }
 
 impl RequestResult {

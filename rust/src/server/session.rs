@@ -57,7 +57,10 @@ use super::RequestResult;
 use crate::attention::Selection;
 use crate::kvcache::{BlockId, BlockPool, CowOutcome, KvCache, PageError, PrefixCache};
 use crate::model::{ModelConfig, Sampler, StepOut};
-use crate::policies::{IndexPolicy, PolicyCtx, VAttentionConfig, VAttentionPolicy};
+use crate::policies::{
+    IndexPolicy, PolicyCtx, ReuseConfig, ReuseStats, TemporalReusePolicy, VAttentionConfig,
+    VAttentionPolicy,
+};
 use crate::tensor::Mat;
 use crate::util::threadpool::ThreadPool;
 use crate::util::Rng;
@@ -126,6 +129,15 @@ pub enum AttentionOpt {
     /// vAttention with this request's own config — ε and δ live inside,
     /// so two requests in the same batch can run different guarantees.
     Verified(VAttentionConfig),
+    /// vAttention plus cross-step heavy-hitter reuse
+    /// ([`TemporalReusePolicy`]): the per-(layer, head) top-k selection
+    /// is cached across decode steps and re-scored only when the drift
+    /// certificate fails, so token streams stay byte-identical to
+    /// [`AttentionOpt::Verified`] while the underlying scorer runs far
+    /// less often. Reuse state is reset on preemption replay and is
+    /// private per request (prefix-forked requests certify
+    /// independently).
+    VerifiedReuse(VAttentionConfig, ReuseConfig),
     /// Arbitrary per-request policy factory.
     Custom(PolicyFactory),
 }
@@ -138,6 +150,11 @@ impl std::fmt::Debug for AttentionOpt {
             AttentionOpt::Verified(cfg) => {
                 write!(f, "Verified(eps={}, delta={})", cfg.eps, cfg.delta)
             }
+            AttentionOpt::VerifiedReuse(cfg, rcfg) => write!(
+                f,
+                "VerifiedReuse(eps={}, delta={}, max_age={})",
+                cfg.eps, cfg.delta, rcfg.max_age
+            ),
             AttentionOpt::Custom(_) => write!(f, "Custom(..)"),
         }
     }
@@ -202,6 +219,20 @@ impl GenOptions {
     /// Verified sparse attention with a fully custom config.
     pub fn verified_with(self, cfg: VAttentionConfig) -> Self {
         self.attention(AttentionOpt::Verified(cfg))
+    }
+
+    /// Verified sparse attention at a per-request (ε, δ) contract with
+    /// cross-step heavy-hitter reuse enabled (default reuse knobs).
+    pub fn verified_reuse(self, eps: f64, delta: f64) -> Self {
+        self.attention(AttentionOpt::VerifiedReuse(
+            VAttentionConfig::default().with_guarantee(eps, delta),
+            ReuseConfig::default(),
+        ))
+    }
+
+    /// Verified sparse attention with reuse, both configs custom.
+    pub fn verified_reuse_with(self, cfg: VAttentionConfig, rcfg: ReuseConfig) -> Self {
+        self.attention(AttentionOpt::VerifiedReuse(cfg, rcfg))
     }
 }
 
@@ -281,6 +312,10 @@ pub struct SessionStats {
     pub capacity_blocks: Option<usize>,
     /// Copy-on-write promotions that actually copied a block.
     pub cow_copies: u64,
+    /// Temporal-reuse counters aggregated across every reuse-enabled
+    /// policy the session has run (live and retired requests alike);
+    /// all-zero when no request used [`AttentionOpt::VerifiedReuse`].
+    pub reuse: ReuseStats,
 }
 
 impl SessionStats {
@@ -369,6 +404,7 @@ impl Active {
                 1.0
             },
             kv_bytes_read: self.cache.stats.bytes_read,
+            kv_bytes_written: self.cache.stats.bytes_written,
         }
     }
 }
@@ -384,6 +420,10 @@ pub struct Session<B: Backend> {
     /// Shared-prompt radix (`EngineConfig::prefix_cache`).
     prefix: Option<PrefixCache>,
     preemptions: u64,
+    /// Reuse counters of requests that already left the session
+    /// (finished, cancelled, rejected); live policies are added on top
+    /// by [`Session::stats`].
+    retired_reuse: ReuseStats,
     default_attention: AttentionOpt,
     waiting: VecDeque<Waiting>,
     active: Vec<Active>,
@@ -422,6 +462,7 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             blocks,
             prefix,
             preemptions: 0,
+            retired_reuse: ReuseStats::default(),
             default_attention: AttentionOpt::Dense,
             waiting: VecDeque::new(),
             active: Vec::new(),
@@ -488,6 +529,13 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
 
     /// Paging / scheduling counters (cumulative since session creation).
     pub fn stats(&self) -> SessionStats {
+        let mut reuse = self.retired_reuse.clone();
+        for a in &self.active {
+            merge_reuse(&mut reuse, &a.policies);
+        }
+        for w in &self.waiting {
+            merge_reuse(&mut reuse, &w.policies);
+        }
         SessionStats {
             preemptions: self.preemptions,
             prefix_hit_blocks: self.prefix.as_ref().map_or(0, |p| p.hit_blocks()),
@@ -497,6 +545,7 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             peak_blocks_in_use: self.blocks.peak_in_use_blocks(),
             capacity_blocks: self.blocks.capacity_blocks(),
             cow_copies: self.blocks.cow_count(),
+            reuse,
         }
     }
 
@@ -532,11 +581,13 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
     /// already-cancelled, or never-submitted ids yield `UnknownRequest`.
     pub fn cancel(&mut self, id: RequestId) -> Result<(), EngineError> {
         if let Some(pos) = self.waiting.iter().position(|w| w.id == id) {
-            self.waiting.remove(pos);
+            let w = self.waiting.remove(pos).expect("position was in range");
+            merge_reuse(&mut self.retired_reuse, &w.policies);
             return Ok(());
         }
         if let Some(pos) = self.active.iter().position(|a| a.id == id) {
             let mut a = self.active.remove(pos);
+            merge_reuse(&mut self.retired_reuse, &a.policies);
             let lease = a.cache.release_blocks();
             self.blocks.free(lease).map_err(EngineError::Page)?;
             return Ok(());
@@ -601,6 +652,7 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
                 // Per-request failure isolation: a backend error kills
                 // this request (blocks returned, `Rejected` emitted) and
                 // no one else — the session stays serviceable.
+                merge_reuse(&mut self.retired_reuse, &a.policies);
                 let lease = a.cache.release_blocks();
                 self.blocks.free(lease).map_err(EngineError::Page)?;
                 events.push(Event::Rejected { id: a.id, reason, t_s });
@@ -625,6 +677,7 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
                 a.reported += 1;
             }
             if a.finished() {
+                merge_reuse(&mut self.retired_reuse, &a.policies);
                 let lease = a.cache.release_blocks();
                 self.blocks.free(lease).map_err(EngineError::Page)?;
                 let id = a.id;
@@ -856,6 +909,12 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             AttentionOpt::Verified(vcfg) => {
                 self.policy_grid(|_l, _h| Box::new(VAttentionPolicy::oracle(vcfg.clone())))
             }
+            AttentionOpt::VerifiedReuse(vcfg, rcfg) => self.policy_grid(|_l, _h| {
+                Box::new(TemporalReusePolicy::new(
+                    VAttentionPolicy::oracle(vcfg.clone()),
+                    rcfg.clone(),
+                ))
+            }),
             AttentionOpt::Custom(factory) => self.policy_grid(|l, h| factory(l, h, opts)),
         }
     }
@@ -961,6 +1020,17 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             density_sum: 0.0,
             density_n: 0,
             step: 0,
+        }
+    }
+}
+
+/// Fold the reuse counters of a request's policies into an accumulator
+/// (used when a request retires and again for live requests in
+/// [`Session::stats`]).
+fn merge_reuse(dst: &mut ReuseStats, policies: &[Box<dyn IndexPolicy>]) {
+    for p in policies {
+        if let Some(s) = p.reuse_stats() {
+            dst.merge(s);
         }
     }
 }
@@ -1211,6 +1281,71 @@ mod tests {
         assert!((results[&dense].mean_density - 1.0).abs() < 1e-9);
         assert!(results[&sparse].mean_density < 1.0);
         assert!(results[&sparse].kv_bytes_read < results[&dense].kv_bytes_read);
+    }
+
+    #[test]
+    fn verified_reuse_streams_match_verified_and_aggregate_stats() {
+        let vcfg = VAttentionConfig {
+            sink: SizeSpec::Abs(4),
+            window: SizeSpec::Abs(8),
+            heavy: SizeSpec::Frac(0.05),
+            verify: crate::budget::Verify::Denominator,
+            ..Default::default()
+        }
+        .with_guarantee(0.2, 0.2);
+        let run = |reuse: bool| {
+            let mut s = tiny_session(EngineConfig::default());
+            let opts = GenOptions::new(8);
+            let opts = if reuse {
+                opts.verified_reuse_with(vcfg.clone(), crate::policies::ReuseConfig::default())
+            } else {
+                opts.verified_with(vcfg.clone())
+            };
+            s.submit(SubmitRequest::new(prompt(192, 5)).options(opts));
+            let mut tokens = Vec::new();
+            for ev in drain(&mut s) {
+                if let Event::Finished { result, .. } = ev {
+                    tokens = result.tokens;
+                }
+            }
+            (tokens, s.stats().reuse)
+        };
+        let (plain_tokens, plain_reuse) = run(false);
+        let (reuse_tokens, reuse_stats) = run(true);
+        assert_eq!(plain_tokens.len(), 8);
+        assert_eq!(
+            plain_tokens, reuse_tokens,
+            "temporal reuse must not change the token stream"
+        );
+        // The stats survive the request retiring (aggregated at finish).
+        assert_eq!(plain_reuse.selects, 0, "plain vattention reports no reuse counters");
+        // 8 tokens = 1 from prefill logits + 7 policy-driven decode steps.
+        let mcfg = ModelConfig::tiny();
+        assert_eq!(
+            reuse_stats.selects,
+            7 * (mcfg.n_layers * mcfg.n_heads) as u64,
+            "one select per decode step per (layer, head): {reuse_stats:?}"
+        );
+        assert_eq!(reuse_stats.selects, reuse_stats.hits + reuse_stats.refreshes());
+        assert_eq!(reuse_stats.scorer_calls, reuse_stats.refreshes());
+    }
+
+    #[test]
+    fn verified_reuse_cancel_keeps_counters() {
+        let mut s = tiny_session(EngineConfig::default());
+        let id = s.submit(
+            SubmitRequest::new(prompt(64, 3)).options(GenOptions::new(40).verified_reuse(0.2, 0.2)),
+        );
+        // A few ticks so decode selects actually run, then cancel.
+        for _ in 0..6 {
+            s.tick().unwrap();
+        }
+        let before = s.stats().reuse;
+        s.cancel(id).expect("cancel active");
+        let after = s.stats().reuse;
+        assert!(before.selects > 0, "decode steps must have selected: {before:?}");
+        assert_eq!(before, after, "cancel must retire, not drop, the counters");
+        assert_eq!(s.kv_blocks_in_use(), 0);
     }
 
     #[test]

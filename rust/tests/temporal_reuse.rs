@@ -1,0 +1,289 @@
+//! Temporal heavy-hitter reuse, end to end: reuse-enabled serving must
+//! stream byte-identical tokens to reuse-disabled serving (the drift
+//! certificate only serves *provably* fresh-equal selections), at any
+//! worker count, across preemption replays and prefix forks — and the
+//! (ε, δ) contract must hold empirically with reuse on.
+
+use std::collections::BTreeMap;
+
+use vattn::attention::{dense_sdpa, sparse_sdpa};
+use vattn::model::{Model, ModelConfig};
+use vattn::policies::{
+    IndexPolicy, PolicyCtx, ReuseConfig, SizeSpec, TemporalReusePolicy, VAttentionConfig,
+    VAttentionPolicy,
+};
+use vattn::server::{
+    AttentionOpt, EngineConfig, Event, GenOptions, Session, SessionStats, SubmitRequest,
+};
+use vattn::tensor::{rel_l2_error, Mat};
+use vattn::util::Rng;
+
+fn small_vcfg() -> VAttentionConfig {
+    VAttentionConfig {
+        sink: SizeSpec::Abs(4),
+        window: SizeSpec::Abs(8),
+        heavy: SizeSpec::Frac(0.05),
+        verify: vattn::budget::Verify::Denominator,
+        ..Default::default()
+    }
+    .with_guarantee(0.2, 0.2)
+}
+
+fn prompt(len: usize, salt: u32) -> Vec<u32> {
+    (0..len as u32).map(|t| (t * 13 + salt) % 250).collect()
+}
+
+fn attention(reuse: bool) -> AttentionOpt {
+    if reuse {
+        AttentionOpt::VerifiedReuse(small_vcfg(), ReuseConfig::default())
+    } else {
+        AttentionOpt::Verified(small_vcfg())
+    }
+}
+
+/// Drive a session to idle collecting per-request token streams (gapless
+/// across preemptions, per the Event::Token contract).
+fn drain_streams(session: &mut Session<Model>) -> (BTreeMap<u64, Vec<u32>>, SessionStats) {
+    let mut streams: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+    while !session.is_idle() {
+        for ev in session.tick().expect("tick") {
+            match ev {
+                Event::Token { id, token, step, .. } => {
+                    let st = streams.entry(id).or_default();
+                    assert_eq!(st.len(), step, "gapless stream for request {id}");
+                    st.push(token);
+                }
+                Event::Rejected { reason, .. } => panic!("unexpected rejection: {reason}"),
+                _ => {}
+            }
+        }
+    }
+    let stats = session.stats();
+    (streams, stats)
+}
+
+#[test]
+fn reuse_streams_byte_identical_to_reuse_off_at_workers_1_and_4() {
+    let run = |workers: usize, reuse: bool| {
+        let cfg = EngineConfig::builder().max_batch(3).workers(workers).seed(9).build();
+        let mut s = Session::new(Model::new(ModelConfig::tiny(), 42), cfg);
+        for i in 0..3u32 {
+            s.submit(
+                SubmitRequest::new(prompt(160 + 16 * i as usize, i))
+                    .options(GenOptions::new(24).attention(attention(reuse))),
+            );
+        }
+        drain_streams(&mut s)
+    };
+    let (off1, off_stats) = run(1, false);
+    let (off4, _) = run(4, false);
+    let (on1, on_stats1) = run(1, true);
+    let (on4, on_stats4) = run(4, true);
+    assert_eq!(off1, off4, "reuse-off must be worker-count invariant");
+    assert_eq!(on1, on4, "reuse-on must be worker-count invariant");
+    assert_eq!(on1, off1, "reuse must not change any token stream");
+    assert_eq!(off_stats.reuse.selects, 0, "reuse-off reports no reuse counters");
+    let r = &on_stats1.reuse;
+    assert!(r.selects > 0);
+    assert_eq!(r.selects, r.hits + r.refreshes(), "{r:?}");
+    assert_eq!(r.scorer_calls, r.refreshes(), "{r:?}");
+    assert_eq!(on_stats1.reuse, on_stats4.reuse, "reuse decisions are worker-invariant");
+}
+
+#[test]
+fn reuse_state_resets_on_preemption_and_replays_identically() {
+    // Two long-generation reuse-enabled requests in a pool that cannot
+    // hold both: the preempted request's reuse anchor is reset with its
+    // policies, so the replay re-certifies from cold and re-streams the
+    // exact tokens of an uncontended run.
+    let mcfg = ModelConfig::tiny();
+    let contended = EngineConfig::builder()
+        .max_batch(2)
+        .block_tokens(4)
+        .kv_capacity_bytes(7 * 4 * mcfg.kv_bytes_per_token())
+        .build();
+    let free = EngineConfig::builder().max_batch(2).block_tokens(4).build();
+    let run = |cfg: EngineConfig| {
+        let mut s = Session::new(Model::new(ModelConfig::tiny(), 42), cfg);
+        for i in 0..2u32 {
+            s.submit(
+                SubmitRequest::new(prompt(8, 1 + i))
+                    .options(GenOptions::new(12).attention(attention(true))),
+            );
+        }
+        let mut preemptions = 0;
+        let mut streams: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+        while !s.is_idle() {
+            for ev in s.tick().expect("tick") {
+                match ev {
+                    Event::Token { id, token, step, .. } => {
+                        let st = streams.entry(id).or_default();
+                        assert_eq!(st.len(), step, "stream stays gapless across preemption");
+                        st.push(token);
+                    }
+                    Event::Preempted { .. } => preemptions += 1,
+                    Event::Rejected { reason, .. } => panic!("unexpected rejection: {reason}"),
+                    _ => {}
+                }
+            }
+        }
+        assert_eq!(s.kv_blocks_in_use(), 0);
+        (streams, preemptions, s.stats().reuse)
+    };
+    let (free_streams, p0, _) = run(free);
+    assert_eq!(p0, 0);
+    let (contended_streams, p1, reuse) = run(contended);
+    assert!(p1 > 0, "7 blocks < 2 × 5 worst case must force preemption");
+    assert_eq!(
+        free_streams, contended_streams,
+        "preempted reuse replay must be byte-identical to the uncontended run"
+    );
+    // The replay restarted from a cold anchor at least once per
+    // preempted request's (layer, head) grid.
+    let grid = (ModelConfig::tiny().n_layers * ModelConfig::tiny().n_heads) as u64;
+    assert!(
+        reuse.refresh_cold >= 2 * grid,
+        "expected cold refreshes from admission AND replay: {reuse:?}"
+    );
+}
+
+#[test]
+fn reuse_streams_unchanged_by_prefix_sharing() {
+    // Prefix-forked requests share KV blocks but not reuse state; the
+    // certificate runs per request and streams must match unshared runs.
+    let shared_prompt: Vec<u32> = (0..64u32).map(|t| (t * 37 + 11) % 250).collect();
+    let run = |prefix_cache: bool| {
+        let cfg = EngineConfig::builder()
+            .max_batch(4)
+            .block_tokens(4)
+            .prefix_cache(prefix_cache)
+            .build();
+        let mut s = Session::new(Model::new(ModelConfig::tiny(), 42), cfg);
+        for i in 0..4u32 {
+            let mut p = shared_prompt.clone();
+            p.extend((0..8u32).map(|t| (t * 13 + i * 29 + 1) % 250));
+            s.submit(SubmitRequest::new(p).options(GenOptions::new(12).attention(attention(true))));
+        }
+        let (streams, stats) = drain_streams(&mut s);
+        if prefix_cache {
+            assert!(stats.prefix_hit_blocks > 0, "shared prompts must hit the radix");
+        }
+        s.flush_prefix_cache().expect("flush");
+        assert_eq!(s.kv_blocks_in_use(), 0);
+        streams
+    };
+    let unshared = run(false);
+    let shared = run(true);
+    assert_eq!(unshared, shared, "prefix forking must not perturb reuse certification");
+}
+
+#[test]
+fn planted_stable_stream_halves_scorer_invocations() {
+    // The acceptance scenario at policy level: planted heavy hitters and
+    // a slowly drifting query. Selections must equal a fresh policy's at
+    // every step while the underlying scorer runs only on the cold
+    // anchor — a ≥ 2x invocation reduction with a wide margin.
+    let n = 1024;
+    let d = 16;
+    let steps = 48;
+    let mut rng = Rng::new(5);
+    let mut k = Mat::randn(n, d, 0.1, &mut rng);
+    let v = Mat::randn(n, d, 1.0, &mut rng);
+    for j in 0..8 {
+        let row = 100 + j * 4;
+        for c in 0..d {
+            k.set(row, c, if c == 0 { 10.0 } else { 0.0 });
+        }
+    }
+    let cfg = VAttentionConfig {
+        sink: SizeSpec::Abs(4),
+        window: SizeSpec::Abs(8),
+        heavy: SizeSpec::Abs(8),
+        verify: vattn::budget::Verify::Denominator,
+        ..Default::default()
+    }
+    .with_guarantee(0.2, 0.2);
+    let mut fresh = VAttentionPolicy::oracle(cfg.clone());
+    let mut reused = TemporalReusePolicy::new(
+        VAttentionPolicy::oracle(cfg),
+        ReuseConfig { max_age: steps + 1, ..Default::default() },
+    );
+    let mut rng_a = Rng::new(71);
+    let mut rng_b = Rng::new(71);
+    for step in 0..steps {
+        let mut qr = Rng::new(900 + step as u64);
+        let q: Vec<f32> = (0..d)
+            .map(|c| if c == 0 { 1.0 } else { 0.0 } + 0.01 * qr.normal32(0.0, 1.0))
+            .collect();
+        let sa =
+            fresh.select(&mut PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng_a, step });
+        let sb =
+            reused.select(&mut PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng_b, step });
+        assert_eq!(sa.idx, sb.idx, "selection diverged at step {step}");
+        assert_eq!(sa.prob, sb.prob, "probabilities diverged at step {step}");
+    }
+    let stats = reused.stats();
+    assert_eq!(stats.selects, steps as u64);
+    assert!(
+        stats.scorer_reduction() >= 2.0,
+        "stable stream must at least halve scorer invocations: {stats:?}"
+    );
+    assert_eq!(stats.scorer_calls, 1, "only the cold anchor may scan: {stats:?}");
+}
+
+#[test]
+fn epsilon_delta_coverage_holds_with_reuse_enabled() {
+    // The certificate argument says reuse-enabled selections ARE fresh
+    // vAttention selections, so the (ε, δ) contract transfers. Check it
+    // empirically anyway: per-trial drifting-query streams, measuring
+    // the relative SDPA error of every reused step against dense.
+    let n = 1200;
+    let d = 16;
+    const EPS: f64 = 0.2;
+    const DELTA: f64 = 0.15;
+    let mut meta = Rng::new(17);
+    let mut trials = 0usize;
+    let mut violations = 0usize;
+    for t in 0..20u64 {
+        let mut rng = meta.fork(t);
+        let k = Mat::randn(n, d, 1.0, &mut rng);
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+        let cfg = VAttentionConfig {
+            sink: SizeSpec::Abs(16),
+            window: SizeSpec::Abs(16),
+            heavy: SizeSpec::Frac(0.05),
+            base_rate: 0.1,
+            verify: vattn::budget::Verify::Sdpa,
+            ..Default::default()
+        }
+        .with_guarantee(EPS, DELTA);
+        let mut policy = TemporalReusePolicy::new(
+            VAttentionPolicy::oracle(cfg),
+            ReuseConfig::default(),
+        );
+        // A base query with small per-step drift, so some steps are
+        // certificate hits and some refresh — both paths are measured.
+        let base_q: Vec<f32> =
+            (0..d).map(|_| rng.normal32(0.0, 1.0) / (d as f32).sqrt()).collect();
+        for step in 0..4 {
+            let q: Vec<f32> = base_q
+                .iter()
+                .map(|x| x + 0.02 * rng.normal32(0.0, 1.0) / (d as f32).sqrt())
+                .collect();
+            let sel = policy
+                .select(&mut PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step });
+            let exact = dense_sdpa(&k, &v, &q).out;
+            let approx = sparse_sdpa(&k, &v, &q, &sel);
+            trials += 1;
+            if rel_l2_error(&approx, &exact) > EPS {
+                violations += 1;
+            }
+        }
+    }
+    // δ = 0.15 over 80 measured steps ⇒ ~12 expected violations at the
+    // contract boundary; allow the same 2x slack the budget-coverage
+    // suite uses for CLT asymptotics.
+    assert!(trials >= 80);
+    let rate = violations as f64 / trials as f64;
+    assert!(rate <= 2.0 * DELTA, "violation rate {rate:.3} vs delta {DELTA}");
+}
