@@ -11,6 +11,13 @@
 //! streams at 1 and 4 workers, a peak-block footprint under the
 //! unshared baseline, and quiescence after drain + prefix flush.
 //!
+//! Also runs the verified int8 KV quantization scenario: the same
+//! shared-prompt workload on the same pool *bytes* at fp32 vs int8 —
+//! asserting ≥ 3.5x KV compression, ~4x fewer preemptions, and
+//! byte-identical int8 streams at 1 and 4 workers — plus an empirical
+//! quantized (ε, δ) coverage estimate written to the `kv_quant` JSON
+//! block (CI-checked).
+//!
 //! Also runs the temporal heavy-hitter reuse scenarios: a 4-request
 //! 64-token-generation vAttention batch asserting reuse-on streams are
 //! byte-identical to reuse-off at workers {1, 4}, and a planted
@@ -31,6 +38,7 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+use vattn::kvcache::KvDtype;
 use vattn::metrics::{summarize, LatencySummary, PagingSummary, ReuseSummary, ServeSummary};
 use vattn::model::{Model, ModelConfig, Sampler};
 use vattn::policies::{
@@ -194,15 +202,16 @@ fn main() {
     let worst_case_blocks = 16 * (512 + 32 + 24usize).div_ceil(16);
     let cap_blocks = 128usize;
     assert!(cap_blocks < worst_case_blocks, "the scenario must undercut worst-case leasing");
-    let run_paged = |workers: usize, cap: Option<usize>, prefix: bool| {
+    let run_paged = |workers: usize, cap_bytes: Option<usize>, prefix: bool, dtype: KvDtype| {
         let mut b = EngineConfig::builder()
             .max_batch(16)
             .seed(1)
             .workers(workers)
             .block_tokens(16)
-            .prefix_cache(prefix);
-        if let Some(cap) = cap {
-            b = b.kv_capacity_bytes(cap * 16 * bench_model().kv_bytes_per_token());
+            .prefix_cache(prefix)
+            .kv_dtype(dtype);
+        if let Some(cap) = cap_bytes {
+            b = b.kv_capacity_bytes(cap);
         }
         let mut session = Session::new(Model::new(bench_model(), 42), b.build());
         let mut streams: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
@@ -231,9 +240,13 @@ fn main() {
         assert!(streams.values().all(|s| s.len() == 24), "all 16 must complete");
         (streams, stats, wall)
     };
-    let (unshared_streams, unshared_stats, unshared_wall) = run_paged(8, None, false);
-    let (shared1, shared_stats, shared_wall) = run_paged(1, Some(cap_blocks), true);
-    let (shared4, shared_stats4, _) = run_paged(4, Some(cap_blocks), true);
+    let fp32_block_bytes = 16 * bench_model().kv_bytes_per_token();
+    let (unshared_streams, unshared_stats, unshared_wall) =
+        run_paged(8, None, false, KvDtype::F32);
+    let (shared1, shared_stats, shared_wall) =
+        run_paged(1, Some(cap_blocks * fp32_block_bytes), true, KvDtype::F32);
+    let (shared4, shared_stats4, _) =
+        run_paged(4, Some(cap_blocks * fp32_block_bytes), true, KvDtype::F32);
     assert_eq!(shared1, shared4, "token streams diverged between 1 and 4 workers");
     assert_eq!(shared1, unshared_streams, "prefix forking changed a token stream");
     assert!(
@@ -254,6 +267,114 @@ fn main() {
         "paging decisions must be tick-deterministic, independent of workers"
     );
     assert_eq!(shared_stats.prefix_hit_blocks, shared_stats4.prefix_hit_blocks);
+
+    println!("\n== verified int8 KV quantization: same pool bytes, fp32 vs int8 ==");
+    // The same 16-request shared-prompt workload on the same *byte*
+    // budget — 64 fp32 blocks' worth, below the fp32 run's peak demand.
+    // Int8 rows are 3.5–4x smaller, so the identical budget yields ~4x
+    // the blocks and the preemption pressure evaporates; the int8 runs
+    // must still be byte-identical across worker counts.
+    let quant_pool_bytes = 64 * fp32_block_bytes;
+    let (_, q32_stats, _) = run_paged(8, Some(quant_pool_bytes), true, KvDtype::F32);
+    let (q8_1, q8_stats, _) = run_paged(1, Some(quant_pool_bytes), true, KvDtype::Int8);
+    let (q8_4, q8_stats4, _) = run_paged(4, Some(quant_pool_bytes), true, KvDtype::Int8);
+    assert_eq!(q8_1, q8_4, "int8 streams diverged between 1 and 4 workers");
+    assert_eq!(
+        q8_stats.preemptions, q8_stats4.preemptions,
+        "int8 paging decisions must be worker-count invariant"
+    );
+    assert!(
+        q32_stats.preemptions > 0,
+        "the planted pool must contend at fp32 (got {} preemptions)",
+        q32_stats.preemptions
+    );
+    assert!(
+        q8_stats.preemptions < q32_stats.preemptions,
+        "int8 must preempt less than fp32 on the same pool ({} vs {})",
+        q8_stats.preemptions,
+        q32_stats.preemptions
+    );
+    assert!(
+        q8_stats.preemptions * 4 <= q32_stats.preemptions,
+        "int8 should cut preemptions ~4x ({} vs {})",
+        q8_stats.preemptions,
+        q32_stats.preemptions
+    );
+    let compression = q8_stats.kv_compression_ratio();
+    assert!(compression >= 3.5, "int8 compression only {compression:.2}x");
+    let quant_paging = PagingSummary::from(&q8_stats);
+    println!(
+        "pool {} KiB: fp32 {} preemptions vs int8 {} ({:.2}x KV compression, {} -> {} blocks)",
+        quant_pool_bytes >> 10,
+        q32_stats.preemptions,
+        q8_stats.preemptions,
+        compression,
+        q32_stats.capacity_blocks.unwrap_or(0),
+        q8_stats.capacity_blocks.unwrap_or(0),
+    );
+    println!("{}", quant_paging.render());
+
+    // Empirical (ε, δ) coverage with int8 KV and the slack-widened
+    // budget, measured against the exact fp32 population — the bench's
+    // machine-readable companion to tests/budget_coverage.rs.
+    let quant_coverage = |bound: vattn::budget::Bound, seed: u64| -> f64 {
+        use vattn::attention::{exact_num_den, weighted_num_den, Selection};
+        use vattn::budget::{self, QuantSlack, Verify};
+        use vattn::policies::sink_window_indices;
+        use vattn::tensor::quant::QuantizedMat;
+        use vattn::tensor::dot;
+        let (n, d, eps, delta, trials) = (1024usize, 16usize, 0.2f64, 0.15f64, 30usize);
+        let mut meta = Rng::new(seed);
+        let mut violations = 0usize;
+        for t in 0..trials {
+            let mut rng = meta.fork(t as u64);
+            let k = Mat::randn(n, d, 1.0, &mut rng);
+            let v = Mat::randn(n, d, 1.0, &mut rng);
+            let q: Vec<f32> =
+                (0..d).map(|_| rng.normal32(0.0, 1.0) / (d as f32).sqrt()).collect();
+            let quantize = |m: &Mat| {
+                let mut qm = QuantizedMat::new(d);
+                let mut out = Mat::zeros(0, d);
+                for r in 0..m.rows {
+                    qm.push_row(m.row(r));
+                    qm.dequantize_row_into(r, &mut out.data);
+                    out.rows += 1;
+                }
+                (out, qm.max_scale())
+            };
+            let (k_hat, k_scale) = quantize(&k);
+            let (v_hat, v_scale) = quantize(&v);
+            let i_f = sink_window_indices(n, 16, 16);
+            let m_ref = i_f
+                .iter()
+                .map(|&i| dot(k_hat.row(i), &q))
+                .fold(f32::NEG_INFINITY, f32::max);
+            let base = budget::draw_base_sample(n, &i_f, 0.1, &mut rng);
+            let stats = budget::estimate_stats(&k_hat, &v_hat, &q, &i_f, &base, m_ref);
+            let bounds = vattn::tensor::quant::KvQuantBounds {
+                k_scale_max: k_scale,
+                v_scale_max: v_scale,
+            };
+            let slack = QuantSlack::from_bounds(&bounds, &q, d);
+            let b = budget::budget_for_quant(&stats, Verify::Denominator, eps, delta, bound, Some(&slack))
+                .max(base.len())
+                .min(stats.n_s);
+            let dyn_idx = rng.sample_excluding(n, b, &i_f);
+            let sel = Selection::compose(i_f, dyn_idx, b as f32 / stats.n_s as f32);
+            let (_, d_hat) = weighted_num_den(&k_hat, &v_hat, &q, &sel, m_ref);
+            let (_, d_exact) = exact_num_den(&k, &v, &q, m_ref);
+            if ((d_hat - d_exact) / d_exact).abs() > eps {
+                violations += 1;
+            }
+        }
+        violations as f64 / trials as f64
+    };
+    let coverage_fail_clt = quant_coverage(vattn::budget::Bound::Clt, 0xA5EED);
+    let coverage_fail_hoeffding = quant_coverage(vattn::budget::Bound::Hoeffding, 0xB5EED);
+    println!(
+        "int8 (ε=0.2, δ=0.15) coverage: CLT fail rate {coverage_fail_clt:.3}, \
+         Hoeffding fail rate {coverage_fail_hoeffding:.3}"
+    );
 
     println!("\n== temporal heavy-hitter reuse: 4 requests, 64-token generation ==");
     // Long-generation vAttention serving with cross-step index reuse:
@@ -423,6 +544,33 @@ fn main() {
                 )
                 .field("cow_copies", Json::num(paging.cow_copies as f64))
                 .field("wall_s", Json::num(shared_wall)),
+        )
+        .field(
+            "kv_quant",
+            Json::obj()
+                .field("dtype", Json::str("int8"))
+                .field("pool_bytes", Json::num(quant_pool_bytes as f64))
+                .field(
+                    "bytes_per_token_fp32",
+                    Json::num(q8_stats.bytes_per_token_fp32 as f64),
+                )
+                .field("bytes_per_token_int8", Json::num(q8_stats.bytes_per_token as f64))
+                .field("compression_ratio", Json::num(compression))
+                .field("preemptions_fp32", Json::num(q32_stats.preemptions as f64))
+                .field("preemptions_int8", Json::num(q8_stats.preemptions as f64))
+                .field(
+                    "capacity_blocks_fp32",
+                    Json::num(q32_stats.capacity_blocks.unwrap_or(0) as f64),
+                )
+                .field(
+                    "capacity_blocks_int8",
+                    Json::num(q8_stats.capacity_blocks.unwrap_or(0) as f64),
+                )
+                .field("prefix_hit_rate", Json::num(quant_paging.prefix_hit_rate))
+                .field("coverage_eps", Json::num(0.2))
+                .field("coverage_delta", Json::num(0.15))
+                .field("coverage_fail_clt", Json::num(coverage_fail_clt))
+                .field("coverage_fail_hoeffding", Json::num(coverage_fail_hoeffding)),
         )
         .field(
             "reuse",

@@ -34,7 +34,12 @@ fn main() {
     println!("{:>8} {:>8} {:>10} {:>12}", "step", "ctx", "density", "mean-budget");
     for s in 0..steps {
         let n_heads = cfg.n_heads;
-        let mut select = |l: usize, h: usize, k: &vattn::tensor::Mat, v: &vattn::tensor::Mat, q: &[f32]| {
+        let mut select = |l: usize,
+                          h: usize,
+                          k: &vattn::tensor::Mat,
+                          v: &vattn::tensor::Mat,
+                          q: &[f32],
+                          _qb: Option<vattn::tensor::quant::KvQuantBounds>| {
             let mut ctx = PolicyCtx { k, v, q_scaled: q, rng: &mut step_rng, step: s };
             policies[l * n_heads + h].select(&mut ctx)
         };

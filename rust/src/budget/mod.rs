@@ -17,8 +17,16 @@
 //! Algorithm 1/2 (f_s, f_l, f_t, f_b) to
 //! [`crate::policies::VAttentionConfig`] fields and the functions in
 //! this module — lives in `docs/GUARANTEES.md`. Empirical (ε, δ)
-//! coverage is asserted by `tests/budget_coverage.rs` and, with
-//! temporal reuse enabled, `tests/temporal_reuse.rs`.
+//! coverage is asserted by `tests/budget_coverage.rs` (including the
+//! quantized-KV sweep) and, with temporal reuse enabled,
+//! `tests/temporal_reuse.rs`.
+//!
+//! When the KV store is quantized (`EngineConfig::kv_dtype = Int8`),
+//! the deterministic dequantization error enters the contract through
+//! [`QuantSlack`] / [`budget_for_quant`]: the sampling tolerance is
+//! shrunk by the worst-case relative bias ρ and the spread statistics
+//! are widened ([`widen_stats`]), so the delivered (ε, δ) is *inclusive
+//! of* the dequantization error rather than silently on top of it.
 //!
 //! ```
 //! use vattn::budget::{budget_for, BaseStats, Bound, Verify};
@@ -306,6 +314,140 @@ pub fn budget_for(stats: &BaseStats, verify: Verify, eps: f64, delta: f64, bound
     }
 }
 
+/// Dequantization-error bounds of a quantized KV store, as the budget
+/// math consumes them. Both terms are *deterministic* worst-case bounds
+/// (`tensor::quant`'s exact per-row `scale/2` guarantee pushed through
+/// the dot product), so quantization spends ε only — δ is untouched,
+/// because nothing random was added. Derivation: docs/GUARANTEES.md §8.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct QuantSlack {
+    /// Bound on |dequantized logit − exact logit|, uniform over tokens:
+    /// `e = (max_k_scale / 2) · ‖q‖₁`.
+    pub logit_err: f64,
+    /// Bound on the L2 perturbation of any value row:
+    /// `‖v̂ − v‖₂ ≤ (max_v_scale / 2) · √d`.
+    pub value_norm_err: f64,
+}
+
+impl QuantSlack {
+    /// The single conversion from a KV store's raw dequantization
+    /// bounds to budget slack — every consumer (the serving policy, the
+    /// coverage tests, the bench's coverage probe) must build its slack
+    /// here so the empirical (ε, δ) checks validate exactly what the
+    /// policy charges. `logit_err` may be supplied precomputed (a
+    /// scorer's declared interval half-width); both spellings are
+    /// [`crate::tensor::quant::KvQuantBounds::logit_err`].
+    pub fn from_bounds(
+        bounds: &crate::tensor::quant::KvQuantBounds,
+        q_scaled: &[f32],
+        d: usize,
+    ) -> QuantSlack {
+        QuantSlack {
+            logit_err: bounds.logit_err(q_scaled) as f64,
+            value_norm_err: bounds.value_err() as f64 * (d as f64).sqrt(),
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.logit_err == 0.0 && self.value_norm_err == 0.0
+    }
+
+    /// `e^e − 1`: every true exp-logit weight `w` sits within
+    /// `[ŵ·e^{−e}, ŵ·e^{e}]` of its dequantized counterpart ŵ, i.e.
+    /// within this relative factor.
+    fn weight_rel(&self) -> f64 {
+        self.logit_err.exp_m1()
+    }
+
+    /// Relative deterministic bias of the quantized denominator:
+    /// `|D_q − D| ≤ (e^e − 1)·D`.
+    pub fn rho_denominator(&self) -> f64 {
+        self.weight_rel()
+    }
+
+    /// Relative deterministic bias of the quantized numerator:
+    /// `‖N_q − N‖ ≤ (e^e − 1)·‖N‖ + e^e·D·e_v·√d`, expressed relative
+    /// to the estimated ‖N̂‖ via the measured D̂/‖N̂‖ ratio. Infinite
+    /// when ‖N̂‖ ≈ 0 (a relative guarantee is then unattainable and the
+    /// budget correctly saturates at n_s).
+    pub fn rho_numerator(&self, stats: &BaseStats) -> f64 {
+        let wr = self.weight_rel();
+        if self.value_norm_err == 0.0 {
+            return wr;
+        }
+        if stats.n_hat_norm <= 0.0 {
+            return f64::INFINITY;
+        }
+        wr + (1.0 + wr) * self.value_norm_err * stats.d_hat / stats.n_hat_norm
+    }
+
+    /// Total relative slack for the requested computation. For SDPA the
+    /// denominator and numerator biases compose first-order, mirroring
+    /// how Theorem 4.3 splits ε across the two estimates.
+    pub fn rho(&self, stats: &BaseStats, verify: Verify) -> f64 {
+        match verify {
+            Verify::Denominator => self.rho_denominator(),
+            Verify::Numerator => self.rho_numerator(stats),
+            Verify::Sdpa => self.rho_denominator() + self.rho_numerator(stats),
+        }
+    }
+}
+
+/// Widen measured base-sample statistics to cover the pre-quantization
+/// population (docs/GUARANTEES.md §8). With `e` the logit bound, every
+/// true weight is `ŵ·c`, `c ∈ [e^{−e}, e^{e}]`; writing `w = ŵ + d`
+/// with `|d| ≤ R̂·(e^e − 1)` gives `σ(w) ≤ σ(ŵ) + max|d|` (std is a
+/// seminorm), and the Hoeffding ranges grow by the factor `e^e` (plus
+/// the value-row perturbation for the vector terms). Widening is pure
+/// extra conservatism on the *sampling* bound — the deterministic bias
+/// is handled separately by [`budget_for_quant`]'s ε split.
+pub fn widen_stats(stats: &BaseStats, slack: &QuantSlack) -> BaseStats {
+    let wr = slack.weight_rel(); // e^e − 1
+    let grow = 1.0 + wr; //         e^e
+    let beta = stats.range_d * wr;
+    let gamma = stats.range_n * wr + stats.range_d * grow * slack.value_norm_err;
+    let sigma_d = stats.sigma2_d.max(0.0).sqrt() + beta;
+    let sigma_n = stats.trace_sigma_n.max(0.0).sqrt() + gamma;
+    BaseStats {
+        sigma2_d: sigma_d * sigma_d,
+        trace_sigma_n: sigma_n * sigma_n,
+        range_d: stats.range_d * grow,
+        range_n: stats.range_n * grow + stats.range_d * grow * slack.value_norm_err,
+        ..stats.clone()
+    }
+}
+
+/// [`budget_for`] with the dequantization error folded into the (ε, δ)
+/// contract: the sampled estimator concentrates around the *quantized*
+/// sums, which sit within a deterministic relative `ρ` of the exact
+/// ones, so the sampling tolerance must satisfy
+/// `ε_s·(1 + ρ) + ρ ≤ ε  ⇒  ε_s = (ε − ρ) / (1 + ρ)`,
+/// evaluated over [`widen_stats`]-widened statistics. When `ρ ≥ ε` no
+/// sample size can deliver the contract (the bias alone may exceed it):
+/// the budget saturates at `n_s` — exact summation over the quantized
+/// cache, the best any consumer of this store can do. δ is never split:
+/// quantization is deterministic. `None` / zero slack reduces exactly to
+/// [`budget_for`], which is the "slack term zeroed" negative control
+/// `tests/budget_coverage.rs` proves unsound on adversarial rows.
+pub fn budget_for_quant(
+    stats: &BaseStats,
+    verify: Verify,
+    eps: f64,
+    delta: f64,
+    bound: Bound,
+    slack: Option<&QuantSlack>,
+) -> usize {
+    let Some(s) = slack.filter(|s| !s.is_zero()) else {
+        return budget_for(stats, verify, eps, delta, bound);
+    };
+    let rho = s.rho(stats, verify);
+    if !rho.is_finite() || rho >= eps {
+        return stats.n_s;
+    }
+    let eps_s = (eps - rho) / (1.0 + rho);
+    budget_for(&widen_stats(stats, s), verify, eps_s, delta, bound)
+}
+
 /// Draw the base sample (Algorithm 2 line 1): `⌈f_b · n_s⌉` uniform
 /// residual indices, excluding the deterministic set (sorted).
 pub fn draw_base_sample(
@@ -442,6 +584,75 @@ mod tests {
         // population: w ∈ {1,3} equally -> mean 2, var 1.
         assert!((stats.sigma2_d - 1.0).abs() < 0.1, "σ²={}", stats.sigma2_d);
         assert!((stats.d_hat - 2.0 * n as f64).abs() < 0.1 * n as f64);
+    }
+
+    #[test]
+    fn quant_slack_zero_reduces_to_plain_budget() {
+        let s = toy_stats();
+        for verify in [Verify::Denominator, Verify::Numerator, Verify::Sdpa] {
+            for bound in [Bound::Clt, Bound::Hoeffding] {
+                let plain = budget_for(&s, verify, 0.05, 0.05, bound);
+                assert_eq!(budget_for_quant(&s, verify, 0.05, 0.05, bound, None), plain);
+                let zero = QuantSlack::default();
+                assert_eq!(
+                    budget_for_quant(&s, verify, 0.05, 0.05, bound, Some(&zero)),
+                    plain
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quant_slack_inflates_budget_monotonically() {
+        let s = toy_stats();
+        let small = QuantSlack { logit_err: 0.005, value_norm_err: 0.0 };
+        let big = QuantSlack { logit_err: 0.02, value_norm_err: 0.0 };
+        for bound in [Bound::Clt, Bound::Hoeffding] {
+            let b0 = budget_for_quant(&s, Verify::Denominator, 0.05, 0.1, bound, None);
+            let b1 = budget_for_quant(&s, Verify::Denominator, 0.05, 0.1, bound, Some(&small));
+            let b2 = budget_for_quant(&s, Verify::Denominator, 0.05, 0.1, bound, Some(&big));
+            assert!(b0 <= b1 && b1 <= b2, "{bound:?}: {b0} {b1} {b2}");
+            assert!(b2 <= s.n_s);
+        }
+        // ε consumed entirely by the bias: sample everything.
+        let huge = QuantSlack { logit_err: 0.2, value_norm_err: 0.0 };
+        assert_eq!(
+            budget_for_quant(&s, Verify::Denominator, 0.05, 0.1, Bound::Clt, Some(&huge)),
+            s.n_s
+        );
+    }
+
+    #[test]
+    fn widen_stats_grows_every_spread_term_and_keeps_sums() {
+        let s = toy_stats();
+        let slack = QuantSlack { logit_err: 0.05, value_norm_err: 0.02 };
+        let w = widen_stats(&s, &slack);
+        assert!(w.sigma2_d > s.sigma2_d);
+        assert!(w.trace_sigma_n > s.trace_sigma_n);
+        assert!(w.range_d > s.range_d);
+        assert!(w.range_n > s.range_n);
+        // Point estimates and sizes pass through unchanged.
+        assert_eq!(w.n_s, s.n_s);
+        assert_eq!(w.d_hat, s.d_hat);
+        assert_eq!(w.n_hat_norm, s.n_hat_norm);
+        assert_eq!(w.base_size, s.base_size);
+    }
+
+    #[test]
+    fn quant_rho_composes_sdpa_and_handles_degenerate_numerator() {
+        let s = toy_stats();
+        let slack = QuantSlack { logit_err: 0.01, value_norm_err: 0.001 };
+        let rd = slack.rho_denominator();
+        let rn = slack.rho_numerator(&s);
+        assert!(rd > 0.0 && rn > rd, "value term must add to the numerator bias");
+        assert!((slack.rho(&s, Verify::Sdpa) - (rd + rn)).abs() < 1e-15);
+        let mut degenerate = toy_stats();
+        degenerate.n_hat_norm = 0.0;
+        assert!(slack.rho_numerator(&degenerate).is_infinite());
+        assert_eq!(
+            budget_for_quant(&degenerate, Verify::Numerator, 0.1, 0.1, Bound::Clt, Some(&slack)),
+            degenerate.n_s
+        );
     }
 
     #[test]

@@ -55,7 +55,12 @@ pub fn run(args: &Args) -> String {
     for s in 0..steps {
         v_tokens.push(tok);
         let n_heads = cfg.n_heads;
-        let mut select = |l: usize, h: usize, k: &crate::tensor::Mat, v: &crate::tensor::Mat, q: &[f32]| {
+        let mut select = |l: usize,
+                          h: usize,
+                          k: &crate::tensor::Mat,
+                          v: &crate::tensor::Mat,
+                          q: &[f32],
+                          _qb: Option<crate::tensor::quant::KvQuantBounds>| {
             let mut ctx = PolicyCtx { k, v, q_scaled: q, rng: &mut step_rng, step: s };
             policies[l * n_heads + h].select(&mut ctx)
         };

@@ -19,16 +19,27 @@
 //! selection scans K linearly, so contiguity is the hot-path layout —
 //! while the block table carries placement, capacity accounting and
 //! admission gating, mirroring vLLM's logical/physical split.
+//!
+//! Rows are physically stored by a [`BlockStore`] in the cache's
+//! [`KvDtype`] — plain f32 or per-row symmetric int8 (3.5–4× smaller;
+//! `EngineConfig::kv_dtype` / `vattn serve --kv-quant int8`). All byte
+//! accounting (block sizing, [`TierStats`] traffic, resident bytes) is
+//! on the physical payload; at int8 the dequantization error is carried
+//! through the (ε, δ) budget as an explicit slack term rather than
+//! silently ignored — see `docs/GUARANTEES.md` §8.
 
 pub mod paged;
 pub mod prefix;
+pub mod store;
 pub mod tiered;
 
 pub use paged::{BlockId, BlockPool, CowOutcome, PageError};
 pub use prefix::{ChainKey, PrefixCache};
+pub use store::{BlockSnapshot, BlockStore, KvDtype, SlotRows};
 pub use tiered::{TierStats, TransferModel};
 
 use crate::model::ModelConfig;
+use crate::tensor::quant::KvQuantBounds;
 use crate::tensor::Mat;
 
 /// Block size (tokens) used when a cache is built standalone, outside an
@@ -40,10 +51,10 @@ pub struct KvCache {
     pub n_layers: usize,
     pub n_heads: usize,
     pub d_head: usize,
-    /// layers × heads, each an (n × d_head) matrix pair.
-    k: Vec<Mat>,
-    v: Vec<Mat>,
-    /// Host→device traffic accounting.
+    /// Physical row storage (f32 or int8 + dequantized mirror), one slot
+    /// per (layer, kv-head).
+    store: BlockStore,
+    /// Host→device traffic accounting (physical bytes).
     pub stats: TierStats,
     /// Allocation granularity in tokens.
     block_tokens: usize,
@@ -57,17 +68,40 @@ impl KvCache {
     /// Standalone (unpaged) cache — grows without a capacity bound. Used
     /// by experiments and tests that run outside the serving engine.
     pub fn new(cfg: &ModelConfig) -> KvCache {
-        Self::build(cfg, DEFAULT_BLOCK_TOKENS, Vec::new(), false)
+        Self::build(cfg, DEFAULT_BLOCK_TOKENS, Vec::new(), false, KvDtype::F32)
     }
 
-    /// Paged cache backed by blocks leased from a [`BlockPool`]. The
+    /// Standalone cache with an explicit storage dtype.
+    pub fn new_with_dtype(cfg: &ModelConfig, dtype: KvDtype) -> KvCache {
+        Self::build(cfg, DEFAULT_BLOCK_TOKENS, Vec::new(), false, dtype)
+    }
+
+    /// Paged f32 cache backed by blocks leased from a [`BlockPool`]. The
     /// caller (the engine) frees the table via [`KvCache::release_blocks`]
     /// when the request completes.
     pub fn paged(cfg: &ModelConfig, block_tokens: usize, blocks: Vec<BlockId>) -> KvCache {
-        Self::build(cfg, block_tokens.max(1), blocks, true)
+        Self::paged_dtype(cfg, block_tokens, blocks, KvDtype::F32)
     }
 
-    fn build(cfg: &ModelConfig, block_tokens: usize, blocks: Vec<BlockId>, paged: bool) -> KvCache {
+    /// [`KvCache::paged`] with an explicit storage dtype (the serving
+    /// session builds per-request caches in the request's resolved
+    /// dtype).
+    pub fn paged_dtype(
+        cfg: &ModelConfig,
+        block_tokens: usize,
+        blocks: Vec<BlockId>,
+        dtype: KvDtype,
+    ) -> KvCache {
+        Self::build(cfg, block_tokens.max(1), blocks, true, dtype)
+    }
+
+    fn build(
+        cfg: &ModelConfig,
+        block_tokens: usize,
+        blocks: Vec<BlockId>,
+        paged: bool,
+        dtype: KvDtype,
+    ) -> KvCache {
         // One slot per (layer, KV head) — query heads share KV slots
         // under grouped-query attention.
         let slots = cfg.n_layers * cfg.n_kv_heads;
@@ -76,13 +110,30 @@ impl KvCache {
             n_layers: cfg.n_layers,
             n_heads: cfg.n_kv_heads,
             d_head: d,
-            k: (0..slots).map(|_| Mat::zeros(0, d)).collect(),
-            v: (0..slots).map(|_| Mat::zeros(0, d)).collect(),
+            store: BlockStore::new(slots, d, dtype),
             stats: TierStats::default(),
             block_tokens,
             block_table: blocks,
             paged,
         }
+    }
+
+    /// Physical storage dtype of this cache's rows.
+    pub fn dtype(&self) -> KvDtype {
+        self.store.dtype()
+    }
+
+    /// Physical bytes of one stored K or V row.
+    pub fn row_bytes(&self) -> usize {
+        self.store.row_bytes()
+    }
+
+    /// Dequantization-error bounds for a head's rows (`None` on exact
+    /// f32 storage). The engine hands these to the index policies before
+    /// every select so the (ε, δ) budget can absorb the quantization
+    /// slack (docs/GUARANTEES.md §8).
+    pub fn quant_bounds(&self, layer: usize, head: usize) -> Option<KvQuantBounds> {
+        self.store.quant_bounds(self.slot(layer, head))
     }
 
     #[inline]
@@ -92,40 +143,40 @@ impl KvCache {
 
     /// Append one token's (k, v) rows for a head. Paged caches enforce
     /// the capacity their block table was leased for — overflowing it
-    /// means the engine's admission reservation was wrong.
+    /// means the engine's admission reservation was wrong. On int8
+    /// storage the rows are quantized on the way in and the write
+    /// traffic is charged at the physical (post-quantization) rate.
     pub fn append(&mut self, layer: usize, head: usize, k_row: &[f32], v_row: &[f32]) {
         let s = self.slot(layer, head);
         debug_assert_eq!(k_row.len(), self.d_head);
         if self.paged {
             let cap = self.block_table.len() * self.block_tokens;
             assert!(
-                self.k[s].rows < cap,
+                self.store.rows(s) < cap,
                 "paged KvCache overflow: slot ({layer}, {head}) at {} tokens, {} blocks × {} reserved",
-                self.k[s].rows,
+                self.store.rows(s),
                 self.block_table.len(),
                 self.block_tokens
             );
         }
-        self.k[s].data.extend_from_slice(k_row);
-        self.k[s].rows += 1;
-        self.v[s].data.extend_from_slice(v_row);
-        self.v[s].rows += 1;
-        self.stats.record_write(2 * self.d_head * 4);
+        self.store.append_row(s, k_row, v_row);
+        self.stats.record_write(2 * self.store.row_bytes());
     }
 
     /// Number of cached tokens for a layer (all heads advance together).
     pub fn len(&self, layer: usize) -> usize {
-        self.k[self.slot(layer, 0)].rows
+        self.store.rows(self.slot(layer, 0))
     }
 
     pub fn is_empty(&self) -> bool {
-        self.k.iter().all(|m| m.rows == 0)
+        (0..self.store.slots()).all(|s| self.store.rows(s) == 0)
     }
 
-    /// Borrow a head's (K, V) matrices.
+    /// Borrow a head's (K, V) matrices — the f32 rows every consumer
+    /// computes over (the dequantized mirror on int8 storage).
     pub fn head(&self, layer: usize, head: usize) -> (&Mat, &Mat) {
         let s = self.slot(layer, head);
-        (&self.k[s], &self.v[s])
+        (self.store.k(s), self.store.v(s))
     }
 
     /// Gather selected rows into dense (b × d) buffers — the host→device
@@ -161,32 +212,41 @@ impl KvCache {
         gv.cols = d;
         gv.data.clear();
         for &i in idx {
-            gk.data.extend_from_slice(self.k[s].row(i));
-            gv.data.extend_from_slice(self.v[s].row(i));
+            gk.data.extend_from_slice(self.store.k(s).row(i));
+            gv.data.extend_from_slice(self.store.v(s).row(i));
         }
-        self.stats.record_read(2 * idx.len() * d * 4);
+        // Physical traffic: a quantized row ships its codes + scale and
+        // is dequantized device-side, so the host tier moves row_bytes,
+        // not the 4·d of the dequantized view.
+        self.stats.record_read(2 * idx.len() * self.store.row_bytes());
     }
 
-    /// Total resident bytes.
+    /// Charge the read traffic of `rows` selected K/V row pairs touched
+    /// in place (the non-gathering decode path), at the physical
+    /// per-row rate of this cache's dtype.
+    pub fn record_selected_read(&mut self, rows: usize) {
+        self.stats.record_read(2 * rows * self.store.row_bytes());
+    }
+
+    /// Total resident bytes (physical payload; a quantized cache's
+    /// dequantized mirror models the transient device tile and is not
+    /// host-resident state).
     pub fn resident_bytes(&self) -> usize {
-        self.k
-            .iter()
-            .zip(self.v.iter())
-            .map(|(k, v)| (k.data.len() + v.data.len()) * 4)
-            .sum()
+        self.store.payload_bytes()
     }
 
     /// Drop all cached tokens (end of a request).
     pub fn clear(&mut self) {
-        for m in self.k.iter_mut().chain(self.v.iter_mut()) {
-            m.rows = 0;
-            m.data.clear();
-        }
+        self.store.clear();
     }
 
     /// Tokens currently cached (all slots advance together).
     pub fn tokens(&self) -> usize {
-        self.k.first().map(|m| m.rows).unwrap_or(0)
+        if self.store.slots() == 0 {
+            0
+        } else {
+            self.store.rows(0)
+        }
     }
 
     /// Allocation granularity in tokens.
@@ -222,32 +282,27 @@ impl KvCache {
         std::mem::replace(&mut self.block_table[idx], id)
     }
 
-    /// Snapshot one *filled* block's rows: per (layer, kv-head) slot, the
-    /// flat `block_tokens × d_head` K and V buffers. Used by the prefix
+    /// Snapshot one *filled* block's rows across every (layer, kv-head)
+    /// slot, in the cache's physical layout — quantized payloads are
+    /// captured byte-for-byte, so a later [`KvCache::load_block`]
+    /// reproduces the donor's store bit-exactly. Used by the prefix
     /// cache to keep shared prompt blocks alive beyond their donor.
-    pub fn snapshot_block(&self, block: usize) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    pub fn snapshot_block(&self, block: usize) -> BlockSnapshot {
         let lo = block * self.block_tokens;
         let hi = lo + self.block_tokens;
         assert!(hi <= self.tokens(), "snapshot of an unfilled block {block}");
-        let d = self.d_head;
-        let mut ks = Vec::with_capacity(self.k.len());
-        let mut vs = Vec::with_capacity(self.v.len());
-        for s in 0..self.k.len() {
-            ks.push(self.k[s].data[lo * d..hi * d].to_vec());
-            vs.push(self.v[s].data[lo * d..hi * d].to_vec());
-        }
-        (ks, vs)
+        self.store.snapshot_rows(lo, hi)
     }
 
-    /// Bulk-append one shared block's rows (the layout produced by
+    /// Bulk-append one shared block's rows (as produced by
     /// [`KvCache::snapshot_block`]) — the fork's copy-in of a cached
     /// prompt prefix, replacing that block's prefill compute with a
-    /// memcpy. Paged caches enforce their leased capacity as in
-    /// [`KvCache::append`].
-    pub fn load_block(&mut self, k_slots: &[Vec<f32>], v_slots: &[Vec<f32>]) {
-        assert_eq!(k_slots.len(), self.k.len(), "slot count mismatch on prefix load");
-        let d = self.d_head;
-        let tokens = k_slots.first().map_or(0, |b| b.len() / d);
+    /// memcpy. Quantized payloads are restored byte-for-byte (never
+    /// requantized), which is what keeps prefix-shared and unshared
+    /// runs byte-identical. Paged caches enforce their leased capacity
+    /// as in [`KvCache::append`].
+    pub fn load_block(&mut self, snap: &BlockSnapshot) {
+        let tokens = snap.tokens;
         if self.paged {
             let cap = self.block_table.len() * self.block_tokens;
             assert!(
@@ -258,14 +313,9 @@ impl KvCache {
                 self.block_tokens
             );
         }
-        for (s, (kb, vb)) in k_slots.iter().zip(v_slots.iter()).enumerate() {
-            debug_assert_eq!(kb.len(), tokens * d);
-            self.k[s].data.extend_from_slice(kb);
-            self.k[s].rows += tokens;
-            self.v[s].data.extend_from_slice(vb);
-            self.v[s].rows += tokens;
-        }
-        self.stats.record_write(2 * k_slots.len() * tokens * d * 4);
+        self.store.load_rows(snap);
+        self.stats
+            .record_write(2 * self.store.slots() * tokens * self.store.row_bytes());
     }
 
     /// Blocks actually filled by appended tokens.
@@ -472,12 +522,12 @@ mod tests {
                 }
             }
         }
-        let (k0, v0) = src.snapshot_block(0);
-        let (k1, v1) = src.snapshot_block(1);
+        let s0 = src.snapshot_block(0);
+        let s1 = src.snapshot_block(1);
         let lease2 = pool.try_alloc(2).unwrap();
         let mut dst = KvCache::paged(&c, 4, lease2);
-        dst.load_block(&k0, &v0);
-        dst.load_block(&k1, &v1);
+        dst.load_block(&s0);
+        dst.load_block(&s1);
         assert_eq!(dst.tokens(), 8);
         for l in 0..c.n_layers {
             for h in 0..c.n_kv_heads {
@@ -493,10 +543,23 @@ mod tests {
     #[should_panic(expected = "paged KvCache overflow on prefix load")]
     fn load_block_rejects_overflow() {
         let c = cfg();
-        let mut cache = KvCache::paged(&c, 4, vec![0]);
-        let slots = c.n_layers * c.n_kv_heads;
-        let block: Vec<Vec<f32>> = (0..slots).map(|_| vec![0.0; 8 * c.d_head()]).collect();
-        cache.load_block(&block, &block);
+        // Donor holds 8 tokens in 2 blocks; the destination leased only
+        // one 4-token block, so loading both snapshots must overflow.
+        let mut pool = BlockPool::for_model(&c, 4, None);
+        let mut donor = KvCache::paged(&c, 4, pool.try_alloc(2).unwrap());
+        let row = vec![0.0f32; c.d_head()];
+        for _ in 0..8 {
+            for l in 0..c.n_layers {
+                for h in 0..c.n_kv_heads {
+                    donor.append(l, h, &row, &row);
+                }
+            }
+        }
+        let s0 = donor.snapshot_block(0);
+        let s1 = donor.snapshot_block(1);
+        let mut cache = KvCache::paged(&c, 4, pool.try_alloc(1).unwrap());
+        cache.load_block(&s0);
+        cache.load_block(&s1);
     }
 
     #[test]
@@ -518,6 +581,98 @@ mod tests {
         cache.append(0, 0, &row, &row);
         assert_eq!(cache.stats.bytes_written, 2 * c.d_head() * 4);
         assert_eq!(cache.stats.writes, 1);
+    }
+
+    #[test]
+    fn int8_cache_charges_physical_bytes_on_reads_and_writes() {
+        // The TierStats counters must reflect post-quantization traffic:
+        // an int8 row is d codes + a 4-byte scale per matrix, not 4·d.
+        let c = cfg();
+        let d = c.d_head();
+        let mut cache = KvCache::new_with_dtype(&c, KvDtype::Int8);
+        assert_eq!(cache.dtype(), KvDtype::Int8);
+        assert_eq!(cache.row_bytes(), d + 4);
+        let row = vec![1.5f32; d];
+        cache.append(0, 0, &row, &row);
+        assert_eq!(cache.stats.bytes_written, 2 * (d + 4));
+        assert_eq!(cache.stats.writes, 1);
+        for _ in 0..9 {
+            cache.append(0, 0, &row, &row);
+        }
+        let before = cache.stats.bytes_read;
+        let (gk, _gv) = cache.gather(0, 0, &[0, 3, 7]);
+        assert_eq!(gk.rows, 3);
+        assert_eq!(cache.stats.bytes_read - before, 2 * 3 * (d + 4));
+        cache.record_selected_read(5);
+        assert_eq!(cache.stats.bytes_read - before, 2 * 3 * (d + 4) + 2 * 5 * (d + 4));
+        // Resident bytes are physical too: ≥ 3.5x under fp32 at d = 32.
+        let fp32 = KvCache::new(&c).row_bytes();
+        assert!(fp32 as f64 / cache.row_bytes() as f64 >= 3.5);
+        assert_eq!(cache.resident_bytes(), 10 * 2 * (d + 4));
+    }
+
+    #[test]
+    fn int8_append_reads_back_within_bound_and_reports_bounds() {
+        let c = cfg();
+        let d = c.d_head();
+        let mut cache = KvCache::new_with_dtype(&c, KvDtype::Int8);
+        assert!(cache.quant_bounds(0, 0).unwrap().is_zero(), "empty slot has zero bounds");
+        assert!(KvCache::new(&c).quant_bounds(0, 0).is_none(), "f32 cache has no bounds");
+        let mut rng = Rng::new(9);
+        let mut rows = Vec::new();
+        for _ in 0..6 {
+            let kr: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 2.0)).collect();
+            let vr: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 2.0)).collect();
+            cache.append(0, 0, &kr, &vr);
+            rows.push((kr, vr));
+        }
+        let b = cache.quant_bounds(0, 0).expect("int8 bounds");
+        assert!(b.k_scale_max > 0.0 && b.v_scale_max > 0.0);
+        let (kc, vc) = cache.head(0, 0);
+        for (r, (kr, vr)) in rows.iter().enumerate() {
+            for (x, x_hat) in kr.iter().zip(kc.row(r)) {
+                assert!((x - x_hat).abs() <= 0.5 * b.k_scale_max);
+            }
+            for (x, x_hat) in vr.iter().zip(vc.row(r)) {
+                assert!((x - x_hat).abs() <= 0.5 * b.v_scale_max);
+            }
+        }
+    }
+
+    #[test]
+    fn int8_snapshot_load_round_trip_is_bit_exact() {
+        let c = cfg();
+        let mut pool = BlockPool::for_model_dtype(&c, 4, None, KvDtype::Int8);
+        let mut src = KvCache::paged_dtype(&c, 4, pool.try_alloc(2).unwrap(), KvDtype::Int8);
+        let mut rng = Rng::new(11);
+        for _ in 0..8 {
+            for l in 0..c.n_layers {
+                for h in 0..c.n_kv_heads {
+                    let kr: Vec<f32> = (0..c.d_head()).map(|_| rng.normal32(0.0, 1.0)).collect();
+                    let vr: Vec<f32> = (0..c.d_head()).map(|_| rng.normal32(0.0, 1.0)).collect();
+                    src.append(l, h, &kr, &vr);
+                }
+            }
+        }
+        let s0 = src.snapshot_block(0);
+        assert_eq!(s0.dtype, KvDtype::Int8);
+        let s1 = src.snapshot_block(1);
+        let mut dst = KvCache::paged_dtype(&c, 4, pool.try_alloc(2).unwrap(), KvDtype::Int8);
+        dst.load_block(&s0);
+        dst.load_block(&s1);
+        assert_eq!(dst.tokens(), 8);
+        for l in 0..c.n_layers {
+            for h in 0..c.n_kv_heads {
+                let (sk, sv) = src.head(l, h);
+                let (dk, dv) = dst.head(l, h);
+                // Byte-for-byte payload copy ⇒ bitwise-equal mirrors.
+                assert_eq!(sk.data, dk.data);
+                assert_eq!(sv.data, dv.data);
+            }
+        }
+        // Load charges physical write traffic.
+        let slots = c.n_layers * c.n_kv_heads;
+        assert_eq!(dst.stats.bytes_written, 2 * slots * 8 * (c.d_head() + 4));
     }
 
     #[test]

@@ -95,15 +95,30 @@ impl BlockPool {
         }
     }
 
-    /// Pool sized for a model: block bytes follow from the KV row shape,
-    /// and an optional byte budget becomes a block capacity (≥ 1).
+    /// Pool sized for a model storing f32 KV rows: block bytes follow
+    /// from the KV row shape, and an optional byte budget becomes a
+    /// block capacity (≥ 1).
     pub fn for_model(
         cfg: &ModelConfig,
         block_tokens: usize,
         capacity_bytes: Option<usize>,
     ) -> BlockPool {
+        Self::for_model_dtype(cfg, block_tokens, capacity_bytes, super::KvDtype::F32)
+    }
+
+    /// [`BlockPool::for_model`] at an explicit KV storage dtype. A
+    /// quantized dtype shrinks `block_bytes`, so the same byte budget
+    /// yields proportionally more blocks — which is the entire serving
+    /// payoff of the int8 tier: more resident requests, fewer
+    /// preemptions, same pool.
+    pub fn for_model_dtype(
+        cfg: &ModelConfig,
+        block_tokens: usize,
+        capacity_bytes: Option<usize>,
+        dtype: super::KvDtype,
+    ) -> BlockPool {
         let bt = block_tokens.max(1);
-        let bb = (cfg.kv_bytes_per_token() * bt).max(1);
+        let bb = (dtype.kv_bytes_per_token(cfg) * bt).max(1);
         let cap = capacity_bytes.map(|bytes| (bytes / bb).max(1));
         BlockPool::new(bt, bb, cap)
     }
@@ -361,6 +376,18 @@ mod tests {
         assert_eq!(p.blocks_for_tokens(16), 1);
         assert_eq!(p.blocks_for_tokens(17), 2);
         assert_eq!(p.blocks_for_tokens(0), 1, "even empty requests hold one block");
+    }
+
+    #[test]
+    fn for_model_dtype_quantized_pool_holds_more_blocks_per_byte() {
+        let cfg = ModelConfig::tiny();
+        let budget = 64 * 16 * cfg.kv_bytes_per_token();
+        let fp32 = BlockPool::for_model_dtype(&cfg, 16, Some(budget), super::super::KvDtype::F32);
+        let int8 = BlockPool::for_model_dtype(&cfg, 16, Some(budget), super::super::KvDtype::Int8);
+        assert_eq!(fp32.capacity_blocks(), Some(64));
+        let ratio = int8.capacity_blocks().unwrap() as f64 / 64.0;
+        assert!(ratio >= 3.5, "int8 pool only {ratio}x the fp32 block count");
+        assert!(int8.block_bytes() < fp32.block_bytes());
     }
 
     #[test]

@@ -29,14 +29,19 @@
 use std::collections::HashMap;
 
 use super::paged::{BlockId, BlockPool, PageError};
+use super::store::{BlockSnapshot, KvDtype};
 use super::KvCache;
 
 /// Hash-chain key of a cached block (identifies the whole prefix up to
-/// and including that block).
+/// and including that block, *and* the storage dtype it was prefilled
+/// in — an int8 donor's blocks never match an f32 request's lookup, so
+/// mixed-dtype sessions cannot alias payload layouts).
 pub type ChainKey = u64;
 
 /// One cached full block: its physical id (the cache holds one pool
-/// reference on it) plus a snapshot of its K/V rows for copy-in.
+/// reference on it) plus a snapshot of its K/V rows for copy-in. The
+/// snapshot carries the donor's *physical* payload — quantized blocks
+/// byte-for-byte — so forks are bit-exact replicas.
 struct Entry {
     id: BlockId,
     parent: Option<ChainKey>,
@@ -46,10 +51,9 @@ struct Entry {
     /// LRU stamp; strictly increasing, so eviction order is total and
     /// deterministic.
     last_used: u64,
-    /// Per (layer, kv-head) slot: `block_tokens × d_head` K rows, flat.
-    k: Vec<Vec<f32>>,
-    /// Same shape for V.
-    v: Vec<Vec<f32>>,
+    /// The block's rows across every (layer, kv-head) slot, in the
+    /// donor's storage layout.
+    snap: BlockSnapshot,
 }
 
 /// The radix of cached prompt blocks. Owned by the serving `Session`;
@@ -65,8 +69,10 @@ pub struct PrefixCache {
     evicted_blocks: u64,
 }
 
-/// FNV-1a over (parent key presence, parent key, block tokens).
-fn chain_key(parent: Option<ChainKey>, tokens: &[u32]) -> ChainKey {
+/// FNV-1a over (storage dtype, parent key presence, parent key, block
+/// tokens). The dtype tag partitions the radix: chains prefilled at
+/// different KV dtypes never match each other.
+fn chain_key(dtype: KvDtype, parent: Option<ChainKey>, tokens: &[u32]) -> ChainKey {
     const OFFSET: u64 = 0xcbf29ce484222325;
     const PRIME: u64 = 0x100000001b3;
     let mut h = OFFSET;
@@ -74,6 +80,10 @@ fn chain_key(parent: Option<ChainKey>, tokens: &[u32]) -> ChainKey {
         h ^= byte as u64;
         h = h.wrapping_mul(PRIME);
     };
+    eat(match dtype {
+        KvDtype::F32 => 0xF3,
+        KvDtype::Int8 => 0x18,
+    });
     match parent {
         None => eat(0),
         Some(p) => {
@@ -112,7 +122,7 @@ impl PrefixCache {
     /// hit-rate counters move only through [`PrefixCache::record_use`],
     /// so a pool-stalled admission retrying its lookup every tick does
     /// not inflate them.
-    pub fn lookup(&mut self, prompt: &[u32]) -> Vec<ChainKey> {
+    pub fn lookup(&mut self, prompt: &[u32], dtype: KvDtype) -> Vec<ChainKey> {
         let bt = self.block_tokens;
         if prompt.is_empty() {
             return Vec::new();
@@ -121,7 +131,7 @@ impl PrefixCache {
         let mut parent = None;
         let mut start = 0;
         while start + bt < prompt.len() {
-            let key = chain_key(parent, &prompt[start..start + bt]);
+            let key = chain_key(dtype, parent, &prompt[start..start + bt]);
             // Stamp first: a miss wastes one clock value, which keeps
             // stamps unique without overlapping entry borrows.
             self.clock += 1;
@@ -153,17 +163,19 @@ impl PrefixCache {
 
     /// Copy the matched blocks' K/V rows into a request's working cache
     /// (the fork's one-time memcpy; `keys` as returned by `lookup`).
+    /// Quantized payloads are copied byte-for-byte — the fork's store is
+    /// bit-identical to the donor's, never requantized.
     pub fn copy_into(&self, keys: &[ChainKey], cache: &mut KvCache) {
         for key in keys {
-            let e = &self.entries[key];
-            cache.load_block(&e.k, &e.v);
+            cache.load_block(&self.entries[key].snap);
         }
     }
 
     /// Offer a freshly prefilled request's full prompt blocks to the
     /// radix. Blocks already cached are skipped; new entries take one
     /// pool reference on the donor's physical block and snapshot its
-    /// rows. Returns the number of blocks inserted.
+    /// rows (in the donor's storage dtype, which also tags the chain
+    /// keys). Returns the number of blocks inserted.
     pub fn insert_chain(
         &mut self,
         prompt: &[u32],
@@ -171,15 +183,16 @@ impl PrefixCache {
         pool: &mut BlockPool,
     ) -> Result<usize, PageError> {
         let bt = self.block_tokens;
+        let dtype = cache.dtype();
         let full = prompt.len() / bt;
         let mut parent: Option<ChainKey> = None;
         let mut inserted = 0;
         for b in 0..full {
-            let key = chain_key(parent, &prompt[b * bt..(b + 1) * bt]);
+            let key = chain_key(dtype, parent, &prompt[b * bt..(b + 1) * bt]);
             if !self.entries.contains_key(&key) {
                 let id = cache.block_table()[b];
                 pool.retain(id)?;
-                let (k, v) = cache.snapshot_block(b);
+                let snap = cache.snapshot_block(b);
                 self.clock += 1;
                 if let Some(p) = parent {
                     if let Some(pe) = self.entries.get_mut(&p) {
@@ -188,7 +201,7 @@ impl PrefixCache {
                 }
                 self.entries.insert(
                     key,
-                    Entry { id, parent, children: 0, last_used: self.clock, k, v },
+                    Entry { id, parent, children: 0, last_used: self.clock, snap },
                 );
                 inserted += 1;
                 self.inserted_blocks += 1;
@@ -295,13 +308,15 @@ mod tests {
     }
 
     #[test]
-    fn chain_key_distinguishes_position_and_content() {
-        let a = chain_key(None, &[1, 2, 3, 4]);
-        let b = chain_key(None, &[1, 2, 3, 5]);
-        let c = chain_key(Some(a), &[1, 2, 3, 4]);
+    fn chain_key_distinguishes_position_content_and_dtype() {
+        let a = chain_key(KvDtype::F32, None, &[1, 2, 3, 4]);
+        let b = chain_key(KvDtype::F32, None, &[1, 2, 3, 5]);
+        let c = chain_key(KvDtype::F32, Some(a), &[1, 2, 3, 4]);
+        let d = chain_key(KvDtype::Int8, None, &[1, 2, 3, 4]);
         assert_ne!(a, b, "content must matter");
         assert_ne!(a, c, "chain position must matter");
-        assert_eq!(a, chain_key(None, &[1, 2, 3, 4]), "keys are deterministic");
+        assert_ne!(a, d, "storage dtype must partition the radix");
+        assert_eq!(a, chain_key(KvDtype::F32, None, &[1, 2, 3, 4]), "keys are deterministic");
     }
 
     #[test]
@@ -314,18 +329,20 @@ mod tests {
         assert_eq!(px.insert_chain(&p, &cache, &mut pool).unwrap(), 2);
         assert_eq!(px.blocks_held(), 2);
         // Same prompt: both full blocks match.
-        assert_eq!(px.lookup(&p).len(), 2);
+        assert_eq!(px.lookup(&p, KvDtype::F32).len(), 2);
+        // An f32 chain never serves an int8 request (layouts differ).
+        assert_eq!(px.lookup(&p, KvDtype::Int8).len(), 0);
         // A prompt of exactly 8 tokens may match only block 0 — block 1
         // holds its final token, whose logits must be recomputed.
-        assert_eq!(px.lookup(&p[..8]).len(), 1);
+        assert_eq!(px.lookup(&p[..8], KvDtype::F32).len(), 1);
         // Diverging second block stops the chain after block 0.
         let mut q = p.clone();
         q[5] = 999;
-        assert_eq!(px.lookup(&q).len(), 1);
+        assert_eq!(px.lookup(&q, KvDtype::F32).len(), 1);
         // Diverging first block matches nothing.
         let mut r = p.clone();
         r[0] = 999;
-        assert_eq!(px.lookup(&r).len(), 0);
+        assert_eq!(px.lookup(&r, KvDtype::F32).len(), 0);
         // Lookups alone never move the hit-rate counters (stalled
         // admission retries must not inflate them) — committed forks do.
         assert_eq!(px.hit_rate(), 0.0);
@@ -346,7 +363,7 @@ mod tests {
         px.insert_chain(&p, &donor, &mut pool).unwrap();
         let donor_in_use = pool.in_use_blocks();
 
-        let keys = px.lookup(&p);
+        let keys = px.lookup(&p, KvDtype::F32);
         let ids = px.blocks(&keys);
         assert_eq!(ids, donor.block_table()[..2].to_vec());
         for &id in &ids {
@@ -383,20 +400,63 @@ mod tests {
 
         // A later lookup refreshes the whole chain's LRU stamps; the
         // deepest leaf (block 2) is still the only evictable entry.
-        assert_eq!(px.lookup(&p).len(), 3);
+        assert_eq!(px.lookup(&p, KvDtype::F32).len(), 3);
         assert!(px.evict_one(&mut pool).unwrap());
         assert_eq!(px.blocks_held(), 2);
         assert_eq!(pool.in_use_blocks(), 2);
         // Now block 1 is the leaf; retain it as a live request would —
         // eviction must then fall through to... nothing (block 0 has a
         // child, block 1 is shared), reporting no progress.
-        let keys = px.lookup(&p[..9]); // matches blocks 0, 1
+        let keys = px.lookup(&p[..9], KvDtype::F32); // matches blocks 0, 1
         let ids = px.blocks(&keys);
         pool.retain(ids[1]).unwrap();
         assert!(!px.evict_one(&mut pool).unwrap());
         pool.free([ids[1]]).unwrap();
         assert!(px.evict_one(&mut pool).unwrap(), "sole ownership restored");
         assert_eq!(px.evicted_blocks(), 2);
+    }
+
+    #[test]
+    fn int8_fork_copies_quantized_payload_byte_for_byte() {
+        let cfg = ModelConfig::tiny();
+        let mut pool = BlockPool::for_model_dtype(&cfg, BT, None, KvDtype::Int8);
+        let mut px = PrefixCache::new(BT);
+        let p = prompt(9); // 2 full blocks
+        let lease = pool.try_alloc(pool.blocks_for_tokens(9)).unwrap();
+        let mut donor = KvCache::paged_dtype(&cfg, BT, lease, KvDtype::Int8);
+        let mut rng = crate::util::Rng::new(5);
+        for _ in 0..9 {
+            for l in 0..cfg.n_layers {
+                for h in 0..cfg.n_kv_heads {
+                    let kr: Vec<f32> = (0..cfg.d_head()).map(|_| rng.normal32(0.0, 1.0)).collect();
+                    let vr: Vec<f32> = (0..cfg.d_head()).map(|_| rng.normal32(0.0, 1.0)).collect();
+                    donor.append(l, h, &kr, &vr);
+                }
+            }
+        }
+        px.insert_chain(&p, &donor, &mut pool).unwrap();
+        let keys = px.lookup(&p, KvDtype::Int8);
+        assert_eq!(keys.len(), 2);
+        let ids = px.blocks(&keys);
+        for &id in &ids {
+            pool.retain(id).unwrap();
+        }
+        let tail = pool.try_alloc(1).unwrap();
+        let mut table = ids;
+        table.extend(tail);
+        let mut fork = KvCache::paged_dtype(&cfg, BT, table, KvDtype::Int8);
+        px.copy_into(&keys, &mut fork);
+        assert_eq!(fork.tokens(), 8);
+        for l in 0..cfg.n_layers {
+            for h in 0..cfg.n_kv_heads {
+                let (dk, dv) = donor.head(l, h);
+                let (fk, fv) = fork.head(l, h);
+                // Bitwise-equal dequantized mirrors: the payload was
+                // copied byte-for-byte, never requantized.
+                assert_eq!(&dk.data[..8 * cfg.d_head()], &fk.data[..]);
+                assert_eq!(&dv.data[..8 * cfg.d_head()], &fv.data[..]);
+            }
+        }
     }
 
     #[test]

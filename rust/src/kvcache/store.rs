@@ -1,0 +1,381 @@
+//! [`BlockStore`]: the K/V row storage behind [`crate::kvcache::KvCache`],
+//! in one of two physical dtypes behind a single interface.
+//!
+//! * [`KvDtype::F32`] — rows stored as plain f32 (`4·d` bytes/row), the
+//!   historical layout.
+//! * [`KvDtype::Int8`] — rows stored as per-row symmetric int8 payloads
+//!   (`d + 4` bytes/row: one code per element plus the f32 scale; see
+//!   [`crate::tensor::quant`]), alongside a *dequantized f32 working
+//!   mirror*.
+//!
+//! The mirror is the testbed's stand-in for the transient on-device
+//! dequantized tile of the paper's deployment: every downstream
+//! computation (index selection, attention, the budget statistics) reads
+//! the mirror — so quantization error is fully visible to the verified
+//! pipeline — while everything *physical* (paged-pool block sizing,
+//! [`crate::kvcache::TierStats`] byte traffic, resident bytes, prefix
+//! snapshots) is accounted on the int8 payload. The bridge is exact:
+//! `QuantizedMat::dot_row` is bitwise equal to dotting the mirror row
+//! (proved in `tests/proptests.rs`), so mirror-side math is the math a
+//! fused dequantizing kernel would produce.
+//!
+//! Snapshots ([`BlockStore::snapshot_rows`] / [`BlockStore::load_rows`])
+//! carry the payload **byte-for-byte** — a prefix fork or CoW copy of a
+//! quantized block never requantizes, so forked requests are bit-exact
+//! replicas of their donors and token streams stay byte-identical
+//! between shared and unshared runs (`tests/kv_quant.rs`).
+
+use crate::model::ModelConfig;
+use crate::tensor::quant::{KvQuantBounds, QuantizedMat};
+use crate::tensor::Mat;
+
+/// Physical storage dtype of a KV cache's rows.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KvDtype {
+    /// Plain f32 rows (exact).
+    #[default]
+    F32,
+    /// Per-row symmetric int8 with power-of-two scales; dequantization
+    /// error is carried through the (ε, δ) budget as an explicit slack
+    /// term (docs/GUARANTEES.md §8).
+    Int8,
+}
+
+impl KvDtype {
+    /// Physical bytes of one stored K or V row of `d` elements. Int8
+    /// rows carry a 4-byte f32 scale next to `d` one-byte codes.
+    pub fn row_bytes(self, d: usize) -> usize {
+        match self {
+            KvDtype::F32 => 4 * d,
+            KvDtype::Int8 => d + 4,
+        }
+    }
+
+    /// KV bytes per cached token for a model at this dtype (K and V
+    /// rows across every layer's KV heads). At `F32` this equals
+    /// [`ModelConfig::kv_bytes_per_token`].
+    pub fn kv_bytes_per_token(self, cfg: &ModelConfig) -> usize {
+        2 * cfg.n_kv_heads * self.row_bytes(cfg.d_head()) * cfg.n_layers
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::Int8 => "int8",
+        }
+    }
+
+    /// Parse a CLI spelling (`vattn serve --kv-quant int8`).
+    pub fn parse(s: &str) -> Option<KvDtype> {
+        match s {
+            "f32" | "fp32" | "none" => Some(KvDtype::F32),
+            "int8" => Some(KvDtype::Int8),
+            _ => None,
+        }
+    }
+}
+
+/// fp32-vs-physical per-token footprint ratio (1.0 when the physical
+/// bytes are zero/unpopulated). The single definition behind
+/// `SessionStats::kv_compression_ratio` and
+/// `metrics::PagingSummary::compression_ratio`, so the serve table,
+/// `BENCH_engine.json` and stats consumers can never diverge.
+pub fn compression_ratio(bytes_per_token_fp32: usize, bytes_per_token: usize) -> f64 {
+    if bytes_per_token == 0 {
+        1.0
+    } else {
+        bytes_per_token_fp32 as f64 / bytes_per_token as f64
+    }
+}
+
+/// One slot's rows for one block, in that slot's physical layout.
+/// Quantized payloads are raw codes + scales, copied byte-for-byte.
+pub enum SlotRows {
+    F32 { k: Vec<f32>, v: Vec<f32> },
+    Int8 { k: Vec<i8>, k_scales: Vec<f32>, v: Vec<i8>, v_scales: Vec<f32> },
+}
+
+/// A full block's rows across every (layer, kv-head) slot — what the
+/// prefix cache retains per entry and what a fork copies in.
+pub struct BlockSnapshot {
+    pub dtype: KvDtype,
+    /// Tokens (rows per slot) the snapshot covers.
+    pub tokens: usize,
+    pub slots: Vec<SlotRows>,
+}
+
+/// Per-slot K/V storage in one dtype. Slots advance together only by
+/// convention (the cache appends one row to every slot per token); the
+/// store itself is per-slot append-only.
+pub struct BlockStore {
+    dtype: KvDtype,
+    d: usize,
+    /// Dequantized working rows per slot — authoritative for F32, the
+    /// device-tile mirror for Int8 (see module docs).
+    k: Vec<Mat>,
+    v: Vec<Mat>,
+    /// Physical int8 payloads (empty at F32).
+    qk: Vec<QuantizedMat>,
+    qv: Vec<QuantizedMat>,
+}
+
+impl BlockStore {
+    pub fn new(slots: usize, d: usize, dtype: KvDtype) -> BlockStore {
+        let quant = matches!(dtype, KvDtype::Int8);
+        BlockStore {
+            dtype,
+            d,
+            k: (0..slots).map(|_| Mat::zeros(0, d)).collect(),
+            v: (0..slots).map(|_| Mat::zeros(0, d)).collect(),
+            qk: if quant { (0..slots).map(|_| QuantizedMat::new(d)).collect() } else { Vec::new() },
+            qv: if quant { (0..slots).map(|_| QuantizedMat::new(d)).collect() } else { Vec::new() },
+        }
+    }
+
+    pub fn dtype(&self) -> KvDtype {
+        self.dtype
+    }
+
+    pub fn slots(&self) -> usize {
+        self.k.len()
+    }
+
+    /// Physical bytes of one stored row (per matrix).
+    pub fn row_bytes(&self) -> usize {
+        self.dtype.row_bytes(self.d)
+    }
+
+    pub fn rows(&self, slot: usize) -> usize {
+        self.k[slot].rows
+    }
+
+    /// The slot's K rows as the f32 matrix every consumer reads
+    /// (dequantized mirror at Int8).
+    pub fn k(&self, slot: usize) -> &Mat {
+        &self.k[slot]
+    }
+
+    pub fn v(&self, slot: usize) -> &Mat {
+        &self.v[slot]
+    }
+
+    /// Append one token's rows to a slot. At Int8 the row is quantized
+    /// into the payload and the *dequantized* values — not the originals
+    /// — extend the mirror, so downstream math sees exactly what the
+    /// store can reproduce.
+    pub fn append_row(&mut self, slot: usize, k_row: &[f32], v_row: &[f32]) {
+        debug_assert_eq!(k_row.len(), self.d);
+        match self.dtype {
+            KvDtype::F32 => {
+                self.k[slot].data.extend_from_slice(k_row);
+                self.k[slot].rows += 1;
+                self.v[slot].data.extend_from_slice(v_row);
+                self.v[slot].rows += 1;
+            }
+            KvDtype::Int8 => {
+                self.qk[slot].push_row(k_row);
+                let r = self.qk[slot].rows() - 1;
+                self.qk[slot].dequantize_row_into(r, &mut self.k[slot].data);
+                self.k[slot].rows += 1;
+                self.qv[slot].push_row(v_row);
+                self.qv[slot].dequantize_row_into(r, &mut self.v[slot].data);
+                self.v[slot].rows += 1;
+            }
+        }
+    }
+
+    /// Dequantization-error bounds of a slot's rows (`None` for exact
+    /// f32 storage). Monotone under appends, reset by `clear`.
+    pub fn quant_bounds(&self, slot: usize) -> Option<KvQuantBounds> {
+        match self.dtype {
+            KvDtype::F32 => None,
+            KvDtype::Int8 => Some(KvQuantBounds {
+                k_scale_max: self.qk[slot].max_scale(),
+                v_scale_max: self.qv[slot].max_scale(),
+            }),
+        }
+    }
+
+    /// Physical resident bytes across all slots (payload only; the Int8
+    /// mirror is the transient device tile, not host-resident state).
+    pub fn payload_bytes(&self) -> usize {
+        match self.dtype {
+            KvDtype::F32 => self.k.iter().zip(&self.v).map(|(k, v)| (k.data.len() + v.data.len()) * 4).sum(),
+            KvDtype::Int8 => self
+                .qk
+                .iter()
+                .zip(&self.qv)
+                .map(|(k, v)| k.payload_bytes() + v.payload_bytes())
+                .sum(),
+        }
+    }
+
+    /// Snapshot rows [lo, hi) of every slot in physical layout —
+    /// quantized payloads byte-for-byte.
+    pub fn snapshot_rows(&self, lo: usize, hi: usize) -> BlockSnapshot {
+        let d = self.d;
+        let mut slots = Vec::with_capacity(self.k.len());
+        for s in 0..self.k.len() {
+            slots.push(match self.dtype {
+                KvDtype::F32 => SlotRows::F32 {
+                    k: self.k[s].data[lo * d..hi * d].to_vec(),
+                    v: self.v[s].data[lo * d..hi * d].to_vec(),
+                },
+                KvDtype::Int8 => {
+                    let (kc, ks) = self.qk[s].raw_rows(lo, hi);
+                    let (vc, vs) = self.qv[s].raw_rows(lo, hi);
+                    SlotRows::Int8 {
+                        k: kc.to_vec(),
+                        k_scales: ks.to_vec(),
+                        v: vc.to_vec(),
+                        v_scales: vs.to_vec(),
+                    }
+                }
+            });
+        }
+        BlockSnapshot { dtype: self.dtype, tokens: hi - lo, slots }
+    }
+
+    /// Bulk-append a snapshot's rows — the fork's copy-in. Quantized
+    /// payloads are restored byte-for-byte and the mirror is rebuilt by
+    /// dequantization, so the loaded rows are bit-identical to the
+    /// donor's. Panics on a dtype or slot-count mismatch (the prefix
+    /// cache keys chains by dtype, so a mismatch is an engine bug).
+    pub fn load_rows(&mut self, snap: &BlockSnapshot) {
+        assert_eq!(snap.dtype, self.dtype, "KV dtype mismatch on block load");
+        assert_eq!(snap.slots.len(), self.k.len(), "slot count mismatch on block load");
+        for (s, rows) in snap.slots.iter().enumerate() {
+            match rows {
+                SlotRows::F32 { k, v } => {
+                    debug_assert_eq!(k.len(), snap.tokens * self.d);
+                    self.k[s].data.extend_from_slice(k);
+                    self.k[s].rows += snap.tokens;
+                    self.v[s].data.extend_from_slice(v);
+                    self.v[s].rows += snap.tokens;
+                }
+                SlotRows::Int8 { k, k_scales, v, v_scales } => {
+                    let base = self.qk[s].rows();
+                    self.qk[s].extend_raw(k, k_scales);
+                    self.qv[s].extend_raw(v, v_scales);
+                    for r in base..base + snap.tokens {
+                        self.qk[s].dequantize_row_into(r, &mut self.k[s].data);
+                        self.k[s].rows += 1;
+                        self.qv[s].dequantize_row_into(r, &mut self.v[s].data);
+                        self.v[s].rows += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn clear(&mut self) {
+        for m in self.k.iter_mut().chain(self.v.iter_mut()) {
+            m.rows = 0;
+            m.data.clear();
+        }
+        for q in self.qk.iter_mut().chain(self.qv.iter_mut()) {
+            q.clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn dtype_bytes_and_parse() {
+        assert_eq!(KvDtype::F32.row_bytes(32), 128);
+        assert_eq!(KvDtype::Int8.row_bytes(32), 36);
+        let cfg = ModelConfig::tiny();
+        assert_eq!(KvDtype::F32.kv_bytes_per_token(&cfg), cfg.kv_bytes_per_token());
+        // tiny: 2 kv-heads × 2 layers × 2 matrices × (32 + 4) bytes.
+        assert_eq!(KvDtype::Int8.kv_bytes_per_token(&cfg), 2 * 2 * 2 * 36);
+        assert_eq!(KvDtype::parse("int8"), Some(KvDtype::Int8));
+        assert_eq!(KvDtype::parse("fp32"), Some(KvDtype::F32));
+        assert_eq!(KvDtype::parse("f32"), Some(KvDtype::F32));
+        assert_eq!(KvDtype::parse("int4"), None);
+        assert_eq!(KvDtype::Int8.name(), "int8");
+    }
+
+    #[test]
+    fn f32_store_is_exact_and_int8_store_is_within_bounds() {
+        let mut rng = Rng::new(1);
+        let d = 16;
+        let rows: Vec<Vec<f32>> = (0..12).map(|_| {
+            (0..d).map(|_| rng.normal32(0.0, 1.5)).collect()
+        }).collect();
+        let mut exact = BlockStore::new(2, d, KvDtype::F32);
+        let mut quant = BlockStore::new(2, d, KvDtype::Int8);
+        for row in &rows {
+            exact.append_row(0, row, row);
+            quant.append_row(0, row, row);
+        }
+        assert_eq!(exact.rows(0), 12);
+        assert!(exact.quant_bounds(0).is_none());
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(exact.k(0).row(r), &row[..]);
+        }
+        let b = quant.quant_bounds(0).expect("int8 bounds");
+        assert!(b.k_scale_max > 0.0);
+        for (r, row) in rows.iter().enumerate() {
+            for (x, x_hat) in row.iter().zip(quant.k(0).row(r)) {
+                assert!((x - x_hat).abs() <= 0.5 * b.k_scale_max);
+            }
+        }
+        // Physical accounting: int8 pays (d + 4) per row per matrix.
+        assert_eq!(exact.payload_bytes(), 12 * 2 * 4 * d);
+        assert_eq!(quant.payload_bytes(), 12 * 2 * (d + 4));
+        assert_eq!(quant.row_bytes(), d + 4);
+    }
+
+    #[test]
+    fn int8_snapshot_load_is_byte_exact() {
+        let mut rng = Rng::new(2);
+        let d = 8;
+        let mut src = BlockStore::new(3, d, KvDtype::Int8);
+        for _ in 0..10 {
+            for s in 0..3 {
+                let kr: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 1.0)).collect();
+                let vr: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 1.0)).collect();
+                src.append_row(s, &kr, &vr);
+            }
+        }
+        let snap = src.snapshot_rows(2, 6);
+        assert_eq!(snap.tokens, 4);
+        assert_eq!(snap.dtype, KvDtype::Int8);
+        let mut dst = BlockStore::new(3, d, KvDtype::Int8);
+        dst.load_rows(&snap);
+        assert_eq!(dst.rows(0), 4);
+        for s in 0..3 {
+            for r in 0..4 {
+                // Mirror values bitwise equal to the donor's — the
+                // payload round-tripped byte-for-byte.
+                assert_eq!(dst.k(s).row(r), src.k(s).row(2 + r));
+                assert_eq!(dst.v(s).row(r), src.v(s).row(2 + r));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "KV dtype mismatch")]
+    fn load_rejects_dtype_mismatch() {
+        let mut f32_store = BlockStore::new(1, 4, KvDtype::F32);
+        f32_store.append_row(0, &[1.0; 4], &[1.0; 4]);
+        let snap = f32_store.snapshot_rows(0, 1);
+        let mut int8_store = BlockStore::new(1, 4, KvDtype::Int8);
+        int8_store.load_rows(&snap);
+    }
+
+    #[test]
+    fn clear_resets_bounds() {
+        let mut st = BlockStore::new(1, 4, KvDtype::Int8);
+        st.append_row(0, &[8.0; 4], &[2.0; 4]);
+        assert!(st.quant_bounds(0).unwrap().k_scale_max > 0.0);
+        st.clear();
+        assert_eq!(st.rows(0), 0);
+        assert!(st.quant_bounds(0).unwrap().is_zero());
+        assert_eq!(st.payload_bytes(), 0);
+    }
+}

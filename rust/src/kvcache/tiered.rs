@@ -5,7 +5,10 @@
 //!
 //! * [`TierStats`] rides on every [`crate::kvcache::KvCache`]
 //!   (`cache.stats`): the model charges a read per gathered K/V row and
-//!   a write per append. The serving path surfaces both —
+//!   a write per append, in **physical** bytes — a quantized (int8)
+//!   cache charges `d + 4` bytes per row, not the `4·d` of its
+//!   dequantized working view, so `kv MiB read/written` reflect what
+//!   actually crosses the host tier. The serving path surfaces both —
 //!   `RequestResult::kv_bytes_read` / `kv_bytes_written` per request,
 //!   summed into `metrics::ServeSummary` and printed by `vattn serve`
 //!   (the per-request counters reset when prefill completes, so they

@@ -7,7 +7,7 @@
 //!         [--eps E] [--delta D] [--workers W] [--max-batch B]
 //!         [--block-tokens T] [--kv-cap-mb M] [--kv-headroom H]
 //!         [--prefix-cache] [--open-loop] [--rate R]
-//!         [--reuse] [--reuse-max-age A]
+//!         [--reuse] [--reuse-max-age A] [--kv-quant int8|f32]
 //!                                                         drive the streaming session on a trace
 //!   info                                                  build/config info
 //!
@@ -38,6 +38,7 @@ const SERVE_KEYS: &[&str] = &[
     "delta",
     "reuse",
     "reuse-max-age",
+    "kv-quant",
 ];
 
 fn main() {
@@ -85,6 +86,7 @@ fn main() {
             println!("  vattn serve --workers 8 --open-loop --rate 4  open-loop Poisson load");
             println!("  vattn serve --prefix-cache --kv-cap-mb 64     shared-prefix demand paging");
             println!("  vattn serve --reuse --reuse-max-age 32        cross-step heavy-hitter reuse");
+            println!("  vattn serve --kv-quant int8 --kv-cap-mb 16    verified int8 KV (4x pool capacity)");
         }
     }
 }
@@ -158,13 +160,21 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown mode '{other}' (dense|vattention)"),
     };
 
+    // Physical KV storage: `--kv-quant int8` stores K/V rows quantized
+    // (3.5–4x smaller blocks, so the same --kv-cap-mb holds ~4x more
+    // tokens); verified requests fold the dequantization error into
+    // their (ε, δ) budget automatically (docs/GUARANTEES.md §8).
+    let kv_quant = args.get_str("kv-quant", "f32");
+    let kv_dtype = vattn::kvcache::KvDtype::parse(kv_quant)
+        .ok_or_else(|| anyhow::anyhow!("unknown --kv-quant '{kv_quant}' (int8|f32)"))?;
     let mut builder = EngineConfig::builder()
         .max_batch(args.get_usize("max-batch", 4))
         .seed(seed)
         .workers(workers)
         .block_tokens(args.get_usize("block-tokens", 16))
         .kv_headroom_blocks(args.get_usize("kv-headroom", 0))
-        .prefix_cache(args.has_flag("prefix-cache"));
+        .prefix_cache(args.has_flag("prefix-cache"))
+        .kv_dtype(kv_dtype);
     let kv_cap_mb = args.get_usize("kv-cap-mb", 0);
     if kv_cap_mb > 0 {
         builder = builder.kv_capacity_bytes(kv_cap_mb << 20);

@@ -6,6 +6,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::kvcache::KvDtype;
 use crate::metrics::{f, histogram, mean, percentile, Table};
 use crate::policies::ReuseStats;
 use crate::server::{Event, RequestId, RequestResult, SessionStats};
@@ -183,6 +184,12 @@ pub struct PagingSummary {
     pub capacity_blocks: Option<usize>,
     /// Copy-on-write promotions that actually copied a block.
     pub cow_copies: u64,
+    /// Session-default physical KV storage dtype.
+    pub kv_dtype: KvDtype,
+    /// Physical KV bytes per cached token at `kv_dtype`.
+    pub bytes_per_token: usize,
+    /// The same token's f32 footprint.
+    pub bytes_per_token_fp32: usize,
 }
 
 impl From<&SessionStats> for PagingSummary {
@@ -195,16 +202,35 @@ impl From<&SessionStats> for PagingSummary {
             peak_blocks_in_use: s.peak_blocks_in_use,
             capacity_blocks: s.capacity_blocks,
             cow_copies: s.cow_copies,
+            kv_dtype: s.kv_dtype,
+            bytes_per_token: s.bytes_per_token,
+            bytes_per_token_fp32: s.bytes_per_token_fp32,
         }
     }
 }
 
 impl PagingSummary {
+    /// KV compression of the storage dtype against f32 (1.0 at f32 or
+    /// when the bytes were never populated).
+    pub fn compression_ratio(&self) -> f64 {
+        crate::kvcache::store::compression_ratio(self.bytes_per_token_fp32, self.bytes_per_token)
+    }
+
     /// One-line table: KV paging counters for the run.
     pub fn render(&self) -> String {
         let mut t = Table::new(
             "kv paging",
-            &["prefix hit", "hit/lookup blocks", "preemptions", "peak blocks", "capacity", "cow"],
+            &[
+                "prefix hit",
+                "hit/lookup blocks",
+                "preemptions",
+                "peak blocks",
+                "capacity",
+                "cow",
+                "kv dtype",
+                "B/token",
+                "compress",
+            ],
         );
         t.row(vec![
             format!("{:.1}%", self.prefix_hit_rate * 100.0),
@@ -213,6 +239,9 @@ impl PagingSummary {
             self.peak_blocks_in_use.to_string(),
             self.capacity_blocks.map_or("unbounded".to_string(), |c| c.to_string()),
             self.cow_copies.to_string(),
+            self.kv_dtype.name().to_string(),
+            self.bytes_per_token.to_string(),
+            format!("{:.2}x", self.compression_ratio()),
         ]);
         t.render()
     }
@@ -547,18 +576,27 @@ mod tests {
             peak_blocks_in_use: 96,
             capacity_blocks: Some(128),
             cow_copies: 1,
-            reuse: Default::default(),
+            kv_dtype: KvDtype::Int8,
+            bytes_per_token: 288,
+            bytes_per_token_fp32: 1024,
+            ..Default::default()
         };
         let s = PagingSummary::from(&stats);
         assert!((s.prefix_hit_rate - 0.75).abs() < 1e-12);
+        assert!((s.compression_ratio() - 1024.0 / 288.0).abs() < 1e-12);
+        assert!(s.compression_ratio() >= 3.5);
         let out = s.render();
         assert!(out.contains("## kv paging"));
         assert!(out.contains("75.0%"), "{out}");
         assert!(out.contains("60/80"));
         assert!(out.contains("128"));
+        assert!(out.contains("int8"), "{out}");
+        assert!(out.contains("3.56x"), "{out}");
         let unbounded = PagingSummary::from(&SessionStats::default());
         assert!(unbounded.render().contains("unbounded"));
         assert_eq!(unbounded.prefix_hit_rate, 0.0);
+        assert_eq!(unbounded.compression_ratio(), 1.0, "unpopulated bytes degrade to 1x");
+        assert!(unbounded.render().contains("f32"));
     }
 
     #[test]

@@ -14,9 +14,25 @@ pub use config::ModelConfig;
 pub use sampler::Sampler;
 pub use weights::{LayerWeights, Weights};
 
-use crate::attention::Selection;
 use crate::kvcache::KvCache;
 use crate::tensor::Mat;
+
+/// Per-(layer, head) index-selection callback handed to a decode step:
+/// `(layer, head, K, V, q_scaled, kv_quant_bounds) -> Selection`. The
+/// K/V matrices are the cache's f32 rows (the dequantized mirror on a
+/// quantized cache), and the bounds — `None` on exact f32 caches —
+/// carry the dequantization error the verified policies fold into
+/// their (ε, δ) budget. Lives at the model layer because every compute
+/// backend ([`Model::decode_step`], the PJRT path) consumes it; the
+/// serving engine re-exports it as `server::SelectFn`.
+pub type SelectFn = dyn FnMut(
+    usize,
+    usize,
+    &Mat,
+    &Mat,
+    &[f32],
+    Option<crate::tensor::quant::KvQuantBounds>,
+) -> crate::attention::Selection;
 
 /// RMSNorm matching `model.rmsnorm` (eps = 1e-5).
 pub fn rmsnorm(x: &[f32], w: &[f32]) -> Vec<f32> {
@@ -79,13 +95,15 @@ impl Model {
 
     /// One dense decode step: append (k, v) for `token` at `pos` into
     /// `cache` and return logits. `select` chooses attention indices per
-    /// (layer, head); `None` = dense attention.
+    /// (layer, head) — it also receives the cache's dequantization
+    /// bounds (`None` on f32 storage) so verified policies can widen
+    /// their budget; `None` select = dense attention.
     pub fn decode_step(
         &self,
         token: u32,
         pos: usize,
         cache: &mut KvCache,
-        mut select: Option<&mut dyn FnMut(usize, usize, &Mat, &Mat, &[f32]) -> Selection>,
+        mut select: Option<&mut SelectFn>,
     ) -> StepOut {
         let cfg = &self.cfg;
         let (h, dh) = (cfg.n_heads, cfg.d_head());
@@ -120,7 +138,8 @@ impl Model {
                     let (kc, vc) = cache.head(l, kv_head);
                     match select.as_mut() {
                         Some(f) => {
-                            let sel = f(l, head, kc, vc, &qh);
+                            let qb = cache.quant_bounds(l, kv_head);
+                            let sel = f(l, head, kc, vc, &qh, qb);
                             densities.push(sel.density(kc.rows));
                             (crate::attention::sparse_sdpa(kc, vc, &qh, &sel), sel.len())
                         }
@@ -130,8 +149,9 @@ impl Model {
                         }
                     }
                 };
-                // Charge the host-tier read traffic (K and V rows touched).
-                cache.stats.record_read(2 * rows_read * dh * 4);
+                // Charge the host-tier read traffic (K and V rows
+                // touched, at the cache's physical per-row bytes).
+                cache.record_selected_read(rows_read);
                 attn_concat[head * dh..(head + 1) * dh].copy_from_slice(&out);
             }
             let attn_out = lw.wo.vecmat(&attn_concat);
@@ -186,6 +206,7 @@ impl Model {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::attention::Selection;
     use crate::util::Rng;
 
     #[test]
@@ -268,13 +289,54 @@ mod tests {
         model.prefill(&[1, 2, 3], &mut c1);
         model.prefill(&[1, 2, 3], &mut c2);
         let dense = model.decode_step(4, 3, &mut c1, None);
-        let mut select_all = |_l: usize, _h: usize, k: &Mat, _v: &Mat, _q: &[f32]| {
+        let mut select_all = |_l: usize,
+                              _h: usize,
+                              k: &Mat,
+                              _v: &Mat,
+                              _q: &[f32],
+                              _qb: Option<crate::tensor::quant::KvQuantBounds>| {
             Selection::deterministic((0..k.rows).collect())
         };
         let sparse = model.decode_step(4, 3, &mut c2, Some(&mut select_all));
         let err = crate::tensor::rel_l2_error(&sparse.logits, &dense.logits);
         assert!(err < 1e-5, "err={err}");
         assert!((sparse.mean_density - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn int8_cache_decode_is_deterministic_and_exposes_bounds() {
+        use crate::kvcache::KvDtype;
+        let cfg = ModelConfig::tiny();
+        let model = Model::new(cfg.clone(), 42);
+        let mut c1 = KvCache::new_with_dtype(&cfg, KvDtype::Int8);
+        let mut c2 = KvCache::new_with_dtype(&cfg, KvDtype::Int8);
+        model.prefill(&[1, 2, 3], &mut c1);
+        model.prefill(&[1, 2, 3], &mut c2);
+        let a = model.decode_step(4, 3, &mut c1, None);
+        // The select callback on a quantized cache receives Some bounds
+        // with a live scale.
+        let mut saw_bounds = 0usize;
+        let mut select_all = |_l: usize,
+                              _h: usize,
+                              k: &Mat,
+                              _v: &Mat,
+                              _q: &[f32],
+                              qb: Option<crate::tensor::quant::KvQuantBounds>| {
+            let b = qb.expect("int8 cache must expose quant bounds");
+            assert!(b.k_scale_max > 0.0);
+            saw_bounds += 1;
+            Selection::deterministic((0..k.rows).collect())
+        };
+        let b = model.decode_step(4, 3, &mut c2, Some(&mut select_all));
+        assert_eq!(saw_bounds, cfg.n_layers * cfg.n_heads);
+        // Dense and select-everything agree on the same quantized store.
+        let err = crate::tensor::rel_l2_error(&b.logits, &a.logits);
+        assert!(err < 1e-5, "err={err}");
+        // And differ from the fp32 cache's logits (quantization is real).
+        let mut cf = KvCache::new(&cfg);
+        model.prefill(&[1, 2, 3], &mut cf);
+        let f = model.decode_step(4, 3, &mut cf, None);
+        assert_ne!(f.logits, a.logits, "int8 storage must perturb the logits");
     }
 
     #[test]

@@ -26,10 +26,11 @@ pub use heavy::{HeavyHitterPolicy, SinkWindowPolicy, SnapKvPolicy, H2OPolicy};
 pub use magicpig::MagicPigPolicy;
 pub use oracle::{HybridTopSamplePolicy, OracleTopKPolicy, OracleTopPPolicy, RandomSamplePolicy};
 pub use reuse::{ReuseConfig, ReuseStats, TemporalReusePolicy};
-pub use scorers::TopkScorer;
+pub use scorers::{ScoredLogits, TopkScorer};
 pub use vattention::{BudgetDecision, VAttentionConfig, VAttentionPolicy};
 
 use crate::attention::Selection;
+use crate::tensor::quant::KvQuantBounds;
 use crate::tensor::Mat;
 use crate::util::Rng;
 
@@ -82,6 +83,14 @@ pub trait IndexPolicy: Send {
     fn reuse_stats(&self) -> Option<&ReuseStats> {
         None
     }
+    /// Hand the policy the dequantization-error bounds of the KV rows
+    /// it is about to select over (`None` for exact f32 caches). The
+    /// serving session calls this before every `select` on a quantized
+    /// cache; policies that certify accuracy — [`VAttentionPolicy`]'s
+    /// (ε, δ) budget, [`TemporalReusePolicy`]'s drift certificate —
+    /// widen their math by the bound (docs/GUARANTEES.md §8). Heuristic
+    /// baselines, which promise no contract, ignore it (the default).
+    fn set_kv_quant(&mut self, _bounds: Option<KvQuantBounds>) {}
 }
 
 /// Size given either as an absolute token count or a fraction of n.

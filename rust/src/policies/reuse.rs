@@ -53,6 +53,7 @@ use super::scorers::TopkScorer;
 use super::vattention::VAttentionPolicy;
 use super::{IndexPolicy, PolicyCtx};
 use crate::attention::Selection;
+use crate::tensor::quant::KvQuantBounds;
 use crate::tensor::{dot, norm2};
 
 /// Absolute slack added to the drift bound before a token may be pruned,
@@ -333,9 +334,11 @@ impl TemporalReusePolicy {
     fn refresh(&mut self, ctx: &mut PolicyCtx, cause: RefreshCause) -> Selection {
         self.count(&cause);
         self.stats.scorer_calls += 1;
-        let scores = self.inner.scorer.score(ctx);
+        let scored = self.inner.scorer.score_intervals(ctx, self.inner.kv_quant);
         let logit_exact = self.inner.scorer.scores_are_logits();
-        let sel = self.inner.select_from_scores(ctx, &scores, logit_exact);
+        let err = (scored.err > 0.0).then_some(scored.err);
+        let scores = scored.scores;
+        let sel = self.inner.select_from_scores(ctx, &scores, logit_exact, err);
         self.anchor = None;
         if logit_exact {
             let n = ctx.n();
@@ -419,6 +422,17 @@ impl TemporalReusePolicy {
             d2.sqrt()
         };
         let cap = ((self.rcfg.survivor_cap_frac * n as f64) as usize).max(8);
+        // Quantized-KV slack: anchor logits and current logits both live
+        // in dequantized space, so the certificate is already exact
+        // *there* — widening the prune threshold by 2e (e the logit
+        // dequantization bound) additionally keeps every pruning
+        // decision valid against the pre-quantization logits (each side
+        // of the comparison moves by at most e), at slightly lower
+        // pruning power. Spurious survivors are exact-scored and lose,
+        // so reuse-on streams remain byte-identical to reuse-off either
+        // way (docs/GUARANTEES.md §8).
+        let quant_slack =
+            self.inner.kv_quant.map_or(0.0, |b| 2.0 * b.logit_err(ctx.q_scaled));
         let mut survivors = 0usize;
         let mut cached = anchor.heavy.iter().peekable();
         for i in 0..n0 {
@@ -432,7 +446,8 @@ impl TemporalReusePolicy {
             let reach = self.norms[i] * delta;
             let ub = anchor.l0[i] + reach;
             let slack = REUSE_DRIFT_SLACK_ABS
-                + REUSE_DRIFT_SLACK_REL * (theta.abs() + anchor.l0[i].abs() + reach);
+                + REUSE_DRIFT_SLACK_REL * (theta.abs() + anchor.l0[i].abs() + reach)
+                + quant_slack;
             if ub + slack > theta {
                 survivors += 1;
                 if survivors > cap {
@@ -450,8 +465,11 @@ impl TemporalReusePolicy {
         // Certified: the top-h of the scored candidates is the fresh
         // top-h. Route the budget/sampling tail through the wrapped
         // policy (scores_are_logits = false — the vector is only
-        // partially exact, so the statistics re-derive logits from K).
-        let sel = self.inner.select_from_scores(ctx, &scores, false);
+        // partially exact, so the statistics re-derive logits from K;
+        // score_err = None likewise — this vector is not a scorer
+        // product, so the quantization slack re-derives from the
+        // bounds, bitwise the same value a fresh re-score charges).
+        let sel = self.inner.select_from_scores(ctx, &scores, false, None);
         let heavy_new = self.extract_heavy(&sel, sink, win_start);
         let mut anchor = anchor;
         anchor.heavy = heavy_new;
@@ -498,6 +516,12 @@ impl IndexPolicy for TemporalReusePolicy {
 
     fn reuse_stats(&self) -> Option<&ReuseStats> {
         Some(&self.stats)
+    }
+
+    fn set_kv_quant(&mut self, bounds: Option<KvQuantBounds>) {
+        // One set of bounds drives both layers: the wrapped policy's
+        // budget slack and this certificate's prune slack.
+        self.inner.set_kv_quant(bounds);
     }
 }
 
@@ -730,6 +754,49 @@ mod tests {
         let replay = run(&mut policy);
         assert_eq!(first, replay, "reset must make the replay byte-identical");
         assert_eq!(policy.stats().refresh_cold, cold_before + 1, "replay restarts cold");
+    }
+
+    #[test]
+    fn reuse_equals_fresh_policy_with_kv_quant_bounds_set() {
+        // Same stable planted stream as above, but over a quantized
+        // cache (simulated: bounds set, as the session does): the
+        // certificate's extra 2e slack must not break selection
+        // equality with a fresh policy carrying the same bounds — and
+        // reuse must still hit.
+        let (k, v) = planted(512, 16, 8, 21);
+        let cfg = vcfg(4, 8, SizeSpec::Abs(8));
+        let bounds = KvQuantBounds { k_scale_max: 0.01, v_scale_max: 0.01 };
+        let mut fresh = VAttentionPolicy::oracle(cfg.clone());
+        fresh.set_kv_quant(Some(bounds));
+        let mut reuse = TemporalReusePolicy::new(
+            VAttentionPolicy::oracle(cfg),
+            ReuseConfig { max_age: 1000, ..Default::default() },
+        );
+        reuse.set_kv_quant(Some(bounds));
+        let mut rng_a = Rng::new(23);
+        let mut rng_b = Rng::new(23);
+        for step in 0..24 {
+            let q = drifting_query(16, step, 0.01, 31);
+            let sa = fresh.select(&mut PolicyCtx {
+                k: &k,
+                v: &v,
+                q_scaled: &q,
+                rng: &mut rng_a,
+                step,
+            });
+            let sb = reuse.select(&mut PolicyCtx {
+                k: &k,
+                v: &v,
+                q_scaled: &q,
+                rng: &mut rng_b,
+                step,
+            });
+            assert_eq!(sa.idx, sb.idx, "index divergence at step {step}");
+            assert_eq!(sa.prob, sb.prob, "probability divergence at step {step}");
+        }
+        let st = reuse.stats();
+        assert!(st.hits > 0, "planted stream must still certify under quant slack: {st:?}");
+        assert!(fresh.last.as_ref().unwrap().quant_rho > 0.0, "budget must charge the slack");
     }
 
     #[test]

@@ -18,8 +18,23 @@
 //! real systems maintain their aux caches during generation.
 
 use super::PolicyCtx;
+use crate::tensor::quant::KvQuantBounds;
 use crate::tensor::{dot, Mat};
 use crate::util::Rng;
+
+/// A score vector plus the half-width of the logit interval each score
+/// defines when the keys were dequantized from a lossy store: for a
+/// logit-exact scorer over a quantized cache, the exact
+/// pre-quantization logit of token i is guaranteed to lie in
+/// `[scores[i] − err, scores[i] + err]` (with `err = (max_k_scale/2)·‖q‖₁`,
+/// see [`KvQuantBounds::logit_err`]). `err = 0` for exact f32 caches
+/// and for scorers whose scores are not logits (their output has no
+/// logit-interval interpretation; the budget stats re-derive logits
+/// from K and absorb the quantization slack there instead).
+pub struct ScoredLogits {
+    pub scores: Vec<f32>,
+    pub err: f32,
+}
 
 /// A token scorer used for approximate top-k selection.
 ///
@@ -50,10 +65,32 @@ pub trait TopkScorer: Send {
         0
     }
     /// True when `score` returns the *exact* query–key logits (the oracle
-    /// scorer). Consumers (vAttention's budget path) then reuse the score
-    /// vector instead of re-scanning K — a full-scan saving per select.
+    /// scorer) — exact over the rows actually stored, i.e. over the
+    /// dequantized mirror when the cache is quantized. Consumers
+    /// (vAttention's budget path) then reuse the score vector instead
+    /// of re-scanning K — a full-scan saving per select.
     fn scores_are_logits(&self) -> bool {
         false
+    }
+
+    /// [`TopkScorer::score`] plus the quantization interval: over a
+    /// quantized cache (`quant = Some`), a logit-exact scorer's scores
+    /// bracket the exact pre-quantization logits within
+    /// `[score − err, score + err]`. This is the surface the verified
+    /// stack consumes — the interval half-width feeds the budget's
+    /// [`crate::budget::QuantSlack`] and the reuse certificate's prune
+    /// slack.
+    fn score_intervals(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        quant: Option<KvQuantBounds>,
+    ) -> ScoredLogits {
+        let scores = self.score(ctx);
+        let err = match quant {
+            Some(b) if self.scores_are_logits() => b.logit_err(ctx.q_scaled),
+            _ => 0.0,
+        };
+        ScoredLogits { scores, err }
     }
 }
 
@@ -542,6 +579,43 @@ mod tests {
         for i in 64..70 {
             assert!((scores[i] - exact[i]).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn oracle_intervals_over_quantized_keys_contain_exact_logits() {
+        use crate::tensor::quant::QuantizedMat;
+        let (k, v, q, mut rng) = fixture(300, 32, 8);
+        // Dequantized mirror of K, plus the store's running bounds.
+        let mut qm = QuantizedMat::new(32);
+        let mut k_hat = Mat::zeros(0, 32);
+        for r in 0..k.rows {
+            qm.push_row(k.row(r));
+            qm.dequantize_row_into(r, &mut k_hat.data);
+            k_hat.rows += 1;
+        }
+        let bounds = KvQuantBounds { k_scale_max: qm.max_scale(), v_scale_max: 0.0 };
+        let mut scorer = OracleScorer;
+        let mut ctx = PolicyCtx { k: &k_hat, v: &v, q_scaled: &q, rng: &mut rng, step: 0 };
+        let scored = scorer.score_intervals(&mut ctx, Some(bounds));
+        assert!(scored.err > 0.0, "quantized cache must declare a non-zero interval");
+        let exact = crate::attention::logits_all(&k, &q);
+        for i in 0..300 {
+            // The interval bound is exact in real arithmetic; allow a
+            // hair of f32 dot-accumulation noise on top.
+            let gap = (scored.scores[i] - exact[i]).abs();
+            assert!(
+                gap <= scored.err + 1e-4,
+                "token {i}: |{} - {}| = {gap} > err {}",
+                scored.scores[i],
+                exact[i],
+                scored.err
+            );
+        }
+        // Exact caches and non-logit scorers declare zero width.
+        let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 };
+        assert_eq!(scorer.score_intervals(&mut ctx, None).err, 0.0);
+        let mut hash = HashSignScorer::new(32, 7);
+        assert_eq!(hash.score_intervals(&mut ctx, Some(bounds)).err, 0.0);
     }
 
     #[test]

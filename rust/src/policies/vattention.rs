@@ -7,7 +7,8 @@
 use super::scorers::{OracleScorer, TopkScorer};
 use super::{sink_window_indices, top_indices_excluding, IndexPolicy, PolicyCtx, SizeSpec};
 use crate::attention::Selection;
-use crate::budget::{self, Bound, Verify};
+use crate::budget::{self, Bound, QuantSlack, Verify};
+use crate::tensor::quant::KvQuantBounds;
 
 /// Configuration for vAttention — mirrors the paper's parameterization
 /// (f_s, f_l, f_t, f_b, ε, δ) plus the verified computation
@@ -105,6 +106,13 @@ pub struct VAttentionPolicy {
     pub scorer: Box<dyn TopkScorer>,
     /// Diagnostics from the most recent `select` call.
     pub last: Option<BudgetDecision>,
+    /// Dequantization-error bounds of the KV store this policy selects
+    /// over (`None` on exact f32 caches; refreshed by the serving
+    /// session before every select via [`IndexPolicy::set_kv_quant`]).
+    /// When set, the budget runs through
+    /// [`crate::budget::budget_for_quant`], so the delivered (ε, δ) is
+    /// inclusive of the dequantization error.
+    pub kv_quant: Option<KvQuantBounds>,
 }
 
 /// Everything the budget module decided for one (head, query) — used by
@@ -120,11 +128,14 @@ pub struct BudgetDecision {
     pub trace_sigma_n: f64,
     pub d_hat: f64,
     pub n_hat_norm: f64,
+    /// Deterministic relative slack ρ charged to ε for KV
+    /// dequantization error (0 on exact f32 caches).
+    pub quant_rho: f64,
 }
 
 impl VAttentionPolicy {
     pub fn new(cfg: VAttentionConfig, scorer: Box<dyn TopkScorer>) -> Self {
-        VAttentionPolicy { cfg, scorer, last: None }
+        VAttentionPolicy { cfg, scorer, last: None, kv_quant: None }
     }
 
     /// vAttention with the oracle top-k predictor.
@@ -146,11 +157,20 @@ impl VAttentionPolicy {
     /// pass `false`, so the statistics re-derive each needed logit from
     /// K — bitwise the same values, since both paths evaluate the same
     /// `tensor::dot`.
+    ///
+    /// `score_err` is the interval half-width the scorer declared for
+    /// `scores` ([`crate::policies::ScoredLogits::err`]); when `Some`,
+    /// it becomes the budget's quantization logit slack directly, so
+    /// the ε the budget charges is exactly the interval the scorer
+    /// advertised. `None` (a score vector that is not a scorer product,
+    /// e.g. the reuse fast path's partial fill) falls back to the
+    /// bounds-derived term.
     pub fn select_from_scores(
         &mut self,
         ctx: &mut PolicyCtx,
         scores: &[f32],
         scores_are_logits: bool,
+        score_err: Option<f32>,
     ) -> Selection {
         let n = ctx.n();
         let cfg = &self.cfg;
@@ -174,6 +194,7 @@ impl VAttentionPolicy {
                 trace_sigma_n: 0.0,
                 d_hat: 0.0,
                 n_hat_norm: 0.0,
+                quant_rho: 0.0,
             });
             return Selection::deterministic(i_f);
         }
@@ -198,7 +219,22 @@ impl VAttentionPolicy {
         } else {
             budget::estimate_stats(ctx.k, ctx.v, ctx.q_scaled, &i_f, &base, m_ref)
         };
-        let mut b = budget::budget_for(&stats, cfg.verify, cfg.eps, cfg.delta, cfg.bound);
+        // Quantized KV: the dequantization bounds become an explicit
+        // slack term — σ/range widening plus an ε reduction by the
+        // deterministic bias ρ — so the delivered guarantee is
+        // (ε, δ) inclusive of the quantization error (GUARANTEES.md §8).
+        // The scorer's declared interval half-width, when present, IS
+        // the logit term.
+        let qslack = self.kv_quant.and_then(|b| {
+            let mut s = QuantSlack::from_bounds(&b, ctx.q_scaled, ctx.v.cols);
+            if let Some(err) = score_err {
+                s.logit_err = err as f64;
+            }
+            (!s.is_zero()).then_some(s)
+        });
+        let quant_rho = qslack.as_ref().map_or(0.0, |s| s.rho(&stats, cfg.verify));
+        let mut b =
+            budget::budget_for_quant(&stats, cfg.verify, cfg.eps, cfg.delta, cfg.bound, qslack.as_ref());
         if cfg.floor_at_base {
             b = b.max(base.len());
         }
@@ -214,6 +250,7 @@ impl VAttentionPolicy {
             trace_sigma_n: stats.trace_sigma_n,
             d_hat: stats.d_hat,
             n_hat_norm: stats.n_hat_norm,
+            quant_rho,
         });
 
         // ── Algorithm 1, lines 7–10: uniform residual sample ──
@@ -250,14 +287,19 @@ impl IndexPolicy for VAttentionPolicy {
     }
 
     fn select(&mut self, ctx: &mut PolicyCtx) -> Selection {
-        let scores = self.scorer.score(ctx);
+        let scored = self.scorer.score_intervals(ctx, self.kv_quant);
         let scores_are_logits = self.scorer.scores_are_logits();
-        self.select_from_scores(ctx, &scores, scores_are_logits)
+        let err = (scored.err > 0.0).then_some(scored.err);
+        self.select_from_scores(ctx, &scored.scores, scores_are_logits, err)
     }
 
     fn reset(&mut self) {
         self.scorer.reset();
         self.last = None;
+    }
+
+    fn set_kv_quant(&mut self, bounds: Option<KvQuantBounds>) {
+        self.kv_quant = bounds;
     }
 }
 
@@ -377,6 +419,52 @@ mod tests {
         let clt = budget_with(Bound::Clt, &mut rng);
         let hoef = budget_with(Bound::Hoeffding, &mut rng);
         assert!(hoef >= clt, "hoef={hoef} clt={clt}");
+    }
+
+    #[test]
+    fn kv_quant_bounds_inflate_budget_and_record_rho() {
+        let (k, v, q, mut rng) = fixture(4000, 16, 8);
+        let run = |bounds: Option<KvQuantBounds>, rng: &mut Rng| {
+            let mut cfg = small_cfg(0.1, 0.1);
+            cfg.floor_at_base = false;
+            cfg.verify = Verify::Denominator;
+            let mut pol = VAttentionPolicy::oracle(cfg);
+            pol.set_kv_quant(bounds);
+            let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng, step: 0 };
+            pol.select(&mut ctx);
+            let dec = pol.last.unwrap();
+            (dec.budget, dec.quant_rho)
+        };
+        let (plain, rho0) = run(None, &mut rng);
+        assert_eq!(rho0, 0.0);
+        let bounds = KvQuantBounds { k_scale_max: 0.02, v_scale_max: 0.02 };
+        let (widened, rho) = run(Some(bounds), &mut rng);
+        assert!(rho > 0.0, "quantized select must record its slack");
+        assert!(
+            widened >= plain,
+            "quantization slack must never shrink the budget: {widened} < {plain}"
+        );
+        // ε smaller than the bias: the budget saturates at the residual.
+        let (saturated, _) = {
+            let mut cfg = small_cfg(0.1, 0.1);
+            cfg.floor_at_base = false;
+            cfg.verify = Verify::Denominator;
+            let mut pol = VAttentionPolicy::oracle(cfg);
+            pol.set_kv_quant(Some(KvQuantBounds { k_scale_max: 10.0, v_scale_max: 0.0 }));
+            let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 };
+            pol.select(&mut ctx);
+            let dec = pol.last.unwrap();
+            (dec.budget, dec.quant_rho)
+        };
+        let n_fixed = {
+            let mut cfg = small_cfg(0.1, 0.1);
+            cfg.verify = Verify::Denominator;
+            let mut pol = VAttentionPolicy::oracle(cfg);
+            let mut ctx = PolicyCtx { k: &k, v: &v, q_scaled: &q, rng: &mut rng, step: 0 };
+            pol.select(&mut ctx);
+            pol.last.unwrap().n_fixed
+        };
+        assert_eq!(saturated, 4000 - n_fixed, "rho ≥ ε must sample the whole residual");
     }
 
     #[test]

@@ -91,7 +91,7 @@ impl PjrtModel {
         token: u32,
         pos: usize,
         cache: &mut KvCache,
-        mut select: Option<&mut dyn FnMut(usize, usize, &Mat, &Mat, &[f32]) -> Selection>,
+        mut select: Option<&mut crate::model::SelectFn>,
     ) -> Result<StepOut> {
         let cfg = &self.cfg;
         let (h, dh, d) = (cfg.n_heads, cfg.d_head(), cfg.d_model);
@@ -133,7 +133,8 @@ impl PjrtModel {
                 let sel = match select.as_mut() {
                     Some(f) => {
                         let (kc, vc) = cache.head(l, head);
-                        f(l, head, kc, vc, qh)
+                        let qb = cache.quant_bounds(l, head);
+                        f(l, head, kc, vc, qh, qb)
                     }
                     None => Selection::deterministic((0..n).collect()),
                 };

@@ -7,10 +7,8 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::attention::Selection;
 use crate::kvcache::KvCache;
 use crate::model::{ModelConfig, StepOut, Weights};
-use crate::tensor::Mat;
 
 const NO_PJRT: &str = "built without the `pjrt` feature — rebuild with `--features pjrt` \
                        (requires a local `xla` crate and xla_extension; see DESIGN.md §7)";
@@ -63,7 +61,7 @@ impl PjrtModel {
         _token: u32,
         _pos: usize,
         _cache: &mut KvCache,
-        _select: Option<&mut dyn FnMut(usize, usize, &Mat, &Mat, &[f32]) -> Selection>,
+        _select: Option<&mut crate::model::SelectFn>,
     ) -> Result<StepOut> {
         Err(anyhow!(NO_PJRT))
     }

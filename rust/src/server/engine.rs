@@ -39,12 +39,12 @@ use anyhow::Result;
 
 use super::session::{Event, GenOptions, RequestId, Session, SubmitRequest};
 use super::{ArrivingRequest, Request, RequestResult};
-use crate::attention::Selection;
-use crate::kvcache::KvCache;
+use crate::kvcache::{KvCache, KvDtype};
 use crate::model::{Model, ModelConfig, Sampler, StepOut};
 use crate::policies::IndexPolicy;
-use crate::tensor::Mat;
 use crate::util::threadpool::ThreadPool;
+
+pub use crate::model::SelectFn;
 
 /// Compute backend abstraction: the rust-native model or the PJRT path.
 pub trait Backend {
@@ -54,7 +54,7 @@ pub trait Backend {
         token: u32,
         pos: usize,
         cache: &mut KvCache,
-        select: Option<&mut dyn FnMut(usize, usize, &Mat, &Mat, &[f32]) -> Selection>,
+        select: Option<&mut SelectFn>,
     ) -> Result<StepOut>;
 }
 
@@ -67,7 +67,7 @@ impl Backend for Model {
         token: u32,
         pos: usize,
         cache: &mut KvCache,
-        select: Option<&mut dyn FnMut(usize, usize, &Mat, &Mat, &[f32]) -> Selection>,
+        select: Option<&mut SelectFn>,
     ) -> Result<StepOut> {
         Ok(self.decode_step(token, pos, cache, select))
     }
@@ -82,7 +82,7 @@ impl Backend for crate::runtime::PjrtModel {
         token: u32,
         pos: usize,
         cache: &mut KvCache,
-        select: Option<&mut dyn FnMut(usize, usize, &Mat, &Mat, &[f32]) -> Selection>,
+        select: Option<&mut SelectFn>,
     ) -> Result<StepOut> {
         self.decode_step(token, pos, cache, select)
     }
@@ -131,6 +131,20 @@ pub struct EngineConfig {
     /// Reject requests whose prompt + generation budget exceeds this
     /// (`EngineError::PromptTooLong`). `None` = unlimited.
     pub max_seq_len: Option<usize>,
+    /// Physical KV storage dtype (`vattn serve --kv-quant int8`). At
+    /// [`KvDtype::Int8`] the pool's blocks shrink 3.5–4×, so the same
+    /// `kv_capacity_bytes` holds proportionally more tokens — more
+    /// resident requests and fewer preemptions — while the
+    /// dequantization error is charged to every verified request's
+    /// (ε, δ) budget as an explicit slack term. Requests may override
+    /// per request via `GenOptions::kv_dtype`; the pool sizes its
+    /// blocks by *this* engine-wide dtype, so on a byte-capped pool an
+    /// override storing wider rows is rejected
+    /// (`EngineError::KvDtypeWiderThanPool`) rather than silently
+    /// overrunning the budget, while narrower overrides under-fill
+    /// their blocks (per-request `TierStats` byte traffic is always
+    /// physical to that request).
+    pub kv_dtype: KvDtype,
 }
 
 impl Default for EngineConfig {
@@ -146,6 +160,7 @@ impl Default for EngineConfig {
             kv_headroom_blocks: 0,
             prefix_cache: false,
             max_seq_len: None,
+            kv_dtype: KvDtype::F32,
         }
     }
 }
@@ -211,6 +226,11 @@ impl EngineConfigBuilder {
 
     pub fn max_seq_len(mut self, v: usize) -> Self {
         self.cfg.max_seq_len = Some(v);
+        self
+    }
+
+    pub fn kv_dtype(mut self, v: KvDtype) -> Self {
+        self.cfg.kv_dtype = v;
         self
     }
 
@@ -472,6 +492,7 @@ mod tests {
             .kv_headroom_blocks(4)
             .prefix_cache(true)
             .max_seq_len(4096)
+            .kv_dtype(KvDtype::Int8)
             .build();
         assert_eq!(cfg.max_batch, 7);
         assert!(matches!(cfg.sampler, Sampler::Temperature(t) if (t - 0.5).abs() < 1e-9));
@@ -483,6 +504,7 @@ mod tests {
         assert_eq!(cfg.kv_headroom_blocks, 4);
         assert!(cfg.prefix_cache);
         assert_eq!(cfg.max_seq_len, Some(4096));
+        assert_eq!(cfg.kv_dtype, KvDtype::Int8);
     }
 
     #[test]

@@ -30,6 +30,7 @@ pub mod session;
 
 pub use engine::{
     AttentionMode, Backend, BatchPolicyFactory, Engine, EngineConfig, EngineConfigBuilder,
+    SelectFn,
 };
 pub use session::{
     AttentionOpt, EngineError, Event, GenOptions, PolicyFactory, RequestId, Session, SessionStats,

@@ -55,12 +55,13 @@ use std::time::Instant;
 use super::engine::{AttentionMode, Backend, EngineConfig};
 use super::RequestResult;
 use crate::attention::Selection;
-use crate::kvcache::{BlockId, BlockPool, CowOutcome, KvCache, PageError, PrefixCache};
+use crate::kvcache::{BlockId, BlockPool, CowOutcome, KvCache, KvDtype, PageError, PrefixCache};
 use crate::model::{ModelConfig, Sampler, StepOut};
 use crate::policies::{
     IndexPolicy, PolicyCtx, ReuseConfig, ReuseStats, TemporalReusePolicy, VAttentionConfig,
     VAttentionPolicy,
 };
+use crate::tensor::quant::KvQuantBounds;
 use crate::tensor::Mat;
 use crate::util::threadpool::ThreadPool;
 use crate::util::Rng;
@@ -78,6 +79,15 @@ pub enum EngineError {
     /// even with every other block reclaimed (conservative: shared
     /// prefix blocks are not credited, so admission can never livelock).
     KvCapacityExceeded { needed: usize, available: usize },
+    /// A byte-capped pool sizes its blocks by the engine-wide
+    /// `EngineConfig::kv_dtype`; a per-request override storing *wider*
+    /// rows would silently overrun the operator's byte budget (each
+    /// block would physically hold more bytes than the pool charged),
+    /// so it is rejected up front. Narrower overrides (int8 rows in an
+    /// f32-sized pool) are admitted — they under-fill their blocks,
+    /// wasting capacity but never exceeding it — and any override is
+    /// fine on an uncapped pool.
+    KvDtypeWiderThanPool { requested: KvDtype, pool: KvDtype },
     /// prompt + generation budget exceeds `EngineConfig::max_seq_len`.
     PromptTooLong { len: usize, max: usize },
     /// The id was never submitted, or already finished / cancelled.
@@ -95,6 +105,13 @@ impl std::fmt::Display for EngineError {
                 f,
                 "request needs {needed} KV blocks but pool capacity is {available} blocks; \
                  raise kv_capacity_bytes or shorten the request"
+            ),
+            EngineError::KvDtypeWiderThanPool { requested, pool } => write!(
+                f,
+                "request stores {} KV rows but the byte-capped pool sizes blocks for {}; \
+                 use the engine-wide kv_dtype or an uncapped pool",
+                requested.name(),
+                pool.name()
             ),
             EngineError::PromptTooLong { len, max } => write!(
                 f,
@@ -175,11 +192,22 @@ pub struct GenOptions {
     pub seed: Option<u64>,
     /// Decode-attention contract for this request.
     pub attention: AttentionOpt,
+    /// Physical KV storage dtype override; `None` inherits
+    /// `EngineConfig::kv_dtype`. An int8 request's cache quantizes rows
+    /// on append, and any verified attention contract it carries absorbs
+    /// the dequantization error into its (ε, δ) budget automatically.
+    pub kv_dtype: Option<KvDtype>,
 }
 
 impl Default for GenOptions {
     fn default() -> Self {
-        GenOptions { gen_len: 16, sampler: None, seed: None, attention: AttentionOpt::Inherit }
+        GenOptions {
+            gen_len: 16,
+            sampler: None,
+            seed: None,
+            attention: AttentionOpt::Inherit,
+            kv_dtype: None,
+        }
     }
 }
 
@@ -200,6 +228,13 @@ impl GenOptions {
 
     pub fn attention(mut self, attention: AttentionOpt) -> Self {
         self.attention = attention;
+        self
+    }
+
+    /// Store this request's KV rows in `dtype` regardless of the
+    /// session default.
+    pub fn kv_dtype(mut self, dtype: KvDtype) -> Self {
+        self.kv_dtype = Some(dtype);
         self
     }
 
@@ -316,6 +351,14 @@ pub struct SessionStats {
     /// policy the session has run (live and retired requests alike);
     /// all-zero when no request used [`AttentionOpt::VerifiedReuse`].
     pub reuse: ReuseStats,
+    /// Session-default physical KV storage dtype
+    /// (`EngineConfig::kv_dtype`).
+    pub kv_dtype: KvDtype,
+    /// Physical KV bytes per cached token at `kv_dtype`.
+    pub bytes_per_token: usize,
+    /// The same token's footprint at f32 — `bytes_per_token_fp32 /
+    /// bytes_per_token` is the pool's compression ratio (1 at f32).
+    pub bytes_per_token_fp32: usize,
 }
 
 impl SessionStats {
@@ -326,6 +369,12 @@ impl SessionStats {
         } else {
             self.prefix_hit_blocks as f64 / self.prefix_lookup_blocks as f64
         }
+    }
+
+    /// KV compression of the session's storage dtype against f32
+    /// (1.0 when storing f32, or before stats were populated).
+    pub fn kv_compression_ratio(&self) -> f64 {
+        crate::kvcache::store::compression_ratio(self.bytes_per_token_fp32, self.bytes_per_token)
     }
 }
 
@@ -340,6 +389,8 @@ struct Waiting {
     gen_len: usize,
     sampler: Sampler,
     seed_tag: u64,
+    /// Resolved physical KV dtype (request override or session default).
+    kv_dtype: KvDtype,
     policies: Vec<Box<dyn IndexPolicy>>,
     /// Tokens already emitted as `Event::Token` before a preemption
     /// (0 for fresh requests); the re-run suppresses these.
@@ -451,7 +502,10 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
         pool: Arc<ThreadPool>,
     ) -> Session<B> {
         let mcfg = backend.config().clone();
-        let blocks = BlockPool::for_model(&mcfg, cfg.block_tokens, cfg.kv_capacity_bytes);
+        // Blocks are sized by the engine dtype: a quantized dtype turns
+        // the same byte budget into proportionally more blocks.
+        let blocks =
+            BlockPool::for_model_dtype(&mcfg, cfg.block_tokens, cfg.kv_capacity_bytes, cfg.kv_dtype);
         let prefix = cfg.prefix_cache.then(|| PrefixCache::new(cfg.block_tokens.max(1)));
         let seed_rng = Rng::new(cfg.seed);
         Session {
@@ -546,6 +600,9 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             capacity_blocks: self.blocks.capacity_blocks(),
             cow_copies: self.blocks.cow_count(),
             reuse,
+            kv_dtype: self.cfg.kv_dtype,
+            bytes_per_token: self.cfg.kv_dtype.kv_bytes_per_token(&self.mcfg),
+            bytes_per_token_fp32: KvDtype::F32.kv_bytes_per_token(&self.mcfg),
         }
     }
 
@@ -800,6 +857,7 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
     /// rides along so already-emitted tokens are not re-emitted.
     fn preempt(&mut self, idx: usize, events: &mut Vec<Event>, now: f64) -> Result<(), EngineError> {
         let mut a = self.active.remove(idx);
+        let kv_dtype = a.cache.dtype();
         let lease = a.cache.release_blocks();
         self.blocks.free(lease).map_err(EngineError::Page)?;
         for p in a.policies.iter_mut() {
@@ -819,6 +877,7 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             gen_len: a.gen_len,
             sampler: a.sampler,
             seed_tag: a.seed_tag,
+            kv_dtype,
             policies: a.policies,
             reported: a.reported,
             wait_s: streamed.then_some(a.wait_s),
@@ -843,9 +902,11 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             }
             let w = self.waiting.pop_front().expect("front was Some");
             // Prefix fork: attach to matched blocks (refcount bump)
-            // before any eviction below could reclaim them.
+            // before any eviction below could reclaim them. Chains are
+            // keyed by dtype, so an f32 request never forks an int8
+            // donor's payload (or vice versa).
             let matched = match self.prefix.as_mut() {
-                Some(p) => p.lookup(&w.prompt),
+                Some(p) => p.lookup(&w.prompt, w.kv_dtype),
                 None => Vec::new(),
             };
             let matched_ids = match self.prefix.as_ref() {
@@ -937,11 +998,24 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
         self.next_id += 1;
         let SubmitRequest { prompt, arrival_s, opts } = req;
         let total = prompt.len() + opts.gen_len;
+        let kv_dtype = opts.kv_dtype.unwrap_or(self.cfg.kv_dtype);
 
         let mut reject: Option<EngineError> = None;
         if let Some(max) = self.cfg.max_seq_len {
             if total > max {
                 reject = Some(EngineError::PromptTooLong { len: total, max });
+            }
+        }
+        if reject.is_none() && self.cfg.kv_capacity_bytes.is_some() {
+            // Block accounting is in engine-dtype blocks; a request
+            // storing wider rows would overrun the byte budget while
+            // the pool believes it fits — reject instead of lying.
+            let d = self.mcfg.d_head();
+            if kv_dtype.row_bytes(d) > self.cfg.kv_dtype.row_bytes(d) {
+                reject = Some(EngineError::KvDtypeWiderThanPool {
+                    requested: kv_dtype,
+                    pool: self.cfg.kv_dtype,
+                });
             }
         }
         if reject.is_none() {
@@ -972,6 +1046,7 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             gen_len: opts.gen_len,
             sampler,
             seed_tag,
+            kv_dtype,
             policies,
             reported: 0,
             wait_s: None,
@@ -1001,7 +1076,7 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             id: w.id,
             gen_len: w.gen_len,
             sampler: w.sampler,
-            cache: KvCache::paged(&self.mcfg, self.cfg.block_tokens.max(1), table),
+            cache: KvCache::paged_dtype(&self.mcfg, self.cfg.block_tokens.max(1), table, w.kv_dtype),
             policies: w.policies,
             rng: self.request_rng(w.seed_tag),
             tokens: Vec::new(),
@@ -1075,11 +1150,23 @@ fn advance<B: Backend>(
         let policies = &mut a.policies;
         let rng = &mut a.rng;
         let step = a.step;
-        let mut select = |l: usize, h: usize, k: &Mat, v: &Mat, q: &[f32]| -> Selection {
+        let mut select = |l: usize,
+                          h: usize,
+                          k: &Mat,
+                          v: &Mat,
+                          q: &[f32],
+                          qb: Option<KvQuantBounds>|
+         -> Selection {
+            let policy = &mut policies[l * n_heads + h];
+            // Quantized caches report their dequantization bounds every
+            // step (they grow with appended rows); verified policies
+            // fold them into the (ε, δ) budget and the reuse
+            // certificate before selecting.
+            policy.set_kv_quant(qb);
             let mut ctx = PolicyCtx { k, v, q_scaled: q, rng: &mut *rng, step };
-            policies[l * n_heads + h].select(&mut ctx)
+            policy.select(&mut ctx)
         };
-        let sel_opt: Option<&mut dyn FnMut(usize, usize, &Mat, &Mat, &[f32]) -> Selection> =
+        let sel_opt: Option<&mut crate::server::SelectFn> =
             if sparse { Some(&mut select) } else { None };
         let stepped = backend
             .step(a.next_token, a.pos, &mut a.cache, sel_opt)
@@ -1371,6 +1458,47 @@ mod tests {
         }
         assert!(results[&inherit].mean_density < 1.0, "inherit must pick up the default");
         assert!((results[&dense].mean_density - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kv_dtype_override_matches_engine_wide_int8_and_reports_compression() {
+        let run = |cfg: EngineConfig, opts: GenOptions| {
+            let mut s = tiny_session(cfg);
+            s.submit(SubmitRequest::new(prompt(24, 7)).options(opts));
+            let mut out = None;
+            for ev in drain(&mut s) {
+                if let Event::Finished { result, .. } = ev {
+                    out = Some(result);
+                }
+            }
+            (out.expect("finished"), s.stats())
+        };
+        let (r_f32, st_f32) = run(EngineConfig::default(), GenOptions::new(6));
+        let (r_override, _) = run(
+            EngineConfig::default(),
+            GenOptions::new(6).kv_dtype(KvDtype::Int8),
+        );
+        let (r_engine, st_int8) = run(
+            EngineConfig::builder().kv_dtype(KvDtype::Int8).build(),
+            GenOptions::new(6),
+        );
+        // Per-request override ≡ engine-wide dtype for the same request.
+        assert_eq!(r_override.tokens, r_engine.tokens);
+        assert_eq!(r_override.kv_bytes_read, r_engine.kv_bytes_read);
+        // Physical traffic shrinks by the row compression (dense decode
+        // touches the same row count either way).
+        assert!(
+            r_override.kv_bytes_read < r_f32.kv_bytes_read,
+            "int8 {} !< f32 {}",
+            r_override.kv_bytes_read,
+            r_f32.kv_bytes_read
+        );
+        // Stats surface the dtype and the ≥ 3.5x bytes-per-token ratio.
+        assert_eq!(st_f32.kv_dtype, KvDtype::F32);
+        assert!((st_f32.kv_compression_ratio() - 1.0).abs() < 1e-12);
+        assert_eq!(st_int8.kv_dtype, KvDtype::Int8);
+        assert!(st_int8.kv_compression_ratio() >= 3.5, "{}", st_int8.kv_compression_ratio());
+        assert_eq!(st_int8.bytes_per_token_fp32, ModelConfig::tiny().kv_bytes_per_token());
     }
 
     #[test]

@@ -2,6 +2,14 @@
 //! of BLAS-1/2/3 primitives the attention stack and the rust-native
 //! transformer need. Hot loops are written with 8-wide manual unrolling
 //! so LLVM auto-vectorizes them; see EXPERIMENTS.md §Perf.
+//!
+//! [`quant`] adds the per-row symmetric int8 kernels (power-of-two
+//! scales, exact `scale/2` error bound, fused dequant-dot) behind the
+//! verified quantized KV tier.
+
+pub mod quant;
+
+pub use quant::{KvQuantBounds, QuantizedMat};
 
 use crate::util::Rng;
 

@@ -1,0 +1,369 @@
+//! Per-row symmetric int8 quantization with an *exact* dequantization
+//! error bound — the kernel layer under the verified quantized KV tier.
+//!
+//! Every row is quantized against its own power-of-two scale: the
+//! smallest `s = 2^e` with `max_i |x_i| / s ≤ 127`. Power-of-two scales
+//! are what makes the advertised bound exact rather than approximate:
+//! `x / s` and `s · q` are exact f32 operations (pure exponent shifts /
+//! small-integer products), so the only error is the rounding to the
+//! nearest code and
+//!
+//! ```text
+//! |x_i − s·q_i| ≤ s / 2        per element, with equality only at ties,
+//! ```
+//!
+//! which is [`QuantizedMat::max_abs_err`]'s contract, asserted bitwise by
+//! `tests/proptests.rs`. A mantissa-bearing scale (`max_abs / 127`)
+//! would buy back at most one bit of precision but turns the bound into
+//! "scale/2 up to ulps", which is exactly the kind of slack a *verified*
+//! error budget cannot absorb silently. The budget math consumes the
+//! bound through [`KvQuantBounds`] → `budget::QuantSlack`; the
+//! derivation lives in `docs/GUARANTEES.md` §8.
+//!
+//! The fused [`QuantizedMat::dot_row`] replicates [`crate::tensor::dot`]'s
+//! accumulation order exactly, so `dot_row(r, b)` is **bitwise equal** to
+//! `dot(&dequantize_row(r), b)`. That equality is the bridge lemma that
+//! lets the KV store keep a dequantized f32 working mirror (the
+//! "on-device tile" of the paper's deployment) while the paged pool,
+//! snapshots and byte accounting all operate on the int8 payload: any
+//! computation over the mirror is bitwise the computation a fused
+//! dequantizing kernel would produce.
+
+/// Running dequantization-error bounds of one (K, V) quantized store
+/// pair, maintained per (layer, head) slot as rows are appended. All
+/// downstream slack terms derive from these two maxima; per-row scales
+/// remain available on the [`QuantizedMat`] for finer-grained use.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct KvQuantBounds {
+    /// Largest per-row K scale observed (per-element error ≤ `/ 2`).
+    pub k_scale_max: f32,
+    /// Largest per-row V scale observed.
+    pub v_scale_max: f32,
+}
+
+impl KvQuantBounds {
+    /// Uniform bound on |dequantized logit − exact logit| for any cached
+    /// key against `q_scaled`: every element of k̂ is within
+    /// `k_scale_max/2` of k, so the dot product moves by at most
+    /// `(k_scale_max/2)·‖q‖₁` (in real arithmetic; the f32 dot's own
+    /// rounding is treated as exact throughout the budget math, as for
+    /// every other logit in the repo).
+    pub fn logit_err(&self, q_scaled: &[f32]) -> f32 {
+        let l1: f32 = q_scaled.iter().map(|q| q.abs()).sum();
+        0.5 * self.k_scale_max * l1
+    }
+
+    /// Per-element bound on |dequantized value − exact value|.
+    pub fn value_err(&self) -> f32 {
+        0.5 * self.v_scale_max
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.k_scale_max == 0.0 && self.v_scale_max == 0.0
+    }
+}
+
+/// Smallest power of two `s` with `max_abs / s ≤ 127` (0 for an all-zero
+/// row). Exponent floored at -126 so the scale is always a normal f32.
+fn pow2_scale(max_abs: f32) -> f32 {
+    if max_abs == 0.0 {
+        return 0.0;
+    }
+    let e = ((max_abs as f64) / 127.0).log2().ceil() as i32;
+    (2.0f64).powi(e.max(-126)) as f32
+}
+
+/// Dequantize one code against a row scale. Shared by the mirror
+/// builder and the fused dot so both produce bitwise-identical values.
+/// The product is exact f32 (power-of-two scale × 7-bit integer) except
+/// when it overflows — a row whose max element sits near `f32::MAX` —
+/// where clamping to the finite range can only move the value *toward*
+/// the original (|x| ≤ f32::MAX), so the `scale/2` bound survives.
+#[inline]
+fn deq(scale: f32, code: i8) -> f32 {
+    let x = scale * code as f32;
+    if x.is_infinite() {
+        f32::MAX.copysign(x)
+    } else {
+        x
+    }
+}
+
+/// Quantize one row, appending `row.len()` codes to `codes`. Returns the
+/// row's power-of-two scale. Deterministic: the same row always produces
+/// the same bytes (asserted by `tests/proptests.rs`).
+pub fn quantize_row_into(row: &[f32], codes: &mut Vec<i8>) -> f32 {
+    let max_abs = row.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    let scale = pow2_scale(max_abs);
+    if scale == 0.0 {
+        codes.resize(codes.len() + row.len(), 0);
+        return 0.0;
+    }
+    for &x in row {
+        // x/scale is an exact exponent shift with |x/scale| ≤ 127, so
+        // the round lands in [-127, 127] and the cast cannot saturate.
+        codes.push((x / scale).round() as i8);
+    }
+    scale
+}
+
+/// Row-major int8 matrix with one power-of-two scale per row — the
+/// physical payload of a quantized KV slot. `rows × cols` codes plus
+/// `rows` f32 scales: `cols + 4` bytes per row against the fp32 row's
+/// `4·cols` (3.5–4× compression for the head dims in this repo).
+#[derive(Clone, Debug, Default)]
+pub struct QuantizedMat {
+    cols: usize,
+    data: Vec<i8>,
+    scales: Vec<f32>,
+    max_scale: f32,
+}
+
+impl QuantizedMat {
+    pub fn new(cols: usize) -> QuantizedMat {
+        QuantizedMat { cols, data: Vec::new(), scales: Vec::new(), max_scale: 0.0 }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.scales.len()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Quantize and append one row; returns its scale.
+    pub fn push_row(&mut self, row: &[f32]) -> f32 {
+        debug_assert_eq!(row.len(), self.cols);
+        let s = quantize_row_into(row, &mut self.data);
+        self.scales.push(s);
+        self.max_scale = self.max_scale.max(s);
+        s
+    }
+
+    pub fn scale(&self, r: usize) -> f32 {
+        self.scales[r]
+    }
+
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// Largest row scale so far (monotone under appends; the running
+    /// input to [`KvQuantBounds`]).
+    pub fn max_scale(&self) -> f32 {
+        self.max_scale
+    }
+
+    /// The exact per-element dequantization error bound of row `r`:
+    /// every element satisfies `|x − x̂| ≤ scale/2` (see module docs for
+    /// why this is exact, not approximate).
+    pub fn max_abs_err(&self, r: usize) -> f32 {
+        0.5 * self.scales[r]
+    }
+
+    pub fn row_codes(&self, r: usize) -> &[i8] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Append row `r`'s dequantized values to `out`.
+    pub fn dequantize_row_into(&self, r: usize, out: &mut Vec<f32>) {
+        let s = self.scales[r];
+        out.extend(self.row_codes(r).iter().map(|&c| deq(s, c)));
+    }
+
+    pub fn dequantize_row(&self, r: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.cols);
+        self.dequantize_row_into(r, &mut out);
+        out
+    }
+
+    /// Fused dequantize-and-dot of row `r` against `b` — bitwise equal
+    /// to `tensor::dot(&self.dequantize_row(r), b)`: same dequantized
+    /// values (shared `deq`), same 8-wide unrolled accumulation order.
+    pub fn dot_row(&self, r: usize, b: &[f32]) -> f32 {
+        let codes = self.row_codes(r);
+        let s = self.scales[r];
+        debug_assert_eq!(codes.len(), b.len());
+        let n = codes.len();
+        let chunks = n / 8;
+        let mut acc = [0.0f32; 8];
+        for i in 0..chunks {
+            let o = i * 8;
+            acc[0] += deq(s, codes[o]) * b[o];
+            acc[1] += deq(s, codes[o + 1]) * b[o + 1];
+            acc[2] += deq(s, codes[o + 2]) * b[o + 2];
+            acc[3] += deq(s, codes[o + 3]) * b[o + 3];
+            acc[4] += deq(s, codes[o + 4]) * b[o + 4];
+            acc[5] += deq(s, codes[o + 5]) * b[o + 5];
+            acc[6] += deq(s, codes[o + 6]) * b[o + 6];
+            acc[7] += deq(s, codes[o + 7]) * b[o + 7];
+        }
+        let mut sum =
+            (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+        for i in chunks * 8..n {
+            sum += deq(s, codes[i]) * b[i];
+        }
+        sum
+    }
+
+    /// Physical payload bytes: one code per element plus one f32 scale
+    /// per row.
+    pub fn payload_bytes(&self) -> usize {
+        self.data.len() + self.scales.len() * 4
+    }
+
+    /// Raw payload of rows [lo, hi) — codes and scales, byte-for-byte.
+    pub fn raw_rows(&self, lo: usize, hi: usize) -> (&[i8], &[f32]) {
+        (&self.data[lo * self.cols..hi * self.cols], &self.scales[lo..hi])
+    }
+
+    /// Append rows from a raw payload (as produced by
+    /// [`QuantizedMat::raw_rows`]) without requantizing — the
+    /// byte-for-byte copy behind prefix-fork snapshots, so a forked
+    /// request's store is bit-identical to its donor's.
+    pub fn extend_raw(&mut self, codes: &[i8], scales: &[f32]) {
+        debug_assert_eq!(codes.len(), scales.len() * self.cols);
+        self.data.extend_from_slice(codes);
+        self.scales.extend_from_slice(scales);
+        for &s in scales {
+            self.max_scale = self.max_scale.max(s);
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.data.clear();
+        self.scales.clear();
+        self.max_scale = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::dot;
+    use crate::util::Rng;
+
+    fn is_pow2(x: f32) -> bool {
+        // Normal f32 power of two: zero mantissa bits.
+        x > 0.0 && (x.to_bits() & 0x007f_ffff) == 0
+    }
+
+    #[test]
+    fn scales_are_powers_of_two_and_codes_fit() {
+        let mut rng = Rng::new(1);
+        let mut m = QuantizedMat::new(32);
+        for _ in 0..50 {
+            let row: Vec<f32> = (0..32).map(|_| rng.normal32(0.0, 3.0)).collect();
+            let s = m.push_row(&row);
+            assert!(is_pow2(s), "scale {s} not a power of two");
+        }
+        assert!(m.data.iter().all(|&c| (-127..=127).contains(&(c as i32))));
+        assert_eq!(m.rows(), 50);
+        assert_eq!(m.payload_bytes(), 50 * (32 + 4));
+    }
+
+    #[test]
+    fn roundtrip_error_within_half_scale_exact() {
+        let mut rng = Rng::new(2);
+        let mut m = QuantizedMat::new(16);
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        for _ in 0..40 {
+            rows.push((0..16).map(|_| rng.normal32(0.0, 2.0)).collect());
+        }
+        rows.push(vec![0.0; 16]); // zero row: scale 0, exact
+        rows.push(vec![-3.25; 16]); // constant row
+        rows.push(vec![f32::MAX; 16]); // max-magnitude row (overflow clamp)
+        for row in &rows {
+            m.push_row(row);
+        }
+        for (r, row) in rows.iter().enumerate() {
+            let bound = m.max_abs_err(r);
+            let back = m.dequantize_row(r);
+            for (c, (&x, &x_hat)) in row.iter().zip(back.iter()).enumerate() {
+                assert!(x_hat.is_finite());
+                assert!(
+                    (x - x_hat).abs() <= bound,
+                    "row {r} col {c}: |{x} - {x_hat}| > {bound}"
+                );
+            }
+        }
+        // Zero row is exact with a zero bound.
+        let zr = rows.len() - 3;
+        assert_eq!(m.scale(zr), 0.0);
+        assert_eq!(m.dequantize_row(zr), vec![0.0; 16]);
+    }
+
+    #[test]
+    fn exact_tie_rounds_within_bound() {
+        // x = scale·(m + 0.5) sits exactly on a quantization tie; the
+        // error must be exactly scale/2, never over.
+        let mut m = QuantizedMat::new(4);
+        // max element 127 pins the scale at exactly 1.0.
+        let row = vec![127.0, 2.5, -3.5, 0.5];
+        let s = m.push_row(&row);
+        assert_eq!(s, 1.0);
+        let back = m.dequantize_row(0);
+        for (&x, &x_hat) in row.iter().zip(back.iter()) {
+            assert!((x - x_hat).abs() <= 0.5, "|{x} - {x_hat}| > 0.5");
+        }
+    }
+
+    #[test]
+    fn quantization_is_deterministic() {
+        let mut rng = Rng::new(3);
+        let row: Vec<f32> = (0..24).map(|_| rng.normal32(0.0, 1.0)).collect();
+        let mut a = QuantizedMat::new(24);
+        let mut b = QuantizedMat::new(24);
+        a.push_row(&row);
+        b.push_row(&row);
+        assert_eq!(a.row_codes(0), b.row_codes(0));
+        assert_eq!(a.scale(0).to_bits(), b.scale(0).to_bits());
+    }
+
+    #[test]
+    fn fused_dot_is_bitwise_equal_to_dequantize_then_dot() {
+        let mut rng = Rng::new(4);
+        let mut m = QuantizedMat::new(37); // odd width exercises the tail loop
+        for _ in 0..20 {
+            let row: Vec<f32> = (0..37).map(|_| rng.normal32(0.0, 2.0)).collect();
+            m.push_row(&row);
+        }
+        let q: Vec<f32> = (0..37).map(|_| rng.normal32(0.0, 1.0)).collect();
+        for r in 0..20 {
+            let fused = m.dot_row(r, &q);
+            let two_step = dot(&m.dequantize_row(r), &q);
+            assert_eq!(fused.to_bits(), two_step.to_bits(), "row {r} diverged");
+        }
+    }
+
+    #[test]
+    fn raw_copy_reproduces_payload_byte_for_byte() {
+        let mut rng = Rng::new(5);
+        let mut src = QuantizedMat::new(8);
+        for _ in 0..12 {
+            let row: Vec<f32> = (0..8).map(|_| rng.normal32(0.0, 1.0)).collect();
+            src.push_row(&row);
+        }
+        let (codes, scales) = src.raw_rows(4, 8);
+        let mut dst = QuantizedMat::new(8);
+        dst.extend_raw(codes, scales);
+        assert_eq!(dst.rows(), 4);
+        for r in 0..4 {
+            assert_eq!(dst.row_codes(r), src.row_codes(4 + r));
+            assert_eq!(dst.scale(r).to_bits(), src.scale(4 + r).to_bits());
+            assert_eq!(dst.dequantize_row(r), src.dequantize_row(4 + r));
+        }
+        assert!(dst.max_scale() <= src.max_scale());
+    }
+
+    #[test]
+    fn bounds_logit_err_scales_with_q_l1_norm() {
+        let b = KvQuantBounds { k_scale_max: 0.25, v_scale_max: 0.5 };
+        let q = vec![1.0, -2.0, 0.5];
+        assert!((b.logit_err(&q) - 0.5 * 0.25 * 3.5).abs() < 1e-7);
+        assert!((b.value_err() - 0.25).abs() < 1e-7);
+        assert!(!b.is_zero());
+        assert!(KvQuantBounds::default().is_zero());
+    }
+}

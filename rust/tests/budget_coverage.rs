@@ -9,6 +9,12 @@
 //! (Verify::Numerator is exercised indirectly by the SDPA cell; on
 //! mean-zero random values its budget correctly saturates at n_s, which
 //! makes a direct cell trivially covered.)
+//!
+//! The quantized-KV sweep repeats the {Denominator, Sdpa} × {CLT,
+//! Hoeffding} cells with int8-stored K/V and the widened budget
+//! (`budget_for_quant`), measuring violations against the exact fp32
+//! population — plus a negative control on adversarially coherent rows
+//! proving coverage *fails* when the slack term is zeroed.
 
 use vattn::attention::{dense_sdpa, exact_num_den, sparse_sdpa, weighted_num_den, Selection};
 use vattn::budget::{self, Bound, Verify};
@@ -122,6 +128,207 @@ fn clt_denominator_budgets_are_genuinely_sparse() {
     let (_, frac) = violation_rate(Verify::Denominator, Bound::Clt, 0xC0FFEE);
     assert!(frac < 0.6, "CLT budget fraction {frac} ~ dense; coverage test is vacuous");
     assert!(frac > 0.0);
+}
+
+// ───────────────────────── quantized-KV sweep ─────────────────────────
+//
+// The int8 tier stores dequantized-lossy K/V; the budget must deliver
+// (ε, δ) *inclusive of* that dequantization error: the estimator is
+// built from the quantized rows, but coverage is measured against the
+// exact fp32 population. `budget_for_quant` shrinks the sampling ε by
+// the deterministic bias bound ρ and widens σ/range
+// (docs/GUARANTEES.md §8); the negative control below proves the slack
+// term is load-bearing by zeroing it on adversarial rows whose
+// quantization error is coherent (≈ its worst-case bound) instead of
+// cancelling.
+
+/// Quantize every row of `m`, returning the dequantized mirror and the
+/// largest row scale (what `KvCache::quant_bounds` reports).
+fn quantize_mat(m: &Mat) -> (Mat, f32) {
+    use vattn::tensor::quant::QuantizedMat;
+    let mut q = QuantizedMat::new(m.cols);
+    let mut out = Mat::zeros(0, m.cols);
+    for r in 0..m.rows {
+        q.push_row(m.row(r));
+        q.dequantize_row_into(r, &mut out.data);
+        out.rows += 1;
+    }
+    (out, q.max_scale())
+}
+
+/// Build the slack exactly as the serving policy does, via the single
+/// `QuantSlack::from_bounds` conversion — so this sweep validates what
+/// production charges, not a hand-copied formula.
+fn quant_slack(k_scale: f32, v_scale: f32, q: &[f32], d: usize) -> budget::QuantSlack {
+    let bounds =
+        vattn::tensor::quant::KvQuantBounds { k_scale_max: k_scale, v_scale_max: v_scale };
+    budget::QuantSlack::from_bounds(&bounds, q, d)
+}
+
+/// One quantized trial: budget + estimator over the dequantized (k̂, v̂),
+/// violation measured against the exact fp32 (k, v). `with_slack`
+/// selects `budget_for_quant` vs the slack-zeroed `budget_for`, and
+/// `floor` applies the base-sample floor (off for the negative control,
+/// which needs the raw prescribed budget).
+fn run_trial_quant(
+    verify: Verify,
+    bound: Bound,
+    k: &Mat,
+    v: &Mat,
+    q: &[f32],
+    with_slack: bool,
+    floor: bool,
+    rng: &mut Rng,
+) -> bool {
+    let (k_hat, k_scale) = quantize_mat(k);
+    let (v_hat, v_scale) = quantize_mat(v);
+    let n = k.rows;
+    let i_f = sink_window_indices(n, 16, 16);
+    // m_ref from the dequantized logits, exactly as the policy sees them.
+    let m_ref = i_f
+        .iter()
+        .map(|&i| dot(k_hat.row(i), q))
+        .fold(f32::NEG_INFINITY, f32::max);
+    let base = budget::draw_base_sample(n, &i_f, BASE_RATE, rng);
+    let stats = budget::estimate_stats(&k_hat, &v_hat, q, &i_f, &base, m_ref);
+    let n_s = stats.n_s;
+    let slack = quant_slack(k_scale, v_scale, q, v.cols);
+    let mut b = if with_slack {
+        budget::budget_for_quant(&stats, verify, EPS, DELTA, bound, Some(&slack))
+    } else {
+        budget::budget_for(&stats, verify, EPS, DELTA, bound)
+    };
+    if floor {
+        b = b.max(base.len());
+    }
+    let b = b.min(n_s);
+    let dyn_idx = rng.sample_excluding(n, b, &i_f);
+    let sel = Selection::compose(i_f, dyn_idx, b as f32 / n_s as f32);
+    match verify {
+        Verify::Denominator => {
+            let (_, d_hat) = weighted_num_den(&k_hat, &v_hat, q, &sel, m_ref);
+            let (_, d_exact) = exact_num_den(k, v, q, m_ref);
+            ((d_hat - d_exact) / d_exact).abs() > EPS
+        }
+        Verify::Numerator => {
+            let (n_hat, _) = weighted_num_den(&k_hat, &v_hat, q, &sel, m_ref);
+            let (n_exact, _) = exact_num_den(k, v, q, m_ref);
+            rel_l2_error(&n_hat, &n_exact) > EPS
+        }
+        Verify::Sdpa => {
+            let exact = dense_sdpa(k, v, q).out;
+            let approx = sparse_sdpa(&k_hat, &v_hat, q, &sel);
+            rel_l2_error(&approx, &exact) > EPS
+        }
+    }
+}
+
+fn quant_violation_rate(verify: Verify, bound: Bound, seed: u64) -> f64 {
+    let mut meta = Rng::new(seed);
+    let mut violations = 0usize;
+    for t in 0..TRIALS {
+        let mut rng = meta.fork(t as u64);
+        let k = Mat::randn(N, D, 1.0, &mut rng);
+        let v = Mat::randn(N, D, 1.0, &mut rng);
+        let q: Vec<f32> =
+            (0..D).map(|_| rng.normal32(0.0, 1.0) / (D as f32).sqrt()).collect();
+        if run_trial_quant(verify, bound, &k, &v, &q, true, true, &mut rng) {
+            violations += 1;
+        }
+    }
+    violations as f64 / TRIALS as f64
+}
+
+#[test]
+fn quantized_denominator_clt_coverage() {
+    let rate = quant_violation_rate(Verify::Denominator, Bound::Clt, 0x1A8);
+    assert!(rate <= DELTA + 0.05, "int8 CLT violation rate {rate} > δ={DELTA} (+slack)");
+}
+
+#[test]
+fn quantized_denominator_hoeffding_coverage() {
+    let rate = quant_violation_rate(Verify::Denominator, Bound::Hoeffding, 0x2A8);
+    assert!(rate <= DELTA, "int8 Hoeffding violation rate {rate} > δ={DELTA}");
+}
+
+#[test]
+fn quantized_sdpa_clt_coverage() {
+    let rate = quant_violation_rate(Verify::Sdpa, Bound::Clt, 0x3A8);
+    assert!(rate <= DELTA + 0.05, "int8 SDPA CLT violation rate {rate} > δ={DELTA} (+slack)");
+}
+
+#[test]
+fn quantized_sdpa_hoeffding_coverage() {
+    let rate = quant_violation_rate(Verify::Sdpa, Bound::Hoeffding, 0x4A8);
+    assert!(rate <= DELTA, "int8 SDPA Hoeffding violation rate {rate} > δ={DELTA}");
+}
+
+/// Adversarial rows whose quantization error is *coherent*: every row
+/// is `[127, c_i, …, c_i]` with `c_i = m_i + 0.49` — the leading 127
+/// pins the power-of-two scale at exactly 1, and every tail element
+/// dequantizes to `m_i` (an ≈ −0.49 shift), so with a non-negative
+/// query all logits shift down together by ≈ 0.49·Σ_{j≥1} q_j instead
+/// of cancelling. This is the population the worst-case slack bound
+/// exists for.
+fn adversarial_quant_instance() -> (Mat, Mat, Vec<f32>) {
+    let k = Mat::from_fn(N, D, |r, c| {
+        if c == 0 {
+            127.0
+        } else {
+            // Varying integer levels keep a real residual variance so
+            // the sampling term is non-trivial.
+            (((r * 7 + r / 3) % 5) as f32) + 0.49
+        }
+    });
+    // All-ones values quantize exactly (1.0 = 64 · 2⁻⁶ at the
+    // power-of-two scale for max_abs 1), leaving the denominator as
+    // the only biased quantity.
+    let v = Mat::from_fn(N, D, |_, _| 1.0);
+    let g = 0.0232f32;
+    let mut q = vec![g; D];
+    q[0] = 0.05;
+    (k, v, q)
+}
+
+#[test]
+fn quantized_coverage_holds_on_adversarial_rows_with_slack() {
+    // The coherent-bias population, slack ON: the bias bound ρ here
+    // exceeds ε, so the budget saturates at n_s (exact summation over
+    // the quantized rows) and the only residual error is the true
+    // coherent bias ≈ 1 − e^{−0.17} ≈ 0.16 < ε — zero violations.
+    let mut meta = Rng::new(0x5A8);
+    for t in 0..20u64 {
+        let mut rng = meta.fork(t);
+        let (k, v, q) = adversarial_quant_instance();
+        let violated =
+            run_trial_quant(Verify::Denominator, Bound::Clt, &k, &v, &q, true, false, &mut rng);
+        assert!(!violated, "slack-on adversarial trial {t} violated ε={EPS}");
+    }
+}
+
+#[test]
+fn quantized_coverage_fails_when_slack_is_zeroed() {
+    // Negative control proving the slack term is load-bearing: same
+    // adversarial population, slack zeroed (plain `budget_for` over the
+    // quantized stats). The estimator now concentrates around the
+    // biased D_q ≈ e^{−0.17}·D with a sampling tolerance budgeted for
+    // the full ε, so |D̂ − D|/D > ε far more often than δ permits.
+    let mut meta = Rng::new(0x6A8);
+    let mut violations = 0usize;
+    for t in 0..TRIALS {
+        let mut rng = meta.fork(t as u64);
+        let (k, v, q) = adversarial_quant_instance();
+        if run_trial_quant(Verify::Denominator, Bound::Clt, &k, &v, &q, false, false, &mut rng) {
+            violations += 1;
+        }
+    }
+    let rate = violations as f64 / TRIALS as f64;
+    assert!(
+        rate > DELTA + 0.05,
+        "zeroed slack still covered (rate {rate} ≤ {}): the quantization slack term \
+         would be dead weight",
+        DELTA + 0.05
+    );
 }
 
 #[test]

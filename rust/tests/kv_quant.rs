@@ -1,0 +1,250 @@
+//! Verified int8 KV quantization, held to the engine's determinism bar:
+//! quantized token streams must be byte-identical at any worker count,
+//! across a forced preemption replay, and between prefix-cache-shared
+//! and unshared runs (quantized payloads fork byte-for-byte; CoW never
+//! aliases writes) — while the physical byte accounting (pool capacity,
+//! TierStats traffic) reflects the ≥ 3.5× compression the tier exists
+//! for. The (ε, δ) correctness of the quantized budget lives in
+//! `tests/budget_coverage.rs`; this file is about serving semantics.
+
+use std::collections::BTreeMap;
+
+use vattn::kvcache::KvDtype;
+use vattn::model::{Model, ModelConfig};
+use vattn::server::{EngineConfig, Event, GenOptions, Session, SessionStats, SubmitRequest};
+
+fn shared_prefix_prompts(n: usize, prefix_len: usize, suffix_len: usize) -> Vec<Vec<u32>> {
+    let prefix: Vec<u32> = (0..prefix_len as u32).map(|t| (t * 31 + 7) % 250).collect();
+    (0..n)
+        .map(|i| {
+            let mut p = prefix.clone();
+            p.extend((0..suffix_len as u32).map(|t| (t * 13 + i as u32 * 17 + 3) % 250));
+            p
+        })
+        .collect()
+}
+
+/// Submit every prompt with the given options, tick to idle, and return
+/// (token streams in submission order, session stats).
+fn run_session(
+    cfg: EngineConfig,
+    prompts: &[Vec<u32>],
+    opts: GenOptions,
+) -> (Vec<Vec<u32>>, SessionStats) {
+    let mut s = Session::new(Model::new(ModelConfig::tiny(), 42), cfg);
+    let mut streams: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+    for p in prompts {
+        let id = s.submit(SubmitRequest::new(p.clone()).options(opts.clone()));
+        streams.insert(id, Vec::new());
+    }
+    while !s.is_idle() {
+        for ev in s.tick().expect("tick") {
+            match ev {
+                Event::Token { id, token, step, .. } => {
+                    let st = streams.get_mut(&id).expect("token for known request");
+                    assert_eq!(st.len(), step, "streams must stay gapless across preemption");
+                    st.push(token);
+                }
+                Event::Finished { id, result, .. } => {
+                    assert_eq!(result.tokens, streams[&id], "events must replay the result");
+                }
+                Event::Rejected { reason, .. } => panic!("unexpected rejection: {reason}"),
+                Event::Admitted { .. } | Event::Preempted { .. } => {}
+            }
+        }
+    }
+    let stats = s.stats();
+    s.flush_prefix_cache().expect("flush");
+    assert_eq!(s.kv_blocks_in_use(), 0, "drained + flushed session must be quiescent");
+    (streams.into_values().collect(), stats)
+}
+
+fn int8_cfg() -> vattn::server::EngineConfigBuilder {
+    EngineConfig::builder().seed(1).block_tokens(4).kv_dtype(KvDtype::Int8)
+}
+
+#[test]
+fn int8_streams_are_byte_identical_across_worker_counts() {
+    // Dense and verified-sparse requests alike: quantization happens in
+    // per-request caches inside a deterministic tick, so worker count
+    // must not leak into the streams. The verified arm uses a small
+    // sink/window so a real residual exists — its budget runs through
+    // the quantization-slack path every decode step.
+    let vcfg = vattn::policies::VAttentionConfig {
+        sink: vattn::policies::SizeSpec::Abs(4),
+        window: vattn::policies::SizeSpec::Abs(8),
+        verify: vattn::budget::Verify::Denominator,
+        ..Default::default()
+    }
+    .with_guarantee(0.3, 0.3);
+    for verified in [false, true] {
+        let (prompts, opts) = if verified {
+            (shared_prefix_prompts(4, 56, 8), GenOptions::new(8).verified_with(vcfg.clone()))
+        } else {
+            (shared_prefix_prompts(6, 24, 8), GenOptions::new(8))
+        };
+        let (w1, _) = run_session(int8_cfg().workers(1).build(), &prompts, opts.clone());
+        let (w4, _) = run_session(int8_cfg().workers(4).build(), &prompts, opts);
+        assert_eq!(w1, w4, "int8 streams diverged across workers (verified={verified})");
+        assert!(w1.iter().all(|s| s.len() == 8));
+    }
+}
+
+#[test]
+fn int8_preemption_replay_is_byte_identical() {
+    // A pool too small for both long generations forces a preemption;
+    // the replay re-quantizes the same rows, so the contended run must
+    // reproduce the uncontended streams exactly.
+    let mcfg = ModelConfig::tiny();
+    let prompts = shared_prefix_prompts(2, 8, 0);
+    let opts = GenOptions::new(12);
+    // 7 int8 blocks < 2 × 5 worst-case: exhaustion mid-decode.
+    let contended = int8_cfg()
+        .max_batch(2)
+        .kv_capacity_bytes(7 * 4 * KvDtype::Int8.kv_bytes_per_token(&mcfg))
+        .build();
+    let free = int8_cfg().max_batch(2).build();
+    let (free_streams, free_stats) = run_session(free, &prompts, opts.clone());
+    let (contended_streams, contended_stats) = run_session(contended, &prompts, opts);
+    assert_eq!(free_stats.preemptions, 0);
+    assert!(
+        contended_stats.preemptions > 0,
+        "7 blocks < 10 worst-case must force a preemption"
+    );
+    assert_eq!(
+        free_streams, contended_streams,
+        "int8 preemption replay must be byte-identical to the uncontended run"
+    );
+}
+
+#[test]
+fn int8_prefix_sharing_never_changes_streams() {
+    // Shared vs unshared: the fork copies the donor's quantized payload
+    // byte-for-byte (never requantizes), and full-block sharing keeps
+    // CoW from ever aliasing a write — so streams must match exactly
+    // and the shared run must actually hit the radix.
+    let prompts = shared_prefix_prompts(6, 24, 6);
+    let opts = GenOptions::new(6);
+    let (unshared, unshared_stats) = run_session(int8_cfg().build(), &prompts, opts.clone());
+    let (shared, shared_stats) = run_session(int8_cfg().prefix_cache(true).build(), &prompts, opts);
+    assert_eq!(unshared, shared, "prefix forking changed an int8 token stream");
+    assert_eq!(unshared_stats.prefix_hit_blocks, 0);
+    assert!(shared_stats.prefix_hit_blocks > 0, "the shared run must fork cached blocks");
+    assert!(
+        shared_stats.peak_blocks_in_use <= unshared_stats.peak_blocks_in_use,
+        "sharing must not grow the peak footprint"
+    );
+}
+
+#[test]
+fn int8_pool_holds_at_least_3_5x_more_blocks_for_the_same_bytes() {
+    let mcfg = ModelConfig::tiny();
+    let budget = 64 * 16 * mcfg.kv_bytes_per_token();
+    let fp32 = EngineConfig::builder().block_tokens(16).kv_capacity_bytes(budget).build();
+    let int8 = EngineConfig::builder()
+        .block_tokens(16)
+        .kv_capacity_bytes(budget)
+        .kv_dtype(KvDtype::Int8)
+        .build();
+    let sf = Session::new(Model::new(mcfg.clone(), 42), fp32).stats();
+    let si = Session::new(Model::new(mcfg, 42), int8).stats();
+    assert_eq!(sf.capacity_blocks, Some(64));
+    let ratio = si.capacity_blocks.unwrap() as f64 / 64.0;
+    assert!(ratio >= 3.5, "same byte budget yields only {ratio}x the blocks at int8");
+    assert!(si.kv_compression_ratio() >= 3.5);
+    assert_eq!(si.kv_dtype, KvDtype::Int8);
+}
+
+#[test]
+fn wider_dtype_override_is_rejected_on_a_byte_capped_pool() {
+    // An f32 override into an int8-sized, byte-capped pool would hold
+    // ~3.56x the bytes each block was charged for — the session must
+    // reject it up front instead of silently overrunning the budget.
+    // On an uncapped pool (and for narrower overrides) it is admitted.
+    let mcfg = ModelConfig::tiny();
+    let capped = int8_cfg()
+        .kv_capacity_bytes(16 * 4 * KvDtype::Int8.kv_bytes_per_token(&mcfg))
+        .build();
+    let mut s = Session::new(Model::new(mcfg, 42), capped);
+    let doomed = s.submit(
+        SubmitRequest::new(shared_prefix_prompts(1, 8, 0)[0].clone())
+            .options(GenOptions::new(4).kv_dtype(KvDtype::F32)),
+    );
+    let ok = s.submit(SubmitRequest::new(shared_prefix_prompts(1, 8, 0)[0].clone()));
+    let mut rejected = Vec::new();
+    let mut finished = Vec::new();
+    while !s.is_idle() {
+        for ev in s.tick().expect("tick") {
+            match ev {
+                Event::Rejected { id, reason, .. } => rejected.push((id, format!("{reason}"))),
+                Event::Finished { id, .. } => finished.push(id),
+                _ => {}
+            }
+        }
+    }
+    assert_eq!(rejected.len(), 1);
+    assert_eq!(rejected[0].0, doomed);
+    assert!(
+        matches!(rejected[0].1.as_str(), m if m.contains("byte-capped pool")),
+        "{}",
+        rejected[0].1
+    );
+    assert_eq!(finished, vec![ok], "the inherited-dtype request must still serve");
+
+    // Uncapped pool: the same override is fine.
+    let mut free = Session::new(Model::new(ModelConfig::tiny(), 42), int8_cfg().build());
+    free.submit(
+        SubmitRequest::new(shared_prefix_prompts(1, 8, 0)[0].clone())
+            .options(GenOptions::new(4).kv_dtype(KvDtype::F32)),
+    );
+    while !free.is_idle() {
+        for ev in free.tick().expect("tick") {
+            if let Event::Rejected { reason, .. } = ev {
+                panic!("uncapped pool must admit a wider override: {reason}");
+            }
+        }
+    }
+}
+
+#[test]
+fn per_request_int8_override_matches_engine_wide_int8() {
+    // The GenOptions override must be byte-equivalent to configuring
+    // the whole engine at int8 — including when the override request
+    // serves alongside f32 neighbors in the same batch.
+    let prompts = shared_prefix_prompts(1, 20, 4);
+    let opts = GenOptions::new(6).seed(77);
+    let (engine_wide, _) = run_session(int8_cfg().block_tokens(16).build(), &prompts, opts.clone());
+
+    let mut s = Session::new(Model::new(ModelConfig::tiny(), 42), EngineConfig::default());
+    let neighbor = s.submit(SubmitRequest::new(shared_prefix_prompts(1, 12, 0)[0].clone()));
+    let target = s.submit(
+        SubmitRequest::new(prompts[0].clone()).options(opts.kv_dtype(KvDtype::Int8)),
+    );
+    let mut streams: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+    let mut bytes: BTreeMap<u64, usize> = BTreeMap::new();
+    while !s.is_idle() {
+        for ev in s.tick().expect("tick") {
+            match ev {
+                Event::Token { id, token, .. } => streams.entry(id).or_default().push(token),
+                Event::Finished { id, result, .. } => {
+                    bytes.insert(id, result.kv_bytes_written);
+                }
+                Event::Rejected { reason, .. } => panic!("unexpected rejection: {reason}"),
+                _ => {}
+            }
+        }
+    }
+    assert_eq!(streams[&target], engine_wide[0], "override diverged from engine-wide int8");
+    // Physical write traffic: the int8 request pays (d + 4)-byte rows,
+    // its f32 neighbor 4·d, over the same per-token slot count. A
+    // gen-G request appends G − 1 decode tokens after the post-prefill
+    // counter reset.
+    let d = ModelConfig::tiny().d_head();
+    let per_append_ratio = (4 * d) as f64 / (d + 4) as f64;
+    let int8_per_append = bytes[&target] as f64 / (6 - 1) as f64;
+    let f32_per_append = bytes[&neighbor] as f64 / (16 - 1) as f64; // default gen_len 16
+    assert!(
+        (f32_per_append / int8_per_append - per_append_ratio).abs() < 1e-9,
+        "physical write accounting off: f32 {f32_per_append} B/append vs int8 {int8_per_append}"
+    );
+}

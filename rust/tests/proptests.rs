@@ -440,6 +440,89 @@ fn prop_session_submit_cancel_interleaving_leaks_no_blocks() {
 }
 
 #[test]
+fn prop_int8_roundtrip_respects_the_advertised_half_scale_bound() {
+    // The quantized-KV tier's foundational contract: for every element
+    // of every row — random, constant, zero, and max-magnitude alike —
+    // |x − dequantize(quantize(x))| ≤ scale/2 with the row's advertised
+    // scale. Exact (power-of-two scales), so no tolerance is added.
+    use vattn::tensor::quant::QuantizedMat;
+    Prop::new("int8-roundtrip-bound").cases(60).run(|rng| {
+        let d = [8usize, 16, 31, 32, 64][rng.below(5)];
+        let mut m = QuantizedMat::new(d);
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        let magnitude = [0.01f32, 1.0, 100.0, 1e30][rng.below(4)];
+        for _ in 0..6 {
+            rows.push((0..d).map(|_| rng.normal32(0.0, magnitude)).collect());
+        }
+        rows.push(vec![0.0; d]); // zero row
+        let c = rng.normal32(0.0, magnitude);
+        rows.push(vec![c; d]); // constant row
+        let mut extreme = vec![f32::MAX; d]; // max-magnitude row
+        extreme[d / 2] = -f32::MAX;
+        rows.push(extreme);
+        for row in &rows {
+            m.push_row(row);
+        }
+        for (r, row) in rows.iter().enumerate() {
+            let bound = m.max_abs_err(r);
+            assert_eq!(bound, 0.5 * m.scale(r));
+            let back = m.dequantize_row(r);
+            for (c, (&x, &x_hat)) in row.iter().zip(back.iter()).enumerate() {
+                assert!(x_hat.is_finite(), "row {r} col {c} dequantized to {x_hat}");
+                assert!(
+                    (x - x_hat).abs() <= bound,
+                    "row {r} col {c}: |{x} − {x_hat}| > scale/2 = {bound}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_int8_quantization_is_deterministic() {
+    // Same row ⇒ same bytes: codes and the scale's exact bit pattern.
+    use vattn::tensor::quant::quantize_row_into;
+    Prop::new("int8-deterministic").cases(80).run(|rng| {
+        let d = rng.range(1, 96);
+        let row: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 5.0)).collect();
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        let sa = quantize_row_into(&row, &mut a);
+        let sb = quantize_row_into(&row.clone(), &mut b);
+        assert_eq!(a, b, "codes diverged for identical input");
+        assert_eq!(sa.to_bits(), sb.to_bits(), "scales diverged for identical input");
+    });
+}
+
+#[test]
+fn prop_int8_fused_dequant_dot_is_bitwise_exact() {
+    // The bridge lemma behind the dequantized working mirror: the fused
+    // dequant-dot kernel equals dequantize-then-tensor::dot *bitwise*,
+    // at every width (unrolled body + tail) and magnitude.
+    use vattn::tensor::quant::QuantizedMat;
+    Prop::new("int8-fused-dot-bitwise").cases(60).run(|rng| {
+        let d = rng.range(1, 100);
+        let mut m = QuantizedMat::new(d);
+        let n_rows = rng.range(1, 8);
+        for _ in 0..n_rows {
+            let mag = [0.1f32, 1.0, 1000.0][rng.below(3)];
+            let row: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, mag)).collect();
+            m.push_row(&row);
+        }
+        let q: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 1.0)).collect();
+        for r in 0..n_rows {
+            let fused = m.dot_row(r, &q);
+            let two_step = vattn::tensor::dot(&m.dequantize_row(r), &q);
+            assert_eq!(
+                fused.to_bits(),
+                two_step.to_bits(),
+                "row {r} (d={d}): fused {fused} != dequantize-then-dot {two_step}"
+            );
+        }
+    });
+}
+
+#[test]
 fn prop_top_indices_are_actually_top() {
     Prop::new("top-indices-correct").cases(80).run(|rng| {
         let n = rng.range(8, 500);

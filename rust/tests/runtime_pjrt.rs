@@ -97,7 +97,8 @@ fn pjrt_sparse_selection_reduces_traffic_and_stays_close() {
                       _h: usize,
                       k: &vattn::tensor::Mat,
                       _v: &vattn::tensor::Mat,
-                      q: &[f32]| {
+                      q: &[f32],
+                      _qb: Option<vattn::tensor::quant::KvQuantBounds>| {
         // oracle top-64 + sink/window
         let logits = vattn::attention::logits_all(k, q);
         let mut idx = vattn::policies::sink_window_indices(k.rows, 8, 16);
