@@ -18,6 +18,14 @@
 //! quantized (ε, δ) coverage estimate written to the `kv_quant` JSON
 //! block (CI-checked).
 //!
+//! Also runs the spill-to-disk cold-tier scenario: the shared-prompt
+//! workload on an over-committed pool with the file-backed `SpillStore`
+//! attached — asserting completion with zero full-replay preemptions,
+//! streams byte-identical to the unconstrained spill-off baseline at
+//! workers {1, 4}, aggregate swap-in bytes equal to spill-out bytes,
+//! and a fresh session warm-starting from the persisted prefix store
+//! with a nonzero hit rate on the same prompts.
+//!
 //! Also runs the temporal heavy-hitter reuse scenarios: a 4-request
 //! 64-token-generation vAttention batch asserting reuse-on streams are
 //! byte-identical to reuse-off at workers {1, 4}, and a planted
@@ -28,8 +36,10 @@
 //! Besides the human-readable report, writes `BENCH_engine.json`
 //! (tokens/s plus TTFT/TPOT percentiles per worker count, the
 //! `demand_paging` block with prefix-hit-rate / preemptions /
-//! peak-block-utilization, the `reuse` block with hit rate / refresh
-//! causes / scan reduction, and the open-loop summary) so the perf
+//! peak-block-utilization, the `spill` block with cold-tier spill-out /
+//! swap-in traffic and the replay count, the `reuse` block with hit
+//! rate / refresh causes / scan reduction, and the open-loop summary)
+//! so the perf
 //! trajectory is machine-trackable PR over PR; CI checks the file is
 //! produced and well-formed.
 //!
@@ -376,6 +386,144 @@ fn main() {
          Hoeffding fail rate {coverage_fail_hoeffding:.3}"
     );
 
+    println!("\n== spill-to-disk cold tier: over-committed pool, swap-in preemption ==");
+    // The same 16-request shared-prompt workload on the contended
+    // 64-block pool, now with the file-backed cold tier attached:
+    // preemption swaps the victim's KV blocks to disk and re-admission
+    // swaps them back in, so the run must finish with zero full-replay
+    // preemptions and token streams byte-identical to the unconstrained
+    // spill-off baseline — at 1 and 4 workers, each on a fresh store so
+    // both start cold. A brand-new session opening the first store then
+    // warm-starts from the persisted prefix radix.
+    let spill_file = |tag: &str| {
+        let p = std::env::temp_dir()
+            .join(format!("vattn-bench-{}-{tag}.spill", std::process::id()));
+        let mut prefix = p.clone().into_os_string();
+        prefix.push(".prefix");
+        let _ = std::fs::remove_file(&p);
+        let _ = std::fs::remove_file(std::path::PathBuf::from(prefix));
+        p
+    };
+    let spill_a = spill_file("a");
+    let spill_b = spill_file("b");
+    let run_spill = |workers: usize, path: &std::path::Path| {
+        let cfg = EngineConfig::builder()
+            .max_batch(16)
+            .seed(1)
+            .workers(workers)
+            .block_tokens(16)
+            .prefix_cache(true)
+            .kv_capacity_bytes(quant_pool_bytes)
+            .kv_spill(path)
+            .build();
+        let mut session = Session::new(Model::new(bench_model(), 42), cfg);
+        let mut streams: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+        for p in &prefix_prompts {
+            let id = session.submit(SubmitRequest::new(p.clone()).options(GenOptions::new(24)));
+            streams.insert(id, Vec::new());
+        }
+        let t0 = Instant::now();
+        while !session.is_idle() {
+            for ev in session.tick().expect("tick") {
+                match ev {
+                    Event::Token { id, token, step, .. } => {
+                        let st = streams.get_mut(&id).expect("known id");
+                        assert_eq!(st.len(), step, "gapless streams across swap-in");
+                        st.push(token);
+                    }
+                    Event::Rejected { reason, .. } => panic!("unexpected rejection: {reason}"),
+                    _ => {}
+                }
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(
+            session.spill_live_blocks(),
+            Some(0),
+            "no orphaned cold-tier blocks after drain"
+        );
+        let stats = session.stats();
+        session.flush_prefix_cache().expect("flush");
+        assert_eq!(session.kv_blocks_in_use(), 0, "quiescence after drain+flush");
+        assert!(streams.values().all(|s| s.len() == 24), "all 16 must complete under spill");
+        (streams, stats, wall)
+    };
+    let (sp1, sp_stats, sp_wall) = run_spill(1, &spill_a);
+    let (sp4, sp_stats4, _) = run_spill(4, &spill_b);
+    assert_eq!(sp1, sp4, "spill streams diverged between 1 and 4 workers");
+    assert_eq!(sp1, unshared_streams, "the cold tier changed a token stream");
+    assert!(sp_stats.preemptions > 0, "the planted pool must contend under spill");
+    assert_eq!(
+        sp_stats.preemption_replays, 0,
+        "spill mode must never replay a preempted request"
+    );
+    assert_eq!(sp_stats4.preemption_replays, 0);
+    assert!(sp_stats.spill_out_bytes > 0, "the contended run must spill to disk");
+    assert_eq!(
+        sp_stats.swap_in_bytes, sp_stats.spill_out_bytes,
+        "every spilled byte must be swapped back in exactly once"
+    );
+    assert_eq!(sp_stats.swap_in_ops, sp_stats.spill_out_ops);
+    assert_eq!(
+        sp_stats.preemptions, sp_stats4.preemptions,
+        "spill decisions must be tick-deterministic, independent of workers"
+    );
+
+    // Process-restart persistence: a brand-new session opening the same
+    // store imports the prefix radix before any request arrives, and
+    // serves the shared prompt from it with a nonzero hit rate.
+    let warm_cfg = EngineConfig::builder()
+        .max_batch(16)
+        .seed(1)
+        .workers(1)
+        .block_tokens(16)
+        .prefix_cache(true)
+        .kv_capacity_bytes(quant_pool_bytes)
+        .kv_spill(&spill_a)
+        .build();
+    let mut warm = Session::new(Model::new(bench_model(), 42), warm_cfg);
+    let warm_held = warm.prefix_blocks_held();
+    assert!(warm_held > 0, "warm start must import the persisted prefix radix");
+    let warm_id =
+        warm.submit(SubmitRequest::new(prefix_prompts[0].clone()).options(GenOptions::new(24)));
+    let mut warm_tokens = Vec::new();
+    while !warm.is_idle() {
+        for ev in warm.tick().expect("tick") {
+            if let Event::Token { id, token, .. } = ev {
+                assert_eq!(id, warm_id);
+                warm_tokens.push(token);
+            }
+        }
+    }
+    let warm_stats = warm.stats();
+    assert!(
+        warm_stats.prefix_hit_blocks > 0,
+        "restarted session must hit the persisted prefix store"
+    );
+    assert_eq!(
+        Some(&warm_tokens),
+        sp1.get(&warm_id),
+        "warm-started stream must match the cold run"
+    );
+    let warm_hit_rate = PagingSummary::from(&warm_stats).prefix_hit_rate;
+    assert!(warm_hit_rate > 0.0);
+    println!(
+        "pool {} KiB + cold tier: {} preemptions, {} replays, {:.2} MiB out / {:.2} MiB in; \
+         restart warm-started with {warm_held} prefix blocks (hit rate {warm_hit_rate:.2})",
+        quant_pool_bytes >> 10,
+        sp_stats.preemptions,
+        sp_stats.preemption_replays,
+        sp_stats.spill_out_bytes as f64 / (1u64 << 20) as f64,
+        sp_stats.swap_in_bytes as f64 / (1u64 << 20) as f64,
+    );
+    println!("{}", PagingSummary::from(&sp_stats).render());
+    for p in [&spill_a, &spill_b] {
+        let mut prefix = p.clone().into_os_string();
+        prefix.push(".prefix");
+        let _ = std::fs::remove_file(p);
+        let _ = std::fs::remove_file(std::path::PathBuf::from(prefix));
+    }
+
     println!("\n== temporal heavy-hitter reuse: 4 requests, 64-token generation ==");
     // Long-generation vAttention serving with cross-step index reuse:
     // the per-(layer, head) heavy-hitter selection is cached and only
@@ -571,6 +719,21 @@ fn main() {
                 .field("coverage_delta", Json::num(0.15))
                 .field("coverage_fail_clt", Json::num(coverage_fail_clt))
                 .field("coverage_fail_hoeffding", Json::num(coverage_fail_hoeffding)),
+        )
+        .field(
+            "spill",
+            Json::obj()
+                .field("requests", Json::num(16.0))
+                .field("pool_bytes", Json::num(quant_pool_bytes as f64))
+                .field("preemptions", Json::num(sp_stats.preemptions as f64))
+                .field("preemption_replays", Json::num(sp_stats.preemption_replays as f64))
+                .field("spill_out_bytes", Json::num(sp_stats.spill_out_bytes as f64))
+                .field("spill_out_ops", Json::num(sp_stats.spill_out_ops as f64))
+                .field("swap_in_bytes", Json::num(sp_stats.swap_in_bytes as f64))
+                .field("swap_in_ops", Json::num(sp_stats.swap_in_ops as f64))
+                .field("warm_start_prefix_blocks", Json::num(warm_held as f64))
+                .field("warm_start_prefix_hit_rate", Json::num(warm_hit_rate))
+                .field("wall_s", Json::num(sp_wall)),
         )
         .field(
             "reuse",

@@ -30,11 +30,13 @@
 
 pub mod paged;
 pub mod prefix;
+pub mod spill;
 pub mod store;
 pub mod tiered;
 
 pub use paged::{BlockId, BlockPool, CowOutcome, PageError};
 pub use prefix::{ChainKey, PrefixCache};
+pub use spill::{SpillSlot, SpillStats, SpillStore};
 pub use store::{BlockSnapshot, BlockStore, KvDtype, SlotRows};
 pub use tiered::{TierStats, TransferModel};
 
@@ -291,6 +293,15 @@ impl KvCache {
         let lo = block * self.block_tokens;
         let hi = lo + self.block_tokens;
         assert!(hi <= self.tokens(), "snapshot of an unfilled block {block}");
+        self.store.snapshot_rows(lo, hi)
+    }
+
+    /// Snapshot an arbitrary cached row range `[lo, hi)` across every
+    /// slot — like [`KvCache::snapshot_block`] but without the
+    /// full-block restriction, so a preemption swap-out can capture a
+    /// partially filled tail block too.
+    pub fn snapshot_rows(&self, lo: usize, hi: usize) -> BlockSnapshot {
+        assert!(lo <= hi && hi <= self.tokens(), "snapshot range out of bounds");
         self.store.snapshot_rows(lo, hi)
     }
 

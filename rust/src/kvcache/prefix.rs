@@ -26,7 +26,7 @@
 //! prefixes — with 64-bit keys this is vanishingly unlikely at testbed
 //! scale and is accepted by design.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use super::paged::{BlockId, BlockPool, PageError};
 use super::store::{BlockSnapshot, KvDtype};
@@ -205,10 +205,82 @@ impl PrefixCache {
                 );
                 inserted += 1;
                 self.inserted_blocks += 1;
+            } else {
+                // A re-donated chain is in active use: refresh its LRU
+                // stamp. Without this, a block every request re-offers
+                // still ages as "cold" and gets evicted ahead of
+                // genuinely idle chains.
+                self.clock += 1;
+                let stamp = self.clock;
+                self.entries.get_mut(&key).expect("key presence just checked").last_used = stamp;
             }
             parent = Some(key);
         }
         Ok(inserted)
+    }
+
+    /// Export every entry for persistence: `(key, parent, snapshot)`
+    /// triples ordered parents-before-children, so an import replaying
+    /// them in order can re-link child counts in one pass. Within each
+    /// depth level the keys are sorted, making the serialized radix
+    /// byte-deterministic across runs.
+    pub fn export_chains(&self) -> Vec<(ChainKey, Option<ChainKey>, &BlockSnapshot)> {
+        let mut out = Vec::with_capacity(self.entries.len());
+        let mut emitted: HashSet<ChainKey> = HashSet::with_capacity(self.entries.len());
+        while emitted.len() < self.entries.len() {
+            let mut ready: Vec<ChainKey> = self
+                .entries
+                .iter()
+                .filter(|(k, e)| {
+                    !emitted.contains(*k)
+                        && e.parent
+                            .map_or(true, |p| emitted.contains(&p) || !self.entries.contains_key(&p))
+                })
+                .map(|(k, _)| *k)
+                .collect();
+            if ready.is_empty() {
+                break; // unreachable: the radix is acyclic by construction
+            }
+            ready.sort_unstable();
+            for k in ready {
+                let e = &self.entries[&k];
+                out.push((k, e.parent, &e.snap));
+                emitted.insert(k);
+            }
+        }
+        out
+    }
+
+    /// Re-create one persisted entry (warm start from a spill store's
+    /// prefix file). The imported block takes a fresh pool lease — its
+    /// rows live in the snapshot until a fork copies them in, exactly
+    /// like a donor-inserted entry after the donor retired. Entries must
+    /// arrive parents-before-children (as exported). Returns `false`
+    /// when the pool has no free block — the caller stops importing and
+    /// serves with a partial radix.
+    pub fn import_entry(
+        &mut self,
+        key: ChainKey,
+        parent: Option<ChainKey>,
+        snap: BlockSnapshot,
+        pool: &mut BlockPool,
+    ) -> bool {
+        if self.entries.contains_key(&key) {
+            return true;
+        }
+        let Some(lease) = pool.try_alloc(1) else { return false };
+        self.clock += 1;
+        if let Some(p) = parent {
+            if let Some(pe) = self.entries.get_mut(&p) {
+                pe.children += 1;
+            }
+        }
+        self.entries.insert(
+            key,
+            Entry { id: lease[0], parent, children: 0, last_used: self.clock, snap },
+        );
+        self.inserted_blocks += 1;
+        true
     }
 
     /// Evict the least-recently-used *reclaimable* entry: a leaf whose
@@ -472,6 +544,105 @@ mod tests {
         assert_eq!(px.flush(&mut pool).unwrap(), 3); // 12 tokens = 3 full blocks
         assert!(pool.is_quiescent());
         assert_eq!(px.blocks_held(), 0);
+    }
+
+    #[test]
+    fn re_donated_chain_refreshes_lru_stamps() {
+        let cfg = ModelConfig::tiny();
+        let mut pool = BlockPool::for_model(&cfg, BT, None);
+        let mut px = PrefixCache::new(BT);
+        let p = prompt(9); // 2 full blocks
+        let mut q = prompt(9);
+        q[0] = 999; // a distinct chain
+        let mut a = filled_cache(&cfg, &mut pool, 9, 0.0);
+        px.insert_chain(&p, &a, &mut pool).unwrap();
+        let mut b = filled_cache(&cfg, &mut pool, 9, 50.0);
+        px.insert_chain(&q, &b, &mut pool).unwrap();
+        // Re-donating p's chain inserts nothing but must refresh its LRU
+        // stamps — it is the chain in active use.
+        let mut c = filled_cache(&cfg, &mut pool, 9, 0.0);
+        assert_eq!(px.insert_chain(&p, &c, &mut pool).unwrap(), 0);
+        for donor in [&mut a, &mut b, &mut c] {
+            pool.free(donor.release_blocks()).unwrap();
+        }
+        assert!(px.evict_one(&mut pool).unwrap());
+        // The victim must come from the idle chain q, not the re-donated
+        // p (whose leaf used to look "cold" and got evicted first).
+        assert_eq!(px.lookup(&p, KvDtype::F32).len(), 2, "re-donated chain survives");
+        assert_eq!(px.lookup(&q, KvDtype::F32).len(), 1, "idle chain lost its leaf");
+    }
+
+    #[test]
+    fn export_orders_parents_first_and_import_rebuilds_the_radix() {
+        let cfg = ModelConfig::tiny();
+        let mut pool = BlockPool::for_model(&cfg, BT, None);
+        let mut px = PrefixCache::new(BT);
+        let p = prompt(13); // 3 full blocks, one chain
+        let mut donor = filled_cache(&cfg, &mut pool, 13, 0.0);
+        px.insert_chain(&p, &donor, &mut pool).unwrap();
+        let exported: Vec<(ChainKey, Option<ChainKey>)> =
+            px.export_chains().iter().map(|(k, par, _)| (*k, *par)).collect();
+        assert_eq!(exported.len(), 3);
+        for (i, (_, par)) in exported.iter().enumerate() {
+            if let Some(par) = par {
+                assert!(
+                    exported[..i].iter().any(|(k, _)| k == par),
+                    "parents must precede children"
+                );
+            }
+        }
+        // Warm-start a fresh cache + pool from the exported triples (a
+        // single chain exports depth-by-depth, so entry i is block i;
+        // the spill store round-trips snapshots byte-exactly, here we
+        // take them straight from the donor).
+        let mut pool2 = BlockPool::for_model(&cfg, BT, None);
+        let mut px2 = PrefixCache::new(BT);
+        for (i, (k, par)) in exported.iter().enumerate() {
+            assert!(px2.import_entry(*k, *par, donor.snapshot_block(i), &mut pool2));
+        }
+        assert_eq!(px2.blocks_held(), 3);
+        assert_eq!(px2.inserted_blocks(), 3);
+        let keys = px2.lookup(&p, KvDtype::F32);
+        assert_eq!(keys.len(), 3, "imported radix serves the original prompt");
+        let ids = px2.blocks(&keys);
+        for &id in &ids {
+            pool2.retain(id).unwrap();
+        }
+        let tail = pool2.try_alloc(1).unwrap();
+        let mut table = ids;
+        table.extend(tail);
+        let mut fork = KvCache::paged(&cfg, BT, table);
+        px2.copy_into(&keys, &mut fork);
+        assert_eq!(fork.tokens(), 12);
+        for l in 0..cfg.n_layers {
+            for h in 0..cfg.n_kv_heads {
+                let (dk, dv) = donor.head(l, h);
+                let (fk, fv) = fork.head(l, h);
+                assert_eq!(&dk.data[..12 * cfg.d_head()], &fk.data[..]);
+                assert_eq!(&dv.data[..12 * cfg.d_head()], &fv.data[..]);
+            }
+        }
+        // Importing an already-present key is a no-op hit, not a leak.
+        assert!(px2.import_entry(exported[0].0, exported[0].1, donor.snapshot_block(0), &mut pool2));
+        assert_eq!(px2.blocks_held(), 3);
+        pool.free(donor.release_blocks()).unwrap();
+    }
+
+    #[test]
+    fn import_stops_when_the_pool_is_full() {
+        let cfg = ModelConfig::tiny();
+        let mut big = BlockPool::for_model(&cfg, BT, None);
+        let donor = filled_cache(&cfg, &mut big, 9, 0.0);
+        let p = prompt(9);
+        let k1 = chain_key(KvDtype::F32, None, &p[..BT]);
+        let k2 = chain_key(KvDtype::F32, Some(k1), &p[BT..2 * BT]);
+        // A pool with exactly one block: the first import lands, the
+        // second reports exhaustion so the caller stops gracefully.
+        let mut tiny = BlockPool::for_model(&cfg, BT, Some(BT * cfg.kv_bytes_per_token()));
+        let mut px = PrefixCache::new(BT);
+        assert!(px.import_entry(k1, None, donor.snapshot_block(0), &mut tiny));
+        assert!(!px.import_entry(k2, Some(k1), donor.snapshot_block(1), &mut tiny));
+        assert_eq!(px.blocks_held(), 1);
     }
 
     #[test]

@@ -1,0 +1,568 @@
+//! [`SpillStore`]: the file-backed cold tier behind `--kv-spill`.
+//!
+//! A byte-addressed, block-granular region file that [`BlockSnapshot`]s
+//! spill to and swap back from. The session uses it to turn preemption
+//! into swap-out/swap-in: the LIFO victim's blocks — physical payload
+//! bytes, quantized blocks byte-for-byte — move to disk, and its
+//! re-admission gates on reading them back instead of replaying prefill
+//! from scratch. Because the snapshot round-trip is byte-exact (the same
+//! guarantee prefix forks rely on, see [`crate::kvcache::store`]), a
+//! swapped-in request's dequantized mirror is bit-identical to what it
+//! held before preemption, so token streams stay byte-identical with
+//! spill forced on vs off.
+//!
+//! Layout: the region file is divided into fixed-size slots of
+//! `HEADER_BYTES + slots · 2 · block_tokens · 4 · d` bytes — the worst
+//! case (f32) payload of one block, so mixed-dtype sessions share one
+//! geometry (an int8 block's `d + 4` bytes/row always fits inside the
+//! f32 slot for `d ≥ 2`). Each record is a 9-byte header (dtype tag,
+//! token count, slot count) followed by the per-(layer, kv-head)-slot
+//! payload in physical layout: f32 rows verbatim, int8 as codes then
+//! scales, K before V. Records are written with `write_all_at` and read
+//! with `read_exact_at` ([`std::os::unix::fs::FileExt`]) — no mmap, no
+//! seeks shared between blocks, so the store needs no interior locking
+//! beyond the session's serial tick phases.
+//!
+//! Slot ids are recycled LIFO through a free list, and a `live` bitmap
+//! catches double-free / use-after-free at the API boundary. Traffic is
+//! charged to [`SpillStats`] in **physical payload bytes** (what a real
+//! NVMe tier would move), mirroring how [`crate::kvcache::TierStats`]
+//! charges the host tier.
+//!
+//! The same store also persists the [`crate::kvcache::PrefixCache`]
+//! radix: [`SpillStore::persist_prefix`] serializes the chain (keys,
+//! parent links, dtype tags, snapshots) into a sibling `<path>.prefix`
+//! file, and [`SpillStore::load_prefix`] lets a fresh `Session`
+//! warm-start from it — the prefix cache survives process restarts.
+//! The prefix file is intentionally *not* truncated by
+//! [`SpillStore::open`]; only the block region is scratch space.
+
+use std::fs::File;
+use std::io;
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+
+use super::prefix::ChainKey;
+use super::store::{BlockSnapshot, KvDtype, SlotRows};
+
+/// Record header: dtype tag (u8) + tokens (u32 LE) + slot count (u32 LE).
+const HEADER_BYTES: usize = 9;
+/// Dtype tags, matching the prefix radix's chain-key tag bytes.
+const TAG_F32: u8 = 0xF3;
+const TAG_INT8: u8 = 0x18;
+/// Prefix-file framing: magic, format version.
+const PREFIX_MAGIC: u32 = 0x7650_7266; // "vPrf"
+const PREFIX_VERSION: u32 = 1;
+
+/// Handle to one spilled block in the region file. Obtained from
+/// [`SpillStore::write_block`]; redeemed by [`SpillStore::read_block`]
+/// or released by [`SpillStore::free`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpillSlot(u32);
+
+/// Cold-tier traffic counters, charged in physical payload bytes.
+#[derive(Clone, Debug, Default)]
+pub struct SpillStats {
+    /// Payload bytes written to the cold tier (swap-out).
+    pub spill_out_bytes: usize,
+    /// Block-write operations.
+    pub spill_out_ops: usize,
+    /// Payload bytes read back from the cold tier (swap-in).
+    pub swap_in_bytes: usize,
+    /// Block-read operations.
+    pub swap_in_ops: usize,
+}
+
+/// The file-backed cold tier. See the module docs for the layout.
+pub struct SpillStore {
+    file: File,
+    prefix_path: PathBuf,
+    block_tokens: usize,
+    /// (layer, kv-head) slots per block — the `BlockStore` slot count.
+    slots: usize,
+    d: usize,
+    /// Fixed region-file stride per block (header + worst-case payload).
+    slot_bytes: usize,
+    /// Recycled slot ids, LIFO.
+    free: Vec<u32>,
+    /// Liveness per allocated slot id (double-free / stale-read guard).
+    live: Vec<bool>,
+    live_count: usize,
+    stats: SpillStats,
+}
+
+fn bad(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+/// Physical payload bytes of one record at `dtype` (excludes the header).
+fn payload_len(dtype: KvDtype, tokens: usize, slots: usize, d: usize) -> usize {
+    slots * 2 * tokens * dtype.row_bytes(d)
+}
+
+fn encode_header(snap: &BlockSnapshot, buf: &mut Vec<u8>) {
+    buf.push(match snap.dtype {
+        KvDtype::F32 => TAG_F32,
+        KvDtype::Int8 => TAG_INT8,
+    });
+    buf.extend_from_slice(&(snap.tokens as u32).to_le_bytes());
+    buf.extend_from_slice(&(snap.slots.len() as u32).to_le_bytes());
+}
+
+fn encode_payload(snap: &BlockSnapshot, buf: &mut Vec<u8>) {
+    let f32s = |xs: &[f32], buf: &mut Vec<u8>| {
+        for &x in xs {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    };
+    let i8s = |xs: &[i8], buf: &mut Vec<u8>| buf.extend(xs.iter().map(|&c| c as u8));
+    for rows in &snap.slots {
+        match rows {
+            SlotRows::F32 { k, v } => {
+                f32s(k, buf);
+                f32s(v, buf);
+            }
+            SlotRows::Int8 { k, k_scales, v, v_scales } => {
+                i8s(k, buf);
+                f32s(k_scales, buf);
+                i8s(v, buf);
+                f32s(v_scales, buf);
+            }
+        }
+    }
+}
+
+/// Little-endian cursor over a byte slice; every read is bounds-checked
+/// so a truncated or corrupt record surfaces as `InvalidData`, never a
+/// panic.
+struct Rd<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Rd<'a> {
+        Rd { b, p: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        let end = self.p.checked_add(n).filter(|&e| e <= self.b.len());
+        let Some(end) = end else { return Err(bad("truncated spill record")) };
+        let s = &self.b[self.p..end];
+        self.p = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize) -> io::Result<Vec<f32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn i8s(&mut self, n: usize) -> io::Result<Vec<i8>> {
+        Ok(self.take(n)?.iter().map(|&b| b as i8).collect())
+    }
+
+    fn done(&self) -> bool {
+        self.p == self.b.len()
+    }
+}
+
+fn decode_dtype(tag: u8) -> io::Result<KvDtype> {
+    match tag {
+        TAG_F32 => Ok(KvDtype::F32),
+        TAG_INT8 => Ok(KvDtype::Int8),
+        t => Err(bad(format!("unknown KV dtype tag 0x{t:02x} in spill record"))),
+    }
+}
+
+fn decode_payload(
+    rd: &mut Rd<'_>,
+    dtype: KvDtype,
+    tokens: usize,
+    slots: usize,
+    d: usize,
+) -> io::Result<BlockSnapshot> {
+    let mut out = Vec::with_capacity(slots);
+    for _ in 0..slots {
+        out.push(match dtype {
+            KvDtype::F32 => {
+                SlotRows::F32 { k: rd.f32s(tokens * d)?, v: rd.f32s(tokens * d)? }
+            }
+            KvDtype::Int8 => SlotRows::Int8 {
+                k: rd.i8s(tokens * d)?,
+                k_scales: rd.f32s(tokens)?,
+                v: rd.i8s(tokens * d)?,
+                v_scales: rd.f32s(tokens)?,
+            },
+        });
+    }
+    Ok(BlockSnapshot { dtype, tokens, slots: out })
+}
+
+impl SpillStore {
+    /// Open (create/truncate) the block region file at `path` for the
+    /// given cache geometry. The sibling `<path>.prefix` file — the
+    /// persistent prefix radix — is left untouched so it can survive
+    /// across store openings (that is the whole point of persisting it).
+    pub fn open(
+        path: &Path,
+        block_tokens: usize,
+        slots: usize,
+        d: usize,
+    ) -> io::Result<SpillStore> {
+        assert!(block_tokens > 0 && slots > 0 && d > 0, "degenerate spill geometry");
+        let file = File::options()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        let mut os = path.as_os_str().to_os_string();
+        os.push(".prefix");
+        Ok(SpillStore {
+            file,
+            prefix_path: PathBuf::from(os),
+            block_tokens,
+            slots,
+            d,
+            // Worst-case (f32) payload: int8's d + 4 B/row fits for d ≥ 2.
+            slot_bytes: HEADER_BYTES + payload_len(KvDtype::F32, block_tokens, slots, d),
+            free: Vec::new(),
+            live: Vec::new(),
+            live_count: 0,
+            stats: SpillStats::default(),
+        })
+    }
+
+    /// Spill one block snapshot to disk, returning its slot handle.
+    /// Charges [`SpillStats::spill_out_bytes`] with the snapshot's
+    /// physical payload bytes.
+    pub fn write_block(&mut self, snap: &BlockSnapshot) -> io::Result<SpillSlot> {
+        assert_eq!(snap.slots.len(), self.slots, "slot-count mismatch on spill");
+        assert!(snap.tokens <= self.block_tokens, "oversized block on spill");
+        let mut buf = Vec::with_capacity(HEADER_BYTES + snap.payload_bytes());
+        encode_header(snap, &mut buf);
+        encode_payload(snap, &mut buf);
+        let id = match self.free.pop() {
+            Some(id) => id,
+            None => {
+                self.live.push(false);
+                (self.live.len() - 1) as u32
+            }
+        };
+        self.file.write_all_at(&buf, id as u64 * self.slot_bytes as u64)?;
+        self.live[id as usize] = true;
+        self.live_count += 1;
+        self.stats.spill_out_bytes += snap.payload_bytes();
+        self.stats.spill_out_ops += 1;
+        Ok(SpillSlot(id))
+    }
+
+    /// Swap one block back in, byte-for-byte. The slot stays live (and
+    /// re-readable) until [`SpillStore::free`] releases it, so a failed
+    /// re-admission can retry. Charges [`SpillStats::swap_in_bytes`].
+    pub fn read_block(&mut self, slot: SpillSlot) -> io::Result<BlockSnapshot> {
+        let id = slot.0 as usize;
+        assert!(self.live.get(id).copied().unwrap_or(false), "read of a dead spill slot");
+        let base = slot.0 as u64 * self.slot_bytes as u64;
+        let mut header = [0u8; HEADER_BYTES];
+        self.file.read_exact_at(&mut header, base)?;
+        let mut rd = Rd::new(&header);
+        let dtype = decode_dtype(rd.u8()?)?;
+        let tokens = rd.u32()? as usize;
+        let slots = rd.u32()? as usize;
+        if slots != self.slots || tokens > self.block_tokens {
+            return Err(bad(format!(
+                "spill record geometry mismatch: {slots} slots x {tokens} tokens \
+                 vs store {} x {}",
+                self.slots, self.block_tokens
+            )));
+        }
+        let mut payload = vec![0u8; payload_len(dtype, tokens, slots, self.d)];
+        self.file.read_exact_at(&mut payload, base + HEADER_BYTES as u64)?;
+        let mut rd = Rd::new(&payload);
+        let snap = decode_payload(&mut rd, dtype, tokens, slots, self.d)?;
+        debug_assert!(rd.done());
+        self.stats.swap_in_bytes += snap.payload_bytes();
+        self.stats.swap_in_ops += 1;
+        Ok(snap)
+    }
+
+    /// Release a slot back to the free list. Panics on double-free.
+    pub fn free(&mut self, slot: SpillSlot) {
+        let id = slot.0 as usize;
+        assert!(self.live.get(id).copied().unwrap_or(false), "double free of a spill slot");
+        self.live[id] = false;
+        self.live_count -= 1;
+        self.free.push(slot.0);
+    }
+
+    /// Blocks currently resident in the cold tier. Zero after every
+    /// suspended request has been resumed or cancelled — the leak check
+    /// mirrored by the pool's quiescence invariant.
+    pub fn live_blocks(&self) -> usize {
+        self.live_count
+    }
+
+    pub fn stats(&self) -> &SpillStats {
+        &self.stats
+    }
+
+    /// Serialize the prefix radix (chain keys, parent links, snapshots)
+    /// into the sibling `<path>.prefix` file, atomically replacing any
+    /// previous contents. `entries` must list parents before children
+    /// (see `PrefixCache::export_chains`) so [`SpillStore::load_prefix`]
+    /// can re-link in one pass.
+    pub fn persist_prefix(
+        &self,
+        entries: &[(ChainKey, Option<ChainKey>, &BlockSnapshot)],
+    ) -> io::Result<()> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&PREFIX_MAGIC.to_le_bytes());
+        buf.extend_from_slice(&PREFIX_VERSION.to_le_bytes());
+        buf.extend_from_slice(&(self.block_tokens as u32).to_le_bytes());
+        buf.extend_from_slice(&(self.slots as u32).to_le_bytes());
+        buf.extend_from_slice(&(self.d as u32).to_le_bytes());
+        buf.extend_from_slice(&(entries.len() as u64).to_le_bytes());
+        for (key, parent, snap) in entries {
+            buf.extend_from_slice(&key.to_le_bytes());
+            match parent {
+                None => {
+                    buf.push(0);
+                    buf.extend_from_slice(&0u64.to_le_bytes());
+                }
+                Some(p) => {
+                    buf.push(1);
+                    buf.extend_from_slice(&p.to_le_bytes());
+                }
+            }
+            encode_header(snap, &mut buf);
+            encode_payload(snap, &mut buf);
+        }
+        std::fs::write(&self.prefix_path, buf)
+    }
+
+    /// Load a previously persisted prefix radix, if one exists for this
+    /// exact cache geometry. Returns `Ok(None)` when the file is absent
+    /// or was written for a different geometry (a different model /
+    /// block size — warm-starting from it would be wrong, not just
+    /// useless); corrupt framing is an error.
+    pub fn load_prefix(
+        &self,
+    ) -> io::Result<Option<Vec<(ChainKey, Option<ChainKey>, BlockSnapshot)>>> {
+        let bytes = match std::fs::read(&self.prefix_path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e),
+        };
+        let mut rd = Rd::new(&bytes);
+        if rd.u32()? != PREFIX_MAGIC || rd.u32()? != PREFIX_VERSION {
+            return Ok(None);
+        }
+        let (bt, slots, d) = (rd.u32()? as usize, rd.u32()? as usize, rd.u32()? as usize);
+        if bt != self.block_tokens || slots != self.slots || d != self.d {
+            return Ok(None);
+        }
+        let n = rd.u64()? as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let key = rd.u64()?;
+            let has_parent = rd.u8()?;
+            let parent_raw = rd.u64()?;
+            let parent = match has_parent {
+                0 => None,
+                1 => Some(parent_raw),
+                t => return Err(bad(format!("bad parent tag {t} in prefix file"))),
+            };
+            let dtype = decode_dtype(rd.u8()?)?;
+            let tokens = rd.u32()? as usize;
+            let rec_slots = rd.u32()? as usize;
+            if rec_slots != slots || tokens > bt {
+                return Err(bad("prefix entry geometry mismatch"));
+            }
+            let snap = decode_payload(&mut rd, dtype, tokens, slots, d)?;
+            out.push((key, parent, snap));
+        }
+        if !rd.done() {
+            return Err(bad("trailing bytes in prefix file"));
+        }
+        Ok(Some(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::store::BlockStore;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("vattn_spill_{}_{name}", std::process::id()))
+    }
+
+    /// Deterministic filled store: row r of slot s is a ramp keyed by
+    /// (s, r, column), distinct across all of them.
+    fn filled(slots: usize, d: usize, rows: usize, dtype: KvDtype) -> BlockStore {
+        let mut st = BlockStore::new(slots, d, dtype);
+        for r in 0..rows {
+            for s in 0..slots {
+                let kr: Vec<f32> =
+                    (0..d).map(|c| (s * 1000 + r * 10 + c) as f32 * 0.01 - 1.5).collect();
+                let vr: Vec<f32> = (0..d).map(|c| (s * 777 + r * 31 + c) as f32 * -0.02).collect();
+                st.append_row(s, &kr, &vr);
+            }
+        }
+        st
+    }
+
+    fn assert_snap_eq(a: &BlockSnapshot, b: &BlockSnapshot) {
+        assert_eq!(a.dtype, b.dtype);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.slots.len(), b.slots.len());
+        for (x, y) in a.slots.iter().zip(&b.slots) {
+            match (x, y) {
+                (SlotRows::F32 { k: ka, v: va }, SlotRows::F32 { k: kb, v: vb }) => {
+                    // Bitwise, not approximate: the tier must be exact.
+                    let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                    assert_eq!(bits(ka), bits(kb));
+                    assert_eq!(bits(va), bits(vb));
+                }
+                (
+                    SlotRows::Int8 { k: ka, k_scales: ksa, v: va, v_scales: vsa },
+                    SlotRows::Int8 { k: kb, k_scales: ksb, v: vb, v_scales: vsb },
+                ) => {
+                    assert_eq!(ka, kb);
+                    assert_eq!(va, vb);
+                    let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                    assert_eq!(bits(ksa), bits(ksb));
+                    assert_eq!(bits(vsa), bits(vsb));
+                }
+                _ => panic!("slot layout mismatch"),
+            }
+        }
+    }
+
+    #[test]
+    fn f32_block_round_trips_byte_exact() {
+        let path = tmp("f32_rt");
+        let (slots, d, bt) = (4, 8, 16);
+        let mut store = SpillStore::open(&path, bt, slots, d).unwrap();
+        let src = filled(slots, d, bt, KvDtype::F32);
+        let snap = src.snapshot_rows(0, bt);
+        let slot = store.write_block(&snap).unwrap();
+        let back = store.read_block(slot).unwrap();
+        assert_snap_eq(&snap, &back);
+        assert_eq!(store.stats().spill_out_bytes, snap.payload_bytes());
+        assert_eq!(store.stats().swap_in_bytes, snap.payload_bytes());
+        assert_eq!(store.stats().spill_out_ops, 1);
+        assert_eq!(store.stats().swap_in_ops, 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn int8_block_round_trips_byte_exact_including_partial_tail() {
+        let path = tmp("int8_rt");
+        let (slots, d, bt) = (2, 16, 8);
+        let mut store = SpillStore::open(&path, bt, slots, d).unwrap();
+        let src = filled(slots, d, 5, KvDtype::Int8); // partial block: 5 < 8
+        let snap = src.snapshot_rows(0, 5);
+        assert_eq!(snap.payload_bytes(), slots * 2 * 5 * (d + 4));
+        let slot = store.write_block(&snap).unwrap();
+        let back = store.read_block(slot).unwrap();
+        assert_snap_eq(&snap, &back);
+        // Loading the round-tripped snapshot reproduces the donor's
+        // dequantized mirror bit-for-bit.
+        let mut dst = BlockStore::new(slots, d, KvDtype::Int8);
+        dst.load_rows(&back);
+        for s in 0..slots {
+            for r in 0..5 {
+                assert_eq!(dst.k(s).row(r), src.k(s).row(r));
+                assert_eq!(dst.v(s).row(r), src.v(s).row(r));
+            }
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn slots_recycle_lifo_and_track_liveness() {
+        let path = tmp("recycle");
+        let (slots, d, bt) = (1, 4, 4);
+        let mut store = SpillStore::open(&path, bt, slots, d).unwrap();
+        let src = filled(slots, d, bt, KvDtype::F32);
+        let snap = src.snapshot_rows(0, bt);
+        let a = store.write_block(&snap).unwrap();
+        let b = store.write_block(&snap).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(store.live_blocks(), 2);
+        store.free(a);
+        assert_eq!(store.live_blocks(), 1);
+        let c = store.write_block(&snap).unwrap();
+        assert_eq!(c, a, "freed slot is recycled");
+        assert_eq!(store.live_blocks(), 2);
+        store.free(b);
+        store.free(c);
+        assert_eq!(store.live_blocks(), 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_is_caught() {
+        let path = tmp("dfree");
+        let mut store = SpillStore::open(&path, 4, 1, 4).unwrap();
+        let src = filled(1, 4, 4, KvDtype::F32);
+        let slot = store.write_block(&src.snapshot_rows(0, 4)).unwrap();
+        store.free(slot);
+        store.free(slot);
+    }
+
+    #[test]
+    fn prefix_radix_persists_across_store_openings() {
+        let path = tmp("prefix_rt");
+        let prefix_path = {
+            let mut os = path.as_os_str().to_os_string();
+            os.push(".prefix");
+            PathBuf::from(os)
+        };
+        let _ = std::fs::remove_file(&prefix_path);
+        let (slots, d, bt) = (2, 4, 4);
+        let store = SpillStore::open(&path, bt, slots, d).unwrap();
+        assert!(store.load_prefix().unwrap().is_none(), "no file yet");
+        let a = filled(slots, d, bt, KvDtype::F32);
+        let b = filled(slots, d, bt, KvDtype::Int8);
+        let (sa, sb) = (a.snapshot_rows(0, bt), b.snapshot_rows(0, bt));
+        store.persist_prefix(&[(11, None, &sa), (22, Some(11), &sb)]).unwrap();
+        drop(store);
+        // A fresh opening truncates the block region but keeps the
+        // persisted radix readable.
+        let store2 = SpillStore::open(&path, bt, slots, d).unwrap();
+        let loaded = store2.load_prefix().unwrap().expect("radix survives reopen");
+        assert_eq!(loaded.len(), 2);
+        assert_eq!((loaded[0].0, loaded[0].1), (11, None));
+        assert_eq!((loaded[1].0, loaded[1].1), (22, Some(11)));
+        assert_snap_eq(&loaded[0].2, &sa);
+        assert_snap_eq(&loaded[1].2, &sb);
+        // A store with different geometry refuses the file (None, not
+        // a mis-shaped warm start).
+        let other = tmp("prefix_rt_other_geom");
+        let store3 = SpillStore::open(&other, bt, slots, d + 1).unwrap();
+        let mut os = other.as_os_str().to_os_string();
+        os.push(".prefix");
+        std::fs::copy(&prefix_path, PathBuf::from(os.clone())).unwrap();
+        assert!(store3.load_prefix().unwrap().is_none(), "geometry mismatch rejected");
+        for p in [&path, &prefix_path, &other, &PathBuf::from(os)] {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}

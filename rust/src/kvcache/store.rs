@@ -104,6 +104,25 @@ pub struct BlockSnapshot {
     pub slots: Vec<SlotRows>,
 }
 
+impl BlockSnapshot {
+    /// Physical payload bytes the snapshot carries — what a copy-in
+    /// memcpy or a cold-tier transfer actually moves. Matches
+    /// [`BlockStore::payload_bytes`] accounting: f32 rows at 4 bytes per
+    /// element, int8 as one code byte per element plus a 4-byte f32
+    /// scale per row.
+    pub fn payload_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .map(|s| match s {
+                SlotRows::F32 { k, v } => (k.len() + v.len()) * 4,
+                SlotRows::Int8 { k, k_scales, v, v_scales } => {
+                    k.len() + v.len() + (k_scales.len() + v_scales.len()) * 4
+                }
+            })
+            .sum()
+    }
+}
+
 /// Per-slot K/V storage in one dtype. Slots advance together only by
 /// convention (the cache appends one row to every slot per token); the
 /// store itself is per-slot append-only.

@@ -8,28 +8,44 @@
 //!   a write per append, in **physical** bytes — a quantized (int8)
 //!   cache charges `d + 4` bytes per row, not the `4·d` of its
 //!   dequantized working view, so `kv MiB read/written` reflect what
-//!   actually crosses the host tier. The serving path surfaces both —
-//!   `RequestResult::kv_bytes_read` / `kv_bytes_written` per request,
-//!   summed into `metrics::ServeSummary` and printed by `vattn serve`
-//!   (the per-request counters reset when prefill completes, so they
-//!   report decode traffic only).
-//! * [`TransferModel`] is **extrapolation-only**: no live code path
-//!   sleeps on it. `sim::` and the Fig. 5 speedup experiment convert
-//!   measured byte counts into projected transfer seconds for
-//!   8B-scale shapes over a PCIe-class host→device link. Treat its
-//!   defaults as the paper's deployment assumption, not a measurement.
+//!   actually crosses the host tier. The counters are **phase-split**:
+//!   when prefill completes, the session calls [`TierStats::end_prefill_phase`]
+//!   to bank the traffic so far (prompt appends *and* prefix-fork
+//!   copy-ins) into the `prefill_*` fields, so nothing is dropped —
+//!   `RequestResult::kv_bytes_read` / `kv_bytes_written` keep their
+//!   decode-only meaning while `kv_prefill_bytes_*` carry the prefill
+//!   side; `metrics::ServeSummary` sums and prints both.
+//! * The tier itself is **real** when the engine runs with a spill
+//!   store (`--kv-spill PATH`): [`crate::kvcache::SpillStore`] is a
+//!   file-backed cold tier that preempted blocks swap out to and back
+//!   in from, byte-for-byte. [`TransferModel`] remains a *model* — no
+//!   live code path sleeps on it; `sim::` and the Fig. 5 speedup
+//!   experiment convert measured byte counts into projected transfer
+//!   seconds for 8B-scale shapes over a PCIe-class host→device link.
+//!   Treat its defaults as the paper's deployment assumption, not a
+//!   measurement.
 
-/// Byte-traffic counters for the host (CPU RAM) tier.
+/// Byte-traffic counters for the host (CPU RAM) tier, split into a
+/// banked prefill phase and the live (decode) phase.
 #[derive(Clone, Debug, Default)]
 pub struct TierStats {
-    /// Bytes gathered/read from the host-resident cache.
+    /// Bytes gathered/read from the host-resident cache (current phase).
     pub bytes_read: usize,
-    /// Number of gather operations.
+    /// Number of gather operations (current phase).
     pub reads: usize,
-    /// Bytes appended into the host-resident cache.
+    /// Bytes appended into the host-resident cache (current phase).
     pub bytes_written: usize,
-    /// Number of append operations.
+    /// Number of append operations (current phase).
     pub writes: usize,
+    /// Bytes read during the prefill phase (banked at prefill end).
+    pub prefill_bytes_read: usize,
+    /// Read ops during the prefill phase.
+    pub prefill_reads: usize,
+    /// Bytes written during the prefill phase — prompt appends plus
+    /// prefix-fork snapshot copy-ins, which a plain reset used to drop.
+    pub prefill_bytes_written: usize,
+    /// Write ops during the prefill phase.
+    pub prefill_writes: usize,
 }
 
 impl TierStats {
@@ -41,6 +57,31 @@ impl TierStats {
     pub fn record_write(&mut self, bytes: usize) {
         self.bytes_written += bytes;
         self.writes += 1;
+    }
+
+    /// Bank everything recorded so far as prefill traffic and zero the
+    /// live counters, which from here on accumulate decode traffic.
+    /// Called by the session exactly when a request finishes prefill;
+    /// idempotent in effect across preemption replays because the live
+    /// counters restart from zero each time (banked totals accumulate).
+    pub fn end_prefill_phase(&mut self) {
+        self.prefill_bytes_read += self.bytes_read;
+        self.prefill_reads += self.reads;
+        self.prefill_bytes_written += self.bytes_written;
+        self.prefill_writes += self.writes;
+        self.bytes_read = 0;
+        self.reads = 0;
+        self.bytes_written = 0;
+        self.writes = 0;
+    }
+
+    /// Total traffic across both phases.
+    pub fn total_bytes_read(&self) -> usize {
+        self.prefill_bytes_read + self.bytes_read
+    }
+
+    pub fn total_bytes_written(&self) -> usize {
+        self.prefill_bytes_written + self.bytes_written
     }
 
     pub fn reset(&mut self) {
@@ -88,6 +129,27 @@ mod tests {
         s.reset();
         assert_eq!(s.bytes_read, 0);
         assert_eq!(s.bytes_written, 0);
+    }
+
+    #[test]
+    fn prefill_phase_banks_instead_of_dropping() {
+        let mut s = TierStats::default();
+        s.record_write(100); // prompt append
+        s.record_read(40); // prefix-fork copy-in accounting
+        s.end_prefill_phase();
+        assert_eq!(s.prefill_bytes_written, 100);
+        assert_eq!(s.prefill_writes, 1);
+        assert_eq!(s.prefill_bytes_read, 40);
+        assert_eq!(s.prefill_reads, 1);
+        assert_eq!(s.bytes_written, 0, "live counters restart for decode");
+        s.record_write(7);
+        s.record_read(3);
+        assert_eq!(s.total_bytes_written(), 107);
+        assert_eq!(s.total_bytes_read(), 43);
+        // A replayed prefill banks again; nothing is lost.
+        s.end_prefill_phase();
+        assert_eq!(s.prefill_bytes_written, 107);
+        assert_eq!(s.prefill_bytes_read, 43);
     }
 
     #[test]

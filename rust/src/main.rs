@@ -8,6 +8,7 @@
 //!         [--block-tokens T] [--kv-cap-mb M] [--kv-headroom H]
 //!         [--prefix-cache] [--open-loop] [--rate R]
 //!         [--reuse] [--reuse-max-age A] [--kv-quant int8|f32]
+//!         [--kv-spill PATH]
 //!                                                         drive the streaming session on a trace
 //!   info                                                  build/config info
 //!
@@ -39,6 +40,7 @@ const SERVE_KEYS: &[&str] = &[
     "reuse",
     "reuse-max-age",
     "kv-quant",
+    "kv-spill",
 ];
 
 fn main() {
@@ -87,6 +89,7 @@ fn main() {
             println!("  vattn serve --prefix-cache --kv-cap-mb 64     shared-prefix demand paging");
             println!("  vattn serve --reuse --reuse-max-age 32        cross-step heavy-hitter reuse");
             println!("  vattn serve --kv-quant int8 --kv-cap-mb 16    verified int8 KV (4x pool capacity)");
+            println!("  vattn serve --kv-spill /tmp/kv.spill --kv-cap-mb 8  spill-to-disk cold tier (no preemption replays)");
         }
     }
 }
@@ -179,6 +182,12 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     if kv_cap_mb > 0 {
         builder = builder.kv_capacity_bytes(kv_cap_mb << 20);
     }
+    // File-backed cold tier: preemption swaps KV to disk instead of
+    // replaying compute, and the prefix cache persists to
+    // `<path>.prefix` so later runs warm-start from it.
+    if let Some(path) = args.get("kv-spill") {
+        builder = builder.kv_spill(path);
+    }
     let engine = Engine::new(Model::new(cfg, seed), builder.build());
     let mut session: Session<Model> = engine.session();
 
@@ -232,5 +241,8 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             r.mean_density
         );
     }
+    // Persist the prefix radix (spill mode) so the next `vattn serve
+    // --kv-spill PATH` warm-starts from this run's cached prompts.
+    session.flush_prefix_cache()?;
     Ok(())
 }

@@ -34,7 +34,9 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a NaN latency sample must not panic the whole report
+    // (NaNs sort to the top and only perturb the extreme percentiles).
+    s.sort_by(f64::total_cmp);
     let rank = p / 100.0 * (s.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -76,7 +78,7 @@ pub fn spearman(x: &[f64], y: &[f64]) -> f64 {
 
 fn ranks(xs: &[f64]) -> Vec<f64> {
     let mut order: Vec<usize> = (0..xs.len()).collect();
-    order.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    order.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]));
     let mut r = vec![0.0; xs.len()];
     let mut i = 0;
     while i < order.len() {
@@ -97,10 +99,16 @@ fn ranks(xs: &[f64]) -> Vec<f64> {
 /// Fixed-width histogram over [lo, hi).
 pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
     let mut h = vec![0usize; bins];
+    if bins == 0 {
+        return h;
+    }
     let w = (hi - lo) / bins as f64;
     for &x in xs {
         if x >= lo && x < hi {
-            h[((x - lo) / w) as usize] += 1;
+            // (x - lo) / w can round up to `bins` for x just below hi;
+            // clamp so in-range samples land in the last bin.
+            let b = (((x - lo) / w) as usize).min(bins - 1);
+            h[b] += 1;
         }
     }
     h
@@ -117,7 +125,7 @@ pub fn qq_normal_deviation(xs: &[f64]) -> f64 {
     let m = mean(xs);
     let s = std(xs).max(1e-12);
     let mut z: Vec<f64> = xs.iter().map(|x| (x - m) / s).collect();
-    z.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    z.sort_by(f64::total_cmp);
     let n = z.len();
     let mut worst = 0.0f64;
     // Compare only the central 98% (tail quantiles are noisy at any n).
@@ -233,6 +241,37 @@ mod tests {
     fn histogram_counts() {
         let h = histogram(&[0.1, 0.2, 0.9, 1.5], 0.0, 1.0, 2);
         assert_eq!(h, vec![2, 1]);
+    }
+
+    #[test]
+    fn histogram_edge_rounding_stays_in_bounds() {
+        // With lo/hi/bins chosen so (x - lo) / w rounds up for x just
+        // below hi, the index used to reach `bins` and panic; it must
+        // clamp into the last bin instead.
+        let hi = 0.3;
+        let x = f64::from_bits(hi.to_bits() - 1); // largest f64 < hi
+        let h = histogram(&[x], 0.0, hi, 3);
+        assert_eq!(h.iter().sum::<usize>(), 1);
+        assert_eq!(h[2], 1);
+        // Degenerate bin count must not underflow the clamp.
+        assert!(histogram(&[0.5], 0.0, 1.0, 0).is_empty());
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic_the_report() {
+        // One poisoned latency sample used to panic percentile /
+        // qq_normal_deviation via partial_cmp().unwrap(); total_cmp
+        // keeps the report alive (NaNs sort above every number, so
+        // central percentiles of mostly-clean data stay sane).
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        let mut many: Vec<f64> = (0..64).map(|i| i as f64).collect();
+        many.push(f64::NAN);
+        let d = qq_normal_deviation(&many);
+        assert!(d.is_nan() || d.is_finite()); // no panic is the contract
+        let r = spearman(&xs, &xs);
+        assert!(r.is_finite());
     }
 
     #[test]

@@ -53,6 +53,12 @@ pub struct ServeSummary {
     pub kv_bytes_read: usize,
     /// Decode-path KV append traffic (host tier), summed over requests.
     pub kv_bytes_written: usize,
+    /// Prefill-phase KV gather traffic, summed over requests.
+    pub kv_prefill_bytes_read: usize,
+    /// Prefill-phase KV append traffic (prompt appends + prefix-fork
+    /// copy-ins) — banked per request when prefill completes, so the
+    /// summary covers *all* host-tier traffic, not just decode.
+    pub kv_prefill_bytes_written: usize,
     ttft_samples: Vec<f64>,
     tpot_samples: Vec<f64>,
 }
@@ -81,6 +87,8 @@ impl ServeSummary {
             mean_density: density,
             kv_bytes_read: results.iter().map(|r| r.kv_bytes_read).sum(),
             kv_bytes_written: results.iter().map(|r| r.kv_bytes_written).sum(),
+            kv_prefill_bytes_read: results.iter().map(|r| r.kv_prefill_bytes_read).sum(),
+            kv_prefill_bytes_written: results.iter().map(|r| r.kv_prefill_bytes_written).sum(),
             ttft_samples,
             tpot_samples,
         }
@@ -99,6 +107,7 @@ impl ServeSummary {
                 "density",
                 "kv MiB read",
                 "kv MiB written",
+                "prefill MiB written",
             ],
         );
         t.row(vec![
@@ -110,6 +119,7 @@ impl ServeSummary {
             f(self.mean_density, 3),
             f(self.kv_bytes_read as f64 / (1 << 20) as f64, 1),
             f(self.kv_bytes_written as f64 / (1 << 20) as f64, 1),
+            f(self.kv_prefill_bytes_written as f64 / (1 << 20) as f64, 1),
         ]);
         let mut l = Table::new(
             "latency (ms)",
@@ -178,6 +188,17 @@ pub struct PagingSummary {
     pub prefix_lookup_blocks: u64,
     /// Active requests forced back to the queue by pool exhaustion.
     pub preemptions: u64,
+    /// Preemptions served by full recompute replay (0 in spill mode,
+    /// where every preemption is a swap-out instead).
+    pub preemption_replays: u64,
+    /// Bytes swapped out to the file-backed cold tier (`--kv-spill`).
+    pub spill_out_bytes: usize,
+    /// Swap-out block writes to the cold tier.
+    pub spill_out_ops: usize,
+    /// Bytes swapped back in from the cold tier at re-admission.
+    pub swap_in_bytes: usize,
+    /// Swap-in block reads from the cold tier.
+    pub swap_in_ops: usize,
     /// High-water mark of resident KV blocks (shared blocks count once).
     pub peak_blocks_in_use: usize,
     /// Pool capacity in blocks (`None` = unbounded).
@@ -199,6 +220,11 @@ impl From<&SessionStats> for PagingSummary {
             prefix_hit_blocks: s.prefix_hit_blocks,
             prefix_lookup_blocks: s.prefix_lookup_blocks,
             preemptions: s.preemptions,
+            preemption_replays: s.preemption_replays,
+            spill_out_bytes: s.spill_out_bytes,
+            spill_out_ops: s.spill_out_ops,
+            swap_in_bytes: s.swap_in_bytes,
+            swap_in_ops: s.swap_in_ops,
             peak_blocks_in_use: s.peak_blocks_in_use,
             capacity_blocks: s.capacity_blocks,
             cow_copies: s.cow_copies,
@@ -224,6 +250,8 @@ impl PagingSummary {
                 "prefix hit",
                 "hit/lookup blocks",
                 "preemptions",
+                "replays",
+                "spill MiB out/in",
                 "peak blocks",
                 "capacity",
                 "cow",
@@ -236,6 +264,12 @@ impl PagingSummary {
             format!("{:.1}%", self.prefix_hit_rate * 100.0),
             format!("{}/{}", self.prefix_hit_blocks, self.prefix_lookup_blocks),
             self.preemptions.to_string(),
+            self.preemption_replays.to_string(),
+            format!(
+                "{}/{}",
+                f(self.spill_out_bytes as f64 / (1 << 20) as f64, 1),
+                f(self.swap_in_bytes as f64 / (1 << 20) as f64, 1)
+            ),
             self.peak_blocks_in_use.to_string(),
             self.capacity_blocks.map_or("unbounded".to_string(), |c| c.to_string()),
             self.cow_copies.to_string(),
@@ -479,6 +513,8 @@ mod tests {
             mean_density: 0.5,
             kv_bytes_read: 1024,
             kv_bytes_written: 256,
+            kv_prefill_bytes_read: 64,
+            kv_prefill_bytes_written: 4096,
         }
     }
 
@@ -492,6 +528,8 @@ mod tests {
         assert!((s.mean_density - 0.5).abs() < 1e-12);
         assert_eq!(s.kv_bytes_read, 2048);
         assert_eq!(s.kv_bytes_written, 512);
+        assert_eq!(s.kv_prefill_bytes_read, 128, "prefill reads are summed, not dropped");
+        assert_eq!(s.kv_prefill_bytes_written, 8192, "prefill writes are summed, not dropped");
         // ttft from arrival includes queue wait: max = 0.5 + 0.2
         assert!((s.ttft.max - 0.7).abs() < 1e-9);
         // tpot divides decode time over tokens - 1 (first token is
@@ -576,6 +614,11 @@ mod tests {
             peak_blocks_in_use: 96,
             capacity_blocks: Some(128),
             cow_copies: 1,
+            spill_out_bytes: 3 << 20,
+            spill_out_ops: 6,
+            swap_in_bytes: 3 << 20,
+            swap_in_ops: 6,
+            preemption_replays: 2,
             kv_dtype: KvDtype::Int8,
             bytes_per_token: 288,
             bytes_per_token_fp32: 1024,
@@ -583,12 +626,16 @@ mod tests {
         };
         let s = PagingSummary::from(&stats);
         assert!((s.prefix_hit_rate - 0.75).abs() < 1e-12);
+        assert_eq!(s.spill_out_bytes, 3 << 20);
+        assert_eq!(s.swap_in_ops, 6);
+        assert_eq!(s.preemption_replays, 2);
         assert!((s.compression_ratio() - 1024.0 / 288.0).abs() < 1e-12);
         assert!(s.compression_ratio() >= 3.5);
         let out = s.render();
         assert!(out.contains("## kv paging"));
         assert!(out.contains("75.0%"), "{out}");
         assert!(out.contains("60/80"));
+        assert!(out.contains("3.0/3.0"), "spill out/in MiB column: {out}");
         assert!(out.contains("128"));
         assert!(out.contains("int8"), "{out}");
         assert!(out.contains("3.56x"), "{out}");

@@ -145,6 +145,17 @@ pub struct EngineConfig {
     /// their blocks (per-request `TierStats` byte traffic is always
     /// physical to that request).
     pub kv_dtype: KvDtype,
+    /// File-backed cold tier for preempted KV (`vattn serve --kv-spill
+    /// PATH`). When set, pool exhaustion *spills* the LIFO victim's
+    /// blocks to this region file instead of dropping them: re-admission
+    /// swaps the bytes back in (no prefill/decode replay), RNG and
+    /// policy state are preserved, and token streams stay byte-identical
+    /// to an unconstrained run. The session also persists its prefix
+    /// cache to `PATH.prefix` on [`crate::server::Session::flush_prefix_cache`],
+    /// so a fresh session on the same path warm-starts the radix across
+    /// process restarts. `None` = preemption falls back to deterministic
+    /// replay (the original behavior).
+    pub kv_spill: Option<std::path::PathBuf>,
 }
 
 impl Default for EngineConfig {
@@ -161,6 +172,7 @@ impl Default for EngineConfig {
             prefix_cache: false,
             max_seq_len: None,
             kv_dtype: KvDtype::F32,
+            kv_spill: None,
         }
     }
 }
@@ -231,6 +243,11 @@ impl EngineConfigBuilder {
 
     pub fn kv_dtype(mut self, v: KvDtype) -> Self {
         self.cfg.kv_dtype = v;
+        self
+    }
+
+    pub fn kv_spill(mut self, v: impl Into<std::path::PathBuf>) -> Self {
+        self.cfg.kv_spill = Some(v.into());
         self
     }
 
@@ -493,6 +510,7 @@ mod tests {
             .prefix_cache(true)
             .max_seq_len(4096)
             .kv_dtype(KvDtype::Int8)
+            .kv_spill("/tmp/kv.spill")
             .build();
         assert_eq!(cfg.max_batch, 7);
         assert!(matches!(cfg.sampler, Sampler::Temperature(t) if (t - 0.5).abs() < 1e-9));
@@ -505,6 +523,7 @@ mod tests {
         assert!(cfg.prefix_cache);
         assert_eq!(cfg.max_seq_len, Some(4096));
         assert_eq!(cfg.kv_dtype, KvDtype::Int8);
+        assert_eq!(cfg.kv_spill.as_deref(), Some(std::path::Path::new("/tmp/kv.spill")));
     }
 
     #[test]

@@ -86,10 +86,18 @@ pub struct RequestResult {
     pub mean_density: f64,
     /// Bytes of KV gathered from the host tier during decode.
     pub kv_bytes_read: usize,
-    /// Bytes of KV appended into the host tier during decode (prefill
-    /// writes are excluded — the per-request counters reset when
-    /// prefill completes, so both traffic numbers cover decode only).
+    /// Bytes of KV appended into the host tier during decode. The
+    /// per-request counters are phase-split when prefill completes
+    /// (`TierStats::end_prefill_phase`), so this keeps its decode-only
+    /// meaning while nothing is dropped: prefill traffic is banked into
+    /// the `kv_prefill_bytes_*` fields instead of being reset away.
     pub kv_bytes_written: usize,
+    /// Bytes of KV gathered during the prefill phase (prefix-fork
+    /// copy-in accounting rides here too).
+    pub kv_prefill_bytes_read: usize,
+    /// Bytes of KV appended during the prefill phase — prompt appends
+    /// that a plain counter reset used to drop from every summary.
+    pub kv_prefill_bytes_written: usize,
 }
 
 impl RequestResult {

@@ -55,7 +55,10 @@ use std::time::Instant;
 use super::engine::{AttentionMode, Backend, EngineConfig};
 use super::RequestResult;
 use crate::attention::Selection;
-use crate::kvcache::{BlockId, BlockPool, CowOutcome, KvCache, KvDtype, PageError, PrefixCache};
+use crate::kvcache::{
+    BlockId, BlockPool, CowOutcome, KvCache, KvDtype, PageError, PrefixCache, SpillSlot,
+    SpillStore, TierStats,
+};
 use crate::model::{ModelConfig, Sampler, StepOut};
 use crate::policies::{
     IndexPolicy, PolicyCtx, ReuseConfig, ReuseStats, TemporalReusePolicy, VAttentionConfig,
@@ -351,6 +354,19 @@ pub struct SessionStats {
     /// policy the session has run (live and retired requests alike);
     /// all-zero when no request used [`AttentionOpt::VerifiedReuse`].
     pub reuse: ReuseStats,
+    /// Bytes spilled to the file-backed cold tier by swap-out
+    /// preemptions (physical payload bytes; 0 without `--kv-spill`).
+    pub spill_out_bytes: usize,
+    /// Swap-out block writes to the cold tier.
+    pub spill_out_ops: usize,
+    /// Bytes swapped back in from the cold tier at re-admission.
+    pub swap_in_bytes: usize,
+    /// Swap-in block reads from the cold tier.
+    pub swap_in_ops: usize,
+    /// Preemptions served by full recompute replay — the fallback when
+    /// no spill store is configured. Always 0 with `--kv-spill`: every
+    /// preemption is a swap-out there, never a replay.
+    pub preemption_replays: u64,
     /// Session-default physical KV storage dtype
     /// (`EngineConfig::kv_dtype`).
     pub kv_dtype: KvDtype,
@@ -400,7 +416,39 @@ struct Waiting {
     /// keeps the user-visible timing of its original run.
     wait_s: Option<f64>,
     /// TTFT of the original run (0.0 until the first token streamed).
+    /// In spill mode this accumulates *active* time across swap-out /
+    /// swap-in cycles for requests preempted mid-prefill, so TTFT still
+    /// spans admission → eventual first token with queue time excluded.
     ttft_s: f64,
+    /// Present iff this request was swap-out preempted to the cold tier
+    /// (spill mode): re-admission swaps its KV bytes back in and resumes
+    /// exactly where it stopped instead of replaying compute.
+    suspended: Option<Suspended>,
+}
+
+/// Swap-out image of a preempted request (spill mode only): everything
+/// [`Active`] held that is not cheaply re-derivable. The KV payload
+/// lives in the [`SpillStore`] under `slots`; RNG, sampler-visible
+/// progress and policy state ride along untouched, so the resumed token
+/// stream continues byte-identically — zero recompute, zero replay.
+struct Suspended {
+    tokens: Vec<u32>,
+    next_token: u32,
+    pos: usize,
+    prefill_left: usize,
+    step: usize,
+    rng: Rng,
+    /// Cached KV tokens at swap-out (= tokens the swap-in must restore).
+    cached_tokens: usize,
+    /// Cold-tier slots holding this request's blocks, position-ordered.
+    slots: Vec<SpillSlot>,
+    /// Per-request traffic counters, carried across the swap so the
+    /// swap-in memcpys do not double-charge the host-tier numbers (the
+    /// cold-tier traffic is charged to [`crate::kvcache::SpillStats`]).
+    stats: TierStats,
+    decode_s: f64,
+    density_sum: f64,
+    density_n: usize,
 }
 
 /// One active request's serving state. Fully self-contained (cache,
@@ -456,6 +504,8 @@ impl Active {
             },
             kv_bytes_read: self.cache.stats.bytes_read,
             kv_bytes_written: self.cache.stats.bytes_written,
+            kv_prefill_bytes_read: self.cache.stats.prefill_bytes_read,
+            kv_prefill_bytes_written: self.cache.stats.prefill_bytes_written,
         }
     }
 }
@@ -470,7 +520,14 @@ pub struct Session<B: Backend> {
     blocks: BlockPool,
     /// Shared-prompt radix (`EngineConfig::prefix_cache`).
     prefix: Option<PrefixCache>,
+    /// File-backed cold tier (`EngineConfig::kv_spill`): preemption
+    /// becomes swap-out / swap-in instead of recompute replay, and the
+    /// prefix radix persists across sessions via the sibling file.
+    spill: Option<SpillStore>,
     preemptions: u64,
+    /// Preemptions that fell back to full recompute replay (non-spill
+    /// mode only; always 0 when `spill` is set).
+    preemption_replays: u64,
     /// Reuse counters of requests that already left the session
     /// (finished, cancelled, rejected); live policies are added on top
     /// by [`Session::stats`].
@@ -504,9 +561,32 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
         let mcfg = backend.config().clone();
         // Blocks are sized by the engine dtype: a quantized dtype turns
         // the same byte budget into proportionally more blocks.
-        let blocks =
+        let mut blocks =
             BlockPool::for_model_dtype(&mcfg, cfg.block_tokens, cfg.kv_capacity_bytes, cfg.kv_dtype);
-        let prefix = cfg.prefix_cache.then(|| PrefixCache::new(cfg.block_tokens.max(1)));
+        let mut prefix = cfg.prefix_cache.then(|| PrefixCache::new(cfg.block_tokens.max(1)));
+        let spill = cfg.kv_spill.as_deref().map(|path| {
+            SpillStore::open(
+                path,
+                cfg.block_tokens.max(1),
+                mcfg.n_layers * mcfg.n_kv_heads,
+                mcfg.d_head(),
+            )
+            .unwrap_or_else(|e| panic!("opening KV spill store {}: {e}", path.display()))
+        });
+        // Warm start: a previous session on the same spill path may have
+        // persisted its prefix radix (`flush_prefix_cache`); re-import
+        // whatever fits the pool so repeated prompts fork instead of
+        // re-prefilling from scratch after a process restart. Absent,
+        // geometry-mismatched, or unreadable files mean a cold start.
+        if let (Some(store), Some(p)) = (spill.as_ref(), prefix.as_mut()) {
+            if let Ok(Some(entries)) = store.load_prefix() {
+                for (key, parent, snap) in entries {
+                    if !p.import_entry(key, parent, snap, &mut blocks) {
+                        break; // pool full: keep the prefix that fits
+                    }
+                }
+            }
+        }
         let seed_rng = Rng::new(cfg.seed);
         Session {
             backend,
@@ -515,7 +595,9 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             pool,
             blocks,
             prefix,
+            spill,
             preemptions: 0,
+            preemption_replays: 0,
             retired_reuse: ReuseStats::default(),
             default_attention: AttentionOpt::Dense,
             waiting: VecDeque::new(),
@@ -574,11 +656,30 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
     /// Drop every prefix-cache entry, returning its blocks to the pool.
     /// Returns the number of blocks released. With no requests in
     /// flight, the pool is quiescent afterwards.
+    ///
+    /// With a spill store configured, the radix is first serialized to
+    /// the persistent sibling file (`<spill-path>.prefix`), so a fresh
+    /// session opened on the same path warm-starts from it — cached
+    /// prefixes survive process restarts.
     pub fn flush_prefix_cache(&mut self) -> Result<usize, EngineError> {
         match self.prefix.as_mut() {
-            Some(p) => p.flush(&mut self.blocks).map_err(EngineError::Page),
+            Some(p) => {
+                if let Some(store) = self.spill.as_ref() {
+                    store
+                        .persist_prefix(&p.export_chains())
+                        .map_err(|e| EngineError::Backend(e.into()))?;
+                }
+                p.flush(&mut self.blocks).map_err(EngineError::Page)
+            }
             None => Ok(0),
         }
+    }
+
+    /// Blocks currently resident in the cold tier (`None` without a
+    /// spill store). Zero once every suspended request has been resumed
+    /// or cancelled — the cold-tier side of the no-leak invariant.
+    pub fn spill_live_blocks(&self) -> Option<usize> {
+        self.spill.as_ref().map(|s| s.live_blocks())
     }
 
     /// Paging / scheduling counters (cumulative since session creation).
@@ -600,6 +701,11 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             capacity_blocks: self.blocks.capacity_blocks(),
             cow_copies: self.blocks.cow_count(),
             reuse,
+            spill_out_bytes: self.spill.as_ref().map_or(0, |s| s.stats().spill_out_bytes),
+            spill_out_ops: self.spill.as_ref().map_or(0, |s| s.stats().spill_out_ops),
+            swap_in_bytes: self.spill.as_ref().map_or(0, |s| s.stats().swap_in_bytes),
+            swap_in_ops: self.spill.as_ref().map_or(0, |s| s.stats().swap_in_ops),
+            preemption_replays: self.preemption_replays,
             kv_dtype: self.cfg.kv_dtype,
             bytes_per_token: self.cfg.kv_dtype.kv_bytes_per_token(&self.mcfg),
             bytes_per_token_fp32: KvDtype::F32.kv_bytes_per_token(&self.mcfg),
@@ -638,8 +744,16 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
     /// already-cancelled, or never-submitted ids yield `UnknownRequest`.
     pub fn cancel(&mut self, id: RequestId) -> Result<(), EngineError> {
         if let Some(pos) = self.waiting.iter().position(|w| w.id == id) {
-            let w = self.waiting.remove(pos).expect("position was in range");
+            let mut w = self.waiting.remove(pos).expect("position was in range");
             merge_reuse(&mut self.retired_reuse, &w.policies);
+            // A suspended request owns cold-tier slots, not pool blocks.
+            if let Some(sus) = w.suspended.take() {
+                let store =
+                    self.spill.as_mut().expect("suspended request without a spill store");
+                for slot in sus.slots {
+                    store.free(slot);
+                }
+            }
             return Ok(());
         }
         if let Some(pos) = self.active.iter().position(|a| a.id == id) {
@@ -849,15 +963,78 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
         }
     }
 
-    /// Deterministic preemption: drop active request `idx` (always the
-    /// most recently admitted), free every block it holds, reset its
-    /// policies, and requeue it at the *front* of the waiting queue. Its
-    /// re-run re-derives the same RNG stream from (engine seed, seed
-    /// tag), so the replayed token stream is byte-identical; `reported`
-    /// rides along so already-emitted tokens are not re-emitted.
+    /// Deterministic preemption of active request `idx` (always the most
+    /// recently admitted), requeued at the *front* of the waiting queue.
+    ///
+    /// **Spill mode** (`--kv-spill`): the victim's physical KV bytes —
+    /// every filled block, quantized payloads byte-for-byte — are
+    /// written to the file-backed cold tier, and its RNG, policies and
+    /// progress are parked in a [`Suspended`] image. Re-admission swaps
+    /// the bytes back in and continues; nothing is recomputed.
+    ///
+    /// **Replay mode** (no spill store): the blocks are dropped, the
+    /// policies reset, and the re-run re-derives the same RNG stream
+    /// from (engine seed, seed tag), so the replayed token stream is
+    /// byte-identical; `reported` rides along so already-emitted tokens
+    /// are not re-emitted.
     fn preempt(&mut self, idx: usize, events: &mut Vec<Event>, now: f64) -> Result<(), EngineError> {
         let mut a = self.active.remove(idx);
         let kv_dtype = a.cache.dtype();
+        if let Some(store) = self.spill.as_mut() {
+            // Swap out: spill every filled block (the tail may be
+            // partial), then return the whole lease to the pool.
+            let bt = self.cfg.block_tokens.max(1);
+            let cached = a.cache.tokens();
+            let mut slots = Vec::with_capacity(a.cache.blocks_used());
+            for b in 0..a.cache.blocks_used() {
+                let snap = a.cache.snapshot_rows(b * bt, ((b + 1) * bt).min(cached));
+                slots.push(store.write_block(&snap).map_err(|e| EngineError::Backend(e.into()))?);
+            }
+            let lease = a.cache.release_blocks();
+            self.blocks.free(lease).map_err(EngineError::Page)?;
+            self.preemptions += 1;
+            events.push(Event::Preempted { id: a.id, t_s: now });
+            let streamed = a.reported > 0;
+            self.waiting.push_front(Waiting {
+                id: a.id,
+                arrival_s: a.arrival_s,
+                prompt: a.prompt,
+                gen_len: a.gen_len,
+                sampler: a.sampler,
+                seed_tag: a.seed_tag,
+                kv_dtype,
+                // Policy state is *preserved* (not reset): the resumed
+                // run continues, it does not replay.
+                policies: a.policies,
+                reported: a.reported,
+                // The original queue wait is final — the request never
+                // re-runs its admission path from scratch.
+                wait_s: Some(a.wait_s),
+                // Mid-prefill victims accumulate active time so the
+                // eventual TTFT spans all their prefill segments.
+                ttft_s: if streamed {
+                    a.ttft_s
+                } else {
+                    a.ttft_s + a.started.elapsed().as_secs_f64()
+                },
+                suspended: Some(Suspended {
+                    tokens: a.tokens,
+                    next_token: a.next_token,
+                    pos: a.pos,
+                    prefill_left: a.prefill_left,
+                    step: a.step,
+                    rng: a.rng,
+                    cached_tokens: cached,
+                    slots,
+                    stats: a.cache.stats.clone(),
+                    decode_s: a.decode_s,
+                    density_sum: a.density_sum,
+                    density_n: a.density_n,
+                }),
+            });
+            return Ok(());
+        }
+        self.preemption_replays += 1;
         let lease = a.cache.release_blocks();
         self.blocks.free(lease).map_err(EngineError::Page)?;
         for p in a.policies.iter_mut() {
@@ -882,6 +1059,7 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             reported: a.reported,
             wait_s: streamed.then_some(a.wait_s),
             ttft_s: if streamed { a.ttft_s } else { 0.0 },
+            suspended: None,
         });
         Ok(())
     }
@@ -901,6 +1079,36 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
                 Some(_) => {}
             }
             let w = self.waiting.pop_front().expect("front was Some");
+            // Suspended (swap-out-preempted) requests bypass the prefix
+            // path entirely: they re-lease exactly the blocks they held
+            // and swap their own bytes back in from the cold tier.
+            if let Some(sus) = w.suspended.as_ref() {
+                let need = sus.slots.len();
+                let reserve =
+                    if self.active.is_empty() { 0 } else { self.cfg.kv_headroom_blocks };
+                let lease = loop {
+                    if self.blocks.can_alloc(need, reserve) {
+                        if let Some(l) = self.blocks.try_alloc(need) {
+                            break Some(l);
+                        }
+                    }
+                    if !self.evict_prefix_block()? {
+                        break None;
+                    }
+                };
+                let Some(lease) = lease else {
+                    debug_assert!(
+                        !self.active.is_empty(),
+                        "swap-in stalled with an empty batch despite making progress at preemption"
+                    );
+                    self.waiting.push_front(w);
+                    break;
+                };
+                events.push(Event::Admitted { id: w.id, t_s: now });
+                let active = self.resume(w, lease, now)?;
+                self.active.push(active);
+                continue;
+            }
             // Prefix fork: attach to matched blocks (refcount bump)
             // before any eviction below could reclaim them. Chains are
             // keyed by dtype, so an f32 request never forks an int8
@@ -1051,6 +1259,7 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             reported: 0,
             wait_s: None,
             ttft_s: 0.0,
+            suspended: None,
         });
         id
     }
@@ -1064,6 +1273,72 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
     fn request_rng(&self, tag: u64) -> Rng {
         let mut root = self.seed_rng.clone();
         root.fork(tag)
+    }
+
+    /// Re-admit a suspended request: swap its KV bytes back in from the
+    /// cold tier block by block, free the cold-tier slots, and rebuild
+    /// the active state exactly where swap-out parked it — no prefill or
+    /// decode is replayed, and RNG / sampler / policy state continue, so
+    /// the resumed stream is byte-identical to an uncontended run.
+    fn resume(
+        &mut self,
+        mut w: Waiting,
+        lease: Vec<BlockId>,
+        now: f64,
+    ) -> Result<Active, EngineError> {
+        let sus = w.suspended.take().expect("resume of a non-suspended request");
+        let store = self.spill.as_mut().expect("suspended request without a spill store");
+        let mut cache =
+            KvCache::paged_dtype(&self.mcfg, self.cfg.block_tokens.max(1), lease, w.kv_dtype);
+        for &slot in &sus.slots {
+            match store.read_block(slot) {
+                Ok(snap) => cache.load_block(&snap),
+                Err(e) => {
+                    // Unreadable region file: unwind so nothing leaks —
+                    // every cold-tier slot (read ones stay live until
+                    // freed) and the fresh lease go back, then surface
+                    // the IO error as a backend failure.
+                    for &s in &sus.slots {
+                        store.free(s);
+                    }
+                    let l = cache.release_blocks();
+                    self.blocks.free(l).map_err(EngineError::Page)?;
+                    return Err(EngineError::Backend(e.into()));
+                }
+            }
+        }
+        for &slot in &sus.slots {
+            store.free(slot);
+        }
+        debug_assert_eq!(cache.tokens(), sus.cached_tokens, "swap-in must restore every token");
+        // Swap-in memcpys must not double-charge the per-request host
+        // counters; restore them as if the request was never preempted
+        // (the cold-tier traffic is charged to the spill store's stats).
+        cache.stats = sus.stats;
+        Ok(Active {
+            id: w.id,
+            gen_len: w.gen_len,
+            sampler: w.sampler,
+            cache,
+            policies: w.policies,
+            rng: sus.rng,
+            tokens: sus.tokens,
+            reported: w.reported,
+            next_token: sus.next_token,
+            pos: sus.pos,
+            prefill_left: sus.prefill_left,
+            prompt: w.prompt,
+            arrival_s: w.arrival_s,
+            seed_tag: w.seed_tag,
+            just_prefilled: false,
+            started: Instant::now(),
+            wait_s: w.wait_s.unwrap_or((now - w.arrival_s).max(0.0)),
+            ttft_s: w.ttft_s,
+            decode_s: sus.decode_s,
+            density_sum: sus.density_sum,
+            density_n: sus.density_n,
+            step: sus.step,
+        })
     }
 
     /// Build the active-state for an admitted request. `matched_tokens`
@@ -1138,11 +1413,17 @@ fn advance<B: Backend>(
             return Ok(()); // still prefilling: nothing to sample yet
         }
         if a.reported == 0 {
-            // A preemption replay (reported > 0) re-runs prefill, but
-            // the user saw their first token long ago — keep that TTFT.
-            a.ttft_s = a.started.elapsed().as_secs_f64();
+            // Accumulate: a swap-in-resumed request adds this segment to
+            // the active time banked at swap-out (fresh requests start
+            // from 0.0, so this is plain assignment for them). A replay
+            // (reported > 0) re-runs prefill, but the user saw their
+            // first token long ago — keep that TTFT.
+            a.ttft_s += a.started.elapsed().as_secs_f64();
         }
-        a.cache.stats.reset(); // count decode traffic only
+        // Bank prefill traffic (prompt appends + prefix-fork copy-ins)
+        // instead of resetting it away: the live counters restart for
+        // decode, and the banked side surfaces as `kv_prefill_bytes_*`.
+        a.cache.stats.end_prefill_phase();
         a.just_prefilled = true; // merge phase publishes prompt blocks
         out = last.expect("prefill_chunk >= 1");
     } else {
@@ -1637,5 +1918,193 @@ mod tests {
         assert!(released > 0);
         assert_eq!(s.kv_blocks_in_use(), 0, "flushed idle session is quiescent");
         assert!(s.stats().prefix_hit_rate() > 0.0);
+    }
+
+    fn tmp_spill(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("vattn-session-{name}-{}.spill", std::process::id()));
+        p
+    }
+
+    fn rm_spill(path: &std::path::Path) {
+        let _ = std::fs::remove_file(path);
+        let mut os = path.as_os_str().to_os_string();
+        os.push(".prefix");
+        let _ = std::fs::remove_file(std::path::PathBuf::from(os));
+    }
+
+    #[test]
+    fn spill_preemption_swaps_in_without_replay_and_streams_match() {
+        // Same over-committed pool as the replay test (7 blocks < 2 × 5
+        // worst case), but with a spill store: the LIFO victim's bytes
+        // move to disk and back instead of being recomputed, and the
+        // streams still match the unconstrained run byte for byte.
+        let path = tmp_spill("preempt");
+        let mcfg = ModelConfig::tiny();
+        let contended = EngineConfig::builder()
+            .max_batch(2)
+            .block_tokens(4)
+            .kv_capacity_bytes(7 * 4 * mcfg.kv_bytes_per_token())
+            .kv_spill(&path)
+            .build();
+        let free = EngineConfig::builder().max_batch(2).block_tokens(4).build();
+        let run = |cfg: EngineConfig| {
+            let mut s = tiny_session(cfg);
+            let a = s.submit(SubmitRequest::new(prompt(8, 1)).options(GenOptions::new(12)));
+            let b = s.submit(SubmitRequest::new(prompt(8, 2)).options(GenOptions::new(12)));
+            let mut streams: std::collections::BTreeMap<u64, Vec<u32>> = Default::default();
+            for ev in drain(&mut s) {
+                match ev {
+                    Event::Token { id, token, step, .. } => {
+                        let st = streams.entry(id).or_default();
+                        assert_eq!(st.len(), step, "stream must stay gapless across swap-out");
+                        st.push(token);
+                    }
+                    Event::Rejected { reason, .. } => panic!("unexpected rejection: {reason}"),
+                    _ => {}
+                }
+            }
+            assert_eq!(s.kv_blocks_in_use(), 0);
+            ((streams[&a].clone(), streams[&b].clone()), s.stats(), s.spill_live_blocks())
+        };
+        let (free_streams, free_stats, no_spill) = run(free);
+        assert_eq!(free_stats.preemptions, 0);
+        assert_eq!(no_spill, None, "no spill store unless configured");
+        let (spill_streams, stats, live) = run(contended);
+        assert!(stats.preemptions > 0, "7 < 10 worst-case blocks must force preemption");
+        assert_eq!(stats.preemption_replays, 0, "spill mode never replays compute");
+        assert!(stats.spill_out_bytes > 0, "the victim's payload must hit the cold tier");
+        assert!(stats.spill_out_ops > 0);
+        assert_eq!(
+            stats.swap_in_bytes, stats.spill_out_bytes,
+            "everything spilled swaps back in exactly once"
+        );
+        assert_eq!(stats.swap_in_ops, stats.spill_out_ops);
+        assert_eq!(live, Some(0), "no orphaned cold-tier blocks after the drain");
+        assert_eq!(
+            free_streams, spill_streams,
+            "swap-in resume must be byte-identical to the uncontended run"
+        );
+        rm_spill(&path);
+    }
+
+    #[test]
+    fn cancelling_a_suspended_request_frees_its_cold_tier_slots() {
+        let path = tmp_spill("cancel");
+        let mcfg = ModelConfig::tiny();
+        let cfg = EngineConfig::builder()
+            .max_batch(2)
+            .block_tokens(4)
+            .kv_capacity_bytes(7 * 4 * mcfg.kv_bytes_per_token())
+            .kv_spill(&path)
+            .build();
+        let mut s = tiny_session(cfg);
+        s.submit(SubmitRequest::new(prompt(8, 1)).options(GenOptions::new(12)));
+        let b = s.submit(SubmitRequest::new(prompt(8, 2)).options(GenOptions::new(12)));
+        // Tick until the LIFO victim (b) has been swapped out.
+        let mut preempted = false;
+        for _ in 0..40 {
+            for ev in s.tick().unwrap() {
+                if matches!(ev, Event::Preempted { id, .. } if id == b) {
+                    preempted = true;
+                }
+            }
+            if preempted && s.waiting_len() > 0 {
+                break;
+            }
+            if s.is_idle() {
+                break;
+            }
+        }
+        assert!(preempted, "the over-committed pool must swap b out");
+        if s.waiting_len() > 0 {
+            assert!(s.spill_live_blocks().unwrap() > 0, "suspended b owns cold-tier blocks");
+            s.cancel(b).expect("cancel suspended");
+            assert_eq!(s.spill_live_blocks(), Some(0), "cancel must free the cold tier");
+        }
+        drain(&mut s);
+        assert_eq!(s.kv_blocks_in_use(), 0);
+        assert_eq!(s.spill_live_blocks(), Some(0));
+        rm_spill(&path);
+    }
+
+    #[test]
+    fn prefix_store_persists_and_warm_starts_a_fresh_session() {
+        let path = tmp_spill("warmstart");
+        rm_spill(&path); // stale state from a previous run would skew it
+        let cfg = || {
+            EngineConfig::builder()
+                .block_tokens(4)
+                .prefix_cache(true)
+                .kv_spill(&path)
+                .build()
+        };
+        let p = prompt(16, 9);
+        let first = {
+            let mut s = tiny_session(cfg());
+            let id = s.submit(SubmitRequest::new(p.clone()).options(GenOptions::new(4)));
+            let mut tokens = Vec::new();
+            for ev in drain(&mut s) {
+                if let Event::Finished { id: i, result, .. } = ev {
+                    assert_eq!(i, id);
+                    tokens = result.tokens;
+                }
+            }
+            assert!(s.prefix_blocks_held() > 0);
+            // Persists the radix to `<path>.prefix`, then drops it.
+            assert!(s.flush_prefix_cache().unwrap() > 0);
+            assert_eq!(s.kv_blocks_in_use(), 0);
+            tokens
+        };
+        // A *fresh* session on the same spill path (process-restart
+        // stand-in) warm-starts the radix from disk: the same prompt
+        // forks instead of re-prefilling, and the stream is unchanged.
+        let mut s2 = tiny_session(cfg());
+        assert!(
+            s2.prefix_blocks_held() > 0,
+            "warm start must re-import the persisted radix"
+        );
+        let id2 = s2.submit(SubmitRequest::new(p).options(GenOptions::new(4)));
+        let mut tokens2 = Vec::new();
+        for ev in drain(&mut s2) {
+            if let Event::Finished { id, result, .. } = ev {
+                assert_eq!(id, id2);
+                tokens2 = result.tokens;
+            }
+        }
+        let st = s2.stats();
+        assert!(st.prefix_hit_blocks > 0, "restarted session must hit the persisted radix");
+        assert!(st.prefix_hit_rate() > 0.0);
+        assert_eq!(first, tokens2, "warm-started fork must not change tokens");
+        s2.flush_prefix_cache().unwrap();
+        assert_eq!(s2.kv_blocks_in_use(), 0);
+        rm_spill(&path);
+    }
+
+    #[test]
+    fn prefill_traffic_is_banked_not_dropped() {
+        let mut s = tiny_session(EngineConfig::default());
+        s.submit(SubmitRequest::new(prompt(12, 3)).options(GenOptions::new(4)));
+        let mut result = None;
+        for ev in drain(&mut s) {
+            if let Event::Finished { result: r, .. } = ev {
+                result = Some(r);
+            }
+        }
+        let r = result.expect("finished");
+        let mcfg = ModelConfig::tiny();
+        // Prefill appends 12 prompt tokens' K/V rows across every
+        // (layer, kv-head) slot — traffic a plain counter reset used to
+        // drop on the floor.
+        assert_eq!(
+            r.kv_prefill_bytes_written,
+            12 * mcfg.kv_bytes_per_token(),
+            "banked prefill writes must cover the whole prompt"
+        );
+        assert!(r.kv_bytes_written > 0, "decode writes stay decode-only");
+        assert!(
+            r.kv_bytes_written < r.kv_prefill_bytes_written,
+            "4 decode tokens must write less than the 12-token prefill"
+        );
     }
 }

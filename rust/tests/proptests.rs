@@ -440,6 +440,99 @@ fn prop_session_submit_cancel_interleaving_leaks_no_blocks() {
 }
 
 #[test]
+fn prop_spill_mode_is_stream_invisible_and_leak_free() {
+    // The cold tier's contract, fuzzed: a contended session that spills
+    // preempted KV to disk must emit token streams byte-identical to an
+    // uncontended spill-off run of the same workload — with zero replay
+    // preemptions, every spilled byte swapped back in exactly once, and
+    // no pool blocks or cold-tier slots left behind after drain,
+    // mid-flight cancellations included.
+    Prop::new("spill-stream-invisible").cases(8).run(|rng| {
+        use std::collections::BTreeMap;
+        let mcfg = ModelConfig::tiny();
+        let bt = 4usize;
+        // Worst case per request is 8 blocks (19 + 11 tokens), so every
+        // request is admissible alone but two together can contend.
+        let cap_blocks = rng.range(8, 12);
+        let engine_seed = rng.next_u64();
+        let n_req = rng.range(2, 6);
+        let reqs: Vec<(Vec<u32>, usize)> = (0..n_req)
+            .map(|_| {
+                let plen = rng.range(4, 20);
+                let glen = rng.range(4, 12);
+                ((0..plen as u32).map(|t| (t * 7 + 3) % 250).collect(), glen)
+            })
+            .collect();
+        let path = std::env::temp_dir()
+            .join(format!("vattn-prop-spill-{}-{engine_seed:x}.spill", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+
+        let drive = |mut session: Session<Model>| -> (BTreeMap<u64, Vec<u32>>, Session<Model>) {
+            let mut streams: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+            for (prompt, glen) in &reqs {
+                let id = session
+                    .submit(SubmitRequest::new(prompt.clone()).options(GenOptions::new(*glen)));
+                streams.insert(id, Vec::new());
+            }
+            while !session.is_idle() {
+                for ev in session.tick().expect("tick") {
+                    if let Event::Token { id, token, step, .. } = ev {
+                        let st = streams.get_mut(&id).expect("known id");
+                        assert_eq!(st.len(), step, "gapless stream across swap-in");
+                        st.push(token);
+                    }
+                }
+            }
+            (streams, session)
+        };
+
+        let free_cfg =
+            EngineConfig::builder().max_batch(3).seed(engine_seed).block_tokens(bt).build();
+        let (reference, _) = drive(Session::new(Model::new(mcfg.clone(), 42), free_cfg));
+
+        let spill_cfg = EngineConfig::builder()
+            .max_batch(3)
+            .seed(engine_seed)
+            .block_tokens(bt)
+            .kv_capacity_bytes(cap_blocks * bt * mcfg.kv_bytes_per_token())
+            .kv_spill(&path)
+            .build();
+        let (spilled, mut session) = drive(Session::new(Model::new(mcfg.clone(), 42), spill_cfg));
+        assert_eq!(reference, spilled, "the cold tier changed a token stream");
+        let stats = session.stats();
+        assert_eq!(stats.preemption_replays, 0, "spill mode must never replay");
+        assert_eq!(stats.swap_in_bytes, stats.spill_out_bytes, "unbalanced swap traffic");
+        assert_eq!(stats.swap_in_ops, stats.spill_out_ops);
+        assert_eq!(session.spill_live_blocks(), Some(0), "orphaned cold-tier blocks");
+        assert_eq!(session.kv_blocks_in_use(), 0, "drained session leaked pool blocks");
+
+        // Mid-flight cancellation: whatever state a request is in —
+        // active, suspended on disk, or still queued — cancelling it
+        // must release both its pool lease and its cold-tier slots.
+        let mut live: Vec<u64> = reqs
+            .iter()
+            .map(|(p, g)| {
+                session.submit(SubmitRequest::new(p.clone()).options(GenOptions::new(*g)))
+            })
+            .collect();
+        for _ in 0..rng.range(0, 6) {
+            for ev in session.tick().expect("tick") {
+                if let Event::Finished { id, .. } = ev {
+                    live.retain(|&x| x != id);
+                }
+            }
+        }
+        for id in live {
+            session.cancel(id).expect("cancelling a live request");
+        }
+        assert!(session.is_idle());
+        assert_eq!(session.spill_live_blocks(), Some(0), "cancel leaked cold-tier slots");
+        assert_eq!(session.kv_blocks_in_use(), 0, "cancel leaked pool blocks");
+        let _ = std::fs::remove_file(&path);
+    });
+}
+
+#[test]
 fn prop_int8_roundtrip_respects_the_advertised_half_scale_bound() {
     // The quantized-KV tier's foundational contract: for every element
     // of every row — random, constant, zero, and max-magnitude alike —
