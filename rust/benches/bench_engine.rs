@@ -33,31 +33,45 @@
 //! certificate cuts underlying top-k scans by ≥ 2× while selecting
 //! exactly what a fresh policy selects.
 //!
+//! Also runs the network serving scenario: 1200 Poisson-scheduled
+//! clients over real loopback TCP sockets against the sharded HTTP
+//! front-end (4 shards, bounded admission queues) — asserting every
+//! request resolves as a complete stream or a typed 429 shed (never a
+//! stall), per-shard accounting sums to the client-side totals, and
+//! p99 TTFT/TPOT stay under stall bounds; written to the `serving`
+//! JSON block (CI-checked).
+//!
 //! Besides the human-readable report, writes `BENCH_engine.json`
 //! (tokens/s plus TTFT/TPOT percentiles per worker count, the
 //! `demand_paging` block with prefix-hit-rate / preemptions /
 //! peak-block-utilization, the `spill` block with cold-tier spill-out /
 //! swap-in traffic and the replay count, the `reuse` block with hit
-//! rate / refresh causes / scan reduction, and the open-loop summary)
-//! so the perf
+//! rate / refresh causes / scan reduction, the `serving` block with
+//! shed rate and socket-measured latency percentiles, and the
+//! open-loop summary) so the perf
 //! trajectory is machine-trackable PR over PR; CI checks the file is
 //! produced and well-formed.
 //!
 //! Run: cargo bench --bench bench_engine
 
 use std::collections::BTreeMap;
-use std::time::Instant;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use vattn::kvcache::KvDtype;
-use vattn::metrics::{summarize, LatencySummary, PagingSummary, ReuseSummary, ServeSummary};
+use vattn::metrics::{
+    summarize, LatencySummary, PagingSummary, ReuseSummary, RouterSummary, ServeSummary,
+};
 use vattn::model::{Model, ModelConfig, Sampler};
 use vattn::policies::{
     IndexPolicy, PolicyCtx, ReuseConfig, ReuseStats, SizeSpec, TemporalReusePolicy,
     VAttentionPolicy,
 };
 use vattn::server::{
-    AttentionMode, AttentionOpt, Engine, EngineConfig, Event, GenOptions, Request, RequestResult,
-    Session, SubmitRequest,
+    AttentionMode, AttentionOpt, Engine, EngineConfig, Event, GenOptions, NetServer, Request,
+    RequestResult, RouterConfig, Session, SubmitRequest,
 };
 use vattn::tensor::Mat;
 use vattn::util::json::Json;
@@ -669,6 +683,148 @@ fn main() {
     let summary = ServeSummary::from_results(&out, wall);
     println!("{}", summary.render());
 
+    println!("\n== network serving: 1200 Poisson arrivals over loopback sockets (4 shards) ==");
+    // Open-loop load through real TCP connections against the sharded
+    // HTTP front-end: 1200 clients fire on a Poisson schedule, each
+    // holding its own socket and measuring TTFT / TPOT from its own
+    // clock. Bounded admission (small per-shard queues under a bursty
+    // arrival rate) turns overload into 429s; every client must resolve
+    // as a complete stream or a typed shed — never a stall.
+    let serve_shards = 4usize;
+    let serve_depth = 6usize;
+    let serve_trace = TraceConfig {
+        rate: 800.0,
+        num_requests: 1200,
+        context_min: 16,
+        context_max: 48,
+        gen_min: 4,
+        gen_max: 8,
+    };
+    let mut srng = Rng::new(11);
+    let serve_arrivals = to_requests(&generate_trace(&serve_trace, &mut srng), ModelConfig::tiny().vocab);
+    let total_requests = serve_arrivals.len();
+    let server = NetServer::start(
+        Arc::new(Model::new(ModelConfig::tiny(), 42)),
+        "127.0.0.1:0",
+        RouterConfig::new(EngineConfig::builder().max_batch(16).seed(1).workers(1).build())
+            .shards(serve_shards)
+            .queue_depth(serve_depth),
+    )
+    .expect("bind loopback");
+    let serve_addr = server.addr();
+    let t_serve = Instant::now();
+    let mut clients = Vec::with_capacity(total_requests);
+    for ar in serve_arrivals {
+        clients.push(
+            std::thread::Builder::new()
+                .stack_size(256 * 1024)
+                .spawn(move || -> (u16, f64, f64, usize) {
+                    let delay = ar.arrival_s - t_serve.elapsed().as_secs_f64();
+                    if delay > 0.0 {
+                        std::thread::sleep(Duration::from_secs_f64(delay));
+                    }
+                    let gen_len = ar.req.gen_len;
+                    let toks: Vec<String> = ar.req.prompt.iter().map(u32::to_string).collect();
+                    let body = format!(
+                        "{{\"prompt\":[{}],\"gen_len\":{gen_len},\"seed\":{}}}",
+                        toks.join(","),
+                        ar.req.id
+                    );
+                    let mut s = TcpStream::connect(serve_addr).expect("connect");
+                    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+                    let t_fire = Instant::now();
+                    s.write_all(
+                        format!(
+                            "POST /v1/generate HTTP/1.1\r\nHost: b\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
+                            body.len()
+                        )
+                        .as_bytes(),
+                    )
+                    .expect("send request");
+                    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+                    let mut chunk = [0u8; 4096];
+                    let mut t_first: Option<f64> = None;
+                    loop {
+                        let n = s.read(&mut chunk).expect("read stream (stall?)");
+                        if n == 0 {
+                            break;
+                        }
+                        buf.extend_from_slice(&chunk[..n]);
+                        if t_first.is_none()
+                            && String::from_utf8_lossy(&buf).contains("\"step\":0,")
+                        {
+                            t_first = Some(t_fire.elapsed().as_secs_f64());
+                        }
+                    }
+                    let t_done = t_fire.elapsed().as_secs_f64();
+                    let head = String::from_utf8_lossy(&buf);
+                    let status: u16 = head
+                        .split_whitespace()
+                        .nth(1)
+                        .and_then(|s| s.parse().ok())
+                        .expect("status line");
+                    (status, t_first.unwrap_or(t_done), t_done, gen_len)
+                })
+                .expect("spawn client"),
+        );
+    }
+    let mut serve_ttfts: Vec<f64> = Vec::new();
+    let mut serve_tpots: Vec<f64> = Vec::new();
+    let mut serve_completed = 0u64;
+    let mut serve_shed = 0u64;
+    for c in clients {
+        let (status, t_first, t_done, gen_len) = c.join().expect("client thread");
+        match status {
+            200 => {
+                serve_completed += 1;
+                serve_ttfts.push(t_first);
+                if gen_len > 1 {
+                    serve_tpots.push((t_done - t_first) / (gen_len - 1) as f64);
+                }
+            }
+            429 => serve_shed += 1,
+            other => panic!("unexpected serving status {other}"),
+        }
+    }
+    let serve_wall = t_serve.elapsed().as_secs_f64();
+    let shard_final = server.shutdown();
+    assert_eq!(
+        serve_completed + serve_shed,
+        total_requests as u64,
+        "every request must resolve as a stream or a typed shed"
+    );
+    assert_eq!(
+        shard_final.iter().map(|s| s.received).sum::<u64>(),
+        total_requests as u64,
+        "per-shard received counts must sum to the client total"
+    );
+    assert_eq!(shard_final.iter().map(|s| s.completed).sum::<u64>(), serve_completed);
+    assert_eq!(shard_final.iter().map(|s| s.shed).sum::<u64>(), serve_shed);
+    let serve_shed_rate = serve_shed as f64 / total_requests as f64;
+    assert!((0.0..=1.0).contains(&serve_shed_rate));
+    let serve_ttft = summarize(&serve_ttfts);
+    let serve_tpot = summarize(&serve_tpots);
+    assert!(
+        serve_ttft.p99.is_finite() && serve_ttft.p99 < 60.0,
+        "p99 TTFT blew past the stall bound: {:.2}s",
+        serve_ttft.p99
+    );
+    assert!(
+        serve_tpot.p99.is_finite() && serve_tpot.p99 < 5.0,
+        "p99 TPOT blew past the stall bound: {:.2}s",
+        serve_tpot.p99
+    );
+    println!(
+        "requests {total_requests}  completed {serve_completed}  shed {serve_shed} ({:.1}%)  \
+         p50/p99 ttft {:.1}/{:.1} ms  p50/p99 tpot {:.2}/{:.2} ms  wall {serve_wall:.2}s",
+        serve_shed_rate * 100.0,
+        serve_ttft.p50 * 1e3,
+        serve_ttft.p99 * 1e3,
+        serve_tpot.p50 * 1e3,
+        serve_tpot.p99 * 1e3,
+    );
+    println!("{}", RouterSummary::from_shards(&shard_final).render());
+
     let json = Json::obj()
         .field("bench", Json::str("engine"))
         .field("batch", Json::num(16))
@@ -767,6 +923,25 @@ fn main() {
                 .field("throughput_tok_s", Json::num(summary.throughput_tok_s))
                 .field("ttft_s", latency_json(&summary.ttft))
                 .field("tpot_s", latency_json(&summary.tpot)),
+        )
+        .field(
+            "serving",
+            Json::obj()
+                .field("transport", Json::str("loopback-http"))
+                .field("shards", Json::num(serve_shards as f64))
+                .field("queue_depth", Json::num(serve_depth as f64))
+                .field("rate", Json::num(serve_trace.rate))
+                .field("requests", Json::num(total_requests as f64))
+                .field("completed", Json::num(serve_completed as f64))
+                .field("shed", Json::num(serve_shed as f64))
+                .field("shed_rate", Json::num(serve_shed_rate))
+                .field("ttft_s", latency_json(&serve_ttft))
+                .field("tpot_s", latency_json(&serve_tpot))
+                .field(
+                    "per_shard_received",
+                    Json::arr(shard_final.iter().map(|s| Json::num(s.received as f64))),
+                )
+                .field("wall_s", Json::num(serve_wall)),
         );
     let path = "BENCH_engine.json";
     std::fs::write(path, json.to_string() + "\n").expect("write BENCH_engine.json");

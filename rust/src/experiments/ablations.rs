@@ -1,4 +1,4 @@
-//! Design-choice ablations called out in DESIGN.md §6 (beyond the
+//! Design-choice ablations called out in DESIGN.md §7 (beyond the
 //! paper's own figures):
 //!
 //! A1 — base-floor: lower-capping the adaptive budget at the base-sample

@@ -1,5 +1,5 @@
 //! The experiment harness: one module per paper table/figure (see the
-//! DESIGN.md §6 index), a registry, and the CLI entry point.
+//! DESIGN.md §7 index), a registry, and the CLI entry point.
 //!
 //! Every experiment prints the paper-style rows/series and writes
 //! `results/<id>.{txt,json}`. Absolute numbers differ from the paper

@@ -10,6 +10,8 @@
 //!         [--reuse] [--reuse-max-age A] [--kv-quant int8|f32]
 //!         [--kv-spill PATH]
 //!                                                         drive the streaming session on a trace
+//!   serve --listen ADDR [--shards N] [--shard-queue-depth D] [engine flags]
+//!                                                         network front-end: stream tokens over HTTP
 //!   info                                                  build/config info
 //!
 //! `serve`, `list` and `info` have a closed flag vocabulary and reject
@@ -41,6 +43,9 @@ const SERVE_KEYS: &[&str] = &[
     "reuse-max-age",
     "kv-quant",
     "kv-spill",
+    "listen",
+    "shards",
+    "shard-queue-depth",
 ];
 
 fn main() {
@@ -90,6 +95,7 @@ fn main() {
             println!("  vattn serve --reuse --reuse-max-age 32        cross-step heavy-hitter reuse");
             println!("  vattn serve --kv-quant int8 --kv-cap-mb 16    verified int8 KV (4x pool capacity)");
             println!("  vattn serve --kv-spill /tmp/kv.spill --kv-cap-mb 8  spill-to-disk cold tier (no preemption replays)");
+            println!("  vattn serve --listen 127.0.0.1:8044 --shards 4      HTTP front-end (sharded, streaming)");
         }
     }
 }
@@ -188,6 +194,33 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     if let Some(path) = args.get("kv-spill") {
         builder = builder.kv_spill(path);
     }
+
+    // Network front-end: shard the engine config across N tick-threaded
+    // sessions behind an HTTP listener. Attention mode comes from each
+    // request's JSON body on this path ("mode":"verified", eps, delta),
+    // so the CLI-level --mode only sets the trace-replay default above.
+    if let Some(listen) = args.get("listen") {
+        use vattn::metrics::RouterSummary;
+        use vattn::server::{NetServer, RouterConfig};
+        let shards = args.get_usize("shards", 1);
+        let depth = args.get_usize("shard-queue-depth", 64);
+        let rcfg = RouterConfig::new(builder.build()).shards(shards).queue_depth(depth);
+        let backend = std::sync::Arc::new(Model::new(cfg, seed));
+        let server = NetServer::start(backend, listen, rcfg)?;
+        println!(
+            "listening on http://{} ({shards} shard(s), queue depth {depth}, {workers} worker(s)/shard)",
+            server.addr()
+        );
+        println!("routes: POST /v1/generate · DELETE /v1/requests/{{id}} · GET /v1/stats · GET /healthz");
+        println!("press Enter (or close stdin) to drain and exit");
+        let mut line = String::new();
+        let _ = std::io::stdin().read_line(&mut line);
+        println!("draining shards...");
+        let final_stats = server.shutdown();
+        println!("{}", RouterSummary::from_shards(&final_stats).render());
+        return Ok(());
+    }
+
     let engine = Engine::new(Model::new(cfg, seed), builder.build());
     let mut session: Session<Model> = engine.session();
 

@@ -9,7 +9,7 @@ use std::collections::BTreeMap;
 use crate::kvcache::KvDtype;
 use crate::metrics::{f, histogram, mean, percentile, Table};
 use crate::policies::ReuseStats;
-use crate::server::{Event, RequestId, RequestResult, SessionStats};
+use crate::server::{Event, RequestId, RequestResult, SessionStats, ShardStats};
 
 /// Percentile summary of one latency distribution (seconds).
 #[derive(Clone, Debug)]
@@ -499,6 +499,98 @@ impl EventLog {
     }
 }
 
+/// Aggregate report over a sharded router run: per-shard request
+/// accounting plus totals and the shed rate. Built from the
+/// [`ShardStats`] the router's shards report at shutdown; printed by
+/// `vattn serve --listen` and written into the `"serving"` block of
+/// `BENCH_engine.json` by `bench_engine`.
+#[derive(Clone, Debug, Default)]
+pub struct RouterSummary {
+    pub shards: usize,
+    /// Requests routed to any shard (accepted + shed + rejected).
+    pub received: u64,
+    pub submitted: u64,
+    /// Load-shed rejections (queue at depth; HTTP 429).
+    pub shed: u64,
+    /// Synchronous validation rejections (never queued).
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub cancelled: u64,
+    /// Auto-cancels after a client disconnect.
+    pub disconnected: u64,
+    pub per_shard: Vec<ShardStats>,
+}
+
+impl RouterSummary {
+    pub fn from_shards(stats: &[ShardStats]) -> RouterSummary {
+        RouterSummary {
+            shards: stats.len(),
+            received: stats.iter().map(|s| s.received).sum(),
+            submitted: stats.iter().map(|s| s.submitted).sum(),
+            shed: stats.iter().map(|s| s.shed).sum(),
+            rejected: stats.iter().map(|s| s.rejected).sum(),
+            completed: stats.iter().map(|s| s.completed).sum(),
+            failed: stats.iter().map(|s| s.failed).sum(),
+            cancelled: stats.iter().map(|s| s.cancelled).sum(),
+            disconnected: stats.iter().map(|s| s.disconnected).sum(),
+            per_shard: stats.to_vec(),
+        }
+    }
+
+    /// Fraction of routed requests shed by bounded admission.
+    pub fn shed_rate(&self) -> f64 {
+        if self.received > 0 {
+            self.shed as f64 / self.received as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Per-shard table plus a totals row.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "router",
+            &[
+                "shard",
+                "received",
+                "accepted",
+                "shed",
+                "rejected",
+                "completed",
+                "failed",
+                "cancelled",
+                "disconnects",
+            ],
+        );
+        for s in &self.per_shard {
+            t.row(vec![
+                s.shard.to_string(),
+                s.received.to_string(),
+                s.submitted.to_string(),
+                s.shed.to_string(),
+                s.rejected.to_string(),
+                s.completed.to_string(),
+                s.failed.to_string(),
+                s.cancelled.to_string(),
+                s.disconnected.to_string(),
+            ]);
+        }
+        t.row(vec![
+            "total".to_string(),
+            self.received.to_string(),
+            self.submitted.to_string(),
+            format!("{} ({:.1}%)", self.shed, self.shed_rate() * 100.0),
+            self.rejected.to_string(),
+            self.completed.to_string(),
+            self.failed.to_string(),
+            self.cancelled.to_string(),
+            self.disconnected.to_string(),
+        ]);
+        t.render()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -691,5 +783,33 @@ mod tests {
         assert!(log.timeline(4).unwrap().rejected);
         assert!(log.tpot_samples().is_empty());
         assert_eq!(log.tokens(), 1);
+    }
+
+    #[test]
+    fn router_summary_aggregates_and_renders() {
+        let a = ShardStats {
+            shard: 0,
+            received: 10,
+            submitted: 7,
+            shed: 2,
+            rejected: 1,
+            completed: 6,
+            failed: 0,
+            cancelled: 1,
+            disconnected: 0,
+            ..ShardStats::default()
+        };
+        let b = ShardStats { shard: 1, received: 4, submitted: 4, completed: 4, ..ShardStats::default() };
+        let s = RouterSummary::from_shards(&[a, b]);
+        assert_eq!(s.shards, 2);
+        assert_eq!(s.received, 14);
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.completed, 10);
+        assert!((s.shed_rate() - 2.0 / 14.0).abs() < 1e-12);
+        let out = s.render();
+        assert!(out.contains("total"));
+        assert!(out.contains("14"));
+        // Empty router: shed rate degrades to zero, not NaN.
+        assert_eq!(RouterSummary::from_shards(&[]).shed_rate(), 0.0);
     }
 }

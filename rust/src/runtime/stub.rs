@@ -11,7 +11,7 @@ use crate::kvcache::KvCache;
 use crate::model::{ModelConfig, StepOut, Weights};
 
 const NO_PJRT: &str = "built without the `pjrt` feature — rebuild with `--features pjrt` \
-                       (requires a local `xla` crate and xla_extension; see DESIGN.md §7)";
+                       (requires a local `xla` crate and xla_extension; see DESIGN.md §8)";
 
 /// Placeholder for a device-resident buffer.
 pub struct PjrtBuffer;

@@ -1,0 +1,493 @@
+//! Hand-rolled HTTP/1.1 framing for the network front-end. The build is
+//! offline (no hyper/axum), so this implements exactly the subset
+//! [`crate::server::net`] speaks: request-line + header parsing with
+//! `Content-Length` bodies on the way in, fixed-length or
+//! chunked-transfer responses on the way out. No pipelining, no
+//! `Transfer-Encoding` on requests, no HTTP/2 — clients that need more
+//! belong behind a real proxy.
+
+use std::io::{self, Read, Write};
+
+/// Largest accepted request head (request line + headers).
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Largest accepted request body. Generous for token-id prompts: a
+/// 128k-token prompt serializes to well under 1 MiB of JSON digits.
+pub const MAX_BODY_BYTES: usize = 8 * 1024 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    /// Path as sent (query strings are not split off; the API has none).
+    pub path: String,
+    /// Header (name, value) pairs; names lower-cased at parse time.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup (name must be given lower-case).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// True when the client asked to close the connection after this
+    /// exchange (HTTP/1.1 defaults to keep-alive).
+    pub fn wants_close(&self) -> bool {
+        self.header("connection").map(|v| v.eq_ignore_ascii_case("close")).unwrap_or(false)
+    }
+}
+
+/// Read and parse one request off the stream.
+///
+/// Returns `Ok(None)` on a clean close: EOF before any request bytes,
+/// or the reader giving up while idle. `keep_waiting(have_partial)` is
+/// consulted whenever the underlying read times out (`WouldBlock` /
+/// `TimedOut` on a socket with a read timeout): return `false` to stop
+/// waiting — the connection handler uses this to poll a shutdown flag
+/// between keep-alive requests without holding the accept loop open
+/// forever.
+pub fn read_request<R: Read>(
+    r: &mut R,
+    mut keep_waiting: impl FnMut(bool) -> bool,
+) -> io::Result<Option<Request>> {
+    // ── head: accumulate until the blank line ──
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 4096];
+    let head_end = loop {
+        if let Some(end) = find_head_end(&buf) {
+            break end;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("request head exceeds {MAX_HEAD_BYTES} bytes"),
+            ));
+        }
+        match r.read(&mut chunk) {
+            Ok(0) => {
+                if buf.is_empty() {
+                    return Ok(None); // clean close between requests
+                }
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-request-head",
+                ));
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                if !keep_waiting(!buf.is_empty()) {
+                    return Ok(None);
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    };
+
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "non-utf8 request head"))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1.") {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("malformed request line '{request_line}'"),
+        ));
+    }
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line.split_once(':').ok_or_else(|| {
+            io::Error::new(io::ErrorKind::InvalidData, format!("malformed header '{line}'"))
+        })?;
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+
+    // ── body: exactly Content-Length bytes (0 when absent) ──
+    let content_len = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .map(|(_, v)| {
+            v.parse::<usize>().map_err(|_| {
+                io::Error::new(io::ErrorKind::InvalidData, format!("bad content-length '{v}'"))
+            })
+        })
+        .transpose()?
+        .unwrap_or(0);
+    if content_len > MAX_BODY_BYTES {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("request body of {content_len} bytes exceeds {MAX_BODY_BYTES}"),
+        ));
+    }
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_len {
+        match r.read(&mut chunk) {
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-request-body",
+                ))
+            }
+            Ok(n) => body.extend_from_slice(&chunk[..n]),
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                // Mid-body stalls keep waiting: the head already
+                // committed the client to sending `content_len` bytes.
+                if !keep_waiting(true) {
+                    return Ok(None);
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    body.truncate(content_len); // no pipelining: drop any excess bytes
+    Ok(Some(Request { method, path, headers, body }))
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Canonical reason phrase for the status codes this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete fixed-length response (status + headers + body).
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+) -> io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n",
+        reason(status),
+        body.len()
+    );
+    for (k, v) in extra_headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Streaming response writer: `Transfer-Encoding: chunked`, one flush
+/// per chunk so each token reaches the client as soon as the scheduler
+/// emits it. Dropping without [`ChunkedWriter::finish`] leaves the
+/// stream unterminated — exactly what a client should see when its
+/// request died mid-flight.
+pub struct ChunkedWriter<W: Write> {
+    w: W,
+}
+
+impl<W: Write> ChunkedWriter<W> {
+    /// Send the status line + headers and switch to chunked framing.
+    pub fn start(
+        mut w: W,
+        status: u16,
+        content_type: &str,
+        extra_headers: &[(&str, &str)],
+    ) -> io::Result<ChunkedWriter<W>> {
+        let mut head = format!(
+            "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nTransfer-Encoding: chunked\r\n",
+            reason(status)
+        );
+        for (k, v) in extra_headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        head.push_str("\r\n");
+        w.write_all(head.as_bytes())?;
+        w.flush()?;
+        Ok(ChunkedWriter { w })
+    }
+
+    /// Write one chunk (empty input is skipped: a zero-length chunk is
+    /// the terminator in this framing).
+    pub fn chunk(&mut self, data: &[u8]) -> io::Result<()> {
+        if data.is_empty() {
+            return Ok(());
+        }
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data)?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
+
+    /// Terminate the stream (`0\r\n\r\n`).
+    pub fn finish(mut self) -> io::Result<()> {
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+/// Client-side helper for the loopback tests/bench: read one full
+/// response off the stream, decoding chunked framing when present.
+/// Returns (status, headers, body). Requires the server to either send
+/// `Content-Length` or chunked framing (this server always does one or
+/// the other).
+pub fn read_response<R: Read>(r: &mut R) -> io::Result<(u16, Vec<(String, String)>, Vec<u8>)> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 4096];
+    let head_end = loop {
+        if let Some(end) = find_head_end(&buf) {
+            break end;
+        }
+        match r.read(&mut chunk) {
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed before response head",
+                ))
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    };
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "non-utf8 response head"))?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let status: u16 = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| {
+            io::Error::new(io::ErrorKind::InvalidData, format!("bad status line '{status_line}'"))
+        })?;
+    let mut headers = Vec::new();
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+    }
+    let mut rest = buf[head_end + 4..].to_vec();
+    let mut read_more = |rest: &mut Vec<u8>| -> io::Result<bool> {
+        match r.read(&mut chunk) {
+            Ok(0) => Ok(false),
+            Ok(n) => {
+                rest.extend_from_slice(&chunk[..n]);
+                Ok(true)
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => Ok(true),
+            Err(e) => Err(e),
+        }
+    };
+    let chunked = headers
+        .iter()
+        .any(|(k, v)| k == "transfer-encoding" && v.eq_ignore_ascii_case("chunked"));
+    if chunked {
+        // Decode chunks until the zero-length terminator.
+        let mut body = Vec::new();
+        let mut pos = 0usize;
+        loop {
+            // chunk-size line
+            let line_end = loop {
+                if let Some(off) = rest[pos..].windows(2).position(|w| w == b"\r\n") {
+                    break pos + off;
+                }
+                if !read_more(&mut rest)? {
+                    return Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "connection closed mid-chunk-size",
+                    ));
+                }
+            };
+            let size_str = std::str::from_utf8(&rest[pos..line_end])
+                .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "non-utf8 chunk size"))?;
+            let size = usize::from_str_radix(size_str.trim(), 16).map_err(|_| {
+                io::Error::new(io::ErrorKind::InvalidData, format!("bad chunk size '{size_str}'"))
+            })?;
+            let data_start = line_end + 2;
+            while rest.len() < data_start + size + 2 {
+                if !read_more(&mut rest)? {
+                    return Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "connection closed mid-chunk",
+                    ));
+                }
+            }
+            if size == 0 {
+                return Ok((status, headers, body));
+            }
+            body.extend_from_slice(&rest[data_start..data_start + size]);
+            pos = data_start + size + 2; // skip the chunk's trailing CRLF
+        }
+    }
+    let content_len = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .and_then(|(_, v)| v.parse::<usize>().ok())
+        .unwrap_or(0);
+    while rest.len() < content_len {
+        if !read_more(&mut rest)? {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "connection closed mid-response-body",
+            ));
+        }
+    }
+    rest.truncate(content_len);
+    Ok((status, headers, rest))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 11\r\nContent-Type: application/json\r\n\r\n{\"a\":[1,2]}";
+        let req = read_request(&mut Cursor::new(&raw[..]), |_| true).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.header("content-type"), Some("application/json"));
+        assert_eq!(req.body, b"{\"a\":[1,2]}");
+        assert!(!req.wants_close());
+    }
+
+    #[test]
+    fn parses_get_without_body_and_connection_close() {
+        let raw = b"GET /v1/stats HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let req = read_request(&mut Cursor::new(&raw[..]), |_| true).unwrap().unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+        assert!(req.wants_close());
+    }
+
+    #[test]
+    fn clean_eof_is_none_but_truncation_errors() {
+        let req = read_request(&mut Cursor::new(&b""[..]), |_| true).unwrap();
+        assert!(req.is_none());
+        let err = read_request(&mut Cursor::new(&b"GET / HT"[..]), |_| true).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort";
+        let err = read_request(&mut Cursor::new(&raw[..]), |_| true).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn rejects_malformed_heads() {
+        for raw in [
+            &b"NOT-HTTP\r\n\r\n"[..],
+            &b"GET / SPDY/3\r\n\r\n"[..],
+            &b"GET / HTTP/1.1\r\nbroken header line\r\n\r\n"[..],
+            &b"POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n"[..],
+        ] {
+            let err = read_request(&mut Cursor::new(raw), |_| true).unwrap_err();
+            assert_eq!(err.kind(), io::ErrorKind::InvalidData, "{raw:?}");
+        }
+    }
+
+    #[test]
+    fn oversized_body_is_rejected_up_front() {
+        let raw = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        let err = read_request(&mut Cursor::new(raw.as_bytes()), |_| true).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn fixed_response_roundtrips() {
+        let mut out = Vec::new();
+        write_response(&mut out, 429, "application/json", &[("Retry-After", "1")], b"{}")
+            .unwrap();
+        let (status, headers, body) = read_response(&mut Cursor::new(&out[..])).unwrap();
+        assert_eq!(status, 429);
+        assert_eq!(body, b"{}");
+        assert!(headers.iter().any(|(k, v)| k == "retry-after" && v == "1"));
+        assert!(String::from_utf8_lossy(&out).contains("429 Too Many Requests"));
+    }
+
+    #[test]
+    fn chunked_response_roundtrips() {
+        let mut out = Vec::new();
+        let mut cw = ChunkedWriter::start(&mut out, 200, "application/jsonl", &[]).unwrap();
+        cw.chunk(b"{\"id\":0}\n").unwrap();
+        cw.chunk(b"").unwrap(); // skipped, not a terminator
+        cw.chunk(b"{\"token\":17}\n").unwrap();
+        cw.finish().unwrap();
+        let (status, headers, body) = read_response(&mut Cursor::new(&out[..])).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"{\"id\":0}\n{\"token\":17}\n");
+        assert!(headers
+            .iter()
+            .any(|(k, v)| k == "transfer-encoding" && v == "chunked"));
+    }
+
+    /// A reader that yields its script one fragment at a time with
+    /// simulated timeouts in between — the keep-alive poll path.
+    struct Stuttering<'a> {
+        parts: Vec<&'a [u8]>,
+        next: usize,
+        timeout_first: bool,
+    }
+
+    impl<'a> Read for Stuttering<'a> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            if self.timeout_first {
+                self.timeout_first = false;
+                return Err(io::Error::new(io::ErrorKind::WouldBlock, "stall"));
+            }
+            if self.next >= self.parts.len() {
+                return Ok(0);
+            }
+            self.timeout_first = true;
+            let p = self.parts[self.next];
+            self.next += 1;
+            buf[..p.len()].copy_from_slice(p);
+            Ok(p.len())
+        }
+    }
+
+    #[test]
+    fn survives_fragmented_reads_with_timeouts() {
+        let mut r = Stuttering {
+            parts: vec![b"POST / HT", b"TP/1.1\r\nContent-Length", b": 4\r\n\r\nbo", b"dy!"],
+            next: 0,
+            timeout_first: true,
+        };
+        let mut waits = 0;
+        let req = read_request(&mut r, |partial| {
+            waits += 1;
+            assert!(waits == 1 || partial, "after the first fragment we are mid-request");
+            true
+        })
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.body, b"body");
+        assert!(waits >= 3);
+    }
+
+    #[test]
+    fn idle_timeout_gives_clean_none() {
+        let mut r = Stuttering { parts: vec![], next: 0, timeout_first: true };
+        let req = read_request(&mut r, |partial| {
+            assert!(!partial);
+            false // handler saw the shutdown flag
+        })
+        .unwrap();
+        assert!(req.is_none());
+    }
+}

@@ -26,12 +26,17 @@
 //!   end, kept for experiments, benches and tests.
 
 pub mod engine;
+pub mod http;
+pub mod net;
+pub mod router;
 pub mod session;
 
 pub use engine::{
     AttentionMode, Backend, BatchPolicyFactory, Engine, EngineConfig, EngineConfigBuilder,
     SelectFn,
 };
+pub use net::NetServer;
+pub use router::{ErrorInfo, ErrorKind, GlobalId, Router, RouterConfig, ShardStats, StreamEvent};
 pub use session::{
     AttentionOpt, EngineError, Event, GenOptions, PolicyFactory, RequestId, Session, SessionStats,
     SubmitRequest,

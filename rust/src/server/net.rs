@@ -1,0 +1,465 @@
+//! Network serving front-end: a dependency-free streaming HTTP server
+//! over [`std::net::TcpListener`] whose routes map onto the session
+//! API through the sharded [`Router`].
+//!
+//! Routes:
+//!
+//! * `POST /v1/generate` — submit a request; the response is a chunked
+//!   `application/x-ndjson` stream: one `{"id":N}` hello line, one
+//!   `{"step":S,"token":T}` line per generated token, and a terminal
+//!   `{"done":true,"n":K}` (or error / cancelled) line. Validation and
+//!   load-shed failures never commit a 200: the first [`StreamEvent`]
+//!   decides the status line (429 + `Retry-After` for retriable
+//!   capacity rejections, 400 for request defects, 503 while
+//!   draining).
+//! * `DELETE /v1/requests/{id}` — cancel by global id (200 / 404).
+//! * `GET /v1/stats` — per-shard and aggregate counters plus a
+//!   [`PagingSummary`] per shard, as JSON.
+//! * `GET /healthz` — liveness probe.
+//!
+//! Token chunks contain no timestamps, so a request's streamed body is
+//! a deterministic byte sequence — the loopback determinism test
+//! compares it against a direct [`crate::server::Session`] run.
+//!
+//! Client disconnects are detected at the first failed chunk write;
+//! the handler then cancels the request through the router so its KV
+//! lease (and any cold-tier slots) return immediately, rather than
+//! waiting for the stream to finish into a dead socket.
+
+use std::io::{self, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::metrics::PagingSummary;
+use crate::server::engine::Backend;
+use crate::server::http::{read_request, write_response, ChunkedWriter, Request};
+use crate::server::router::{ErrorInfo, GlobalId, Router, RouterConfig, ShardStats, StreamEvent};
+use crate::server::session::GenOptions;
+use crate::util::json::Json;
+
+/// Handle to a running server: the bound address, the router, the
+/// accept thread, and every live connection handler. Dropping the
+/// handle shuts the server down gracefully ([`NetServer::shutdown`]).
+pub struct NetServer {
+    addr: SocketAddr,
+    router: Arc<Router>,
+    stop: Arc<AtomicBool>,
+    accept: Mutex<Option<JoinHandle<()>>>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Bind `listen` (e.g. `"127.0.0.1:0"` for an ephemeral port),
+    /// build the sharded router, and start accepting connections.
+    pub fn start<B: Backend + Send + Sync + 'static>(
+        backend: Arc<B>,
+        listen: &str,
+        cfg: RouterConfig,
+    ) -> io::Result<NetServer> {
+        let listener = TcpListener::bind(listen)?;
+        let addr = listener.local_addr()?;
+        // Non-blocking accept so the loop can poll the stop flag.
+        listener.set_nonblocking(true)?;
+        let router = Arc::new(Router::new(backend, cfg));
+        let stop = Arc::new(AtomicBool::new(false));
+        let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let router = Arc::clone(&router);
+            let stop = Arc::clone(&stop);
+            let handlers = Arc::clone(&handlers);
+            std::thread::Builder::new()
+                .name("vattn-accept".into())
+                .spawn(move || accept_loop(listener, router, stop, handlers))
+                .map_err(|e| io::Error::new(io::ErrorKind::Other, e))?
+        };
+        Ok(NetServer { addr, router, stop, accept: Mutex::new(Some(accept)), handlers })
+    }
+
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The router behind the listener (tests inspect shard state).
+    pub fn router(&self) -> &Arc<Router> {
+        &self.router
+    }
+
+    /// Point-in-time per-shard stats.
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.router.shard_stats()
+    }
+
+    /// Graceful shutdown: stop accepting, drain every shard (in-flight
+    /// requests finish streaming; new ones get 503), join all handler
+    /// threads, and return each shard's final [`ShardStats`].
+    /// Idempotent.
+    pub fn shutdown(&self) -> Vec<ShardStats> {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.lock().expect("accept lock").take() {
+            let _ = h.join();
+        }
+        // Drain shards first: handlers blocked on stream events need
+        // the terminal events the drain produces before they can exit.
+        let stats = self.router.shutdown();
+        let handles: Vec<JoinHandle<()>> =
+            self.handlers.lock().expect("handlers lock").drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        stats
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    router: Arc<Router>,
+    stop: Arc<AtomicBool>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    let mut next_conn = 0u64;
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let router = Arc::clone(&router);
+                let stop = Arc::clone(&stop);
+                // Small stacks: the bench opens 1000+ concurrent
+                // connections and handlers only parse + format.
+                let spawned = std::thread::Builder::new()
+                    .name(format!("vattn-conn-{next_conn}"))
+                    .stack_size(256 * 1024)
+                    .spawn(move || {
+                        let _ = handle_connection(stream, &router, &stop);
+                    });
+                next_conn += 1;
+                if let Ok(h) = spawned {
+                    handlers.lock().expect("handlers lock").push(h);
+                }
+            }
+            // No pending connection (or transient error): poll again.
+            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+        }
+    }
+}
+
+/// Serve keep-alive requests on one connection until the client closes
+/// it, asks for `Connection: close`, or the server is stopping.
+fn handle_connection(stream: TcpStream, router: &Router, stop: &AtomicBool) -> io::Result<()> {
+    let _ = stream.set_nodelay(true);
+    // Short read timeout so idle keep-alive connections notice the
+    // stop flag; a bounded write timeout so a stalled client reads as
+    // a disconnect instead of pinning the handler forever.
+    stream.set_read_timeout(Some(Duration::from_millis(50)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+    loop {
+        let mut reader = &stream;
+        let req =
+            match read_request(&mut reader, |partial| partial || !stop.load(Ordering::SeqCst))? {
+                Some(req) => req,
+                None => return Ok(()), // clean close or stopping while idle
+            };
+        let close = req.wants_close();
+        let mut writer = &stream;
+        route_request(&req, &mut writer, router)?;
+        if close {
+            return Ok(());
+        }
+    }
+}
+
+fn route_request<W: Write>(req: &Request, w: &mut W, router: &Router) -> io::Result<()> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/generate") => handle_generate(req, w, router),
+        ("DELETE", path) if path.starts_with("/v1/requests/") => handle_cancel(path, w, router),
+        ("GET", "/v1/stats") => {
+            let body = stats_json(&router.shard_stats()).to_string();
+            write_response(w, 200, "application/json", &[], body.as_bytes())
+        }
+        ("GET", "/healthz") => write_response(w, 200, "application/json", &[], b"{\"ok\":true}"),
+        _ => error_response(w, 404, "not_found", "no such route", false),
+    }
+}
+
+fn handle_generate<W: Write>(req: &Request, w: &mut W, router: &Router) -> io::Result<()> {
+    let body = String::from_utf8_lossy(&req.body);
+    let (prompt, opts) = match parse_generate(&body) {
+        Ok(parsed) => parsed,
+        Err(msg) => return error_response(w, 400, "bad_request", &msg, false),
+    };
+    let (id, rx) = router.submit(prompt, opts);
+    // The first event decides the status line; nothing is written to
+    // the socket until the shard accepts or rejects.
+    match rx.recv() {
+        Ok(StreamEvent::Accepted { .. }) => {}
+        Ok(StreamEvent::Rejected { error, .. }) => return rejection_response(w, &error),
+        Ok(_) | Err(_) => {
+            return error_response(w, 500, "backend_error", "stream broke before acceptance", false)
+        }
+    }
+    let mut cw = ChunkedWriter::start(&mut *w, 200, "application/x-ndjson", &[])?;
+    if let Err(e) = cw.chunk(format!("{{\"id\":{id}}}\n").as_bytes()) {
+        router.disconnect(id);
+        return Err(e);
+    }
+    loop {
+        match rx.recv() {
+            Ok(StreamEvent::Token { step, token, .. }) => {
+                let line = format!("{{\"step\":{step},\"token\":{token}}}\n");
+                if let Err(e) = cw.chunk(line.as_bytes()) {
+                    // Client hung up mid-stream: cancel so the KV
+                    // lease and any cold-tier slots return now.
+                    router.disconnect(id);
+                    return Err(e);
+                }
+            }
+            Ok(StreamEvent::Finished { result, .. }) => {
+                let line = format!("{{\"done\":true,\"n\":{}}}\n", result.tokens.len());
+                let _ = cw.chunk(line.as_bytes());
+                return cw.finish();
+            }
+            Ok(StreamEvent::Failed { error, .. }) => {
+                let line = Json::obj()
+                    .field("error", Json::str(&*error.message))
+                    .field("kind", Json::str(error.kind.name()))
+                    .to_string();
+                let _ = cw.chunk(format!("{line}\n").as_bytes());
+                return cw.finish();
+            }
+            Ok(StreamEvent::Cancelled { .. }) => {
+                let _ = cw.chunk(b"{\"cancelled\":true}\n");
+                return cw.finish();
+            }
+            Ok(StreamEvent::Accepted { .. }) | Ok(StreamEvent::Rejected { .. }) => {}
+            Err(_) => return cw.finish(), // shard died; end the stream
+        }
+    }
+}
+
+fn handle_cancel<W: Write>(path: &str, w: &mut W, router: &Router) -> io::Result<()> {
+    let id_str = &path["/v1/requests/".len()..];
+    let id: GlobalId = match id_str.parse() {
+        Ok(v) => v,
+        Err(_) => {
+            return error_response(w, 400, "bad_request", "request id must be an integer", false)
+        }
+    };
+    if router.cancel(id) {
+        let body = format!("{{\"cancelled\":{id}}}");
+        write_response(w, 200, "application/json", &[], body.as_bytes())
+    } else {
+        error_response(w, 404, "unknown_request", &format!("unknown request {id}"), false)
+    }
+}
+
+/// Parse a `POST /v1/generate` body:
+/// `{"prompt":[u32...], "gen_len":N, "seed":S?, "mode":"dense"|"verified"|"verified_reuse", "eps":E?, "delta":D?}`.
+fn parse_generate(body: &str) -> Result<(Vec<u32>, GenOptions), String> {
+    let j = Json::parse(body).map_err(|e| format!("invalid JSON: {e}"))?;
+    let arr = j
+        .get("prompt")
+        .ok_or("missing field: prompt")?
+        .as_arr()
+        .ok_or("prompt must be an array of token ids")?;
+    if arr.is_empty() {
+        return Err("prompt must be non-empty".into());
+    }
+    let mut prompt = Vec::with_capacity(arr.len());
+    for t in arr {
+        let v = t.as_u64().ok_or("prompt tokens must be non-negative integers")?;
+        if v > u32::MAX as u64 {
+            return Err("prompt token out of u32 range".into());
+        }
+        prompt.push(v as u32);
+    }
+    let gen_len = match j.get("gen_len") {
+        Some(v) => v.as_usize().ok_or("gen_len must be a non-negative integer")?,
+        None => 16,
+    };
+    let mut opts = GenOptions::new(gen_len);
+    if let Some(seed) = j.get("seed") {
+        opts = opts.seed(seed.as_u64().ok_or("seed must be a non-negative integer")?);
+    }
+    let eps = match j.get("eps") {
+        Some(v) => v.as_f64().ok_or("eps must be a number")?,
+        None => 0.05,
+    };
+    let delta = match j.get("delta") {
+        Some(v) => v.as_f64().ok_or("delta must be a number")?,
+        None => 0.05,
+    };
+    match j.get("mode").map(|m| m.as_str().ok_or("mode must be a string")).transpose()? {
+        None | Some("dense") => {}
+        Some("verified") => opts = opts.verified(eps, delta),
+        Some("verified_reuse") => opts = opts.verified_reuse(eps, delta),
+        Some(other) => return Err(format!("unknown mode {other:?}")),
+    }
+    Ok((prompt, opts))
+}
+
+fn error_body(kind: &str, message: &str, retriable: bool) -> Vec<u8> {
+    Json::obj()
+        .field(
+            "error",
+            Json::obj()
+                .field("kind", Json::str(kind))
+                .field("message", Json::str(message))
+                .field("retriable", Json::Bool(retriable)),
+        )
+        .to_string()
+        .into_bytes()
+}
+
+fn error_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    kind: &str,
+    message: &str,
+    retriable: bool,
+) -> io::Result<()> {
+    let body = error_body(kind, message, retriable);
+    let headers: &[(&str, &str)] = if retriable { &[("Retry-After", "1")] } else { &[] };
+    write_response(w, status, "application/json", headers, &body)
+}
+
+/// Map a typed shard rejection onto its HTTP status (429/400/404/503,
+/// with `Retry-After` on retriable capacity rejections).
+fn rejection_response<W: Write>(w: &mut W, error: &ErrorInfo) -> io::Result<()> {
+    let retriable = error.kind.retriable();
+    let body = error_body(error.kind.name(), &error.message, retriable);
+    let headers: &[(&str, &str)] = if retriable { &[("Retry-After", "1")] } else { &[] };
+    write_response(w, error.kind.http_status(), "application/json", headers, &body)
+}
+
+/// `GET /v1/stats` body: per-shard counters + paging summary, plus the
+/// aggregate across shards.
+fn stats_json(stats: &[ShardStats]) -> Json {
+    let received: u64 = stats.iter().map(|s| s.received).sum();
+    let shed: u64 = stats.iter().map(|s| s.shed).sum();
+    let agg = Json::obj()
+        .field("received", Json::num(received as f64))
+        .field("submitted", Json::num(stats.iter().map(|s| s.submitted).sum::<u64>() as f64))
+        .field("shed", Json::num(shed as f64))
+        .field("rejected", Json::num(stats.iter().map(|s| s.rejected).sum::<u64>() as f64))
+        .field("completed", Json::num(stats.iter().map(|s| s.completed).sum::<u64>() as f64))
+        .field("failed", Json::num(stats.iter().map(|s| s.failed).sum::<u64>() as f64))
+        .field("cancelled", Json::num(stats.iter().map(|s| s.cancelled).sum::<u64>() as f64))
+        .field(
+            "disconnected",
+            Json::num(stats.iter().map(|s| s.disconnected).sum::<u64>() as f64),
+        )
+        .field("outstanding", Json::num(stats.iter().map(|s| s.outstanding).sum::<usize>() as f64))
+        .field(
+            "shed_rate",
+            Json::num(if received > 0 { shed as f64 / received as f64 } else { 0.0 }),
+        );
+    Json::obj().field("shards", Json::arr(stats.iter().map(shard_json))).field("aggregate", agg)
+}
+
+fn shard_json(s: &ShardStats) -> Json {
+    let paging = PagingSummary::from(&s.session);
+    Json::obj()
+        .field("shard", Json::num(s.shard as f64))
+        .field("received", Json::num(s.received as f64))
+        .field("submitted", Json::num(s.submitted as f64))
+        .field("shed", Json::num(s.shed as f64))
+        .field("rejected", Json::num(s.rejected as f64))
+        .field("completed", Json::num(s.completed as f64))
+        .field("failed", Json::num(s.failed as f64))
+        .field("cancelled", Json::num(s.cancelled as f64))
+        .field("disconnected", Json::num(s.disconnected as f64))
+        .field("outstanding", Json::num(s.outstanding as f64))
+        .field("waiting", Json::num(s.waiting as f64))
+        .field("active", Json::num(s.active as f64))
+        .field("kv_blocks_in_use", Json::num(s.kv_blocks_in_use as f64))
+        .field("prefix_blocks_held", Json::num(s.prefix_blocks_held as f64))
+        .field(
+            "spill_live_blocks",
+            match s.spill_live_blocks {
+                Some(n) => Json::num(n as f64),
+                None => Json::Null,
+            },
+        )
+        .field(
+            "paging",
+            Json::obj()
+                .field("prefix_hit_rate", Json::num(paging.prefix_hit_rate))
+                .field("preemptions", Json::num(paging.preemptions as f64))
+                .field("preemption_replays", Json::num(paging.preemption_replays as f64))
+                .field("spill_out_bytes", Json::num(paging.spill_out_bytes as f64))
+                .field("swap_in_bytes", Json::num(paging.swap_in_bytes as f64))
+                .field("peak_blocks_in_use", Json::num(paging.peak_blocks_in_use as f64))
+                .field("kv_dtype", Json::str(paging.kv_dtype.name())),
+        )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::session::AttentionOpt;
+
+    #[test]
+    fn parse_generate_accepts_minimal_and_full_bodies() {
+        let (prompt, opts) = parse_generate(r#"{"prompt":[1,2,3]}"#).expect("minimal");
+        assert_eq!(prompt, vec![1, 2, 3]);
+        assert_eq!(opts.gen_len, 16);
+        assert!(opts.seed.is_none());
+
+        let (prompt, opts) = parse_generate(
+            r#"{"prompt":[5,6],"gen_len":4,"seed":9,"mode":"verified","eps":0.1,"delta":0.2}"#,
+        )
+        .expect("full");
+        assert_eq!(prompt, vec![5, 6]);
+        assert_eq!(opts.gen_len, 4);
+        assert_eq!(opts.seed, Some(9));
+        assert!(!matches!(opts.attention, AttentionOpt::Inherit));
+    }
+
+    #[test]
+    fn parse_generate_rejects_defects() {
+        assert!(parse_generate("").is_err());
+        assert!(parse_generate("{}").is_err());
+        assert!(parse_generate(r#"{"prompt":[]}"#).is_err());
+        assert!(parse_generate(r#"{"prompt":[1.5]}"#).is_err());
+        assert!(parse_generate(r#"{"prompt":[-3]}"#).is_err());
+        assert!(parse_generate(r#"{"prompt":[1],"gen_len":-2}"#).is_err());
+        assert!(parse_generate(r#"{"prompt":[1],"mode":"warp"}"#).is_err());
+        assert!(parse_generate(r#"{"prompt":[4294967296]}"#).is_err());
+    }
+
+    #[test]
+    fn stats_json_aggregates_shard_counters() {
+        let mut a = ShardStats { shard: 0, ..ShardStats::default() };
+        a.received = 10;
+        a.shed = 2;
+        a.completed = 8;
+        let mut b = ShardStats { shard: 1, ..ShardStats::default() };
+        b.received = 6;
+        b.completed = 6;
+        let j = stats_json(&[a, b]);
+        let parsed = Json::parse(&j.to_string()).expect("roundtrip");
+        let agg = parsed.get("aggregate").expect("aggregate");
+        assert_eq!(agg.get("received").and_then(Json::as_usize), Some(16));
+        assert_eq!(agg.get("shed").and_then(Json::as_usize), Some(2));
+        let rate = agg.get("shed_rate").and_then(Json::as_f64).expect("shed_rate");
+        assert!((rate - 2.0 / 16.0).abs() < 1e-12);
+        assert_eq!(parsed.get("shards").and_then(Json::as_arr).map(|s| s.len()), Some(2));
+    }
+
+    #[test]
+    fn error_body_is_parseable_json() {
+        let body = error_body("shard_queue_full", "shard 3 is full (64 waiting)", true);
+        let parsed = Json::parse(std::str::from_utf8(&body).unwrap()).expect("parse");
+        let err = parsed.get("error").expect("error");
+        assert_eq!(err.get("kind").and_then(Json::as_str), Some("shard_queue_full"));
+        assert_eq!(err.get("retriable").and_then(Json::as_bool), Some(true));
+    }
+}

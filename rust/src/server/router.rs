@@ -1,0 +1,866 @@
+//! Sharded multi-session router behind the network front-end.
+//!
+//! A [`Router`] owns N independent [`Session`]s, each driven by its own
+//! tick thread, and maps incoming requests onto them:
+//!
+//! * **Deterministic routing** — the FNV-1a hash of the prompt's first
+//!   prefix-block of tokens picks the shard, so requests sharing a
+//!   prefix land on the shard whose radix cache already holds it
+//!   (same chaining idiom as `kvcache::prefix`). Prompts shorter than
+//!   one block carry no shareable prefix and fall back to the
+//!   least-loaded shard.
+//! * **Bounded admission** — each shard sheds load once its waiting
+//!   queue reaches the configured depth, replying with a typed
+//!   retriable rejection ([`ErrorKind::ShardQueueFull`], HTTP 429)
+//!   instead of queueing unboundedly.
+//! * **Disconnect-cancel** — when a subscriber's event channel is
+//!   dropped (client hung up), the shard cancels the request on the
+//!   next token so its KV lease and any cold-tier slots are returned.
+//! * **Graceful drain** — [`Router::shutdown`] tells every shard to
+//!   finish in-flight requests (rejecting new ones with
+//!   [`ErrorKind::ShuttingDown`]), persist its prefix radix when a
+//!   spill store is configured, and report final [`ShardStats`].
+//!
+//! Determinism across shard and worker counts: the router assigns each
+//! request a global id and pins it as the RNG seed tag
+//! (`GenOptions::seed`) unless the caller already set one. Because a
+//! request's sample stream is a pure function of (engine seed, seed
+//! tag) and every shard shares the engine seed, the token stream for a
+//! given request is byte-identical whether it is served by 1 shard or
+//! 8, with 1 worker or 8 — the property `tests/net_serving.rs` checks
+//! end-to-end through loopback sockets.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::server::engine::{Backend, EngineConfig};
+use crate::server::session::{
+    EngineError, Event, GenOptions, RequestId, Session, SessionStats, SubmitRequest,
+};
+use crate::server::RequestResult;
+use crate::util::threadpool::ThreadPool;
+
+/// Router-wide request id, unique across shards (and the RNG seed tag
+/// pinned on the request unless the client chose its own).
+pub type GlobalId = u64;
+
+/// Coarse error class crossing the shard-thread boundary.
+/// [`EngineError`] itself is neither `Clone` nor `Send`-friendly to
+/// serialize (it may hold `anyhow` payloads), so shard threads ship
+/// this owned descriptor instead; the HTTP layer maps it to a status.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// The target shard's admission queue is at capacity (load-shed).
+    ShardQueueFull,
+    /// The request can never fit the shard's KV pool.
+    KvCapacityExceeded,
+    /// Per-request KV dtype wider than the byte-capped pool's.
+    KvDtypeWiderThanPool,
+    /// prompt + generation budget exceeds `max_seq_len`.
+    PromptTooLong,
+    /// The id was never submitted, or already finished / cancelled.
+    UnknownRequest,
+    /// The server is draining; retry against a fresh instance.
+    ShuttingDown,
+    /// Block-pool bookkeeping violation — an engine bug.
+    Page,
+    /// The compute backend failed mid-step.
+    Backend,
+}
+
+impl ErrorKind {
+    /// HTTP status the front-end returns for this class.
+    pub fn http_status(self) -> u16 {
+        match self {
+            ErrorKind::ShardQueueFull | ErrorKind::KvCapacityExceeded => 429,
+            ErrorKind::KvDtypeWiderThanPool | ErrorKind::PromptTooLong => 400,
+            ErrorKind::UnknownRequest => 404,
+            ErrorKind::ShuttingDown => 503,
+            ErrorKind::Page | ErrorKind::Backend => 500,
+        }
+    }
+
+    /// Whether the client may retry the identical request and expect it
+    /// to eventually succeed (transient capacity, not a request defect).
+    pub fn retriable(self) -> bool {
+        matches!(
+            self,
+            ErrorKind::ShardQueueFull | ErrorKind::KvCapacityExceeded | ErrorKind::ShuttingDown
+        )
+    }
+
+    /// Stable machine-readable name used in JSON error bodies.
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorKind::ShardQueueFull => "shard_queue_full",
+            ErrorKind::KvCapacityExceeded => "kv_capacity_exceeded",
+            ErrorKind::KvDtypeWiderThanPool => "kv_dtype_wider_than_pool",
+            ErrorKind::PromptTooLong => "prompt_too_long",
+            ErrorKind::UnknownRequest => "unknown_request",
+            ErrorKind::ShuttingDown => "shutting_down",
+            ErrorKind::Page => "page_error",
+            ErrorKind::Backend => "backend_error",
+        }
+    }
+}
+
+/// Owned, clonable error descriptor: class + rendered message.
+#[derive(Clone, Debug)]
+pub struct ErrorInfo {
+    pub kind: ErrorKind,
+    pub message: String,
+}
+
+impl ErrorInfo {
+    pub fn new(kind: ErrorKind, message: impl Into<String>) -> ErrorInfo {
+        ErrorInfo { kind, message: message.into() }
+    }
+}
+
+impl From<&EngineError> for ErrorInfo {
+    fn from(e: &EngineError) -> ErrorInfo {
+        let kind = match e {
+            EngineError::KvCapacityExceeded { .. } => ErrorKind::KvCapacityExceeded,
+            EngineError::KvDtypeWiderThanPool { .. } => ErrorKind::KvDtypeWiderThanPool,
+            EngineError::PromptTooLong { .. } => ErrorKind::PromptTooLong,
+            EngineError::UnknownRequest(_) => ErrorKind::UnknownRequest,
+            EngineError::Page(_) => ErrorKind::Page,
+            EngineError::Backend(_) => ErrorKind::Backend,
+        };
+        ErrorInfo { kind, message: format!("{e}") }
+    }
+}
+
+/// Per-request stream events delivered to the submitter's channel.
+///
+/// Protocol: exactly one of `Accepted` or `Rejected` arrives first.
+/// After `Accepted`, zero or more `Token`s are followed by exactly one
+/// terminal event (`Finished`, `Failed`, or `Cancelled`). The HTTP
+/// handler picks its status line from the first event, so validation
+/// and load-shed never commit a 200.
+#[derive(Debug)]
+pub enum StreamEvent {
+    /// The shard queued the request; streaming will follow.
+    Accepted { id: GlobalId },
+    /// Validation or load-shed rejection before any streaming.
+    Rejected { id: GlobalId, error: ErrorInfo },
+    /// One generated token (`step` counts from 0 per request).
+    Token { id: GlobalId, step: usize, token: u32 },
+    /// Completion record with serving metrics.
+    Finished { id: GlobalId, result: RequestResult },
+    /// The request died after acceptance (e.g. backend failure).
+    Failed { id: GlobalId, error: ErrorInfo },
+    /// The request was cancelled (client request or disconnect).
+    Cancelled { id: GlobalId },
+}
+
+/// Point-in-time counters for one shard, reported by its tick thread.
+#[derive(Clone, Debug, Default)]
+pub struct ShardStats {
+    pub shard: usize,
+    /// Requests routed to this shard (accepted + shed + rejected).
+    pub received: u64,
+    /// Requests accepted into the admission queue.
+    pub submitted: u64,
+    /// Requests shed because the waiting queue was at capacity.
+    pub shed: u64,
+    /// Requests rejected synchronously by validation (never queued).
+    pub rejected: u64,
+    /// Requests that streamed to a `Finished` terminal.
+    pub completed: u64,
+    /// Accepted requests that died mid-flight (backend failure).
+    pub failed: u64,
+    /// Explicit cancels (`DELETE /v1/requests/{id}`).
+    pub cancelled: u64,
+    /// Auto-cancels after the subscriber's channel was dropped.
+    pub disconnected: u64,
+    /// Live requests (waiting + active) at report time.
+    pub outstanding: usize,
+    pub waiting: usize,
+    pub active: usize,
+    pub kv_blocks_in_use: usize,
+    pub prefix_blocks_held: usize,
+    /// Live cold-tier blocks (`None` without a spill store).
+    pub spill_live_blocks: Option<usize>,
+    /// Full engine counters for `GET /v1/stats`.
+    pub session: SessionStats,
+}
+
+/// Router configuration: shard count, per-shard admission depth, and
+/// the [`EngineConfig`] every shard is built from. When the engine
+/// config carries a `kv_spill` path, shard `i` opens `<path>.shard<i>`
+/// (the spill store truncates its region file on open, so shards must
+/// not share one).
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    pub shards: usize,
+    /// Waiting-queue depth per shard at which new arrivals are shed.
+    pub queue_depth: usize,
+    pub engine: EngineConfig,
+}
+
+impl RouterConfig {
+    pub fn new(engine: EngineConfig) -> RouterConfig {
+        RouterConfig { shards: 1, queue_depth: 64, engine }
+    }
+
+    pub fn shards(mut self, n: usize) -> Self {
+        self.shards = n.max(1);
+        self
+    }
+
+    pub fn queue_depth(mut self, d: usize) -> Self {
+        self.queue_depth = d.max(1);
+        self
+    }
+}
+
+enum Command {
+    Submit { global: GlobalId, prompt: Vec<u32>, opts: GenOptions, events: Sender<StreamEvent> },
+    /// `disconnect` distinguishes client hang-ups (counted as
+    /// `disconnected`) from explicit API cancels (`cancelled`).
+    Cancel { global: GlobalId, disconnect: bool, reply: Sender<bool> },
+    Stats { reply: Sender<ShardStats> },
+    /// Finish in-flight work, persist the prefix radix, report final
+    /// stats, and exit the tick thread.
+    Drain { reply: Sender<ShardStats> },
+}
+
+struct ShardHandle {
+    tx: Sender<Command>,
+    /// Router-visible live-request count for least-loaded fallback:
+    /// incremented at submit, decremented by the shard thread on every
+    /// terminal outcome (shed, reject, finish, fail, cancel,
+    /// disconnect).
+    outstanding: Arc<AtomicI64>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+/// Shards traffic across N tick-threaded [`Session`]s; see the module
+/// docs for routing, shedding, and drain semantics.
+pub struct Router {
+    shards: Vec<ShardHandle>,
+    next_id: AtomicU64,
+    /// Prefix-block width used for routing (engine `block_tokens`).
+    block_tokens: usize,
+}
+
+/// FNV-1a over a token slice — the same constants `kvcache::prefix`
+/// chains block keys with, so "same first block" implies "same shard".
+fn fnv1a_tokens(tokens: &[u32]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
+impl Router {
+    /// Builds the shards and starts one tick thread per shard. All
+    /// shards share the backend (`Arc`) but own their KV pool, prefix
+    /// cache, spill store, and worker pool.
+    pub fn new<B: Backend + Send + Sync + 'static>(backend: Arc<B>, cfg: RouterConfig) -> Router {
+        let n = cfg.shards.max(1);
+        let queue_depth = cfg.queue_depth.max(1);
+        let block_tokens = cfg.engine.block_tokens.max(1);
+        let mut shards = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut ecfg = cfg.engine.clone();
+            if let Some(path) = ecfg.kv_spill.take() {
+                ecfg.kv_spill = Some(format!("{}.shard{i}", path.display()).into());
+            }
+            let pool = Arc::new(ThreadPool::new(ecfg.workers.max(1)));
+            let session = Session::with_pool(Arc::clone(&backend), ecfg, pool);
+            let (tx, rx) = channel();
+            let outstanding = Arc::new(AtomicI64::new(0));
+            let counter = Arc::clone(&outstanding);
+            let thread = std::thread::Builder::new()
+                .name(format!("vattn-shard-{i}"))
+                .spawn(move || shard_loop(i, session, rx, counter, queue_depth))
+                .expect("spawn shard tick thread");
+            shards.push(ShardHandle { tx, outstanding, thread: Mutex::new(Some(thread)) });
+        }
+        Router { shards, next_id: AtomicU64::new(0), block_tokens }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard a prompt routes to: FNV-1a of its first prefix block, or
+    /// the least-loaded shard (lowest index on ties) when the prompt is
+    /// shorter than one block.
+    pub fn route(&self, prompt: &[u32]) -> usize {
+        let n = self.shards.len();
+        if n == 1 {
+            return 0;
+        }
+        if prompt.len() >= self.block_tokens {
+            (fnv1a_tokens(&prompt[..self.block_tokens]) % n as u64) as usize
+        } else {
+            self.shards
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, s)| (s.outstanding.load(Ordering::SeqCst), *i))
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        }
+    }
+
+    /// Routes and submits a request; the returned channel carries the
+    /// [`StreamEvent`] protocol. Dropping the receiver mid-stream makes
+    /// the shard cancel the request (disconnect-cancel).
+    pub fn submit(&self, prompt: Vec<u32>, mut opts: GenOptions) -> (GlobalId, Receiver<StreamEvent>) {
+        let global = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let shard = self.route(&prompt);
+        // Pin the RNG stream to the global id so the token stream does
+        // not depend on per-shard submission order (per-shard request
+        // ids differ across shard counts; global ids do not).
+        if opts.seed.is_none() {
+            opts.seed = Some(global);
+        }
+        let (tx, rx) = channel();
+        self.shards[shard].outstanding.fetch_add(1, Ordering::SeqCst);
+        let cmd = Command::Submit { global, prompt, opts, events: tx.clone() };
+        if self.shards[shard].tx.send(cmd).is_err() {
+            // Shard thread already exited (shutdown race).
+            self.shards[shard].outstanding.fetch_sub(1, Ordering::SeqCst);
+            let _ = tx.send(StreamEvent::Rejected {
+                id: global,
+                error: ErrorInfo::new(ErrorKind::ShuttingDown, "server is shutting down"),
+            });
+        }
+        (global, rx)
+    }
+
+    /// Cancels a request by global id. The router does not track which
+    /// shard holds an id (that would need cross-thread cleanup on every
+    /// terminal event), so the cancel is broadcast; shard counts are
+    /// small. Returns whether any shard knew the id.
+    pub fn cancel(&self, global: GlobalId) -> bool {
+        self.cancel_inner(global, false)
+    }
+
+    /// Cancel after a client hang-up: same lease-returning path as
+    /// [`Router::cancel`], but accounted as a disconnect in
+    /// [`ShardStats`].
+    pub fn disconnect(&self, global: GlobalId) -> bool {
+        self.cancel_inner(global, true)
+    }
+
+    fn cancel_inner(&self, global: GlobalId, disconnect: bool) -> bool {
+        let mut found = false;
+        for shard in &self.shards {
+            let (tx, rx) = channel();
+            if shard.tx.send(Command::Cancel { global, disconnect, reply: tx }).is_ok() {
+                if let Ok(hit) = rx.recv() {
+                    found |= hit;
+                }
+            }
+        }
+        found
+    }
+
+    /// Point-in-time stats from every shard (index-ordered).
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                let (tx, rx) = channel();
+                if shard.tx.send(Command::Stats { reply: tx }).is_ok() {
+                    if let Ok(stats) = rx.recv() {
+                        return stats;
+                    }
+                }
+                ShardStats { shard: i, ..ShardStats::default() }
+            })
+            .collect()
+    }
+
+    /// Graceful drain: every shard finishes its in-flight requests
+    /// (shedding new arrivals with [`ErrorKind::ShuttingDown`]),
+    /// persists its prefix radix if a spill store is configured, and
+    /// exits. Returns each shard's final stats. Idempotent — a second
+    /// call returns default stats for already-stopped shards.
+    pub fn shutdown(&self) -> Vec<ShardStats> {
+        let mut pending = Vec::with_capacity(self.shards.len());
+        for (i, shard) in self.shards.iter().enumerate() {
+            let (tx, rx) = channel();
+            let sent = shard.tx.send(Command::Drain { reply: tx }).is_ok();
+            pending.push((i, sent, rx));
+        }
+        let mut all = Vec::with_capacity(pending.len());
+        for (i, sent, rx) in pending {
+            let stats = if sent {
+                rx.recv().unwrap_or_else(|_| ShardStats { shard: i, ..ShardStats::default() })
+            } else {
+                ShardStats { shard: i, ..ShardStats::default() }
+            };
+            all.push(stats);
+        }
+        for shard in &self.shards {
+            let handle = shard.thread.lock().expect("shard thread lock").take();
+            if let Some(handle) = handle {
+                let _ = handle.join();
+            }
+        }
+        all
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        // Best-effort drain so dropping a router never strands shard
+        // threads; explicit `shutdown()` is the path that reports stats.
+        self.shutdown();
+    }
+}
+
+/// One shard's tick loop: pump commands without blocking, tick the
+/// session while it has work, dispatch events to subscribers, park on
+/// the command channel when idle.
+fn shard_loop<B: Backend + Send + Sync + 'static>(
+    shard: usize,
+    mut session: Session<B>,
+    rx: Receiver<Command>,
+    outstanding: Arc<AtomicI64>,
+    queue_depth: usize,
+) {
+    // session request id -> (global id, subscriber).
+    let mut subs: HashMap<RequestId, (GlobalId, Sender<StreamEvent>)> = HashMap::new();
+    let mut by_global: HashMap<GlobalId, RequestId> = HashMap::new();
+    let mut stats = ShardStats { shard, ..ShardStats::default() };
+    let mut draining = false;
+    let mut drain_reply: Option<Sender<ShardStats>> = None;
+    let mut rx_open = true;
+
+    let mut handle = |cmd: Command,
+                      session: &mut Session<B>,
+                      subs: &mut HashMap<RequestId, (GlobalId, Sender<StreamEvent>)>,
+                      by_global: &mut HashMap<GlobalId, RequestId>,
+                      stats: &mut ShardStats,
+                      draining: &mut bool,
+                      drain_reply: &mut Option<Sender<ShardStats>>| {
+        match cmd {
+            Command::Submit { global, prompt, opts, events } => {
+                stats.received += 1;
+                if *draining {
+                    stats.rejected += 1;
+                    outstanding.fetch_sub(1, Ordering::SeqCst);
+                    let _ = events.send(StreamEvent::Rejected {
+                        id: global,
+                        error: ErrorInfo::new(ErrorKind::ShuttingDown, "server is shutting down"),
+                    });
+                } else if session.waiting_len() >= queue_depth {
+                    stats.shed += 1;
+                    outstanding.fetch_sub(1, Ordering::SeqCst);
+                    let _ = events.send(StreamEvent::Rejected {
+                        id: global,
+                        error: ErrorInfo::new(
+                            ErrorKind::ShardQueueFull,
+                            format!(
+                                "shard {shard} admission queue is full ({queue_depth} waiting)"
+                            ),
+                        ),
+                    });
+                } else {
+                    match session.submit_validated(SubmitRequest::new(prompt).options(opts)) {
+                        Ok(rid) => {
+                            stats.submitted += 1;
+                            let _ = events.send(StreamEvent::Accepted { id: global });
+                            subs.insert(rid, (global, events));
+                            by_global.insert(global, rid);
+                        }
+                        Err(e) => {
+                            stats.rejected += 1;
+                            outstanding.fetch_sub(1, Ordering::SeqCst);
+                            let _ = events.send(StreamEvent::Rejected {
+                                id: global,
+                                error: ErrorInfo::from(&e),
+                            });
+                        }
+                    }
+                }
+            }
+            Command::Cancel { global, disconnect, reply } => {
+                let found = if let Some(rid) = by_global.remove(&global) {
+                    let ok = session.cancel(rid).is_ok();
+                    if let Some((gid, tx)) = subs.remove(&rid) {
+                        let _ = tx.send(StreamEvent::Cancelled { id: gid });
+                    }
+                    if disconnect {
+                        stats.disconnected += 1;
+                    } else {
+                        stats.cancelled += 1;
+                    }
+                    outstanding.fetch_sub(1, Ordering::SeqCst);
+                    ok
+                } else {
+                    false
+                };
+                let _ = reply.send(found);
+            }
+            Command::Stats { reply } => {
+                let _ = reply.send(snapshot(&stats, session));
+            }
+            Command::Drain { reply } => {
+                *draining = true;
+                *drain_reply = Some(reply);
+            }
+        }
+    };
+
+    loop {
+        // 1. Pump every queued command without blocking.
+        while rx_open {
+            match rx.try_recv() {
+                Ok(cmd) => handle(
+                    cmd,
+                    &mut session,
+                    &mut subs,
+                    &mut by_global,
+                    &mut stats,
+                    &mut draining,
+                    &mut drain_reply,
+                ),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    // Router dropped without shutdown(): drain silently.
+                    rx_open = false;
+                    draining = true;
+                }
+            }
+        }
+
+        // 2. Drained and idle: persist the radix, report, exit.
+        if draining && session.is_idle() {
+            let _ = session.flush_prefix_cache();
+            if let Some(reply) = drain_reply.take() {
+                let _ = reply.send(snapshot(&stats, &session));
+            }
+            return;
+        }
+
+        // 3. Idle with no work: park on the command channel.
+        if session.is_idle() {
+            match rx.recv_timeout(Duration::from_millis(10)) {
+                Ok(cmd) => handle(
+                    cmd,
+                    &mut session,
+                    &mut subs,
+                    &mut by_global,
+                    &mut stats,
+                    &mut draining,
+                    &mut drain_reply,
+                ),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    rx_open = false;
+                    draining = true;
+                }
+            }
+            continue;
+        }
+
+        // 4. Tick and dispatch.
+        match session.tick() {
+            Ok(events) => {
+                for ev in events {
+                    dispatch(ev, &mut session, &mut subs, &mut by_global, &mut stats, &outstanding);
+                }
+            }
+            Err(e) => {
+                // Engine invariant violation: fail every subscriber
+                // loudly, then panic so shutdown()'s join surfaces it.
+                let info = ErrorInfo::new(ErrorKind::Page, format!("{e}"));
+                for (_, (gid, tx)) in subs.drain() {
+                    let _ = tx.send(StreamEvent::Failed { id: gid, error: info.clone() });
+                    outstanding.fetch_sub(1, Ordering::SeqCst);
+                }
+                by_global.clear();
+                if let Some(reply) = drain_reply.take() {
+                    let _ = reply.send(snapshot(&stats, &session));
+                }
+                panic!("shard {shard} tick failed: {}", info.message);
+            }
+        }
+    }
+}
+
+fn snapshot<B: Backend + Send + Sync + 'static>(
+    counters: &ShardStats,
+    session: &Session<B>,
+) -> ShardStats {
+    let mut s = counters.clone();
+    s.outstanding = session.outstanding();
+    s.waiting = session.waiting_len();
+    s.active = session.active_len();
+    s.kv_blocks_in_use = session.kv_blocks_in_use();
+    s.prefix_blocks_held = session.prefix_blocks_held();
+    s.spill_live_blocks = session.spill_live_blocks();
+    s.session = session.stats();
+    s
+}
+
+fn dispatch<B: Backend + Send + Sync + 'static>(
+    ev: Event,
+    session: &mut Session<B>,
+    subs: &mut HashMap<RequestId, (GlobalId, Sender<StreamEvent>)>,
+    by_global: &mut HashMap<GlobalId, RequestId>,
+    stats: &mut ShardStats,
+    outstanding: &AtomicI64,
+) {
+    match ev {
+        Event::Admitted { .. } | Event::Preempted { .. } => {}
+        Event::Token { id, token, step, .. } => {
+            let dead = match subs.get(&id) {
+                Some((gid, tx)) => {
+                    tx.send(StreamEvent::Token { id: *gid, step, token }).is_err()
+                }
+                None => false,
+            };
+            if dead {
+                // Subscriber hung up without an explicit cancel:
+                // cancel now so the KV lease (and any cold-tier
+                // slots) return immediately.
+                if let Some((gid, _)) = subs.remove(&id) {
+                    by_global.remove(&gid);
+                }
+                let _ = session.cancel(id);
+                stats.disconnected += 1;
+                outstanding.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+        Event::Finished { id, result, .. } => {
+            if let Some((gid, tx)) = subs.remove(&id) {
+                by_global.remove(&gid);
+                let _ = tx.send(StreamEvent::Finished { id: gid, result });
+                stats.completed += 1;
+                outstanding.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+        Event::Rejected { id, reason, .. } => {
+            if let Some((gid, tx)) = subs.remove(&id) {
+                by_global.remove(&gid);
+                let _ = tx.send(StreamEvent::Failed { id: gid, error: ErrorInfo::from(&reason) });
+                stats.failed += 1;
+                outstanding.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Model, ModelConfig};
+
+    fn router(shards: usize, depth: usize, cfg: EngineConfig) -> Router {
+        let backend = Arc::new(Model::new(ModelConfig::tiny(), 42));
+        Router::new(backend, RouterConfig::new(cfg).shards(shards).queue_depth(depth))
+    }
+
+    fn prompt(len: usize, salt: u32) -> Vec<u32> {
+        (0..len as u32).map(|t| (t * 13 + salt) % 250).collect()
+    }
+
+    /// Collect the full stream for one request (blocking).
+    fn collect(rx: &Receiver<StreamEvent>) -> (Vec<u32>, Option<StreamEvent>) {
+        let mut tokens = Vec::new();
+        loop {
+            match rx.recv() {
+                Ok(StreamEvent::Accepted { .. }) => {}
+                Ok(StreamEvent::Token { token, step, .. }) => {
+                    assert_eq!(step, tokens.len(), "gapless stream");
+                    tokens.push(token);
+                }
+                Ok(term) => return (tokens, Some(term)),
+                Err(_) => return (tokens, None),
+            }
+        }
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_prefix_stable() {
+        let r = router(4, 8, EngineConfig::default());
+        let p = prompt(64, 7);
+        let shard = r.route(&p);
+        assert_eq!(shard, r.route(&p));
+        // Same first block, different tail: same shard (radix locality).
+        let bt = r.block_tokens;
+        let mut q = p[..bt].to_vec();
+        q.extend(prompt(32, 99));
+        assert_eq!(shard, r.route(&q));
+        // Short prompts fall back to least-loaded (shard 0 when idle).
+        assert_eq!(0, r.route(&prompt(1, 3)));
+        r.shutdown();
+    }
+
+    #[test]
+    fn submit_streams_and_finishes() {
+        let r = router(2, 8, EngineConfig::default());
+        let (id, rx) = r.submit(prompt(12, 1), GenOptions::new(5));
+        let (tokens, term) = collect(&rx);
+        assert_eq!(tokens.len(), 5);
+        match term {
+            Some(StreamEvent::Finished { id: gid, result }) => {
+                assert_eq!(gid, id);
+                assert_eq!(result.tokens, tokens);
+            }
+            other => panic!("expected Finished, got {other:?}"),
+        }
+        let stats = r.shutdown();
+        let completed: u64 = stats.iter().map(|s| s.completed).sum();
+        assert_eq!(completed, 1);
+    }
+
+    #[test]
+    fn streams_match_across_shard_counts() {
+        let mut streams = Vec::new();
+        for shards in [1usize, 3] {
+            let r = router(shards, 64, EngineConfig::default());
+            let mut rxs = Vec::new();
+            for i in 0..6u32 {
+                // Explicit seed: identity must not depend on submit order.
+                let (_, rx) = r.submit(prompt(20, i), GenOptions::new(6).seed(1000 + i as u64));
+                rxs.push(rx);
+            }
+            let run: Vec<Vec<u32>> = rxs.iter().map(|rx| collect(rx).0).collect();
+            streams.push(run);
+            r.shutdown();
+        }
+        assert_eq!(streams[0], streams[1], "token streams differ across shard counts");
+    }
+
+    #[test]
+    fn overfull_queue_sheds_with_retriable_429() {
+        // Single shard, tiny queue: a burst must shed, not stall.
+        let cfg = EngineConfig::builder().max_batch(1).build();
+        let r = router(1, 2, cfg);
+        let mut rxs = Vec::new();
+        for i in 0..12u32 {
+            let (_, rx) = r.submit(prompt(16, i), GenOptions::new(4));
+            rxs.push(rx);
+        }
+        let mut finished = 0u32;
+        let mut shed = 0u32;
+        for rx in &rxs {
+            // First event decides the status.
+            match rx.recv().expect("first event") {
+                StreamEvent::Accepted { .. } => {
+                    let (_, term) = collect(rx);
+                    assert!(matches!(term, Some(StreamEvent::Finished { .. })));
+                    finished += 1;
+                }
+                StreamEvent::Rejected { error, .. } => {
+                    assert_eq!(error.kind, ErrorKind::ShardQueueFull);
+                    assert_eq!(error.kind.http_status(), 429);
+                    assert!(error.kind.retriable());
+                    shed += 1;
+                }
+                other => panic!("unexpected first event {other:?}"),
+            }
+        }
+        assert_eq!(finished + shed, 12);
+        assert!(shed > 0, "burst of 12 into depth-2 queue must shed");
+        let stats = r.shutdown();
+        assert_eq!(stats[0].shed as u32, shed);
+        assert_eq!(stats[0].completed as u32, finished);
+        assert_eq!(stats[0].kv_blocks_in_use, 0);
+    }
+
+    #[test]
+    fn validation_rejections_are_first_events() {
+        let cfg = EngineConfig::builder().max_seq_len(16).build();
+        let r = router(1, 8, cfg);
+        let (_, rx) = r.submit(prompt(20, 1), GenOptions::new(8));
+        match rx.recv().expect("first event") {
+            StreamEvent::Rejected { error, .. } => {
+                assert_eq!(error.kind, ErrorKind::PromptTooLong);
+                assert_eq!(error.kind.http_status(), 400);
+                assert!(!error.kind.retriable());
+            }
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+        r.shutdown();
+    }
+
+    #[test]
+    fn cancel_mid_stream_returns_lease() {
+        let r = router(1, 8, EngineConfig::default());
+        let (id, rx) = r.submit(prompt(12, 1), GenOptions::new(400));
+        // Wait for streaming to start so the request is live.
+        loop {
+            match rx.recv().expect("event") {
+                StreamEvent::Token { .. } => break,
+                StreamEvent::Accepted { .. } => {}
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert!(r.cancel(id), "live request must be cancellable");
+        assert!(!r.cancel(id), "second cancel must miss");
+        // Drain the stream: terminal must be Cancelled.
+        let (_, term) = collect(&rx);
+        assert!(matches!(term, Some(StreamEvent::Cancelled { .. })), "got {term:?}");
+        let stats = r.shutdown();
+        assert_eq!(stats[0].cancelled, 1);
+        assert_eq!(stats[0].kv_blocks_in_use, 0, "cancel must return the KV lease");
+    }
+
+    #[test]
+    fn dropped_receiver_triggers_disconnect_cancel() {
+        let r = router(1, 8, EngineConfig::default());
+        let (_, rx) = r.submit(prompt(12, 1), GenOptions::new(400));
+        // Receive one token, then hang up.
+        loop {
+            match rx.recv().expect("event") {
+                StreamEvent::Token { .. } => break,
+                StreamEvent::Accepted { .. } => {}
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        drop(rx);
+        // The shard notices on its next token send and cancels.
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            let s = &r.shard_stats()[0];
+            if s.disconnected == 1 && s.kv_blocks_in_use == 0 {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "disconnect-cancel never fired: {s:?}");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        r.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_and_rejects_new() {
+        let r = router(2, 8, EngineConfig::default());
+        let (_, rx) = r.submit(prompt(12, 1), GenOptions::new(6));
+        let stats = r.shutdown();
+        // In-flight request finished during drain.
+        let (tokens, term) = collect(&rx);
+        assert_eq!(tokens.len(), 6);
+        assert!(matches!(term, Some(StreamEvent::Finished { .. })));
+        assert_eq!(stats.iter().map(|s| s.completed).sum::<u64>(), 1);
+        // Post-shutdown submits are rejected as shutting_down.
+        let (_, rx2) = r.submit(prompt(12, 2), GenOptions::new(4));
+        match rx2.recv().expect("rejection") {
+            StreamEvent::Rejected { error, .. } => {
+                assert_eq!(error.kind, ErrorKind::ShuttingDown);
+                assert_eq!(error.kind.http_status(), 503);
+            }
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+    }
+}

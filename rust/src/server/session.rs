@@ -724,6 +724,19 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
         self.enqueue(req, policies)
     }
 
+    /// Like [`Session::submit`], but surface a validation failure
+    /// synchronously instead of queueing an `Event::Rejected` for the
+    /// next tick. The network front-end needs the distinction: an HTTP
+    /// status line must be chosen *before* the response starts
+    /// streaming, so capacity/length rejections map to 429/400 up front
+    /// while mid-flight failures still arrive as stream events. On `Ok`
+    /// the request is queued exactly as `submit` would queue it.
+    pub fn submit_validated(&mut self, req: SubmitRequest) -> Result<RequestId, EngineError> {
+        self.validate(&req)?;
+        let policies = self.resolve_policies(&req.opts);
+        Ok(self.enqueue(req, policies))
+    }
+
     /// Legacy path for `Engine::serve`: resolve attention from the
     /// engine-global [`AttentionMode`] instead of the request options.
     pub(crate) fn submit_with_mode(
@@ -986,9 +999,35 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             let bt = self.cfg.block_tokens.max(1);
             let cached = a.cache.tokens();
             let mut slots = Vec::with_capacity(a.cache.blocks_used());
+            let mut write_err: Option<std::io::Error> = None;
             for b in 0..a.cache.blocks_used() {
                 let snap = a.cache.snapshot_rows(b * bt, ((b + 1) * bt).min(cached));
-                slots.push(store.write_block(&snap).map_err(|e| EngineError::Backend(e.into()))?);
+                match store.write_block(&snap) {
+                    Ok(slot) => slots.push(slot),
+                    Err(e) => {
+                        write_err = Some(e);
+                        break;
+                    }
+                }
+            }
+            if let Some(e) = write_err {
+                // Unwritable cold tier mid-swap-out: unwind so nothing
+                // leaks — slots already written go back to the store,
+                // the victim's lease back to the pool — and terminate
+                // only the victim (the same per-request fault isolation
+                // as a backend step error), never the whole tick.
+                for slot in slots {
+                    store.free(slot);
+                }
+                merge_reuse(&mut self.retired_reuse, &a.policies);
+                let lease = a.cache.release_blocks();
+                self.blocks.free(lease).map_err(EngineError::Page)?;
+                events.push(Event::Rejected {
+                    id: a.id,
+                    reason: EngineError::Backend(e.into()),
+                    t_s: now,
+                });
+                return Ok(());
             }
             let lease = a.cache.release_blocks();
             self.blocks.free(lease).map_err(EngineError::Page)?;
@@ -1105,8 +1144,17 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
                     break;
                 };
                 events.push(Event::Admitted { id: w.id, t_s: now });
-                let active = self.resume(w, lease, now)?;
-                self.active.push(active);
+                let wid = w.id;
+                match self.resume(w, lease, now) {
+                    Ok(active) => self.active.push(active),
+                    // resume() already unwound the lease and cold-tier
+                    // slots; an unreadable region file terminates only
+                    // this request (it used to fail the whole tick and
+                    // silently drop the request with no event).
+                    Err(reason) => {
+                        events.push(Event::Rejected { id: wid, reason, t_s: now })
+                    }
+                }
                 continue;
             }
             // Prefix fork: attach to matched blocks (refcount bump)
@@ -1201,49 +1249,53 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
         v
     }
 
-    fn enqueue(&mut self, req: SubmitRequest, policies: Vec<Box<dyn IndexPolicy>>) -> RequestId {
-        let id = self.next_id;
-        self.next_id += 1;
-        let SubmitRequest { prompt, arrival_s, opts } = req;
-        let total = prompt.len() + opts.gen_len;
-        let kv_dtype = opts.kv_dtype.unwrap_or(self.cfg.kv_dtype);
-
-        let mut reject: Option<EngineError> = None;
+    /// Submit-time validation, shared by [`Session::submit`] (which
+    /// queues failures as `Event::Rejected`) and
+    /// [`Session::submit_validated`] (which returns them to the caller).
+    fn validate(&self, req: &SubmitRequest) -> Result<(), EngineError> {
+        let total = req.prompt.len() + req.opts.gen_len;
+        let kv_dtype = req.opts.kv_dtype.unwrap_or(self.cfg.kv_dtype);
         if let Some(max) = self.cfg.max_seq_len {
             if total > max {
-                reject = Some(EngineError::PromptTooLong { len: total, max });
+                return Err(EngineError::PromptTooLong { len: total, max });
             }
         }
-        if reject.is_none() && self.cfg.kv_capacity_bytes.is_some() {
+        if self.cfg.kv_capacity_bytes.is_some() {
             // Block accounting is in engine-dtype blocks; a request
             // storing wider rows would overrun the byte budget while
             // the pool believes it fits — reject instead of lying.
             let d = self.mcfg.d_head();
             if kv_dtype.row_bytes(d) > self.cfg.kv_dtype.row_bytes(d) {
-                reject = Some(EngineError::KvDtypeWiderThanPool {
+                return Err(EngineError::KvDtypeWiderThanPool {
                     requested: kv_dtype,
                     pool: self.cfg.kv_dtype,
                 });
             }
         }
-        if reject.is_none() {
-            // Worst-case validation stays conservative under demand
-            // paging: a request whose full footprint cannot fit even an
-            // otherwise-empty pool would preempt-livelock once admitted,
-            // so it is rejected up front (prefix sharing is not
-            // credited — entries may be evicted at any time).
-            if let Some(cap) = self.blocks.capacity_blocks() {
-                let needed = self.blocks.blocks_for_tokens(total);
-                if needed > cap {
-                    reject = Some(EngineError::KvCapacityExceeded { needed, available: cap });
-                }
+        // Worst-case validation stays conservative under demand
+        // paging: a request whose full footprint cannot fit even an
+        // otherwise-empty pool would preempt-livelock once admitted,
+        // so it is rejected up front (prefix sharing is not
+        // credited — entries may be evicted at any time).
+        if let Some(cap) = self.blocks.capacity_blocks() {
+            let needed = self.blocks.blocks_for_tokens(total);
+            if needed > cap {
+                return Err(EngineError::KvCapacityExceeded { needed, available: cap });
             }
         }
-        if let Some(reason) = reject {
+        Ok(())
+    }
+
+    fn enqueue(&mut self, req: SubmitRequest, policies: Vec<Box<dyn IndexPolicy>>) -> RequestId {
+        let id = self.next_id;
+        self.next_id += 1;
+        if let Err(reason) = self.validate(&req) {
             let t_s = self.now_s();
             self.pending_events.push(Event::Rejected { id, reason, t_s });
             return id;
         }
+        let SubmitRequest { prompt, arrival_s, opts } = req;
+        let kv_dtype = opts.kv_dtype.unwrap_or(self.cfg.kv_dtype);
 
         let sampler = opts.sampler.unwrap_or_else(|| self.cfg.sampler.clone());
         let seed_tag = opts.seed.unwrap_or(id);
@@ -1303,6 +1355,9 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
                     }
                     let l = cache.release_blocks();
                     self.blocks.free(l).map_err(EngineError::Page)?;
+                    // The request is terminating, not resuming: bank its
+                    // reuse counters like every other retirement path.
+                    merge_reuse(&mut self.retired_reuse, &w.policies);
                     return Err(EngineError::Backend(e.into()));
                 }
             }
@@ -1605,6 +1660,39 @@ mod tests {
                 if *i == id
         ));
         assert!(s.is_idle());
+    }
+
+    #[test]
+    fn submit_validated_surfaces_rejections_synchronously() {
+        let mcfg = ModelConfig::tiny();
+        let cfg = EngineConfig::builder()
+            .max_seq_len(16)
+            .block_tokens(16)
+            .kv_capacity_bytes(16 * mcfg.kv_bytes_per_token())
+            .build();
+        let mut s = tiny_session(cfg);
+        assert!(matches!(
+            s.submit_validated(SubmitRequest::new(prompt(20, 0)).options(GenOptions::new(4))),
+            Err(EngineError::PromptTooLong { len: 24, max: 16 })
+        ));
+        assert!(matches!(
+            s.submit_validated(SubmitRequest::new(prompt(6, 0)).options(GenOptions::new(10))),
+            Err(EngineError::KvCapacityExceeded { .. })
+        ));
+        // No Rejected events were queued, and ids were not handed out
+        // for the failures: the next accepted request gets a fresh id
+        // and streams normally.
+        let id = s
+            .submit_validated(SubmitRequest::new(prompt(6, 0)).options(GenOptions::new(3)))
+            .expect("serveable request");
+        let evs = drain(&mut s);
+        assert!(
+            !evs.iter().any(|e| matches!(e, Event::Rejected { .. })),
+            "synchronous validation must not double-report as events"
+        );
+        assert!(evs
+            .iter()
+            .any(|e| matches!(e, Event::Finished { id: i, result, .. } if *i == id && result.tokens.len() == 3)));
     }
 
     #[test]
@@ -1999,30 +2087,40 @@ mod tests {
             .kv_spill(&path)
             .build();
         let mut s = tiny_session(cfg);
-        s.submit(SubmitRequest::new(prompt(8, 1)).options(GenOptions::new(12)));
-        let b = s.submit(SubmitRequest::new(prompt(8, 2)).options(GenOptions::new(12)));
-        // Tick until the LIFO victim (b) has been swapped out.
+        // `a` grows to all 7 pool blocks (8 prompt + 20 gen tokens at
+        // 4/block), so the LIFO victim `b` (≥ 2 prompt blocks) is
+        // guaranteed to be swapped out AND unable to re-admit while `a`
+        // is at ≥ 6 blocks: at most 1 block is free then, fewer than b's
+        // suspended slot count. The cancel-while-suspended state is
+        // therefore reached deterministically, not by scheduling luck.
+        let a = s.submit(SubmitRequest::new(prompt(8, 1)).options(GenOptions::new(20)));
+        let b = s.submit(SubmitRequest::new(prompt(8, 2)).options(GenOptions::new(20)));
+        // Tick until the victim is parked in the waiting queue suspended.
         let mut preempted = false;
-        for _ in 0..40 {
+        while !(preempted && s.waiting_len() > 0) {
+            assert!(!s.is_idle(), "b must still be suspended when a finishes its growth");
             for ev in s.tick().unwrap() {
                 if matches!(ev, Event::Preempted { id, .. } if id == b) {
                     preempted = true;
                 }
             }
-            if preempted && s.waiting_len() > 0 {
-                break;
-            }
-            if s.is_idle() {
-                break;
-            }
         }
-        assert!(preempted, "the over-committed pool must swap b out");
-        if s.waiting_len() > 0 {
-            assert!(s.spill_live_blocks().unwrap() > 0, "suspended b owns cold-tier blocks");
-            s.cancel(b).expect("cancel suspended");
-            assert_eq!(s.spill_live_blocks(), Some(0), "cancel must free the cold tier");
-        }
-        drain(&mut s);
+        assert!(s.spill_live_blocks().unwrap() > 0, "suspended b owns cold-tier blocks");
+        s.cancel(b).expect("cancel suspended");
+        assert_eq!(
+            s.spill_live_blocks(),
+            Some(0),
+            "cancelling a suspended request must free its cold-tier slots"
+        );
+        assert!(
+            matches!(s.cancel(b), Err(EngineError::UnknownRequest(_))),
+            "double cancel is UnknownRequest"
+        );
+        // `a` runs to completion untouched; nothing leaks in either tier.
+        let evs = drain(&mut s);
+        assert!(evs
+            .iter()
+            .any(|e| matches!(e, Event::Finished { id, result, .. } if *id == a && result.tokens.len() == 20)));
         assert_eq!(s.kv_blocks_in_use(), 0);
         assert_eq!(s.spill_live_blocks(), Some(0));
         rm_spill(&path);

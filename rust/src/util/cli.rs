@@ -68,7 +68,11 @@ impl Args {
     /// Validate every provided `--key` (option or bare flag) against a
     /// closed set. Typos like `--worker 8` for `--workers 8` used to
     /// no-op silently; commands with a fixed vocabulary call this and
-    /// fail loudly instead, listing what they do understand.
+    /// fail loudly instead, listing what they do understand. Both
+    /// listings are sorted and deduplicated, so the message is
+    /// deterministic regardless of argument order or repetition
+    /// (options live in a `HashMap`, and a repeated bare flag would
+    /// otherwise be listed twice).
     pub fn check_known(&self, known: &[&str]) -> Result<(), String> {
         let mut unknown: Vec<&str> = self
             .options
@@ -81,8 +85,10 @@ impl Args {
             return Ok(());
         }
         unknown.sort_unstable();
+        unknown.dedup();
         let mut known: Vec<&str> = known.to_vec();
         known.sort_unstable();
+        known.dedup();
         let fmt = |keys: &[&str]| {
             keys.iter().map(|k| format!("--{k}")).collect::<Vec<_>>().join(", ")
         };
@@ -160,5 +166,30 @@ mod tests {
     fn check_known_ignores_positionals() {
         let a = parse("exp fig2 extra");
         assert!(a.check_known(&[]).is_ok());
+    }
+
+    #[test]
+    fn check_known_listing_is_sorted_and_deduplicated() {
+        // --alpha appears twice as a bare flag; --zeta as an option and
+        // (by overwrite) again: neither may be listed more than once,
+        // and both listings must come out in sorted order.
+        let a = parse("serve --zeta 1 --alpha --zeta=2 --alpha");
+        let err =
+            a.check_known(&["workers", "listen", "shards", "shard-queue-depth"]).unwrap_err();
+        assert!(err.contains("unknown options --alpha, --zeta;"), "{err}");
+        assert_eq!(err.matches("--alpha").count(), 1, "deduplicated: {err}");
+        let pos = |k: &str| err.find(k).unwrap_or_else(|| panic!("missing {k}: {err}"));
+        assert!(
+            pos("--listen") < pos("--shard-queue-depth")
+                && pos("--shard-queue-depth") < pos("--shards")
+                && pos("--shards") < pos("--workers"),
+            "known listing must be sorted: {err}"
+        );
+    }
+
+    #[test]
+    fn check_known_accepts_serve_net_flags() {
+        let a = parse("serve --listen 127.0.0.1:8044 --shards 4 --shard-queue-depth 32");
+        assert!(a.check_known(&["listen", "shards", "shard-queue-depth"]).is_ok());
     }
 }
