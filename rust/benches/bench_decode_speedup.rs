@@ -3,20 +3,207 @@
 //! caches, per-layer-slice at Llama-8B head shape; reports the measured
 //! speedup curve that EXPERIMENTS.md compares against the paper's.
 //!
+//! Grown for the SIMD kernel pass with two extra sections:
+//!
+//! * **kernels** — single-thread scalar-vs-simd comparison of the fused
+//!   decode step (score every key with the fused dequant-dot, then
+//!   weight-accumulate V). "Scalar" is the `*_seq_ref` sequential
+//!   dependency chain LLVM cannot vectorize; the dispatched kernel must
+//!   beat it ≥2x (the CI-checked copy of this number lives in
+//!   `BENCH_engine.json`'s `"kernels"` block, written by bench_engine).
+//! * **allocation audit** — a one-shot counting `#[global_allocator]`
+//!   proves the arena-backed hot path stops allocating once warm.
+//!
 //! Run: cargo bench --bench bench_decode_speedup
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use vattn::attention::{dense_sdpa, sparse_sdpa};
 use vattn::policies::{IndexPolicy, PolicyCtx, VAttentionPolicy};
+use vattn::tensor::quant::QuantizedMat4;
+use vattn::tensor::simd;
 use vattn::util::timer::bench;
 use vattn::util::Rng;
 use vattn::workloads::{synthesize_head, ScoreProfile};
+
+/// Counting allocator: `System` plus a relaxed counter on every
+/// alloc/realloc — the audit reads deltas around hot-path sections.
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc(layout) }
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
+
+/// One fused int4 decode step over `n` keys at head dim `d`: score every
+/// key with the fused dequant-dot, softmax-stabilize, accumulate V.
+/// `fused` and `accum` are the kernel pair under measurement.
+fn fused_decode_step(
+    qk: &QuantizedMat4,
+    qv: &QuantizedMat4,
+    q: &[f32],
+    logits: &mut Vec<f32>,
+    out: &mut Vec<f32>,
+    fused: impl Fn(&QuantizedMat4, usize, &[f32]) -> f32,
+    accum: impl Fn(f32, &[f32], &mut [f32]),
+    maxf: impl Fn(&[f32]) -> f32,
+) -> f32 {
+    let n = qk.rows();
+    logits.clear();
+    for r in 0..n {
+        logits.push(fused(qk, r, q));
+    }
+    let m = maxf(logits);
+    out.clear();
+    out.resize(q.len(), 0.0);
+    let mut vrow: Vec<f32> = Vec::with_capacity(q.len());
+    let mut denom = 0.0f32;
+    for r in 0..n {
+        let w = (logits[r] - m).exp();
+        denom += w;
+        vrow.clear();
+        qv.dequantize_row_into(r, &mut vrow);
+        accum(w, &vrow, out);
+    }
+    denom
+}
+
+fn kernels_section(rng: &mut Rng) {
+    println!("== kernels: scalar (seq_ref) vs dispatched SIMD, single thread ==");
+    println!("   dispatch: {}", simd::kernel_name());
+    let budget = Duration::from_millis(400);
+    let d = 128;
+    let n = 8192;
+    let mut qk = QuantizedMat4::new(d);
+    let mut qv = QuantizedMat4::new(d);
+    for _ in 0..n {
+        let kr: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 1.0)).collect();
+        let vr: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 1.0)).collect();
+        qk.push_row(&kr);
+        qv.push_row(&vr);
+    }
+    let q: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 1.0) / (d as f32).sqrt()).collect();
+    let mut logits = Vec::with_capacity(n);
+    let mut out = Vec::with_capacity(d);
+
+    let s_scalar = bench("fused int4 decode step (scalar seq_ref)", 1, budget, 3, || {
+        fused_decode_step(
+            &qk,
+            &qv,
+            &q,
+            &mut logits,
+            &mut out,
+            |m, r, b| simd::dot_i4_seq_ref(m.row_packed(r), m.cols(), m.scale(r), b),
+            simd::axpy_seq_ref,
+            simd::max_fold_seq_ref,
+        )
+    });
+    println!("{}", s_scalar.report());
+    let s_simd = bench("fused int4 decode step (simd dispatch)", 1, budget, 3, || {
+        fused_decode_step(
+            &qk,
+            &qv,
+            &q,
+            &mut logits,
+            &mut out,
+            |m, r, b| m.dot_row(r, b),
+            simd::axpy,
+            simd::max_fold,
+        )
+    });
+    println!("{}", s_simd.report());
+    let speedup = s_scalar.p50_s / s_simd.p50_s;
+    println!("   fused decode speedup: {speedup:.2}x (gate: >= 2.0 in BENCH_engine.json)");
+
+    // f32 dot for reference.
+    let k_f32: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..d).map(|_| rng.normal32(0.0, 1.0)).collect())
+        .collect();
+    let s_dot_ref = bench("f32 dot scan (scalar seq_ref)", 1, budget, 3, || {
+        let mut acc = 0.0f32;
+        for row in &k_f32 {
+            acc += simd::dot_seq_ref(row, &q);
+        }
+        acc
+    });
+    println!("{}", s_dot_ref.report());
+    let s_dot = bench("f32 dot scan (simd dispatch)", 1, budget, 3, || {
+        let mut acc = 0.0f32;
+        for row in &k_f32 {
+            acc += simd::dot(row, &q);
+        }
+        acc
+    });
+    println!("{}", s_dot.report());
+    println!("   f32 dot speedup: {:.2}x", s_dot_ref.p50_s / s_dot.p50_s);
+    println!();
+}
+
+fn allocation_audit(rng: &mut Rng) {
+    println!("== allocation audit: arena-backed decode path ==");
+    let d = 128;
+    let n = 16_384;
+    let head =
+        synthesize_head(n, d, ScoreProfile::Mixed { heavy: 16, boost: 6.0, alpha: 0.9 }, rng);
+    let mut cfg = vattn::experiments::common::vcfg(0.1);
+    cfg.floor_at_base = false;
+    let mut pol = VAttentionPolicy::oracle(cfg);
+    let mut fork = rng.fork(7);
+    let step = |pol: &mut VAttentionPolicy, fork: &mut Rng| {
+        let mut ctx =
+            PolicyCtx { k: &head.k, v: &head.v, q_scaled: &head.q_scaled, rng: fork, step: 0 };
+        let sel = pol.select(&mut ctx);
+        sparse_sdpa(&head.k, &head.v, &head.q_scaled, &sel)
+    };
+    // Warm up the arena and any policy-internal caches.
+    for _ in 0..8 {
+        let _ = step(&mut pol, &mut fork);
+    }
+    let (takes0, misses0) = vattn::util::arena::thread_counters();
+    let a0 = alloc_count();
+    let iters = 64u64;
+    for _ in 0..iters {
+        let _ = step(&mut pol, &mut fork);
+    }
+    let allocs = alloc_count() - a0;
+    let (takes1, misses1) = vattn::util::arena::thread_counters();
+    println!(
+        "   {iters} warm decode steps: {allocs} global allocs ({:.1}/step), arena takes {} misses {}",
+        allocs as f64 / iters as f64,
+        takes1 - takes0,
+        misses1 - misses0,
+    );
+    assert_eq!(misses1, misses0, "warm arena must not miss (allocation leak on hot path)");
+    println!();
+}
 
 fn main() {
     let budget = Duration::from_millis(500);
     let mut rng = Rng::new(42);
     let d = 128; // llama-8b head dim
+
+    kernels_section(&mut rng);
+    allocation_audit(&mut rng);
 
     println!("== Fig 5: decode hot path at llama head shape (d=128) ==");
     for &n in &[16_384usize, 65_536, 131_072] {

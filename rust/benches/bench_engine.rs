@@ -11,12 +11,19 @@
 //! streams at 1 and 4 workers, a peak-block footprint under the
 //! unshared baseline, and quiescence after drain + prefix flush.
 //!
-//! Also runs the verified int8 KV quantization scenario: the same
-//! shared-prompt workload on the same pool *bytes* at fp32 vs int8 —
-//! asserting ≥ 3.5x KV compression, ~4x fewer preemptions, and
-//! byte-identical int8 streams at 1 and 4 workers — plus an empirical
-//! quantized (ε, δ) coverage estimate written to the `kv_quant` JSON
-//! block (CI-checked).
+//! Also runs the verified KV quantization scenario: the same
+//! shared-prompt workload on the same pool *bytes* at fp32 vs int8 vs
+//! bit-packed int4 — asserting ≥ 3.5x (int8) and ≥ 6x (int4) KV
+//! compression, monotonically fewer preemptions, and byte-identical
+//! quantized streams at 1 and 4 workers — plus empirical quantized
+//! (ε, δ) coverage estimates at both dtypes written to the `kv_quant`
+//! JSON block (CI-checked).
+//!
+//! Also runs the kernel-dispatch comparison: the fused int4 decode step
+//! (dequant-dot score scan + weighted V accumulation) timed single-
+//! threaded against the sequential `*_seq_ref` scalar chain; the
+//! measured speedup is written to the `kernels` JSON block and
+//! CI-gated at ≥ 2x.
 //!
 //! Also runs the spill-to-disk cold-tier scenario: the shared-prompt
 //! workload on an over-committed pool with the file-backed `SpillStore`
@@ -73,8 +80,10 @@ use vattn::server::{
     AttentionMode, AttentionOpt, Engine, EngineConfig, Event, GenOptions, NetServer, Request,
     RequestResult, RouterConfig, Session, SubmitRequest,
 };
-use vattn::tensor::Mat;
+use vattn::tensor::quant::QuantizedMat4;
+use vattn::tensor::{simd, Mat};
 use vattn::util::json::Json;
+use vattn::util::timer::bench;
 use vattn::workloads::traces::{generate_trace, to_requests, TraceConfig};
 use vattn::util::Rng;
 
@@ -338,10 +347,41 @@ fn main() {
     );
     println!("{}", quant_paging.render());
 
-    // Empirical (ε, δ) coverage with int8 KV and the slack-widened
+    // Bit-packed int4 on the same byte budget: rows shrink to
+    // ⌈d/2⌉ + 4 B, so the identical pool holds ~7.5x the fp32 blocks
+    // and preemption pressure can only drop further vs int8.
+    let (q4_1, q4_stats, _) = run_paged(1, Some(quant_pool_bytes), true, KvDtype::Int4);
+    let (q4_4, q4_stats4, _) = run_paged(4, Some(quant_pool_bytes), true, KvDtype::Int4);
+    assert_eq!(q4_1, q4_4, "int4 streams diverged between 1 and 4 workers");
+    assert_eq!(
+        q4_stats.preemptions, q4_stats4.preemptions,
+        "int4 paging decisions must be worker-count invariant"
+    );
+    assert!(
+        q4_stats.preemptions <= q8_stats.preemptions,
+        "int4 must not preempt more than int8 on the same pool ({} vs {})",
+        q4_stats.preemptions,
+        q8_stats.preemptions
+    );
+    let compression4 = q4_stats.kv_compression_ratio();
+    assert!(compression4 >= 6.0, "int4 compression only {compression4:.2}x");
+    assert!(
+        q4_stats.capacity_blocks.unwrap_or(0) > q8_stats.capacity_blocks.unwrap_or(0),
+        "the int4 pool must hold more blocks than int8 on the same bytes"
+    );
+    println!(
+        "int4 on the same pool: {} preemptions ({:.2}x KV compression, {} blocks)",
+        q4_stats.preemptions,
+        compression4,
+        q4_stats.capacity_blocks.unwrap_or(0),
+    );
+
+    // Empirical (ε, δ) coverage with quantized KV and the slack-widened
     // budget, measured against the exact fp32 population — the bench's
-    // machine-readable companion to tests/budget_coverage.rs.
-    let quant_coverage = |bound: vattn::budget::Bound, seed: u64| -> f64 {
+    // machine-readable companion to tests/budget_coverage.rs. `int4`
+    // swaps the bit-packed codec in; the slack formula is shared (the
+    // ~16x wider int4 scale widens ρ through the same `QuantSlack`).
+    let quant_coverage = |bound: vattn::budget::Bound, seed: u64, int4: bool| -> f64 {
         use vattn::attention::{exact_num_den, weighted_num_den, Selection};
         use vattn::budget::{self, QuantSlack, Verify};
         use vattn::policies::sink_window_indices;
@@ -357,14 +397,24 @@ fn main() {
             let q: Vec<f32> =
                 (0..d).map(|_| rng.normal32(0.0, 1.0) / (d as f32).sqrt()).collect();
             let quantize = |m: &Mat| {
-                let mut qm = QuantizedMat::new(d);
                 let mut out = Mat::zeros(0, d);
-                for r in 0..m.rows {
-                    qm.push_row(m.row(r));
-                    qm.dequantize_row_into(r, &mut out.data);
-                    out.rows += 1;
+                if int4 {
+                    let mut qm = QuantizedMat4::new(d);
+                    for r in 0..m.rows {
+                        qm.push_row(m.row(r));
+                        qm.dequantize_row_into(r, &mut out.data);
+                        out.rows += 1;
+                    }
+                    (out, qm.max_scale())
+                } else {
+                    let mut qm = QuantizedMat::new(d);
+                    for r in 0..m.rows {
+                        qm.push_row(m.row(r));
+                        qm.dequantize_row_into(r, &mut out.data);
+                        out.rows += 1;
+                    }
+                    (out, qm.max_scale())
                 }
-                (out, qm.max_scale())
             };
             let (k_hat, k_scale) = quantize(&k);
             let (v_hat, v_scale) = quantize(&v);
@@ -393,11 +443,84 @@ fn main() {
         }
         violations as f64 / trials as f64
     };
-    let coverage_fail_clt = quant_coverage(vattn::budget::Bound::Clt, 0xA5EED);
-    let coverage_fail_hoeffding = quant_coverage(vattn::budget::Bound::Hoeffding, 0xB5EED);
+    let coverage_fail_clt = quant_coverage(vattn::budget::Bound::Clt, 0xA5EED, false);
+    let coverage_fail_hoeffding =
+        quant_coverage(vattn::budget::Bound::Hoeffding, 0xB5EED, false);
     println!(
         "int8 (ε=0.2, δ=0.15) coverage: CLT fail rate {coverage_fail_clt:.3}, \
          Hoeffding fail rate {coverage_fail_hoeffding:.3}"
+    );
+    let coverage4_fail_clt = quant_coverage(vattn::budget::Bound::Clt, 0xC5EED, true);
+    let coverage4_fail_hoeffding =
+        quant_coverage(vattn::budget::Bound::Hoeffding, 0xD5EED, true);
+    println!(
+        "int4 (ε=0.2, δ=0.15) coverage: CLT fail rate {coverage4_fail_clt:.3}, \
+         Hoeffding fail rate {coverage4_fail_hoeffding:.3}"
+    );
+
+    println!("\n== kernels: fused int4 decode step, seq_ref scalar vs dispatch ==");
+    // Single-thread apples-to-apples: the same fused step (dequant-dot
+    // score scan, max fold, weighted V accumulation) through the
+    // sequential reference chain vs the dispatched kernel. The seq_ref
+    // chain is a genuine latency-bound scalar loop — `#[inline(never)]`
+    // single accumulators — so the ≥ 2x gate measures real kernel work,
+    // not a strawman.
+    let kern_budget = Duration::from_millis(300);
+    let (kn, kd) = (4096usize, 128usize);
+    let mut krng = Rng::new(0x5EED_4B17);
+    let mut kqk = QuantizedMat4::new(kd);
+    let mut kqv = QuantizedMat4::new(kd);
+    for _ in 0..kn {
+        let kr: Vec<f32> = (0..kd).map(|_| krng.normal32(0.0, 1.0)).collect();
+        let vr: Vec<f32> = (0..kd).map(|_| krng.normal32(0.0, 1.0)).collect();
+        kqk.push_row(&kr);
+        kqv.push_row(&vr);
+    }
+    let kq: Vec<f32> =
+        (0..kd).map(|_| krng.normal32(0.0, 1.0) / (kd as f32).sqrt()).collect();
+    let mut klogits: Vec<f32> = Vec::with_capacity(kn);
+    let mut kout: Vec<f32> = vec![0.0; kd];
+    let mut kvrow: Vec<f32> = Vec::with_capacity(kd);
+    let mut fused_step = |dot: &dyn Fn(usize) -> f32,
+                          maxf: &dyn Fn(&[f32]) -> f32,
+                          accum: &dyn Fn(f32, &[f32], &mut [f32])|
+     -> f32 {
+        klogits.clear();
+        for r in 0..kn {
+            klogits.push(dot(r));
+        }
+        let m = maxf(&klogits);
+        kout.iter_mut().for_each(|x| *x = 0.0);
+        let mut denom = 0.0f32;
+        for r in 0..kn {
+            let w = (klogits[r] - m).exp();
+            denom += w;
+            kvrow.clear();
+            kqv.dequantize_row_into(r, &mut kvrow);
+            accum(w, &kvrow, &mut kout);
+        }
+        denom
+    };
+    let s_kern_ref = bench("fused int4 step (scalar seq_ref)", 1, kern_budget, 3, || {
+        fused_step(
+            &|r| simd::dot_i4_seq_ref(kqk.row_packed(r), kqk.cols(), kqk.scale(r), &kq),
+            &simd::max_fold_seq_ref,
+            &simd::axpy_seq_ref,
+        )
+    });
+    println!("{}", s_kern_ref.report());
+    let s_kern_simd = bench("fused int4 step (simd dispatch)", 1, kern_budget, 3, || {
+        fused_step(&|r| kqk.dot_row(r, &kq), &simd::max_fold, &simd::axpy)
+    });
+    println!("{}", s_kern_simd.report());
+    let fused_speedup = s_kern_ref.p50_s / s_kern_simd.p50_s;
+    println!(
+        "dispatch {}: fused decode speedup {fused_speedup:.2}x (gate >= 2.0)",
+        simd::kernel_name()
+    );
+    assert!(
+        fused_speedup >= 2.0,
+        "fused int4 decode step only {fused_speedup:.2}x over the scalar chain"
     );
 
     println!("\n== spill-to-disk cold tier: over-committed pool, swap-in preemption ==");
@@ -859,9 +982,12 @@ fn main() {
                     Json::num(q8_stats.bytes_per_token_fp32 as f64),
                 )
                 .field("bytes_per_token_int8", Json::num(q8_stats.bytes_per_token as f64))
+                .field("bytes_per_token_int4", Json::num(q4_stats.bytes_per_token as f64))
                 .field("compression_ratio", Json::num(compression))
+                .field("compression_ratio_int4", Json::num(compression4))
                 .field("preemptions_fp32", Json::num(q32_stats.preemptions as f64))
                 .field("preemptions_int8", Json::num(q8_stats.preemptions as f64))
+                .field("preemptions_int4", Json::num(q4_stats.preemptions as f64))
                 .field(
                     "capacity_blocks_fp32",
                     Json::num(q32_stats.capacity_blocks.unwrap_or(0) as f64),
@@ -870,11 +996,27 @@ fn main() {
                     "capacity_blocks_int8",
                     Json::num(q8_stats.capacity_blocks.unwrap_or(0) as f64),
                 )
+                .field(
+                    "capacity_blocks_int4",
+                    Json::num(q4_stats.capacity_blocks.unwrap_or(0) as f64),
+                )
                 .field("prefix_hit_rate", Json::num(quant_paging.prefix_hit_rate))
                 .field("coverage_eps", Json::num(0.2))
                 .field("coverage_delta", Json::num(0.15))
                 .field("coverage_fail_clt", Json::num(coverage_fail_clt))
                 .field("coverage_fail_hoeffding", Json::num(coverage_fail_hoeffding)),
+        )
+        .field(
+            "kernels",
+            Json::obj()
+                .field("dispatch", Json::str(simd::kernel_name()))
+                .field("fused_decode_speedup", Json::num(fused_speedup))
+                .field("int4_compression_ratio", Json::num(compression4))
+                .field("int4_coverage_fail_clt", Json::num(coverage4_fail_clt))
+                .field(
+                    "int4_coverage_fail_hoeffding",
+                    Json::num(coverage4_fail_hoeffding),
+                ),
         )
         .field(
             "spill",

@@ -66,7 +66,11 @@ pub fn dense_sdpa(k: &Mat, v: &Mat, q_scaled: &[f32]) -> DenseOut {
 /// ~1.5× — measured in §Perf iteration 3a).
 fn dense_sdpa_chunk(k: &Mat, v: &Mat, q_scaled: &[f32], lo: usize, hi: usize) -> DenseOut {
     let d = v.cols;
-    let mut logits = Vec::with_capacity(hi - lo);
+    // Arena-recycled logit scratch: this runs once per decode step per
+    // request, and the buffer's contents never leave the function, so
+    // reuse cannot affect results (util::arena module docs).
+    let mut logits = crate::util::arena::take_f32();
+    logits.reserve(hi - lo);
     let mut m = f32::NEG_INFINITY;
     for i in lo..hi {
         let l = dot(k.row(i), q_scaled);
@@ -82,6 +86,7 @@ fn dense_sdpa_chunk(k: &Mat, v: &Mat, q_scaled: &[f32], lo: usize, hi: usize) ->
         denom += w as f64;
         crate::tensor::axpy(w, v.row(lo + j), &mut out);
     }
+    crate::util::arena::recycle_f32(logits);
     let inv = (1.0 / denom) as f32;
     for o in out.iter_mut() {
         *o *= inv;
@@ -152,7 +157,9 @@ pub fn sparse_sdpa(k: &Mat, v: &Mat, q_scaled: &[f32], sel: &Selection) -> Vec<f
     if sel.idx.is_empty() {
         return vec![0.0; d];
     }
-    let logits = logits_for(k, q_scaled, &sel.idx);
+    // Arena-recycled logit scratch (see dense_sdpa_chunk).
+    let mut logits = crate::util::arena::take_f32();
+    logits.extend(sel.idx.iter().map(|&i| dot(k.row(i), q_scaled)));
     // Stabilize including the log-importance weights, since the weighted
     // exponent is what actually enters the sum.
     let mut m = f32::NEG_INFINITY;
@@ -169,6 +176,7 @@ pub fn sparse_sdpa(k: &Mat, v: &Mat, q_scaled: &[f32], sel: &Selection) -> Vec<f
         denom += w as f64;
         crate::tensor::axpy(w, v.row(sel.idx[j]), &mut out);
     }
+    crate::util::arena::recycle_f32(logits);
     let inv = (1.0 / denom) as f32;
     for o in out.iter_mut() {
         *o *= inv;

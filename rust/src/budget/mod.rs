@@ -182,14 +182,11 @@ fn estimate_stats_impl(
         sum_w += w;
         sum_w2 += w * w;
         max_w = max_w.max(w);
-        let row = v.row(i);
-        let mut rn2 = 0.0f64;
-        for (c, &vc) in row.iter().enumerate() {
-            let r = w * vc as f64;
-            sum_vec[c] += r;
-            sum_vec2[c] += r * r;
-            rn2 += r * r;
-        }
+        // Vectorized column-moment pass; bitwise equal to the historical
+        // interleaved loop (kept as `weighted_moments_seq_ref`, proptested
+        // in tests/proptests.rs) because per-column accumulation order is
+        // unchanged and the rn2 reduction stays sequential.
+        let rn2 = crate::tensor::simd::weighted_moments(w, v.row(i), &mut sum_vec, &mut sum_vec2);
         max_rn = max_rn.max(rn2.sqrt());
     }
     let b0f = b0 as f64;

@@ -83,6 +83,7 @@ fn chain_key(dtype: KvDtype, parent: Option<ChainKey>, tokens: &[u32]) -> ChainK
     eat(match dtype {
         KvDtype::F32 => 0xF3,
         KvDtype::Int8 => 0x18,
+        KvDtype::Int4 => 0x14,
     });
     match parent {
         None => eat(0),

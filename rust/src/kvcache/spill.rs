@@ -50,6 +50,7 @@ const HEADER_BYTES: usize = 9;
 /// Dtype tags, matching the prefix radix's chain-key tag bytes.
 const TAG_F32: u8 = 0xF3;
 const TAG_INT8: u8 = 0x18;
+const TAG_INT4: u8 = 0x14;
 /// Prefix-file framing: magic, format version.
 const PREFIX_MAGIC: u32 = 0x7650_7266; // "vPrf"
 const PREFIX_VERSION: u32 = 1;
@@ -104,6 +105,7 @@ fn encode_header(snap: &BlockSnapshot, buf: &mut Vec<u8>) {
     buf.push(match snap.dtype {
         KvDtype::F32 => TAG_F32,
         KvDtype::Int8 => TAG_INT8,
+        KvDtype::Int4 => TAG_INT4,
     });
     buf.extend_from_slice(&(snap.tokens as u32).to_le_bytes());
     buf.extend_from_slice(&(snap.slots.len() as u32).to_le_bytes());
@@ -126,6 +128,12 @@ fn encode_payload(snap: &BlockSnapshot, buf: &mut Vec<u8>) {
                 i8s(k, buf);
                 f32s(k_scales, buf);
                 i8s(v, buf);
+                f32s(v_scales, buf);
+            }
+            SlotRows::Int4 { k, k_scales, v, v_scales } => {
+                buf.extend_from_slice(k);
+                f32s(k_scales, buf);
+                buf.extend_from_slice(v);
                 f32s(v_scales, buf);
             }
         }
@@ -174,6 +182,10 @@ impl<'a> Rd<'a> {
         Ok(self.take(n)?.iter().map(|&b| b as i8).collect())
     }
 
+    fn bytes(&mut self, n: usize) -> io::Result<Vec<u8>> {
+        Ok(self.take(n)?.to_vec())
+    }
+
     fn done(&self) -> bool {
         self.p == self.b.len()
     }
@@ -183,6 +195,7 @@ fn decode_dtype(tag: u8) -> io::Result<KvDtype> {
     match tag {
         TAG_F32 => Ok(KvDtype::F32),
         TAG_INT8 => Ok(KvDtype::Int8),
+        TAG_INT4 => Ok(KvDtype::Int4),
         t => Err(bad(format!("unknown KV dtype tag 0x{t:02x} in spill record"))),
     }
 }
@@ -204,6 +217,12 @@ fn decode_payload(
                 k: rd.i8s(tokens * d)?,
                 k_scales: rd.f32s(tokens)?,
                 v: rd.i8s(tokens * d)?,
+                v_scales: rd.f32s(tokens)?,
+            },
+            KvDtype::Int4 => SlotRows::Int4 {
+                k: rd.bytes(tokens * d.div_ceil(2))?,
+                k_scales: rd.f32s(tokens)?,
+                v: rd.bytes(tokens * d.div_ceil(2))?,
                 v_scales: rd.f32s(tokens)?,
             },
         });
@@ -237,7 +256,8 @@ impl SpillStore {
             block_tokens,
             slots,
             d,
-            // Worst-case (f32) payload: int8's d + 4 B/row fits for d ≥ 2.
+            // Worst-case (f32) payload: int8's d + 4 and int4's
+            // ⌈d/2⌉ + 4 B/row both fit for d ≥ 2.
             slot_bytes: HEADER_BYTES + payload_len(KvDtype::F32, block_tokens, slots, d),
             free: Vec::new(),
             live: Vec::new(),
@@ -448,6 +468,16 @@ mod tests {
                     assert_eq!(bits(ksa), bits(ksb));
                     assert_eq!(bits(vsa), bits(vsb));
                 }
+                (
+                    SlotRows::Int4 { k: ka, k_scales: ksa, v: va, v_scales: vsa },
+                    SlotRows::Int4 { k: kb, k_scales: ksb, v: vb, v_scales: vsb },
+                ) => {
+                    assert_eq!(ka, kb);
+                    assert_eq!(va, vb);
+                    let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                    assert_eq!(bits(ksa), bits(ksb));
+                    assert_eq!(bits(vsa), bits(vsb));
+                }
                 _ => panic!("slot layout mismatch"),
             }
         }
@@ -484,6 +514,28 @@ mod tests {
         // Loading the round-tripped snapshot reproduces the donor's
         // dequantized mirror bit-for-bit.
         let mut dst = BlockStore::new(slots, d, KvDtype::Int8);
+        dst.load_rows(&back);
+        for s in 0..slots {
+            for r in 0..5 {
+                assert_eq!(dst.k(s).row(r), src.k(s).row(r));
+                assert_eq!(dst.v(s).row(r), src.v(s).row(r));
+            }
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn int4_block_round_trips_byte_exact_at_odd_head_dim() {
+        let path = tmp("int4_rt");
+        let (slots, d, bt) = (2, 9, 8); // odd d: padded last nibble per row
+        let mut store = SpillStore::open(&path, bt, slots, d).unwrap();
+        let src = filled(slots, d, 5, KvDtype::Int4); // partial block: 5 < 8
+        let snap = src.snapshot_rows(0, 5);
+        assert_eq!(snap.payload_bytes(), slots * 2 * 5 * (d.div_ceil(2) + 4));
+        let slot = store.write_block(&snap).unwrap();
+        let back = store.read_block(slot).unwrap();
+        assert_snap_eq(&snap, &back);
+        let mut dst = BlockStore::new(slots, d, KvDtype::Int4);
         dst.load_rows(&back);
         for s in 0..slots {
             for r in 0..5 {

@@ -1,5 +1,5 @@
 //! [`BlockStore`]: the K/V row storage behind [`crate::kvcache::KvCache`],
-//! in one of two physical dtypes behind a single interface.
+//! in one of three physical dtypes behind a single interface.
 //!
 //! * [`KvDtype::F32`] — rows stored as plain f32 (`4·d` bytes/row), the
 //!   historical layout.
@@ -7,6 +7,10 @@
 //!   (`d + 4` bytes/row: one code per element plus the f32 scale; see
 //!   [`crate::tensor::quant`]), alongside a *dequantized f32 working
 //!   mirror*.
+//! * [`KvDtype::Int4`] — rows stored as bit-packed per-row symmetric
+//!   int4 payloads (`⌈d/2⌉ + 4` bytes/row: two codes per byte plus the
+//!   f32 scale; docs/GUARANTEES.md §9), same mirror discipline as int8
+//!   with a wider ρ folded through the budget.
 //!
 //! The mirror is the testbed's stand-in for the transient on-device
 //! dequantized tile of the paper's deployment: every downstream
@@ -26,7 +30,7 @@
 //! between shared and unshared runs (`tests/kv_quant.rs`).
 
 use crate::model::ModelConfig;
-use crate::tensor::quant::{KvQuantBounds, QuantizedMat};
+use crate::tensor::quant::{KvQuantBounds, QuantizedMat, QuantizedMat4};
 use crate::tensor::Mat;
 
 /// Physical storage dtype of a KV cache's rows.
@@ -39,15 +43,21 @@ pub enum KvDtype {
     /// error is carried through the (ε, δ) budget as an explicit slack
     /// term (docs/GUARANTEES.md §8).
     Int8,
+    /// Bit-packed per-row symmetric int4 (two codes per byte) with
+    /// power-of-two scales — same exact `scale/2` bound as int8 but a
+    /// 16× wider scale, i.e. a wider ρ (docs/GUARANTEES.md §9).
+    Int4,
 }
 
 impl KvDtype {
     /// Physical bytes of one stored K or V row of `d` elements. Int8
-    /// rows carry a 4-byte f32 scale next to `d` one-byte codes.
+    /// rows carry a 4-byte f32 scale next to `d` one-byte codes; int4
+    /// packs two codes per byte (`⌈d/2⌉` bytes) plus the scale.
     pub fn row_bytes(self, d: usize) -> usize {
         match self {
             KvDtype::F32 => 4 * d,
             KvDtype::Int8 => d + 4,
+            KvDtype::Int4 => d.div_ceil(2) + 4,
         }
     }
 
@@ -62,14 +72,16 @@ impl KvDtype {
         match self {
             KvDtype::F32 => "f32",
             KvDtype::Int8 => "int8",
+            KvDtype::Int4 => "int4",
         }
     }
 
-    /// Parse a CLI spelling (`vattn serve --kv-quant int8`).
+    /// Parse a CLI spelling (`vattn serve --kv-quant int4`).
     pub fn parse(s: &str) -> Option<KvDtype> {
         match s {
             "f32" | "fp32" | "none" => Some(KvDtype::F32),
             "int8" => Some(KvDtype::Int8),
+            "int4" => Some(KvDtype::Int4),
             _ => None,
         }
     }
@@ -93,6 +105,8 @@ pub fn compression_ratio(bytes_per_token_fp32: usize, bytes_per_token: usize) ->
 pub enum SlotRows {
     F32 { k: Vec<f32>, v: Vec<f32> },
     Int8 { k: Vec<i8>, k_scales: Vec<f32>, v: Vec<i8>, v_scales: Vec<f32> },
+    /// Bit-packed int4: `⌈d/2⌉` bytes per row, two codes per byte.
+    Int4 { k: Vec<u8>, k_scales: Vec<f32>, v: Vec<u8>, v_scales: Vec<f32> },
 }
 
 /// A full block's rows across every (layer, kv-head) slot — what the
@@ -118,6 +132,9 @@ impl BlockSnapshot {
                 SlotRows::Int8 { k, k_scales, v, v_scales } => {
                     k.len() + v.len() + (k_scales.len() + v_scales.len()) * 4
                 }
+                SlotRows::Int4 { k, k_scales, v, v_scales } => {
+                    k.len() + v.len() + (k_scales.len() + v_scales.len()) * 4
+                }
             })
             .sum()
     }
@@ -133,21 +150,27 @@ pub struct BlockStore {
     /// device-tile mirror for Int8 (see module docs).
     k: Vec<Mat>,
     v: Vec<Mat>,
-    /// Physical int8 payloads (empty at F32).
+    /// Physical int8 payloads (empty unless dtype is Int8).
     qk: Vec<QuantizedMat>,
     qv: Vec<QuantizedMat>,
+    /// Physical bit-packed int4 payloads (empty unless dtype is Int4).
+    q4k: Vec<QuantizedMat4>,
+    q4v: Vec<QuantizedMat4>,
 }
 
 impl BlockStore {
     pub fn new(slots: usize, d: usize, dtype: KvDtype) -> BlockStore {
-        let quant = matches!(dtype, KvDtype::Int8);
+        let q8 = matches!(dtype, KvDtype::Int8);
+        let q4 = matches!(dtype, KvDtype::Int4);
         BlockStore {
             dtype,
             d,
             k: (0..slots).map(|_| Mat::zeros(0, d)).collect(),
             v: (0..slots).map(|_| Mat::zeros(0, d)).collect(),
-            qk: if quant { (0..slots).map(|_| QuantizedMat::new(d)).collect() } else { Vec::new() },
-            qv: if quant { (0..slots).map(|_| QuantizedMat::new(d)).collect() } else { Vec::new() },
+            qk: if q8 { (0..slots).map(|_| QuantizedMat::new(d)).collect() } else { Vec::new() },
+            qv: if q8 { (0..slots).map(|_| QuantizedMat::new(d)).collect() } else { Vec::new() },
+            q4k: if q4 { (0..slots).map(|_| QuantizedMat4::new(d)).collect() } else { Vec::new() },
+            q4v: if q4 { (0..slots).map(|_| QuantizedMat4::new(d)).collect() } else { Vec::new() },
         }
     }
 
@@ -200,6 +223,15 @@ impl BlockStore {
                 self.qv[slot].dequantize_row_into(r, &mut self.v[slot].data);
                 self.v[slot].rows += 1;
             }
+            KvDtype::Int4 => {
+                self.q4k[slot].push_row(k_row);
+                let r = self.q4k[slot].rows() - 1;
+                self.q4k[slot].dequantize_row_into(r, &mut self.k[slot].data);
+                self.k[slot].rows += 1;
+                self.q4v[slot].push_row(v_row);
+                self.q4v[slot].dequantize_row_into(r, &mut self.v[slot].data);
+                self.v[slot].rows += 1;
+            }
         }
     }
 
@@ -211,6 +243,10 @@ impl BlockStore {
             KvDtype::Int8 => Some(KvQuantBounds {
                 k_scale_max: self.qk[slot].max_scale(),
                 v_scale_max: self.qv[slot].max_scale(),
+            }),
+            KvDtype::Int4 => Some(KvQuantBounds {
+                k_scale_max: self.q4k[slot].max_scale(),
+                v_scale_max: self.q4v[slot].max_scale(),
             }),
         }
     }
@@ -224,6 +260,12 @@ impl BlockStore {
                 .qk
                 .iter()
                 .zip(&self.qv)
+                .map(|(k, v)| k.payload_bytes() + v.payload_bytes())
+                .sum(),
+            KvDtype::Int4 => self
+                .q4k
+                .iter()
+                .zip(&self.q4v)
                 .map(|(k, v)| k.payload_bytes() + v.payload_bytes())
                 .sum(),
         }
@@ -244,6 +286,16 @@ impl BlockStore {
                     let (kc, ks) = self.qk[s].raw_rows(lo, hi);
                     let (vc, vs) = self.qv[s].raw_rows(lo, hi);
                     SlotRows::Int8 {
+                        k: kc.to_vec(),
+                        k_scales: ks.to_vec(),
+                        v: vc.to_vec(),
+                        v_scales: vs.to_vec(),
+                    }
+                }
+                KvDtype::Int4 => {
+                    let (kc, ks) = self.q4k[s].raw_rows(lo, hi);
+                    let (vc, vs) = self.q4v[s].raw_rows(lo, hi);
+                    SlotRows::Int4 {
                         k: kc.to_vec(),
                         k_scales: ks.to_vec(),
                         v: vc.to_vec(),
@@ -283,6 +335,17 @@ impl BlockStore {
                         self.v[s].rows += 1;
                     }
                 }
+                SlotRows::Int4 { k, k_scales, v, v_scales } => {
+                    let base = self.q4k[s].rows();
+                    self.q4k[s].extend_raw(k, k_scales);
+                    self.q4v[s].extend_raw(v, v_scales);
+                    for r in base..base + snap.tokens {
+                        self.q4k[s].dequantize_row_into(r, &mut self.k[s].data);
+                        self.k[s].rows += 1;
+                        self.q4v[s].dequantize_row_into(r, &mut self.v[s].data);
+                        self.v[s].rows += 1;
+                    }
+                }
             }
         }
     }
@@ -293,6 +356,9 @@ impl BlockStore {
             m.data.clear();
         }
         for q in self.qk.iter_mut().chain(self.qv.iter_mut()) {
+            q.clear();
+        }
+        for q in self.q4k.iter_mut().chain(self.q4v.iter_mut()) {
             q.clear();
         }
     }
@@ -314,8 +380,14 @@ mod tests {
         assert_eq!(KvDtype::parse("int8"), Some(KvDtype::Int8));
         assert_eq!(KvDtype::parse("fp32"), Some(KvDtype::F32));
         assert_eq!(KvDtype::parse("f32"), Some(KvDtype::F32));
-        assert_eq!(KvDtype::parse("int4"), None);
+        assert_eq!(KvDtype::parse("int4"), Some(KvDtype::Int4));
+        assert_eq!(KvDtype::parse("int2"), None);
         assert_eq!(KvDtype::Int8.name(), "int8");
+        assert_eq!(KvDtype::Int4.name(), "int4");
+        // int4 packs two codes per byte: ⌈32/2⌉ + 4 = 20 bytes/row.
+        assert_eq!(KvDtype::Int4.row_bytes(32), 20);
+        assert_eq!(KvDtype::Int4.row_bytes(33), 21);
+        assert_eq!(KvDtype::Int4.kv_bytes_per_token(&cfg), 2 * 2 * 2 * 20);
     }
 
     #[test]
@@ -371,6 +443,56 @@ mod tests {
             for r in 0..4 {
                 // Mirror values bitwise equal to the donor's — the
                 // payload round-tripped byte-for-byte.
+                assert_eq!(dst.k(s).row(r), src.k(s).row(2 + r));
+                assert_eq!(dst.v(s).row(r), src.v(s).row(2 + r));
+            }
+        }
+    }
+
+    #[test]
+    fn int4_store_is_within_bounds_and_pays_packed_bytes() {
+        let mut rng = Rng::new(4);
+        let d = 16;
+        let rows: Vec<Vec<f32>> = (0..12).map(|_| {
+            (0..d).map(|_| rng.normal32(0.0, 1.5)).collect()
+        }).collect();
+        let mut quant = BlockStore::new(2, d, KvDtype::Int4);
+        for row in &rows {
+            quant.append_row(0, row, row);
+        }
+        let b = quant.quant_bounds(0).expect("int4 bounds");
+        assert!(b.k_scale_max > 0.0);
+        for (r, row) in rows.iter().enumerate() {
+            for (x, x_hat) in row.iter().zip(quant.k(0).row(r)) {
+                assert!((x - x_hat).abs() <= 0.5 * b.k_scale_max);
+            }
+        }
+        // Physical accounting: int4 pays (⌈d/2⌉ + 4) per row per matrix.
+        assert_eq!(quant.payload_bytes(), 12 * 2 * (d / 2 + 4));
+        assert_eq!(quant.row_bytes(), d / 2 + 4);
+    }
+
+    #[test]
+    fn int4_snapshot_load_is_byte_exact() {
+        let mut rng = Rng::new(5);
+        let d = 9; // odd head dim: padded last nibble in every row
+        let mut src = BlockStore::new(3, d, KvDtype::Int4);
+        for _ in 0..10 {
+            for s in 0..3 {
+                let kr: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 1.0)).collect();
+                let vr: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 1.0)).collect();
+                src.append_row(s, &kr, &vr);
+            }
+        }
+        let snap = src.snapshot_rows(2, 6);
+        assert_eq!(snap.tokens, 4);
+        assert_eq!(snap.dtype, KvDtype::Int4);
+        assert_eq!(snap.payload_bytes(), 3 * 2 * 4 * (d.div_ceil(2) + 4));
+        let mut dst = BlockStore::new(3, d, KvDtype::Int4);
+        dst.load_rows(&snap);
+        assert_eq!(dst.rows(0), 4);
+        for s in 0..3 {
+            for r in 0..4 {
                 assert_eq!(dst.k(s).row(r), src.k(s).row(2 + r));
                 assert_eq!(dst.v(s).row(r), src.v(s).row(2 + r));
             }

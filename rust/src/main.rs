@@ -7,7 +7,7 @@
 //!         [--eps E] [--delta D] [--workers W] [--max-batch B]
 //!         [--block-tokens T] [--kv-cap-mb M] [--kv-headroom H]
 //!         [--prefix-cache] [--open-loop] [--rate R]
-//!         [--reuse] [--reuse-max-age A] [--kv-quant int8|f32]
+//!         [--reuse] [--reuse-max-age A] [--kv-quant int4|int8|f32]
 //!         [--kv-spill PATH]
 //!                                                         drive the streaming session on a trace
 //!   serve --listen ADDR [--shards N] [--shard-queue-depth D] [engine flags]
@@ -94,6 +94,7 @@ fn main() {
             println!("  vattn serve --prefix-cache --kv-cap-mb 64     shared-prefix demand paging");
             println!("  vattn serve --reuse --reuse-max-age 32        cross-step heavy-hitter reuse");
             println!("  vattn serve --kv-quant int8 --kv-cap-mb 16    verified int8 KV (4x pool capacity)");
+            println!("  vattn serve --kv-quant int4 --kv-cap-mb 16    verified bit-packed int4 KV (~7x pool capacity)");
             println!("  vattn serve --kv-spill /tmp/kv.spill --kv-cap-mb 8  spill-to-disk cold tier (no preemption replays)");
             println!("  vattn serve --listen 127.0.0.1:8044 --shards 4      HTTP front-end (sharded, streaming)");
         }
@@ -171,11 +172,12 @@ fn serve(args: &Args) -> anyhow::Result<()> {
 
     // Physical KV storage: `--kv-quant int8` stores K/V rows quantized
     // (3.5–4x smaller blocks, so the same --kv-cap-mb holds ~4x more
-    // tokens); verified requests fold the dequantization error into
-    // their (ε, δ) budget automatically (docs/GUARANTEES.md §8).
+    // tokens); `--kv-quant int4` bit-packs two codes per byte (~6–7.5x
+    // smaller blocks). Verified requests fold the dequantization error
+    // into their (ε, δ) budget automatically (docs/GUARANTEES.md §8–9).
     let kv_quant = args.get_str("kv-quant", "f32");
     let kv_dtype = vattn::kvcache::KvDtype::parse(kv_quant)
-        .ok_or_else(|| anyhow::anyhow!("unknown --kv-quant '{kv_quant}' (int8|f32)"))?;
+        .ok_or_else(|| anyhow::anyhow!("unknown --kv-quant '{kv_quant}' (int4|int8|f32)"))?;
     let mut builder = EngineConfig::builder()
         .max_batch(args.get_usize("max-batch", 4))
         .seed(seed)

@@ -120,15 +120,23 @@ impl Model {
             let k_flat = Mat::from_vec(1, cfg.d_model, xn.clone()).matmul(&lw.wk);
             let v_flat = Mat::from_vec(1, cfg.d_model, xn).matmul(&lw.wv);
             // GQA: one (k, v) append per KV head; query heads share them.
+            // Head scratch rides the per-thread arena — one warm-up
+            // allocation per worker, zero per step thereafter.
+            let mut kh = crate::util::arena::take_f32();
             for kvh in 0..cfg.n_kv_heads {
-                let mut kh = k_flat.data[kvh * dh..(kvh + 1) * dh].to_vec();
+                kh.clear();
+                kh.extend_from_slice(&k_flat.data[kvh * dh..(kvh + 1) * dh]);
                 let vh = &v_flat.data[kvh * dh..(kvh + 1) * dh];
                 apply_rope(&mut kh, &cos, &sin);
                 cache.append(l, kvh, &kh, vh);
             }
-            let mut attn_concat = vec![0.0f32; cfg.d_model];
+            crate::util::arena::recycle_f32(kh);
+            let mut attn_concat = crate::util::arena::take_f32();
+            attn_concat.resize(cfg.d_model, 0.0);
+            let mut qh = crate::util::arena::take_f32();
             for head in 0..h {
-                let mut qh = q_flat.data[head * dh..(head + 1) * dh].to_vec();
+                qh.clear();
+                qh.extend_from_slice(&q_flat.data[head * dh..(head + 1) * dh]);
                 apply_rope(&mut qh, &cos, &sin);
                 for qv in qh.iter_mut() {
                     *qv *= scale;
@@ -154,7 +162,9 @@ impl Model {
                 cache.record_selected_read(rows_read);
                 attn_concat[head * dh..(head + 1) * dh].copy_from_slice(&out);
             }
+            crate::util::arena::recycle_f32(qh);
             let attn_out = lw.wo.vecmat(&attn_concat);
+            crate::util::arena::recycle_f32(attn_concat);
             for (xi, &ai) in x.iter_mut().zip(attn_out.iter()) {
                 *xi += ai;
             }

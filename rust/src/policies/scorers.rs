@@ -189,8 +189,10 @@ impl TopkScorer for DoubleSparsityScorer {
     fn score(&mut self, ctx: &mut PolicyCtx) -> Vec<f32> {
         let d = ctx.q_scaled.len();
         let r = self.channels.min(d);
-        // top-r channels of |q|
-        let mut ch: Vec<usize> = (0..d).collect();
+        // top-r channels of |q|, in an arena-recycled index buffer (this
+        // runs once per decode step; the selection itself is unchanged).
+        let mut ch = crate::util::arena::take_usize();
+        ch.extend(0..d);
         ch.select_nth_unstable_by(r.saturating_sub(1).min(d - 1), |&a, &b| {
             ctx.q_scaled[b]
                 .abs()
@@ -198,12 +200,14 @@ impl TopkScorer for DoubleSparsityScorer {
                 .unwrap()
         });
         ch.truncate(r);
-        (0..ctx.n())
+        let out: Vec<f32> = (0..ctx.n())
             .map(|i| {
                 let row = ctx.k.row(i);
                 ch.iter().map(|&c| row[c] * ctx.q_scaled[c]).sum()
             })
-            .collect()
+            .collect();
+        crate::util::arena::recycle_usize(ch);
+        out
     }
 
     fn aux_bits_per_token(&self) -> usize {

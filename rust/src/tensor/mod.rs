@@ -1,15 +1,19 @@
 //! Minimal dense f32 tensor ops: a row-major 2-D matrix plus the handful
 //! of BLAS-1/2/3 primitives the attention stack and the rust-native
-//! transformer need. Hot loops are written with 8-wide manual unrolling
-//! so LLVM auto-vectorizes them; see EXPERIMENTS.md §Perf.
+//! transformer need. Hot kernels live in [`simd`] (explicit 8-lane
+//! accumulators with an optional runtime-detected AVX2 arm); the
+//! wrappers here keep the classic call sites (`dot`, `axpy`,
+//! `softmax_inplace`) stable. See DESIGN.md §Kernel layer for the
+//! oracle-pairing rule and why one kernel is fixed per process.
 //!
-//! [`quant`] adds the per-row symmetric int8 kernels (power-of-two
-//! scales, exact `scale/2` error bound, fused dequant-dot) behind the
-//! verified quantized KV tier.
+//! [`quant`] adds the per-row symmetric int8 and bit-packed int4
+//! kernels (power-of-two scales, exact `scale/2` error bound, fused
+//! dequant-dot) behind the verified quantized KV tier.
 
 pub mod quant;
+pub mod simd;
 
-pub use quant::{KvQuantBounds, QuantizedMat};
+pub use quant::{KvQuantBounds, QuantizedMat, QuantizedMat4};
 
 use crate::util::Rng;
 
@@ -131,40 +135,22 @@ impl Mat {
     }
 }
 
-/// Dot product, 8-wide unrolled so LLVM vectorizes it. This is the single
-/// hottest scalar kernel in the repo (score computation reads all keys).
+/// Dot product. This is the single hottest kernel in the repo (score
+/// computation reads all keys); it dispatches to the [`simd`] layer,
+/// whose every arm is bitwise-equal to the historical 8-wide unrolled
+/// kernel (kept there as `dot_oracle` and proptested against).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 8;
-    let mut acc = [0.0f32; 8];
-    for i in 0..chunks {
-        let o = i * 8;
-        // Safety-free indexing: bounds are provably in range.
-        acc[0] += a[o] * b[o];
-        acc[1] += a[o + 1] * b[o + 1];
-        acc[2] += a[o + 2] * b[o + 2];
-        acc[3] += a[o + 3] * b[o + 3];
-        acc[4] += a[o + 4] * b[o + 4];
-        acc[5] += a[o + 5] * b[o + 5];
-        acc[6] += a[o + 6] * b[o + 6];
-        acc[7] += a[o + 7] * b[o + 7];
-    }
-    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
-    for i in chunks * 8..n {
-        s += a[i] * b[i];
-    }
-    s
+    simd::dot(a, b)
 }
 
-/// y += alpha * x, unrolled.
+/// y += alpha * x. Per-element independent, so vectorization cannot
+/// change results; dispatches to the [`simd`] layer.
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
-        *yi += alpha * xi;
-    }
+    simd::axpy(alpha, x, y);
 }
 
 /// y *= alpha.
@@ -207,7 +193,7 @@ pub fn softmax_inplace(x: &mut [f32]) {
     if x.is_empty() {
         return;
     }
-    let m = x.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let m = simd::max_fold(x);
     let mut sum = 0.0f32;
     for v in x.iter_mut() {
         *v = (*v - m).exp();

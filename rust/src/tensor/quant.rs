@@ -1,33 +1,43 @@
-//! Per-row symmetric int8 quantization with an *exact* dequantization
-//! error bound — the kernel layer under the verified quantized KV tier.
+//! Per-row symmetric int8 **and bit-packed int4** quantization with an
+//! *exact* dequantization error bound — the storage layer under the
+//! verified quantized KV tier.
 //!
 //! Every row is quantized against its own power-of-two scale: the
-//! smallest `s = 2^e` with `max_i |x_i| / s ≤ 127`. Power-of-two scales
-//! are what makes the advertised bound exact rather than approximate:
-//! `x / s` and `s · q` are exact f32 operations (pure exponent shifts /
-//! small-integer products), so the only error is the rounding to the
-//! nearest code and
+//! smallest `s = 2^e` with `max_i |x_i| / s ≤ Q` (`Q = 127` for int8,
+//! `Q = 7` for int4). Power-of-two scales are what makes the advertised
+//! bound exact rather than approximate: `x / s` and `s · q` are exact
+//! f32 operations (pure exponent shifts / small-integer products), so
+//! the only error is the rounding to the nearest code and
 //!
 //! ```text
 //! |x_i − s·q_i| ≤ s / 2        per element, with equality only at ties,
 //! ```
 //!
-//! which is [`QuantizedMat::max_abs_err`]'s contract, asserted bitwise by
-//! `tests/proptests.rs`. A mantissa-bearing scale (`max_abs / 127`)
-//! would buy back at most one bit of precision but turns the bound into
-//! "scale/2 up to ulps", which is exactly the kind of slack a *verified*
-//! error budget cannot absorb silently. The budget math consumes the
-//! bound through [`KvQuantBounds`] → `budget::QuantSlack`; the
-//! derivation lives in `docs/GUARANTEES.md` §8.
+//! which is [`QuantizedMat::max_abs_err`]'s / [`QuantizedMat4::max_abs_err`]'s
+//! contract, asserted bitwise by `tests/proptests.rs`. A mantissa-bearing
+//! scale (`max_abs / Q`) would buy back at most one bit of precision but
+//! turns the bound into "scale/2 up to ulps", which is exactly the kind
+//! of slack a *verified* error budget cannot absorb silently. The budget
+//! math consumes the bound through [`KvQuantBounds`] →
+//! `budget::QuantSlack` for both dtypes identically — int4's coarser
+//! codes simply surface as ~16× larger scales, i.e. a wider deterministic
+//! bias ρ, through the *same* formulas; the derivations live in
+//! `docs/GUARANTEES.md` §8 (int8) and §9 (int4).
 //!
-//! The fused [`QuantizedMat::dot_row`] replicates [`crate::tensor::dot`]'s
-//! accumulation order exactly, so `dot_row(r, b)` is **bitwise equal** to
-//! `dot(&dequantize_row(r), b)`. That equality is the bridge lemma that
-//! lets the KV store keep a dequantized f32 working mirror (the
-//! "on-device tile" of the paper's deployment) while the paged pool,
-//! snapshots and byte accounting all operate on the int8 payload: any
-//! computation over the mirror is bitwise the computation a fused
-//! dequantizing kernel would produce.
+//! The fused [`QuantizedMat::dot_row`] / [`QuantizedMat4::dot_row`]
+//! kernels ([`crate::tensor::simd::dot_i8`] / [`crate::tensor::simd::dot_i4`])
+//! replicate [`crate::tensor::dot`]'s accumulation order exactly, so
+//! `dot_row(r, b)` is **bitwise equal** to `dot(&dequantize_row(r), b)`.
+//! That equality is the bridge lemma that lets the KV store keep a
+//! dequantized f32 working mirror (the "on-device tile" of the paper's
+//! deployment) while the paged pool, snapshots and byte accounting all
+//! operate on the quantized payload: any computation over the mirror is
+//! bitwise the computation a fused dequantizing kernel would produce.
+//!
+//! Int4 packing: two codes per byte, **low nibble = even column**, row
+//! stride `cols.div_ceil(2)` bytes. Codes are clamped to `[-7, 7]`
+//! (the `-8` pattern is never produced), keeping the code range
+//! symmetric so the `s/2` rounding bound holds on both sides.
 
 /// Running dequantization-error bounds of one (K, V) quantized store
 /// pair, maintained per (layer, head) slot as rows are appended. All
@@ -63,14 +73,27 @@ impl KvQuantBounds {
     }
 }
 
-/// Smallest power of two `s` with `max_abs / s ≤ 127` (0 for an all-zero
-/// row). Exponent floored at -126 so the scale is always a normal f32.
-fn pow2_scale(max_abs: f32) -> f32 {
+/// Smallest power of two `s` with `max_abs / s ≤ qmax` (0 for an
+/// all-zero row). Exponent floored at -126 so the scale is always a
+/// normal f32.
+fn pow2_scale_for(max_abs: f32, qmax: f64) -> f32 {
     if max_abs == 0.0 {
         return 0.0;
     }
-    let e = ((max_abs as f64) / 127.0).log2().ceil() as i32;
+    let e = ((max_abs as f64) / qmax).log2().ceil() as i32;
     (2.0f64).powi(e.max(-126)) as f32
+}
+
+/// int8 scale: smallest power of two with `max_abs / s ≤ 127`.
+fn pow2_scale(max_abs: f32) -> f32 {
+    pow2_scale_for(max_abs, 127.0)
+}
+
+/// int4 scale: smallest power of two with `max_abs / s ≤ 7`. Roughly
+/// 16× the int8 scale for the same row — the wider ρ the §9 budget
+/// derivation charges.
+fn pow2_scale4(max_abs: f32) -> f32 {
+    pow2_scale_for(max_abs, 7.0)
 }
 
 /// Dequantize one code against a row scale. Shared by the mirror
@@ -80,13 +103,31 @@ fn pow2_scale(max_abs: f32) -> f32 {
 /// where clamping to the finite range can only move the value *toward*
 /// the original (|x| ≤ f32::MAX), so the `scale/2` bound survives.
 #[inline]
-fn deq(scale: f32, code: i8) -> f32 {
+pub(crate) fn deq(scale: f32, code: i8) -> f32 {
     let x = scale * code as f32;
     if x.is_infinite() {
         f32::MAX.copysign(x)
     } else {
         x
     }
+}
+
+/// Sign-extended low nibble of a packed int4 byte (the even column).
+#[inline]
+pub(crate) fn nib_lo(b: u8) -> i8 {
+    ((b << 4) as i8) >> 4
+}
+
+/// Sign-extended high nibble of a packed int4 byte (the odd column).
+#[inline]
+pub(crate) fn nib_hi(b: u8) -> i8 {
+    (b as i8) >> 4
+}
+
+/// Pack one int4 code pair (each in `[-7, 7]`) into a byte.
+#[inline]
+fn pack_nibbles(lo: i8, hi: i8) -> u8 {
+    ((lo as u8) & 0x0F) | ((hi as u8) << 4)
 }
 
 /// Quantize one row, appending `row.len()` codes to `codes`. Returns the
@@ -180,31 +221,11 @@ impl QuantizedMat {
 
     /// Fused dequantize-and-dot of row `r` against `b` — bitwise equal
     /// to `tensor::dot(&self.dequantize_row(r), b)`: same dequantized
-    /// values (shared `deq`), same 8-wide unrolled accumulation order.
+    /// values (shared [`deq`]), same accumulation order
+    /// ([`crate::tensor::simd::dot_i8`] pairs with
+    /// [`crate::tensor::simd::dot`]).
     pub fn dot_row(&self, r: usize, b: &[f32]) -> f32 {
-        let codes = self.row_codes(r);
-        let s = self.scales[r];
-        debug_assert_eq!(codes.len(), b.len());
-        let n = codes.len();
-        let chunks = n / 8;
-        let mut acc = [0.0f32; 8];
-        for i in 0..chunks {
-            let o = i * 8;
-            acc[0] += deq(s, codes[o]) * b[o];
-            acc[1] += deq(s, codes[o + 1]) * b[o + 1];
-            acc[2] += deq(s, codes[o + 2]) * b[o + 2];
-            acc[3] += deq(s, codes[o + 3]) * b[o + 3];
-            acc[4] += deq(s, codes[o + 4]) * b[o + 4];
-            acc[5] += deq(s, codes[o + 5]) * b[o + 5];
-            acc[6] += deq(s, codes[o + 6]) * b[o + 6];
-            acc[7] += deq(s, codes[o + 7]) * b[o + 7];
-        }
-        let mut sum =
-            (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
-        for i in chunks * 8..n {
-            sum += deq(s, codes[i]) * b[i];
-        }
-        sum
+        crate::tensor::simd::dot_i8(self.row_codes(r), self.scales[r], b)
     }
 
     /// Physical payload bytes: one code per element plus one f32 scale
@@ -225,6 +246,158 @@ impl QuantizedMat {
     pub fn extend_raw(&mut self, codes: &[i8], scales: &[f32]) {
         debug_assert_eq!(codes.len(), scales.len() * self.cols);
         self.data.extend_from_slice(codes);
+        self.scales.extend_from_slice(scales);
+        for &s in scales {
+            self.max_scale = self.max_scale.max(s);
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.data.clear();
+        self.scales.clear();
+        self.max_scale = 0.0;
+    }
+}
+
+/// Quantize one row to int4, appending `row.len().div_ceil(2)` packed
+/// bytes to `packed`. Returns the row's power-of-two scale.
+/// Deterministic, like the int8 path.
+pub fn quantize_row4_into(row: &[f32], packed: &mut Vec<u8>) -> f32 {
+    let max_abs = row.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    let scale = pow2_scale4(max_abs);
+    if scale == 0.0 {
+        packed.resize(packed.len() + row.len().div_ceil(2), 0);
+        return 0.0;
+    }
+    for pair in row.chunks(2) {
+        // x/scale is an exact exponent shift with |x/scale| ≤ 7, so the
+        // round lands in [-7, 7] and both nibbles carry real codes.
+        let lo = (pair[0] / scale).round() as i8;
+        let hi = if pair.len() == 2 { (pair[1] / scale).round() as i8 } else { 0 };
+        packed.push(pack_nibbles(lo, hi));
+    }
+    scale
+}
+
+/// Row-major **bit-packed int4** matrix with one power-of-two scale per
+/// row — the physical payload of an int4 KV slot. Two codes per byte
+/// (low nibble = even column): `cols.div_ceil(2) + 4` bytes per row
+/// against the fp32 row's `4·cols` (~6–7.5× compression at this repo's
+/// head dims). Same exact `scale/2` per-element bound as
+/// [`QuantizedMat`], just at the int4 code range `[-7, 7]`.
+#[derive(Clone, Debug, Default)]
+pub struct QuantizedMat4 {
+    cols: usize,
+    /// Packed row stride in bytes.
+    stride: usize,
+    data: Vec<u8>,
+    scales: Vec<f32>,
+    max_scale: f32,
+}
+
+impl QuantizedMat4 {
+    pub fn new(cols: usize) -> QuantizedMat4 {
+        QuantizedMat4 {
+            cols,
+            stride: cols.div_ceil(2),
+            data: Vec::new(),
+            scales: Vec::new(),
+            max_scale: 0.0,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.scales.len()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Quantize and append one row; returns its scale.
+    pub fn push_row(&mut self, row: &[f32]) -> f32 {
+        debug_assert_eq!(row.len(), self.cols);
+        let s = quantize_row4_into(row, &mut self.data);
+        self.scales.push(s);
+        self.max_scale = self.max_scale.max(s);
+        s
+    }
+
+    pub fn scale(&self, r: usize) -> f32 {
+        self.scales[r]
+    }
+
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// Largest row scale so far (monotone under appends; the running
+    /// input to [`KvQuantBounds`] — the bounds formulas are shared with
+    /// int8, only this maximum is wider).
+    pub fn max_scale(&self) -> f32 {
+        self.max_scale
+    }
+
+    /// The exact per-element dequantization error bound of row `r`:
+    /// `|x − x̂| ≤ scale/2`, same derivation as int8 (module docs).
+    pub fn max_abs_err(&self, r: usize) -> f32 {
+        0.5 * self.scales[r]
+    }
+
+    /// Packed bytes of row `r` (`cols.div_ceil(2)` of them).
+    pub fn row_packed(&self, r: usize) -> &[u8] {
+        &self.data[r * self.stride..(r + 1) * self.stride]
+    }
+
+    /// Sign-extended code of (row `r`, column `c`).
+    pub fn code(&self, r: usize, c: usize) -> i8 {
+        let byte = self.data[r * self.stride + c / 2];
+        if c % 2 == 0 {
+            nib_lo(byte)
+        } else {
+            nib_hi(byte)
+        }
+    }
+
+    /// Append row `r`'s dequantized values to `out`.
+    pub fn dequantize_row_into(&self, r: usize, out: &mut Vec<f32>) {
+        let s = self.scales[r];
+        for c in 0..self.cols {
+            out.push(deq(s, self.code(r, c)));
+        }
+    }
+
+    pub fn dequantize_row(&self, r: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.cols);
+        self.dequantize_row_into(r, &mut out);
+        out
+    }
+
+    /// Fused in-register unpack-dequantize-dot of row `r` against `b` —
+    /// bitwise equal to `tensor::dot(&self.dequantize_row(r), b)` (the
+    /// bridge lemma at int4: [`crate::tensor::simd::dot_i4`] pairs with
+    /// [`crate::tensor::simd::dot`]).
+    pub fn dot_row(&self, r: usize, b: &[f32]) -> f32 {
+        crate::tensor::simd::dot_i4(self.row_packed(r), self.cols, self.scales[r], b)
+    }
+
+    /// Physical payload bytes: the packed codes plus one f32 scale per
+    /// row.
+    pub fn payload_bytes(&self) -> usize {
+        self.data.len() + self.scales.len() * 4
+    }
+
+    /// Raw payload of rows [lo, hi) — packed bytes and scales.
+    pub fn raw_rows(&self, lo: usize, hi: usize) -> (&[u8], &[f32]) {
+        (&self.data[lo * self.stride..hi * self.stride], &self.scales[lo..hi])
+    }
+
+    /// Append rows from a raw payload (as produced by
+    /// [`QuantizedMat4::raw_rows`]) without requantizing — byte-for-byte,
+    /// so prefix forks and spill round-trips are bit-identical.
+    pub fn extend_raw(&mut self, packed: &[u8], scales: &[f32]) {
+        debug_assert_eq!(packed.len(), scales.len() * self.stride);
+        self.data.extend_from_slice(packed);
         self.scales.extend_from_slice(scales);
         for &s in scales {
             self.max_scale = self.max_scale.max(s);
@@ -355,6 +528,121 @@ mod tests {
             assert_eq!(dst.dequantize_row(r), src.dequantize_row(4 + r));
         }
         assert!(dst.max_scale() <= src.max_scale());
+    }
+
+    #[test]
+    fn int4_scales_are_powers_of_two_and_codes_fit() {
+        let mut rng = Rng::new(6);
+        let mut m = QuantizedMat4::new(32);
+        for _ in 0..50 {
+            let row: Vec<f32> = (0..32).map(|_| rng.normal32(0.0, 3.0)).collect();
+            let s = m.push_row(&row);
+            assert!(is_pow2(s), "scale {s} not a power of two");
+        }
+        for r in 0..50 {
+            for c in 0..32 {
+                assert!((-7..=7).contains(&(m.code(r, c) as i32)), "code out of int4 range");
+            }
+        }
+        assert_eq!(m.rows(), 50);
+        assert_eq!(m.payload_bytes(), 50 * (16 + 4));
+    }
+
+    #[test]
+    fn int4_roundtrip_error_within_half_scale_exact() {
+        let mut rng = Rng::new(7);
+        let mut m = QuantizedMat4::new(15); // odd width: padded last nibble
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        for _ in 0..40 {
+            rows.push((0..15).map(|_| rng.normal32(0.0, 2.0)).collect());
+        }
+        rows.push(vec![0.0; 15]);
+        rows.push(vec![-3.25; 15]);
+        rows.push(vec![f32::MAX; 15]);
+        for row in &rows {
+            m.push_row(row);
+        }
+        for (r, row) in rows.iter().enumerate() {
+            let bound = m.max_abs_err(r);
+            let back = m.dequantize_row(r);
+            for (c, (&x, &x_hat)) in row.iter().zip(back.iter()).enumerate() {
+                assert!(x_hat.is_finite());
+                assert!(
+                    (x - x_hat).abs() <= bound,
+                    "row {r} col {c}: |{x} - {x_hat}| > {bound}"
+                );
+            }
+        }
+        let zr = rows.len() - 3;
+        assert_eq!(m.scale(zr), 0.0);
+        assert_eq!(m.dequantize_row(zr), vec![0.0; 15]);
+    }
+
+    #[test]
+    fn int4_exact_tie_rounds_within_bound() {
+        // max element 7 pins the int4 scale at exactly 1.0.
+        let mut m = QuantizedMat4::new(4);
+        let row = vec![7.0, 2.5, -3.5, 0.5];
+        let s = m.push_row(&row);
+        assert_eq!(s, 1.0);
+        let back = m.dequantize_row(0);
+        for (&x, &x_hat) in row.iter().zip(back.iter()) {
+            assert!((x - x_hat).abs() <= 0.5, "|{x} - {x_hat}| > 0.5");
+        }
+    }
+
+    #[test]
+    fn int4_fused_dot_is_bitwise_equal_to_dequantize_then_dot() {
+        let mut rng = Rng::new(8);
+        let mut m = QuantizedMat4::new(37); // odd width exercises the tail
+        for _ in 0..20 {
+            let row: Vec<f32> = (0..37).map(|_| rng.normal32(0.0, 2.0)).collect();
+            m.push_row(&row);
+        }
+        let q: Vec<f32> = (0..37).map(|_| rng.normal32(0.0, 1.0)).collect();
+        for r in 0..20 {
+            let fused = m.dot_row(r, &q);
+            let two_step = dot(&m.dequantize_row(r), &q);
+            assert_eq!(fused.to_bits(), two_step.to_bits(), "row {r} diverged");
+        }
+    }
+
+    #[test]
+    fn int4_raw_copy_reproduces_payload_byte_for_byte() {
+        let mut rng = Rng::new(9);
+        let mut src = QuantizedMat4::new(9); // odd width: padded stride
+        for _ in 0..12 {
+            let row: Vec<f32> = (0..9).map(|_| rng.normal32(0.0, 1.0)).collect();
+            src.push_row(&row);
+        }
+        let (packed, scales) = src.raw_rows(4, 8);
+        let mut dst = QuantizedMat4::new(9);
+        dst.extend_raw(packed, scales);
+        assert_eq!(dst.rows(), 4);
+        for r in 0..4 {
+            assert_eq!(dst.row_packed(r), src.row_packed(4 + r));
+            assert_eq!(dst.scale(r).to_bits(), src.scale(4 + r).to_bits());
+            assert_eq!(dst.dequantize_row(r), src.dequantize_row(4 + r));
+        }
+    }
+
+    #[test]
+    fn int4_nibble_packing_is_lossless_over_the_code_range() {
+        for lo in -7i8..=7 {
+            for hi in -7i8..=7 {
+                let b = pack_nibbles(lo, hi);
+                assert_eq!((nib_lo(b), nib_hi(b)), (lo, hi));
+            }
+        }
+    }
+
+    #[test]
+    fn int4_scale_is_wider_than_int8_for_the_same_row() {
+        // Same max_abs: int4's 7-code range forces a scale 16× the int8
+        // one (both are powers of two) — the wider ρ §9 charges.
+        let s8 = pow2_scale(5.0);
+        let s4 = pow2_scale4(5.0);
+        assert_eq!(s4, 16.0 * s8);
     }
 
     #[test]

@@ -1,0 +1,627 @@
+//! Explicit lane-parallel kernels for the four decode hot loops: `dot`,
+//! the fused int8/int4 dequant-dots, the softmax max-fold, and the
+//! budget-stats moment pass — plus the naive sequential references the
+//! speedup gate measures against.
+//!
+//! # Kernel pairing and the bridge lemma
+//!
+//! Every kernel here is written as a fixed-width `[f32; 8]` (or `[f64; 4]`)
+//! lane-array loop: lane `j` of chunk `o` performs exactly the FP ops the
+//! pre-existing 8-wide unrolled scalar kernel performed for element
+//! `o + j`, and the horizontal reduction uses the identical tree
+//! `(acc0+acc1) + (acc2+acc3) + ((acc4+acc5) + (acc6+acc7))` followed by
+//! the identical scalar tail. The lane-array form is therefore **bitwise
+//! equal** to the original kernel on every input — it is the same
+//! computation, spelled so LLVM reliably vectorizes it on stable Rust.
+//!
+//! The fused [`dot_i8`] / [`dot_i4`] kernels replicate [`dot`]'s
+//! accumulation order with the shared [`crate::tensor::quant`]
+//! dequantizer in the load position, which preserves the PR 5 bridge
+//! lemma end-to-end: `fused(r, b) ≡ dot(dequantize(r), b)` bitwise, so
+//! the paged store can keep serving from its dequantized mirror while
+//! benches and future device paths run the fused form.
+//!
+//! # One kernel per process
+//!
+//! An optional AVX2 path (runtime-detected, `core::arch::x86_64`) covers
+//! [`dot`], [`axpy`] and the fused dequant-dots. It deliberately uses
+//! separate multiply and add (`vmulps` + `vaddps`, **no FMA**): per lane
+//! those are the same two IEEE-754 operations the lane-array loop
+//! performs, and the horizontal reduction re-uses the same tree over the
+//! extracted lanes — so the AVX2 and lane-array kernels are also bitwise
+//! equal by construction. That equality is asserted by proptests; as
+//! belt-and-braces for the engine's byte-identical-stream invariant, the
+//! implementation choice is still made **once per process**
+//! ([`kernel_name`] reports it) so every worker thread, shard and replay
+//! of a request runs the same code path.
+//!
+//! The `*_seq_ref` functions are `#[inline(never)]` single-accumulator
+//! sequential loops: a cross-iteration FP dependency chain LLVM must not
+//! (and cannot, FP adds being non-associative) vectorize. They are the
+//! honest "scalar" baseline for the CI-gated `bench_decode_speedup` /
+//! `bench_engine` `"kernels"` comparison, and double as value oracles
+//! (within accumulation-order tolerance) in the property suite.
+#![deny(unsafe_op_in_unsafe_fn)]
+
+use std::sync::OnceLock;
+
+use super::quant::{deq, nib_hi, nib_lo};
+
+/// The process-wide kernel choice. Both variants are bitwise-identical
+/// on every input (module docs); fixing one per process is defense in
+/// depth for stream determinism, not a correctness requirement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kernel {
+    /// Portable `[f32; 8]` lane arrays (stable Rust, LLVM-vectorized).
+    Lanes,
+    /// Runtime-detected AVX2 (`vmulps`/`vaddps`, no FMA).
+    #[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+    Avx2,
+}
+
+static KERNEL: OnceLock<Kernel> = OnceLock::new();
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> Kernel {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        Kernel::Avx2
+    } else {
+        Kernel::Lanes
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect() -> Kernel {
+    Kernel::Lanes
+}
+
+#[inline]
+fn kernel() -> Kernel {
+    *KERNEL.get_or_init(detect)
+}
+
+/// Name of the kernel implementation this process fixed at first use —
+/// surfaced in `BENCH_engine.json`'s `"kernels"` block.
+pub fn kernel_name() -> &'static str {
+    match kernel() {
+        Kernel::Lanes => "lanes",
+        Kernel::Avx2 => "avx2",
+    }
+}
+
+/// The shared horizontal reduction: the exact tree the original 8-wide
+/// unrolled kernels used. Every dot-family kernel (lane-array, AVX2,
+/// fused int8/int4) must reduce through this function.
+#[inline]
+fn reduce8(acc: &[f32; 8]) -> f32 {
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+// ───────────────────────────── dot ─────────────────────────────
+
+/// Dot product — dispatched lane-array / AVX2 kernel. Bitwise equal to
+/// [`dot_oracle`] on every input.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if kernel() == Kernel::Avx2 {
+        // SAFETY: dispatch verified AVX2 support at process start.
+        return unsafe { dot_avx2(a, b) };
+    }
+    dot_lanes(a, b)
+}
+
+/// Portable lane-array dot kernel.
+#[inline]
+pub fn dot_lanes(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = [0.0f32; 8];
+    for i in 0..chunks {
+        let o = i * 8;
+        let (a8, b8) = (&a[o..o + 8], &b[o..o + 8]);
+        for j in 0..8 {
+            acc[j] += a8[j] * b8[j];
+        }
+    }
+    let mut s = reduce8(&acc);
+    for i in chunks * 8..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// AVX2 dot kernel: per lane, the same multiply then add as
+/// [`dot_lanes`] (no FMA — fusing would change the rounding and break
+/// bitwise pairing), then the same [`reduce8`] tree and scalar tail.
+///
+/// # Safety
+/// The CPU must support AVX2 (`is_x86_feature_detected!("avx2")`).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let chunks = n / 8;
+    // SAFETY: all pointer reads are within `chunks * 8 <= n` elements.
+    let mut acc = unsafe { _mm256_setzero_ps() };
+    for i in 0..chunks {
+        let o = i * 8;
+        let va = unsafe { _mm256_loadu_ps(a.as_ptr().add(o)) };
+        let vb = unsafe { _mm256_loadu_ps(b.as_ptr().add(o)) };
+        acc = unsafe { _mm256_add_ps(acc, _mm256_mul_ps(va, vb)) };
+    }
+    let mut lanes = [0.0f32; 8];
+    // SAFETY: `lanes` is 8 f32s; unaligned store is permitted.
+    unsafe { _mm256_storeu_ps(lanes.as_mut_ptr(), acc) };
+    let mut s = reduce8(&lanes);
+    for i in chunks * 8..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Verbatim copy of the pre-SIMD `tensor::dot` (8 named accumulators) —
+/// the proptest oracle the dispatched kernel must match bitwise.
+pub fn dot_oracle(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = [0.0f32; 8];
+    for i in 0..chunks {
+        let o = i * 8;
+        acc[0] += a[o] * b[o];
+        acc[1] += a[o + 1] * b[o + 1];
+        acc[2] += a[o + 2] * b[o + 2];
+        acc[3] += a[o + 3] * b[o + 3];
+        acc[4] += a[o + 4] * b[o + 4];
+        acc[5] += a[o + 5] * b[o + 5];
+        acc[6] += a[o + 6] * b[o + 6];
+        acc[7] += a[o + 7] * b[o + 7];
+    }
+    let mut s = reduce8(&acc);
+    for i in chunks * 8..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Naive sequential dot: one accumulator, a strict cross-iteration FP
+/// dependency chain. The speedup-gate baseline.
+#[inline(never)]
+pub fn dot_seq_ref(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for i in 0..a.len().min(b.len()) {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+// ─────────────────────── fused int8 dequant-dot ───────────────────────
+
+/// Fused int8 dequantize-and-dot: lane `j` computes
+/// `deq(scale, codes[o+j]) * b[o+j]`, exactly [`dot`]'s accumulation
+/// with the shared dequantizer in the load position — bitwise equal to
+/// `dot(&dequantized_row, b)` (the bridge lemma).
+#[inline]
+pub fn dot_i8(codes: &[i8], scale: f32, b: &[f32]) -> f32 {
+    debug_assert_eq!(codes.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if kernel() == Kernel::Avx2 {
+        // SAFETY: dispatch verified AVX2 support at process start.
+        return unsafe { dot_i8_avx2(codes, scale, b) };
+    }
+    dot_i8_lanes(codes, scale, b)
+}
+
+/// Portable lane-array fused int8 kernel.
+#[inline]
+pub fn dot_i8_lanes(codes: &[i8], scale: f32, b: &[f32]) -> f32 {
+    let n = codes.len();
+    let chunks = n / 8;
+    let mut acc = [0.0f32; 8];
+    for i in 0..chunks {
+        let o = i * 8;
+        let (c8, b8) = (&codes[o..o + 8], &b[o..o + 8]);
+        for j in 0..8 {
+            acc[j] += deq(scale, c8[j]) * b8[j];
+        }
+    }
+    let mut s = reduce8(&acc);
+    for i in chunks * 8..n {
+        s += deq(scale, codes[i]) * b[i];
+    }
+    s
+}
+
+/// AVX2 fused int8 kernel: dequantizes each 8-code group into a lane
+/// buffer with the shared scalar dequantizer (keeping its overflow
+/// clamp bit-identical), then runs the same vector multiply-add as
+/// [`dot_avx2`].
+///
+/// # Safety
+/// The CPU must support AVX2.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_i8_avx2(codes: &[i8], scale: f32, b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = codes.len();
+    let chunks = n / 8;
+    let mut acc = unsafe { _mm256_setzero_ps() };
+    let mut da = [0.0f32; 8];
+    for i in 0..chunks {
+        let o = i * 8;
+        for j in 0..8 {
+            da[j] = deq(scale, codes[o + j]);
+        }
+        // SAFETY: `da` holds 8 f32s; b reads stay within `chunks*8 <= n`.
+        let va = unsafe { _mm256_loadu_ps(da.as_ptr()) };
+        let vb = unsafe { _mm256_loadu_ps(b.as_ptr().add(o)) };
+        acc = unsafe { _mm256_add_ps(acc, _mm256_mul_ps(va, vb)) };
+    }
+    let mut lanes = [0.0f32; 8];
+    // SAFETY: `lanes` is 8 f32s.
+    unsafe { _mm256_storeu_ps(lanes.as_mut_ptr(), acc) };
+    let mut s = reduce8(&lanes);
+    for i in chunks * 8..n {
+        s += deq(scale, codes[i]) * b[i];
+    }
+    s
+}
+
+/// Sequential fused int8 reference (speedup baseline).
+#[inline(never)]
+pub fn dot_i8_seq_ref(codes: &[i8], scale: f32, b: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for i in 0..codes.len().min(b.len()) {
+        s += deq(scale, codes[i]) * b[i];
+    }
+    s
+}
+
+// ─────────────────────── fused int4 dequant-dot ───────────────────────
+
+/// Fused bit-packed int4 dequantize-and-dot: unpacks two codes per byte
+/// in-register (low nibble = even column) and accumulates exactly as
+/// [`dot`] does — bitwise equal to unpack-then-[`dot`]. `cols` is the
+/// logical row width; `packed` holds `cols.div_ceil(2)` bytes.
+#[inline]
+pub fn dot_i4(packed: &[u8], cols: usize, scale: f32, b: &[f32]) -> f32 {
+    debug_assert_eq!(packed.len(), cols.div_ceil(2));
+    debug_assert_eq!(cols, b.len());
+    #[cfg(target_arch = "x86_64")]
+    if kernel() == Kernel::Avx2 {
+        // SAFETY: dispatch verified AVX2 support at process start.
+        return unsafe { dot_i4_avx2(packed, cols, scale, b) };
+    }
+    dot_i4_lanes(packed, cols, scale, b)
+}
+
+/// Portable lane-array fused int4 kernel: each 8-column chunk reads 4
+/// packed bytes and sign-extends both nibbles in-register.
+#[inline]
+pub fn dot_i4_lanes(packed: &[u8], cols: usize, scale: f32, b: &[f32]) -> f32 {
+    let chunks = cols / 8;
+    let mut acc = [0.0f32; 8];
+    for i in 0..chunks {
+        let o = i * 8;
+        let by = &packed[o / 2..o / 2 + 4];
+        let b8 = &b[o..o + 8];
+        let c8 = [
+            nib_lo(by[0]),
+            nib_hi(by[0]),
+            nib_lo(by[1]),
+            nib_hi(by[1]),
+            nib_lo(by[2]),
+            nib_hi(by[2]),
+            nib_lo(by[3]),
+            nib_hi(by[3]),
+        ];
+        for j in 0..8 {
+            acc[j] += deq(scale, c8[j]) * b8[j];
+        }
+    }
+    let mut s = reduce8(&acc);
+    for c in chunks * 8..cols {
+        let byte = packed[c / 2];
+        let code = if c % 2 == 0 { nib_lo(byte) } else { nib_hi(byte) };
+        s += deq(scale, code) * b[c];
+    }
+    s
+}
+
+/// AVX2 fused int4 kernel — same nibble unpack into a lane buffer, same
+/// vector multiply-add as [`dot_avx2`].
+///
+/// # Safety
+/// The CPU must support AVX2.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_i4_avx2(packed: &[u8], cols: usize, scale: f32, b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let chunks = cols / 8;
+    let mut acc = unsafe { _mm256_setzero_ps() };
+    let mut da = [0.0f32; 8];
+    for i in 0..chunks {
+        let o = i * 8;
+        let by = &packed[o / 2..o / 2 + 4];
+        for j in 0..4 {
+            da[2 * j] = deq(scale, nib_lo(by[j]));
+            da[2 * j + 1] = deq(scale, nib_hi(by[j]));
+        }
+        // SAFETY: `da` holds 8 f32s; b reads stay within `chunks*8 <= cols`.
+        let va = unsafe { _mm256_loadu_ps(da.as_ptr()) };
+        let vb = unsafe { _mm256_loadu_ps(b.as_ptr().add(o)) };
+        acc = unsafe { _mm256_add_ps(acc, _mm256_mul_ps(va, vb)) };
+    }
+    let mut lanes = [0.0f32; 8];
+    // SAFETY: `lanes` is 8 f32s.
+    unsafe { _mm256_storeu_ps(lanes.as_mut_ptr(), acc) };
+    let mut s = reduce8(&lanes);
+    for c in chunks * 8..cols {
+        let byte = packed[c / 2];
+        let code = if c % 2 == 0 { nib_lo(byte) } else { nib_hi(byte) };
+        s += deq(scale, code) * b[c];
+    }
+    s
+}
+
+/// Sequential fused int4 reference (speedup baseline).
+#[inline(never)]
+pub fn dot_i4_seq_ref(packed: &[u8], cols: usize, scale: f32, b: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for c in 0..cols.min(b.len()) {
+        let byte = packed[c / 2];
+        let code = if c % 2 == 0 { nib_lo(byte) } else { nib_hi(byte) };
+        s += deq(scale, code) * b[c];
+    }
+    s
+}
+
+// ──────────────────────── softmax max-fold ────────────────────────
+
+/// Max over a slice (`NEG_INFINITY` when empty) with 8 independent lane
+/// maxima. max is associative and commutative over the finite logits
+/// this repo produces, so the value equals the sequential fold for every
+/// input without NaNs — asserted against [`max_fold_seq_ref`]. Kept
+/// lane-array-only: the per-lane `max` has no cross-lane dependency, so
+/// LLVM vectorizes this form directly and an intrinsic arm would add
+/// unsafe surface for no spread.
+#[inline]
+pub fn max_fold(xs: &[f32]) -> f32 {
+    let n = xs.len();
+    let chunks = n / 8;
+    let mut m = [f32::NEG_INFINITY; 8];
+    for i in 0..chunks {
+        let x8 = &xs[i * 8..i * 8 + 8];
+        for j in 0..8 {
+            m[j] = m[j].max(x8[j]);
+        }
+    }
+    let mut best = f32::NEG_INFINITY;
+    for &lane in &m {
+        best = best.max(lane);
+    }
+    for &x in &xs[chunks * 8..] {
+        best = best.max(x);
+    }
+    best
+}
+
+/// Sequential max fold — the exact expression the softmax / dense-SDPA
+/// code used before this pass.
+#[inline(never)]
+pub fn max_fold_seq_ref(xs: &[f32]) -> f32 {
+    xs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b))
+}
+
+// ───────────────────────────── axpy ─────────────────────────────
+
+/// y += alpha · x. Per-element independent (no cross-iteration FP
+/// dependency), so the vector form is trivially bitwise-equal to the
+/// scalar loop.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if kernel() == Kernel::Avx2 {
+        // SAFETY: dispatch verified AVX2 support at process start.
+        unsafe { axpy_avx2(alpha, x, y) };
+        return;
+    }
+    axpy_lanes(alpha, x, y);
+}
+
+/// Portable axpy (the pre-SIMD `tensor::axpy` loop, which LLVM already
+/// vectorizes; kept as the named lane kernel for pairing tests).
+#[inline]
+pub fn axpy_lanes(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// AVX2 axpy: `vmulps` + `vaddps` per lane — the same two IEEE ops per
+/// element as the scalar loop (no FMA).
+///
+/// # Safety
+/// The CPU must support AVX2.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy_avx2(alpha: f32, x: &[f32], y: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = x.len().min(y.len());
+    let chunks = n / 8;
+    // SAFETY: broadcast of a scalar; loads/stores below stay within
+    // `chunks * 8 <= n` elements of both slices.
+    let va = unsafe { _mm256_set1_ps(alpha) };
+    for i in 0..chunks {
+        let o = i * 8;
+        let vx = unsafe { _mm256_loadu_ps(x.as_ptr().add(o)) };
+        let vy = unsafe { _mm256_loadu_ps(y.as_ptr().add(o)) };
+        let r = unsafe { _mm256_add_ps(vy, _mm256_mul_ps(va, vx)) };
+        unsafe { _mm256_storeu_ps(y.as_mut_ptr().add(o), r) };
+    }
+    for i in chunks * 8..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Sequential axpy reference (speedup baseline; also the oracle — the
+/// kernel must match it bitwise since every element is independent).
+#[inline(never)]
+pub fn axpy_seq_ref(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+// ───────────────────── budget stats moment pass ─────────────────────
+
+/// The `estimate_stats_impl` inner loop for one base-sample row: charge
+/// `r_c = w · v_c` into the per-column running sums `sum_vec[c] += r_c`,
+/// `sum_vec2[c] += r_c²`, and return the row's `‖r⃗‖² = Σ_c r_c²`.
+///
+/// Split on the dependency structure: the per-column updates touch only
+/// their own accumulator slots (column-parallel — vectorizing cannot
+/// reorder any FP op, so the pass is bitwise-identical to the original
+/// interleaved loop), while the `‖r⃗‖²` sum is a cross-column dependency
+/// chain and is kept scalar **in column order on purpose** —
+/// reassociating it would change `range_n`, hence budgets, hence token
+/// streams.
+#[inline]
+pub fn weighted_moments(w: f64, row: &[f32], sum_vec: &mut [f64], sum_vec2: &mut [f64]) -> f64 {
+    debug_assert_eq!(row.len(), sum_vec.len());
+    debug_assert_eq!(row.len(), sum_vec2.len());
+    for ((&vc, sv), sv2) in row.iter().zip(sum_vec.iter_mut()).zip(sum_vec2.iter_mut()) {
+        let r = w * vc as f64;
+        *sv += r;
+        *sv2 += r * r;
+    }
+    let mut rn2 = 0.0f64;
+    for &vc in row {
+        let r = w * vc as f64;
+        rn2 += r * r;
+    }
+    rn2
+}
+
+/// The original interleaved loop, verbatim — the oracle
+/// [`weighted_moments`] must match bitwise on all three outputs.
+#[inline(never)]
+pub fn weighted_moments_seq_ref(
+    w: f64,
+    row: &[f32],
+    sum_vec: &mut [f64],
+    sum_vec2: &mut [f64],
+) -> f64 {
+    let mut rn2 = 0.0f64;
+    for (c, &vc) in row.iter().enumerate() {
+        let r = w * vc as f64;
+        sum_vec[c] += r;
+        sum_vec2[c] += r * r;
+        rn2 += r * r;
+    }
+    rn2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randv(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.normal32(0.0, 1.0)).collect()
+    }
+
+    /// Widths covering every lane-body count {0, 1, 2+} × tail {0..7}.
+    const WIDTHS: [usize; 14] = [0, 1, 3, 7, 8, 9, 15, 16, 17, 23, 24, 31, 64, 100];
+
+    #[test]
+    fn dispatched_dot_is_bitwise_equal_to_oracle() {
+        let mut rng = Rng::new(11);
+        for n in WIDTHS {
+            let (a, b) = (randv(n, &mut rng), randv(n, &mut rng));
+            assert_eq!(dot(&a, &b).to_bits(), dot_oracle(&a, &b).to_bits(), "n={n}");
+            assert_eq!(dot_lanes(&a, &b).to_bits(), dot_oracle(&a, &b).to_bits(), "n={n}");
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_dot_is_bitwise_equal_to_lanes_when_available() {
+        if !std::arch::is_x86_feature_detected!("avx2") {
+            return;
+        }
+        let mut rng = Rng::new(12);
+        for n in WIDTHS {
+            let (a, b) = (randv(n, &mut rng), randv(n, &mut rng));
+            // SAFETY: guarded by the runtime feature check above.
+            let v = unsafe { dot_avx2(&a, &b) };
+            assert_eq!(v.to_bits(), dot_lanes(&a, &b).to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_matches_sequential_reference_within_tolerance() {
+        let mut rng = Rng::new(13);
+        for n in WIDTHS {
+            let (a, b) = (randv(n, &mut rng), randv(n, &mut rng));
+            let (fast, slow) = (dot(&a, &b), dot_seq_ref(&a, &b));
+            assert!(
+                (fast - slow).abs() <= 1e-4 * (1.0 + slow.abs()),
+                "n={n}: {fast} vs {slow}"
+            );
+        }
+    }
+
+    #[test]
+    fn max_fold_equals_sequential_fold() {
+        let mut rng = Rng::new(14);
+        for n in WIDTHS {
+            let xs = randv(n, &mut rng);
+            assert_eq!(max_fold(&xs).to_bits(), max_fold_seq_ref(&xs).to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_is_bitwise_equal_to_reference() {
+        let mut rng = Rng::new(15);
+        for n in WIDTHS {
+            let x = randv(n, &mut rng);
+            let y0 = randv(n, &mut rng);
+            let mut fast = y0.clone();
+            let mut slow = y0;
+            axpy(0.37, &x, &mut fast);
+            axpy_seq_ref(0.37, &x, &mut slow);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&fast), bits(&slow), "n={n}");
+        }
+    }
+
+    #[test]
+    fn weighted_moments_matches_interleaved_oracle_bitwise() {
+        let mut rng = Rng::new(16);
+        for n in WIDTHS {
+            let row = randv(n, &mut rng);
+            let mut sv_a = vec![0.1f64; n];
+            let mut sv2_a = vec![0.2f64; n];
+            let mut sv_b = sv_a.clone();
+            let mut sv2_b = sv2_a.clone();
+            let rn2_a = weighted_moments(1.7, &row, &mut sv_a, &mut sv2_a);
+            let rn2_b = weighted_moments_seq_ref(1.7, &row, &mut sv_b, &mut sv2_b);
+            assert_eq!(rn2_a.to_bits(), rn2_b.to_bits(), "n={n}");
+            let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&sv_a), bits(&sv_b), "n={n}");
+            assert_eq!(bits(&sv2_a), bits(&sv2_b), "n={n}");
+        }
+    }
+
+    #[test]
+    fn kernel_choice_is_fixed_and_named() {
+        let first = kernel_name();
+        assert!(first == "lanes" || first == "avx2");
+        assert_eq!(first, kernel_name(), "kernel choice must be stable per process");
+    }
+}

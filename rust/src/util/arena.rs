@@ -1,0 +1,163 @@
+//! Scratch-buffer arena for the decode hot path.
+//!
+//! Every decode step used to allocate a handful of short-lived `Vec`s —
+//! gathered-row scratch, selection index lists, dequant temporaries —
+//! all dropped before the next token. [`BufferArena`] recycles them:
+//! `take_*` hands out a cleared buffer (reusing a previously recycled
+//! allocation when one exists), `recycle_*` returns it to the pool. The
+//! buffers keep their capacity, so after warm-up a steady-state decode
+//! step performs **zero** heap allocations in the arena-covered paths —
+//! asserted by the allocation counter in `benches/bench_decode_speedup`.
+//!
+//! Buffers are plain `Vec`s, so adopting the arena is mechanical:
+//! replace `let mut v = Vec::new()` with `let mut v = take_f32()` and
+//! drop-sites with `recycle_f32(v)`. Forgetting to recycle is safe —
+//! the buffer is simply freed as usual and the pool re-grows on demand
+//! (the audit counters make such leaks visible).
+//!
+//! Determinism: the arena changes only *where* buffers come from, never
+//! their contents (`take_*` always returns an **empty** Vec). Token
+//! streams are bitwise unaffected, which `tests/kv_quant.rs` and the
+//! worker-count determinism suites re-assert over the arena-backed
+//! paths.
+//!
+//! The convenience API ([`take_f32`] etc.) wraps one arena per thread
+//! in a `thread_local`, so worker threads never contend and the pool
+//! needs no locking.
+
+use std::cell::RefCell;
+
+/// Pools of cleared, capacity-retaining scratch buffers.
+#[derive(Default)]
+pub struct BufferArena {
+    f32s: Vec<Vec<f32>>,
+    usizes: Vec<Vec<usize>>,
+    /// `take_*` calls that found the pool empty and had to allocate.
+    misses: u64,
+    /// Total `take_*` calls.
+    takes: u64,
+}
+
+impl BufferArena {
+    pub fn new() -> BufferArena {
+        BufferArena::default()
+    }
+
+    /// An empty f32 buffer, reusing a recycled allocation if available.
+    pub fn take_f32(&mut self) -> Vec<f32> {
+        self.takes += 1;
+        match self.f32s.pop() {
+            Some(v) => v,
+            None => {
+                self.misses += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    /// Return a buffer to the pool (cleared here, capacity kept).
+    pub fn recycle_f32(&mut self, mut v: Vec<f32>) {
+        v.clear();
+        self.f32s.push(v);
+    }
+
+    pub fn take_usize(&mut self) -> Vec<usize> {
+        self.takes += 1;
+        match self.usizes.pop() {
+            Some(v) => v,
+            None => {
+                self.misses += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    pub fn recycle_usize(&mut self, mut v: Vec<usize>) {
+        v.clear();
+        self.usizes.push(v);
+    }
+
+    /// (takes, misses) so far — a steady-state decode loop should show
+    /// `misses` flat while `takes` grows.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.takes, self.misses)
+    }
+}
+
+thread_local! {
+    static ARENA: RefCell<BufferArena> = RefCell::new(BufferArena::new());
+}
+
+/// Take an empty f32 scratch buffer from this thread's arena.
+pub fn take_f32() -> Vec<f32> {
+    ARENA.with(|a| a.borrow_mut().take_f32())
+}
+
+/// Recycle an f32 scratch buffer into this thread's arena.
+pub fn recycle_f32(v: Vec<f32>) {
+    ARENA.with(|a| a.borrow_mut().recycle_f32(v));
+}
+
+/// Take an empty usize scratch buffer from this thread's arena.
+pub fn take_usize() -> Vec<usize> {
+    ARENA.with(|a| a.borrow_mut().take_usize())
+}
+
+/// Recycle a usize scratch buffer into this thread's arena.
+pub fn recycle_usize(v: Vec<usize>) {
+    ARENA.with(|a| a.borrow_mut().recycle_usize(v));
+}
+
+/// This thread's (takes, misses) counters — the bench's allocation
+/// audit reads these to prove steady-state reuse.
+pub fn thread_counters() -> (u64, u64) {
+    ARENA.with(|a| a.borrow().counters())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_recycle_reuses_capacity() {
+        let mut arena = BufferArena::new();
+        let mut v = arena.take_f32();
+        v.extend_from_slice(&[1.0; 100]);
+        let cap = v.capacity();
+        let ptr = v.as_ptr();
+        arena.recycle_f32(v);
+        let v2 = arena.take_f32();
+        assert!(v2.is_empty(), "recycled buffer must come back cleared");
+        assert_eq!(v2.capacity(), cap);
+        assert_eq!(v2.as_ptr(), ptr, "same allocation, no fresh malloc");
+        let (takes, misses) = arena.counters();
+        assert_eq!((takes, misses), (2, 1), "second take must hit the pool");
+    }
+
+    #[test]
+    fn usize_pool_is_independent() {
+        let mut arena = BufferArena::new();
+        let mut idx = arena.take_usize();
+        idx.push(7);
+        arena.recycle_usize(idx);
+        let idx2 = arena.take_usize();
+        assert!(idx2.is_empty());
+        let (takes, misses) = arena.counters();
+        assert_eq!((takes, misses), (2, 1));
+    }
+
+    #[test]
+    fn thread_local_api_round_trips() {
+        let mut v = take_f32();
+        v.push(3.0);
+        recycle_f32(v);
+        let v2 = take_f32();
+        assert!(v2.is_empty());
+        let (takes, misses) = thread_counters();
+        assert!(takes >= 2 && misses >= 1);
+        recycle_f32(v2);
+        let idx = take_usize();
+        assert!(idx.is_empty());
+        recycle_usize(idx);
+    }
+}

@@ -1,8 +1,10 @@
 //! Small self-contained utilities: seeded RNG, inverse normal CDF, JSON
-//! writer, CLI parsing, timing, a thread pool and an in-repo
-//! property-testing helper. The offline build has no `rand`, `serde`,
-//! `clap`, `criterion` or `proptest`, so these live here.
+//! writer, CLI parsing, timing, a thread pool, a scratch-buffer arena
+//! and an in-repo property-testing helper. The offline build has no
+//! `rand`, `serde`, `clap`, `criterion` or `proptest`, so these live
+//! here.
 
+pub mod arena;
 pub mod cli;
 pub mod json;
 pub mod ncdf;

@@ -14,7 +14,10 @@
 //! Hoeffding} cells with int8-stored K/V and the widened budget
 //! (`budget_for_quant`), measuring violations against the exact fp32
 //! population — plus a negative control on adversarially coherent rows
-//! proving coverage *fails* when the slack term is zeroed.
+//! proving coverage *fails* when the slack term is zeroed. The
+//! bit-packed int4 tier repeats the denominator cells and both
+//! adversarial controls with its ~16× wider scales flowing through the
+//! same `QuantSlack` (docs/GUARANTEES.md §9).
 
 use vattn::attention::{dense_sdpa, exact_num_den, sparse_sdpa, weighted_num_den, Selection};
 use vattn::budget::{self, Bound, Verify};
@@ -156,6 +159,20 @@ fn quantize_mat(m: &Mat) -> (Mat, f32) {
     (out, q.max_scale())
 }
 
+/// The bit-packed mirror of [`quantize_mat`]: 15-level codes, ~16×
+/// wider power-of-two scales, same `scale/2` per-element bound.
+fn quantize_mat4(m: &Mat) -> (Mat, f32) {
+    use vattn::tensor::quant::QuantizedMat4;
+    let mut q = QuantizedMat4::new(m.cols);
+    let mut out = Mat::zeros(0, m.cols);
+    for r in 0..m.rows {
+        q.push_row(m.row(r));
+        q.dequantize_row_into(r, &mut out.data);
+        out.rows += 1;
+    }
+    (out, q.max_scale())
+}
+
 /// Build the slack exactly as the serving policy does, via the single
 /// `QuantSlack::from_bounds` conversion — so this sweep validates what
 /// production charges, not a hand-copied formula.
@@ -166,11 +183,13 @@ fn quant_slack(k_scale: f32, v_scale: f32, q: &[f32], d: usize) -> budget::Quant
 }
 
 /// One quantized trial: budget + estimator over the dequantized (k̂, v̂),
-/// violation measured against the exact fp32 (k, v). `with_slack`
-/// selects `budget_for_quant` vs the slack-zeroed `budget_for`, and
-/// `floor` applies the base-sample floor (off for the negative control,
-/// which needs the raw prescribed budget).
-fn run_trial_quant(
+/// violation measured against the exact fp32 (k, v). `quantize` picks
+/// the codec (int8 or bit-packed int4), `with_slack` selects
+/// `budget_for_quant` vs the slack-zeroed `budget_for`, and `floor`
+/// applies the base-sample floor (off for the negative control, which
+/// needs the raw prescribed budget).
+fn run_trial_quant_with(
+    quantize: fn(&Mat) -> (Mat, f32),
     verify: Verify,
     bound: Bound,
     k: &Mat,
@@ -180,8 +199,8 @@ fn run_trial_quant(
     floor: bool,
     rng: &mut Rng,
 ) -> bool {
-    let (k_hat, k_scale) = quantize_mat(k);
-    let (v_hat, v_scale) = quantize_mat(v);
+    let (k_hat, k_scale) = quantize(k);
+    let (v_hat, v_scale) = quantize(v);
     let n = k.rows;
     let i_f = sink_window_indices(n, 16, 16);
     // m_ref from the dequantized logits, exactly as the policy sees them.
@@ -223,7 +242,12 @@ fn run_trial_quant(
     }
 }
 
-fn quant_violation_rate(verify: Verify, bound: Bound, seed: u64) -> f64 {
+fn quant_violation_rate(
+    quantize: fn(&Mat) -> (Mat, f32),
+    verify: Verify,
+    bound: Bound,
+    seed: u64,
+) -> f64 {
     let mut meta = Rng::new(seed);
     let mut violations = 0usize;
     for t in 0..TRIALS {
@@ -232,7 +256,7 @@ fn quant_violation_rate(verify: Verify, bound: Bound, seed: u64) -> f64 {
         let v = Mat::randn(N, D, 1.0, &mut rng);
         let q: Vec<f32> =
             (0..D).map(|_| rng.normal32(0.0, 1.0) / (D as f32).sqrt()).collect();
-        if run_trial_quant(verify, bound, &k, &v, &q, true, true, &mut rng) {
+        if run_trial_quant_with(quantize, verify, bound, &k, &v, &q, true, true, &mut rng) {
             violations += 1;
         }
     }
@@ -241,26 +265,39 @@ fn quant_violation_rate(verify: Verify, bound: Bound, seed: u64) -> f64 {
 
 #[test]
 fn quantized_denominator_clt_coverage() {
-    let rate = quant_violation_rate(Verify::Denominator, Bound::Clt, 0x1A8);
+    let rate = quant_violation_rate(quantize_mat, Verify::Denominator, Bound::Clt, 0x1A8);
     assert!(rate <= DELTA + 0.05, "int8 CLT violation rate {rate} > δ={DELTA} (+slack)");
 }
 
 #[test]
 fn quantized_denominator_hoeffding_coverage() {
-    let rate = quant_violation_rate(Verify::Denominator, Bound::Hoeffding, 0x2A8);
+    let rate = quant_violation_rate(quantize_mat, Verify::Denominator, Bound::Hoeffding, 0x2A8);
     assert!(rate <= DELTA, "int8 Hoeffding violation rate {rate} > δ={DELTA}");
 }
 
 #[test]
 fn quantized_sdpa_clt_coverage() {
-    let rate = quant_violation_rate(Verify::Sdpa, Bound::Clt, 0x3A8);
+    let rate = quant_violation_rate(quantize_mat, Verify::Sdpa, Bound::Clt, 0x3A8);
     assert!(rate <= DELTA + 0.05, "int8 SDPA CLT violation rate {rate} > δ={DELTA} (+slack)");
 }
 
 #[test]
 fn quantized_sdpa_hoeffding_coverage() {
-    let rate = quant_violation_rate(Verify::Sdpa, Bound::Hoeffding, 0x4A8);
+    let rate = quant_violation_rate(quantize_mat, Verify::Sdpa, Bound::Hoeffding, 0x4A8);
     assert!(rate <= DELTA, "int8 SDPA Hoeffding violation rate {rate} > δ={DELTA}");
+}
+
+#[test]
+fn int4_quantized_denominator_clt_coverage() {
+    let rate = quant_violation_rate(quantize_mat4, Verify::Denominator, Bound::Clt, 0x7A8);
+    assert!(rate <= DELTA + 0.05, "int4 CLT violation rate {rate} > δ={DELTA} (+slack)");
+}
+
+#[test]
+fn int4_quantized_denominator_hoeffding_coverage() {
+    let rate =
+        quant_violation_rate(quantize_mat4, Verify::Denominator, Bound::Hoeffding, 0x8A8);
+    assert!(rate <= DELTA, "int4 Hoeffding violation rate {rate} > δ={DELTA}");
 }
 
 /// Adversarial rows whose quantization error is *coherent*: every row
@@ -290,6 +327,27 @@ fn adversarial_quant_instance() -> (Mat, Mat, Vec<f32>) {
     (k, v, q)
 }
 
+/// The int4 twin of [`adversarial_quant_instance`]: the leading 7.0
+/// pins the 15-level power-of-two scale at exactly 1, so every tail
+/// element `m_i + 0.49` again dequantizes to `m_i` — the same coherent
+/// ≈ −0.49 shift, now produced by the bit-packed codec. The all-ones
+/// values quantize exactly at int4 too (1.0 = 4 · 2⁻², scale 0.25 for
+/// max_abs 1).
+fn adversarial_quant_instance4() -> (Mat, Mat, Vec<f32>) {
+    let k = Mat::from_fn(N, D, |r, c| {
+        if c == 0 {
+            7.0
+        } else {
+            (((r * 7 + r / 3) % 5) as f32) + 0.49
+        }
+    });
+    let v = Mat::from_fn(N, D, |_, _| 1.0);
+    let g = 0.0232f32;
+    let mut q = vec![g; D];
+    q[0] = 0.05;
+    (k, v, q)
+}
+
 #[test]
 fn quantized_coverage_holds_on_adversarial_rows_with_slack() {
     // The coherent-bias population, slack ON: the bias bound ρ here
@@ -300,8 +358,17 @@ fn quantized_coverage_holds_on_adversarial_rows_with_slack() {
     for t in 0..20u64 {
         let mut rng = meta.fork(t);
         let (k, v, q) = adversarial_quant_instance();
-        let violated =
-            run_trial_quant(Verify::Denominator, Bound::Clt, &k, &v, &q, true, false, &mut rng);
+        let violated = run_trial_quant_with(
+            quantize_mat,
+            Verify::Denominator,
+            Bound::Clt,
+            &k,
+            &v,
+            &q,
+            true,
+            false,
+            &mut rng,
+        );
         assert!(!violated, "slack-on adversarial trial {t} violated ε={EPS}");
     }
 }
@@ -318,7 +385,17 @@ fn quantized_coverage_fails_when_slack_is_zeroed() {
     for t in 0..TRIALS {
         let mut rng = meta.fork(t as u64);
         let (k, v, q) = adversarial_quant_instance();
-        if run_trial_quant(Verify::Denominator, Bound::Clt, &k, &v, &q, false, false, &mut rng) {
+        if run_trial_quant_with(
+            quantize_mat,
+            Verify::Denominator,
+            Bound::Clt,
+            &k,
+            &v,
+            &q,
+            false,
+            false,
+            &mut rng,
+        ) {
             violations += 1;
         }
     }
@@ -326,6 +403,64 @@ fn quantized_coverage_fails_when_slack_is_zeroed() {
     assert!(
         rate > DELTA + 0.05,
         "zeroed slack still covered (rate {rate} ≤ {}): the quantization slack term \
+         would be dead weight",
+        DELTA + 0.05
+    );
+}
+
+#[test]
+fn int4_quantized_coverage_holds_on_adversarial_rows_with_slack() {
+    // Same coherent-bias mechanics through the bit-packed codec: int4's
+    // ρ (scale 1 pinned by the leading 7.0) exceeds ε, the budget
+    // saturates, and the residual coherent bias stays under ε.
+    let mut meta = Rng::new(0x9A8);
+    for t in 0..20u64 {
+        let mut rng = meta.fork(t);
+        let (k, v, q) = adversarial_quant_instance4();
+        let violated = run_trial_quant_with(
+            quantize_mat4,
+            Verify::Denominator,
+            Bound::Clt,
+            &k,
+            &v,
+            &q,
+            true,
+            false,
+            &mut rng,
+        );
+        assert!(!violated, "int4 slack-on adversarial trial {t} violated ε={EPS}");
+    }
+}
+
+#[test]
+fn int4_quantized_coverage_fails_when_slack_is_zeroed() {
+    // The int4 negative control: zero the (wider) int4 slack on the
+    // coherent rows and the violation rate must blow past δ — proving
+    // the ~16× wider ρ folded through `QuantSlack` is load-bearing for
+    // the bit-packed tier, not inherited dead weight from int8.
+    let mut meta = Rng::new(0xAA8);
+    let mut violations = 0usize;
+    for t in 0..TRIALS {
+        let mut rng = meta.fork(t as u64);
+        let (k, v, q) = adversarial_quant_instance4();
+        if run_trial_quant_with(
+            quantize_mat4,
+            Verify::Denominator,
+            Bound::Clt,
+            &k,
+            &v,
+            &q,
+            false,
+            false,
+            &mut rng,
+        ) {
+            violations += 1;
+        }
+    }
+    let rate = violations as f64 / TRIALS as f64;
+    assert!(
+        rate > DELTA + 0.05,
+        "zeroed int4 slack still covered (rate {rate} ≤ {}): the int4 slack term \
          would be dead weight",
         DELTA + 0.05
     );

@@ -1,11 +1,13 @@
-//! Verified int8 KV quantization, held to the engine's determinism bar:
-//! quantized token streams must be byte-identical at any worker count,
-//! across a forced preemption replay, and between prefix-cache-shared
+//! Verified quantized KV (int8 and bit-packed int4), held to the
+//! engine's determinism bar: quantized token streams must be
+//! byte-identical at any worker count, across a forced preemption
+//! replay (including spill swap-in), and between prefix-cache-shared
 //! and unshared runs (quantized payloads fork byte-for-byte; CoW never
 //! aliases writes) — while the physical byte accounting (pool capacity,
-//! TierStats traffic) reflects the ≥ 3.5× compression the tier exists
-//! for. The (ε, δ) correctness of the quantized budget lives in
-//! `tests/budget_coverage.rs`; this file is about serving semantics.
+//! TierStats traffic) reflects the ≥ 3.5× (int8) / ≥ 6× (int4)
+//! compression the tiers exist for. The (ε, δ) correctness of the
+//! quantized budget lives in `tests/budget_coverage.rs`; this file is
+//! about serving semantics.
 
 use std::collections::BTreeMap;
 
@@ -61,6 +63,10 @@ fn run_session(
 
 fn int8_cfg() -> vattn::server::EngineConfigBuilder {
     EngineConfig::builder().seed(1).block_tokens(4).kv_dtype(KvDtype::Int8)
+}
+
+fn int4_cfg() -> vattn::server::EngineConfigBuilder {
+    EngineConfig::builder().seed(1).block_tokens(4).kv_dtype(KvDtype::Int4)
 }
 
 #[test]
@@ -153,6 +159,139 @@ fn int8_pool_holds_at_least_3_5x_more_blocks_for_the_same_bytes() {
     assert!(ratio >= 3.5, "same byte budget yields only {ratio}x the blocks at int8");
     assert!(si.kv_compression_ratio() >= 3.5);
     assert_eq!(si.kv_dtype, KvDtype::Int8);
+}
+
+#[test]
+fn int4_streams_are_byte_identical_across_workers_preemption_and_spill() {
+    // The bit-packed tier at the full determinism bar in one scenario:
+    // the same workload on (a) an uncontended pool, (b) a pool too
+    // small for both generations — forcing preemption replay — and
+    // (c) the same contended pool with the cold tier attached — forcing
+    // spill swap-in — each at 1 and 4 workers. All six runs must emit
+    // the same bytes.
+    let mcfg = ModelConfig::tiny();
+    let prompts = shared_prefix_prompts(2, 8, 0);
+    let opts = GenOptions::new(12);
+    let cap = 7 * 4 * KvDtype::Int4.kv_bytes_per_token(&mcfg);
+    let spill_path = std::env::temp_dir()
+        .join(format!("vattn-test-int4-{}.spill", std::process::id()));
+    let _ = std::fs::remove_file(&spill_path);
+
+    let (free1, free_stats) =
+        run_session(int4_cfg().max_batch(2).workers(1).build(), &prompts, opts.clone());
+    let (free4, _) =
+        run_session(int4_cfg().max_batch(2).workers(4).build(), &prompts, opts.clone());
+    let (pre1, pre_stats) = run_session(
+        int4_cfg().max_batch(2).workers(1).kv_capacity_bytes(cap).build(),
+        &prompts,
+        opts.clone(),
+    );
+    let (pre4, pre_stats4) = run_session(
+        int4_cfg().max_batch(2).workers(4).kv_capacity_bytes(cap).build(),
+        &prompts,
+        opts.clone(),
+    );
+    let (sp1, sp_stats) = run_session(
+        int4_cfg().max_batch(2).workers(1).kv_capacity_bytes(cap).kv_spill(&spill_path).build(),
+        &prompts,
+        opts.clone(),
+    );
+    let _ = std::fs::remove_file(&spill_path);
+    let (sp4, sp_stats4) = run_session(
+        int4_cfg().max_batch(2).workers(4).kv_capacity_bytes(cap).kv_spill(&spill_path).build(),
+        &prompts,
+        opts,
+    );
+    let _ = std::fs::remove_file(&spill_path);
+
+    assert_eq!(free_stats.preemptions, 0);
+    assert!(pre_stats.preemptions > 0, "7 int4 blocks < 10 worst-case must contend");
+    assert_eq!(pre_stats.preemptions, pre_stats4.preemptions);
+    assert!(sp_stats.spill_out_bytes > 0, "the contended spill run must swap out");
+    assert_eq!(sp_stats.preemption_replays, 0, "spill mode must never replay");
+    assert_eq!(sp_stats.swap_in_bytes, sp_stats.spill_out_bytes);
+    assert_eq!(sp_stats.spill_out_bytes, sp_stats4.spill_out_bytes);
+    assert_eq!(free1, free4, "int4 streams diverged across workers (uncontended)");
+    assert_eq!(free1, pre1, "int4 preemption replay changed a stream");
+    assert_eq!(pre1, pre4, "int4 streams diverged across workers (contended)");
+    assert_eq!(free1, sp1, "int4 spill swap-in changed a stream");
+    assert_eq!(sp1, sp4, "int4 streams diverged across workers (spill)");
+}
+
+#[test]
+fn int4_pool_holds_at_least_6x_more_blocks_for_the_same_bytes() {
+    let mcfg = ModelConfig::tiny();
+    let budget = 64 * 16 * mcfg.kv_bytes_per_token();
+    let fp32 = EngineConfig::builder().block_tokens(16).kv_capacity_bytes(budget).build();
+    let int4 = EngineConfig::builder()
+        .block_tokens(16)
+        .kv_capacity_bytes(budget)
+        .kv_dtype(KvDtype::Int4)
+        .build();
+    let sf = Session::new(Model::new(mcfg.clone(), 42), fp32).stats();
+    let si = Session::new(Model::new(mcfg, 42), int4).stats();
+    assert_eq!(sf.capacity_blocks, Some(64));
+    let ratio = si.capacity_blocks.unwrap() as f64 / 64.0;
+    assert!(ratio >= 6.0, "same byte budget yields only {ratio}x the blocks at int4");
+    assert!(si.kv_compression_ratio() >= 6.0);
+    assert_eq!(si.kv_dtype, KvDtype::Int4);
+}
+
+#[test]
+fn wider_overrides_are_rejected_on_an_int4_pool_and_int4_is_admitted_anywhere() {
+    // Both int8 and f32 rows are wider than int4's ⌈d/2⌉ + 4 — on a
+    // byte-capped int4 pool either override must be rejected up front.
+    // The narrower direction (int4 rows into an int8-sized pool) is
+    // always admissible.
+    let mcfg = ModelConfig::tiny();
+    for wider in [KvDtype::Int8, KvDtype::F32] {
+        let capped = int4_cfg()
+            .kv_capacity_bytes(16 * 4 * KvDtype::Int4.kv_bytes_per_token(&mcfg))
+            .build();
+        let mut s = Session::new(Model::new(mcfg.clone(), 42), capped);
+        let doomed = s.submit(
+            SubmitRequest::new(shared_prefix_prompts(1, 8, 0)[0].clone())
+                .options(GenOptions::new(4).kv_dtype(wider)),
+        );
+        let mut rejected = Vec::new();
+        while !s.is_idle() {
+            for ev in s.tick().expect("tick") {
+                if let Event::Rejected { id, reason, .. } = ev {
+                    rejected.push((id, format!("{reason}")));
+                }
+            }
+        }
+        assert_eq!(rejected.len(), 1, "{} override must be rejected", wider.name());
+        assert_eq!(rejected[0].0, doomed);
+        assert!(
+            matches!(rejected[0].1.as_str(), m if m.contains("byte-capped pool")),
+            "{}",
+            rejected[0].1
+        );
+    }
+
+    // int4 override on a byte-capped int8 pool: narrower, must serve.
+    let capped8 = int8_cfg()
+        .kv_capacity_bytes(16 * 4 * KvDtype::Int8.kv_bytes_per_token(&mcfg))
+        .build();
+    let mut s = Session::new(Model::new(mcfg, 42), capped8);
+    s.submit(
+        SubmitRequest::new(shared_prefix_prompts(1, 8, 0)[0].clone())
+            .options(GenOptions::new(4).kv_dtype(KvDtype::Int4)),
+    );
+    let mut finished = 0;
+    while !s.is_idle() {
+        for ev in s.tick().expect("tick") {
+            match ev {
+                Event::Rejected { reason, .. } => {
+                    panic!("narrower int4 override must be admitted: {reason}")
+                }
+                Event::Finished { .. } => finished += 1,
+                _ => {}
+            }
+        }
+    }
+    assert_eq!(finished, 1);
 }
 
 #[test]

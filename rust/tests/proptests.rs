@@ -616,6 +616,190 @@ fn prop_int8_fused_dequant_dot_is_bitwise_exact() {
 }
 
 #[test]
+fn prop_simd_dot_matches_scalar_oracle_bitwise() {
+    // Kernel-equivalence gate: the dispatched dot (lane-array or AVX2,
+    // fixed per process) must equal the scalar 8-wide oracle *bitwise*
+    // at every width — full lane bodies, ragged tails, and the empty
+    // slice alike — and at every magnitude.
+    use vattn::tensor::simd;
+    Prop::new("simd-dot-oracle-bitwise").cases(120).run(|rng| {
+        let d = if rng.below(3) == 0 {
+            [0usize, 1, 7, 8, 9, 15, 16, 17, 23, 24, 31, 32][rng.below(12)]
+        } else {
+            rng.range(1, 200)
+        };
+        let mag = [0.01f32, 1.0, 1e6][rng.below(3)];
+        let a: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, mag)).collect();
+        let b: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 1.0)).collect();
+        let fast = simd::dot(&a, &b);
+        let oracle = simd::dot_oracle(&a, &b);
+        assert_eq!(
+            fast.to_bits(),
+            oracle.to_bits(),
+            "d={d} ({}): dispatched {fast} != oracle {oracle}",
+            simd::kernel_name()
+        );
+    });
+}
+
+#[test]
+fn prop_simd_fused_int8_dot_row_equals_unpack_then_dot_bitwise() {
+    // Bridge lemma at the dispatched-kernel layer: the fused int8
+    // dequant-dot shares the SIMD dot's accumulation order, so fused ≡
+    // dequantize-then-simd::dot stays bitwise at every width.
+    use vattn::tensor::quant::QuantizedMat;
+    use vattn::tensor::simd;
+    Prop::new("simd-int8-fused-bitwise").cases(80).run(|rng| {
+        let d = rng.range(1, 150);
+        let mut m = QuantizedMat::new(d);
+        let mag = [0.1f32, 1.0, 1e4][rng.below(3)];
+        let row: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, mag)).collect();
+        m.push_row(&row);
+        let q: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 1.0)).collect();
+        let fused = simd::dot_i8(m.row_codes(0), m.scale(0), &q);
+        let two_step = simd::dot(&m.dequantize_row(0), &q);
+        assert_eq!(fused.to_bits(), two_step.to_bits(), "d={d}");
+    });
+}
+
+#[test]
+fn prop_simd_fused_int4_dot_row_equals_unpack_then_dot_bitwise() {
+    // Same bridge lemma for the bit-packed codec: in-register nibble
+    // unpacking must not change a single bit vs dequantize-then-dot —
+    // odd widths exercise the half-filled trailing byte.
+    use vattn::tensor::quant::QuantizedMat4;
+    use vattn::tensor::simd;
+    Prop::new("simd-int4-fused-bitwise").cases(80).run(|rng| {
+        let d = rng.range(1, 150);
+        let mut m = QuantizedMat4::new(d);
+        let n_rows = rng.range(1, 5);
+        for _ in 0..n_rows {
+            let mag = [0.1f32, 1.0, 1e4][rng.below(3)];
+            let row: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, mag)).collect();
+            m.push_row(&row);
+        }
+        let q: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 1.0)).collect();
+        for r in 0..n_rows {
+            let fused = m.dot_row(r, &q);
+            let two_step = simd::dot(&m.dequantize_row(r), &q);
+            assert_eq!(
+                fused.to_bits(),
+                two_step.to_bits(),
+                "row {r} (d={d}): fused {fused} != dequantize-then-dot {two_step}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_simd_weighted_moments_matches_sequential_reference_bitwise() {
+    // The budget stats pass is column-parallel (each column's f64
+    // accumulator sees the same op sequence either way) and the rn2
+    // reduction is kept sequential — so the kernel must agree with the
+    // naive interleaved loop bitwise, on every accumulator.
+    use vattn::tensor::simd;
+    Prop::new("simd-weighted-moments-bitwise").cases(80).run(|rng| {
+        let d = rng.range(1, 60);
+        let rows = rng.range(1, 20);
+        let mut sv_a = vec![0.0f64; d];
+        let mut sv2_a = vec![0.0f64; d];
+        let mut sv_b = vec![0.0f64; d];
+        let mut sv2_b = vec![0.0f64; d];
+        for _ in 0..rows {
+            let w = rng.f64() * 3.0;
+            let row: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 2.0)).collect();
+            let rn2_a = simd::weighted_moments(w, &row, &mut sv_a, &mut sv2_a);
+            let rn2_b = simd::weighted_moments_seq_ref(w, &row, &mut sv_b, &mut sv2_b);
+            assert_eq!(rn2_a.to_bits(), rn2_b.to_bits(), "rn2 diverged at d={d}");
+        }
+        for c in 0..d {
+            assert_eq!(sv_a[c].to_bits(), sv_b[c].to_bits(), "sum_vec[{c}] diverged");
+            assert_eq!(sv2_a[c].to_bits(), sv2_b[c].to_bits(), "sum_vec2[{c}] diverged");
+        }
+    });
+}
+
+#[test]
+fn prop_simd_max_fold_and_axpy_match_sequential_reference() {
+    // max is associative/commutative on finite floats, so the lane fold
+    // must be bitwise-equal to the sequential fold; axpy is elementwise,
+    // so every output element must match exactly.
+    use vattn::tensor::simd;
+    Prop::new("simd-max-axpy-bitwise").cases(100).run(|rng| {
+        let d = rng.range(0, 130);
+        let xs: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 10.0)).collect();
+        let m_fast = simd::max_fold(&xs);
+        let m_ref = simd::max_fold_seq_ref(&xs);
+        assert_eq!(m_fast.to_bits(), m_ref.to_bits(), "max fold diverged at d={d}");
+        let alpha = rng.normal32(0.0, 2.0);
+        let x: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 1.0)).collect();
+        let y0: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 1.0)).collect();
+        let mut y_a = y0.clone();
+        let mut y_b = y0;
+        simd::axpy(alpha, &x, &mut y_a);
+        simd::axpy_seq_ref(alpha, &x, &mut y_b);
+        for c in 0..d {
+            assert_eq!(y_a[c].to_bits(), y_b[c].to_bits(), "axpy[{c}] diverged at d={d}");
+        }
+    });
+}
+
+#[test]
+fn prop_int4_roundtrip_respects_the_advertised_half_scale_bound() {
+    // The bit-packed tier's foundational contract, with NO tolerance:
+    // for every element of every row — random, constant, zero, and
+    // max-magnitude alike — |x − dequantize(quantize(x))| ≤ scale/2
+    // with the row's advertised power-of-two scale.
+    use vattn::tensor::quant::QuantizedMat4;
+    Prop::new("int4-roundtrip-bound").cases(60).run(|rng| {
+        let d = [7usize, 8, 15, 16, 31, 32, 64][rng.below(7)];
+        let mut m = QuantizedMat4::new(d);
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        let magnitude = [0.01f32, 1.0, 100.0, 1e30][rng.below(4)];
+        for _ in 0..6 {
+            rows.push((0..d).map(|_| rng.normal32(0.0, magnitude)).collect());
+        }
+        rows.push(vec![0.0; d]); // zero row
+        let c = rng.normal32(0.0, magnitude);
+        rows.push(vec![c; d]); // constant row
+        let mut extreme = vec![f32::MAX; d]; // max-magnitude row
+        extreme[d / 2] = -f32::MAX;
+        rows.push(extreme);
+        for row in &rows {
+            m.push_row(row);
+        }
+        for (r, row) in rows.iter().enumerate() {
+            let bound = m.max_abs_err(r);
+            assert_eq!(bound, 0.5 * m.scale(r));
+            let back = m.dequantize_row(r);
+            for (c, (&x, &x_hat)) in row.iter().zip(back.iter()).enumerate() {
+                assert!(x_hat.is_finite(), "row {r} col {c} dequantized to {x_hat}");
+                assert!(
+                    (x - x_hat).abs() <= bound,
+                    "row {r} col {c}: |{x} − {x_hat}| > scale/2 = {bound}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_int4_quantization_is_deterministic() {
+    // Same row ⇒ same packed bytes and the scale's exact bit pattern.
+    use vattn::tensor::quant::quantize_row4_into;
+    Prop::new("int4-deterministic").cases(80).run(|rng| {
+        let d = rng.range(1, 96);
+        let row: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 5.0)).collect();
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        let sa = quantize_row4_into(&row, &mut a);
+        let sb = quantize_row4_into(&row.clone(), &mut b);
+        assert_eq!(a, b, "packed codes diverged for identical input");
+        assert_eq!(sa.to_bits(), sb.to_bits(), "scales diverged for identical input");
+    });
+}
+
+#[test]
 fn prop_top_indices_are_actually_top() {
     Prop::new("top-indices-correct").cases(80).run(|rng| {
         let n = rng.range(8, 500);
