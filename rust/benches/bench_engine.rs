@@ -69,7 +69,8 @@ use std::time::{Duration, Instant};
 
 use vattn::kvcache::KvDtype;
 use vattn::metrics::{
-    summarize, LatencySummary, PagingSummary, ReuseSummary, RouterSummary, ServeSummary,
+    summarize, LatencySummary, PagingSummary, ReuseSummary, RouterSummary, ScenarioSummary,
+    ServeSummary,
 };
 use vattn::model::{Model, ModelConfig, Sampler};
 use vattn::policies::{
@@ -84,7 +85,9 @@ use vattn::tensor::quant::QuantizedMat4;
 use vattn::tensor::{simd, Mat};
 use vattn::util::json::Json;
 use vattn::util::timer::bench;
-use vattn::workloads::traces::{generate_trace, to_requests, TraceConfig};
+use vattn::workloads::harness::run_scenario;
+use vattn::workloads::scenario::{axes_covered, matrix};
+use vattn::workloads::traces::{generate_trace_seeded, to_requests, TraceConfig};
 use vattn::util::Rng;
 
 /// Mid-size model: heavy enough per step that a scheduler round
@@ -797,8 +800,7 @@ fn main() {
         gen_min: 8,
         gen_max: 24,
     };
-    let mut rng = Rng::new(7);
-    let trace = generate_trace(&trace_cfg, &mut rng);
+    let trace = generate_trace_seeded(&trace_cfg, 7);
     let requests = to_requests(&trace, bench_model().vocab);
     let t0 = Instant::now();
     let out = eng.serve_open_loop(requests, &AttentionMode::Dense).expect("open loop");
@@ -823,8 +825,7 @@ fn main() {
         gen_min: 4,
         gen_max: 8,
     };
-    let mut srng = Rng::new(11);
-    let serve_arrivals = to_requests(&generate_trace(&serve_trace, &mut srng), ModelConfig::tiny().vocab);
+    let serve_arrivals = to_requests(&generate_trace_seeded(&serve_trace, 11), ModelConfig::tiny().vocab);
     let total_requests = serve_arrivals.len();
     let server = NetServer::start(
         Arc::new(Model::new(ModelConfig::tiny(), 42)),
@@ -947,6 +948,52 @@ fn main() {
         serve_tpot.p99 * 1e3,
     );
     println!("{}", RouterSummary::from_shards(&shard_final).render());
+
+    println!("\n== scenario fuzz matrix: full differential sweep ==");
+    // Every scenario the DSL enumerates (CI runs a 44-scenario sample in
+    // tests/scenario_matrix.rs; the bench sweeps all of them) through
+    // the differential oracle: byte-identical streams vs the reference
+    // config, quiescent pools/spill slots after drain, replay counters
+    // consistent with the spill mode, and empirical (ε, δ) coverage for
+    // verified scenarios.
+    let all_scenarios = matrix();
+    let matrix_axes = axes_covered(&all_scenarios);
+    let distinct_combos = all_scenarios
+        .iter()
+        .map(|s| s.code())
+        .collect::<std::collections::BTreeSet<_>>()
+        .len();
+    let t_matrix = Instant::now();
+    let mut matrix_failures: Vec<String> = Vec::new();
+    let mut matrix_summary = ScenarioSummary::default();
+    for sc in &all_scenarios {
+        match run_scenario(*sc, 0xFA77) {
+            Ok(r) => matrix_summary.record(
+                true,
+                r.requests,
+                r.completed,
+                r.cancelled,
+                r.failed,
+                r.preemptions,
+                r.coverage_violation_rate,
+            ),
+            Err(e) => {
+                matrix_summary.record(false, 0, 0, 0, 0, 0, None);
+                matrix_failures.push(e);
+            }
+        }
+    }
+    let matrix_wall = t_matrix.elapsed().as_secs_f64();
+    for f in &matrix_failures {
+        println!("FAIL {f}");
+    }
+    println!("{}", matrix_summary.render());
+    println!("axes {matrix_axes}  distinct combos {distinct_combos}  wall {matrix_wall:.1}s");
+    assert!(
+        matrix_failures.is_empty(),
+        "{} scenarios failed the differential oracle",
+        matrix_failures.len()
+    );
 
     let json = Json::obj()
         .field("bench", Json::str("engine"))
@@ -1084,6 +1131,25 @@ fn main() {
                     Json::arr(shard_final.iter().map(|s| Json::num(s.received as f64))),
                 )
                 .field("wall_s", Json::num(serve_wall)),
+        )
+        .field(
+            "scenario_matrix",
+            Json::obj()
+                .field("scenarios", Json::num(matrix_summary.scenarios as f64))
+                .field("failures", Json::num(matrix_summary.failures as f64))
+                .field("axes_covered", Json::num(matrix_axes as f64))
+                .field("distinct_combos", Json::num(distinct_combos as f64))
+                .field("requests", Json::num(matrix_summary.requests as f64))
+                .field("preemptions", Json::num(matrix_summary.preemptions as f64))
+                .field(
+                    "coverage_checked",
+                    Json::num(matrix_summary.coverage_checked as f64),
+                )
+                .field(
+                    "coverage_violation_worst",
+                    Json::num(matrix_summary.coverage_violation_worst),
+                )
+                .field("wall_s", Json::num(matrix_wall)),
         );
     let path = "BENCH_engine.json";
     std::fs::write(path, json.to_string() + "\n").expect("write BENCH_engine.json");

@@ -340,6 +340,12 @@ impl SpillStore {
         &self.stats
     }
 
+    /// True when no cold-tier slot is live — the spill half of the
+    /// session's end-of-run quiescence check (`Session::kv_quiescent`).
+    pub fn is_quiescent(&self) -> bool {
+        self.live_count == 0
+    }
+
     /// Serialize the prefix radix (chain keys, parent links, snapshots)
     /// into the sibling `<path>.prefix` file, atomically replacing any
     /// previous contents. `entries` must list parents before children

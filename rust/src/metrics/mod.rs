@@ -8,7 +8,7 @@ pub mod serving;
 
 pub use serving::{
     ascii_histogram, summarize, EventLog, LatencySummary, PagingSummary, RequestTimeline,
-    ReuseSummary, RouterSummary, ServeSummary,
+    ReuseSummary, RouterSummary, ScenarioSummary, ServeSummary,
 };
 
 /// Mean of a slice.

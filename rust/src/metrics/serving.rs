@@ -591,6 +591,93 @@ impl RouterSummary {
     }
 }
 
+/// Aggregate view of a scenario-matrix sweep (`workloads::scenario` +
+/// `workloads::harness`). Plain counters so this layer stays free of a
+/// `workloads` dependency: the sweep driver records one scenario at a
+/// time with [`ScenarioSummary::record`] and renders a table at the end.
+/// Written into the `"scenario_matrix"` block of `BENCH_engine.json`.
+#[derive(Clone, Debug, Default)]
+pub struct ScenarioSummary {
+    /// Scenarios driven through the differential oracle.
+    pub scenarios: usize,
+    /// Scenarios whose oracle check failed.
+    pub failures: usize,
+    /// Requests submitted across all scenarios.
+    pub requests: usize,
+    pub completed: usize,
+    pub cancelled: usize,
+    pub failed: usize,
+    pub preemptions: u64,
+    /// Scenarios that ran an empirical (ε, δ) coverage check.
+    pub coverage_checked: usize,
+    /// Worst observed coverage-violation rate across checked scenarios.
+    pub coverage_violation_worst: f64,
+}
+
+impl ScenarioSummary {
+    /// Fold one scenario's outcome in. A failed scenario contributes
+    /// only to `scenarios`/`failures` (its per-request tallies are
+    /// unreliable mid-abort).
+    #[allow(clippy::too_many_arguments)]
+    pub fn record(
+        &mut self,
+        passed: bool,
+        requests: usize,
+        completed: usize,
+        cancelled: usize,
+        failed: usize,
+        preemptions: u64,
+        coverage_violation_rate: Option<f64>,
+    ) {
+        self.scenarios += 1;
+        if !passed {
+            self.failures += 1;
+            return;
+        }
+        self.requests += requests;
+        self.completed += completed;
+        self.cancelled += cancelled;
+        self.failed += failed;
+        self.preemptions += preemptions;
+        if let Some(rate) = coverage_violation_rate {
+            self.coverage_checked += 1;
+            if rate > self.coverage_violation_worst {
+                self.coverage_violation_worst = rate;
+            }
+        }
+    }
+
+    /// One-row table with the sweep totals.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "scenario matrix",
+            &[
+                "scenarios",
+                "failures",
+                "requests",
+                "completed",
+                "cancelled",
+                "failed",
+                "preemptions",
+                "coverage checks",
+                "worst violation rate",
+            ],
+        );
+        t.row(vec![
+            self.scenarios.to_string(),
+            self.failures.to_string(),
+            self.requests.to_string(),
+            self.completed.to_string(),
+            self.cancelled.to_string(),
+            self.failed.to_string(),
+            self.preemptions.to_string(),
+            self.coverage_checked.to_string(),
+            format!("{:.3}", self.coverage_violation_worst),
+        ]);
+        t.render()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -633,6 +720,26 @@ mod tests {
     fn tpot_zero_for_single_token_generations() {
         let r = result(0, 1, 0.0, 0.1, 0.0);
         assert_eq!(r.tpot_s(), 0.0);
+    }
+
+    #[test]
+    fn scenario_summary_folds_passes_and_failures() {
+        let mut s = ScenarioSummary::default();
+        s.record(true, 6, 5, 1, 0, 2, Some(0.1));
+        s.record(true, 6, 6, 0, 0, 0, None);
+        // Failed scenarios count only toward scenarios/failures.
+        s.record(false, 6, 6, 0, 0, 9, Some(0.9));
+        assert_eq!(s.scenarios, 3);
+        assert_eq!(s.failures, 1);
+        assert_eq!(s.requests, 12);
+        assert_eq!(s.completed, 11);
+        assert_eq!(s.cancelled, 1);
+        assert_eq!(s.preemptions, 2);
+        assert_eq!(s.coverage_checked, 1);
+        assert!((s.coverage_violation_worst - 0.1).abs() < 1e-12);
+        let out = s.render();
+        assert!(out.contains("## scenario matrix"));
+        assert!(out.contains("0.100"));
     }
 
     #[test]

@@ -156,6 +156,17 @@ pub struct EngineConfig {
     /// process restarts. `None` = preemption falls back to deterministic
     /// replay (the original behavior).
     pub kv_spill: Option<std::path::PathBuf>,
+    /// Drive the session's event clock virtually instead of from the
+    /// wall clock: each `tick` advances a fixed quantum, and an idle
+    /// gap before the next queued arrival *jumps* the clock to that
+    /// arrival instead of sleeping. Admission of open-loop traces
+    /// (Poisson / bursty arrivals) then becomes a pure function of the
+    /// tick count, which is what lets the scenario fuzz matrix re-run
+    /// an arrival-timed workload and demand byte-identical schedules.
+    /// Event timestamps and latency metrics are in virtual seconds
+    /// under this mode, so throughput/TTFT numbers are not wall-clock
+    /// comparable.
+    pub virtual_clock: bool,
 }
 
 impl Default for EngineConfig {
@@ -173,6 +184,7 @@ impl Default for EngineConfig {
             max_seq_len: None,
             kv_dtype: KvDtype::F32,
             kv_spill: None,
+            virtual_clock: false,
         }
     }
 }
@@ -248,6 +260,11 @@ impl EngineConfigBuilder {
 
     pub fn kv_spill(mut self, v: impl Into<std::path::PathBuf>) -> Self {
         self.cfg.kv_spill = Some(v.into());
+        self
+    }
+
+    pub fn virtual_clock(mut self, v: bool) -> Self {
+        self.cfg.virtual_clock = v;
         self
     }
 
@@ -511,6 +528,7 @@ mod tests {
             .max_seq_len(4096)
             .kv_dtype(KvDtype::Int8)
             .kv_spill("/tmp/kv.spill")
+            .virtual_clock(true)
             .build();
         assert_eq!(cfg.max_batch, 7);
         assert!(matches!(cfg.sampler, Sampler::Temperature(t) if (t - 0.5).abs() < 1e-9));
@@ -524,6 +542,7 @@ mod tests {
         assert_eq!(cfg.max_seq_len, Some(4096));
         assert_eq!(cfg.kv_dtype, KvDtype::Int8);
         assert_eq!(cfg.kv_spill.as_deref(), Some(std::path::Path::new("/tmp/kv.spill")));
+        assert!(cfg.virtual_clock);
     }
 
     #[test]

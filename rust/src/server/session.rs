@@ -541,8 +541,20 @@ pub struct Session<B: Backend> {
     /// derived by clone-then-fork (see `Session::request_rng`).
     seed_rng: Rng,
     start: Instant,
+    /// Virtual event clock (seconds), present iff
+    /// `EngineConfig::virtual_clock`: `tick` advances it by a fixed
+    /// quantum and idle gaps jump it to the next arrival, so the
+    /// schedule — admission order included — is a pure function of the
+    /// tick count instead of wall-clock timing.
+    vclock: Option<f64>,
     next_id: RequestId,
 }
+
+/// Virtual seconds one `tick` advances the clock by under
+/// `EngineConfig::virtual_clock`. The value only sets the granularity
+/// of arrival-time quantization (a 1 kHz scheduler); determinism holds
+/// for any positive constant.
+const VIRTUAL_TICK_S: f64 = 1e-3;
 
 impl<B: Backend + Send + Sync + 'static> Session<B> {
     /// Standalone session with its own worker pool.
@@ -588,6 +600,7 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             }
         }
         let seed_rng = Rng::new(cfg.seed);
+        let vclock = cfg.virtual_clock.then_some(0.0);
         Session {
             backend,
             cfg,
@@ -605,6 +618,7 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             pending_events: Vec::new(),
             seed_rng,
             start: Instant::now(),
+            vclock,
             next_id: 0,
         }
     }
@@ -615,9 +629,14 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
         self.default_attention = attention;
     }
 
-    /// Seconds since the session was created (the event clock).
+    /// Seconds since the session was created (the event clock). Under
+    /// `EngineConfig::virtual_clock` this reads the tick-driven virtual
+    /// clock instead of the wall clock.
     pub fn now_s(&self) -> f64 {
-        self.start.elapsed().as_secs_f64()
+        match self.vclock {
+            Some(t) => t,
+            None => self.start.elapsed().as_secs_f64(),
+        }
     }
 
     pub fn waiting_len(&self) -> usize {
@@ -680,6 +699,15 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
     /// or cancelled — the cold-tier side of the no-leak invariant.
     pub fn spill_live_blocks(&self) -> Option<usize> {
         self.spill.as_ref().map(|s| s.live_blocks())
+    }
+
+    /// Oracle-grade quiescence: every pool block has been returned and
+    /// no cold-tier slot is live. After draining all requests and
+    /// [`Session::flush_prefix_cache`], a session that does not satisfy
+    /// this has leaked KV somewhere — the scenario-matrix harness
+    /// asserts it at the end of every run.
+    pub fn kv_quiescent(&self) -> bool {
+        self.blocks.is_quiescent() && self.spill.as_ref().map_or(true, |s| s.is_quiescent())
     }
 
     /// Paging / scheduling counters (cumulative since session creation).
@@ -795,6 +823,9 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
     /// do not spin; interactive sessions (arrival 0) never sleep.
     pub fn tick(&mut self) -> Result<Vec<Event>, EngineError> {
         let mut events = std::mem::take(&mut self.pending_events);
+        if let Some(t) = self.vclock.as_mut() {
+            *t += VIRTUAL_TICK_S;
+        }
         let now = self.now_s();
 
         // ── phase 1: demand-paged block accounting (serial — workers
@@ -807,10 +838,18 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
         if self.active.is_empty() {
             if let Some(front) = self.waiting.front() {
                 // Trace-replay idle gap: nothing runnable until the next
-                // arrival.
-                let gap = front.arrival_s - self.now_s();
-                if gap > 0.0 {
-                    std::thread::sleep(std::time::Duration::from_secs_f64(gap.min(0.02)));
+                // arrival. The virtual clock jumps straight to it (the
+                // next tick admits); the wall clock sleeps it off.
+                let arrival = front.arrival_s;
+                if let Some(t) = self.vclock.as_mut() {
+                    if arrival > *t {
+                        *t = arrival;
+                    }
+                } else {
+                    let gap = arrival - self.now_s();
+                    if gap > 0.0 {
+                        std::thread::sleep(std::time::Duration::from_secs_f64(gap.min(0.02)));
+                    }
                 }
             }
             return Ok(events);

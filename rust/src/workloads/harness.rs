@@ -1,0 +1,730 @@
+//! Differential oracle for the scenario fuzz matrix.
+//!
+//! [`run_scenario`] materializes a [`Scenario`] into a concrete
+//! workload (prompts, seeded arrivals, per-request `GenOptions`, fault
+//! plan), runs it on the **reference configuration** — one worker, a
+//! direct `Session::tick` loop, ample pool, every non-semantic feature
+//! off — and on the **scenario configuration**, then checks one
+//! property that every PR since the seed has re-asserted piecemeal:
+//!
+//! * every completed request's token stream is **byte-identical** to
+//!   its reference stream; cancelled / failed requests produced a
+//!   strict prefix of it;
+//! * after drain + `flush_prefix_cache`, pools and spill slots are
+//!   **quiescent** ([`crate::server::Session::kv_quiescent`]) — no
+//!   leaked blocks, no orphaned cold-tier slots;
+//! * `preemption_replays` is consistent with the spill mode (spill on →
+//!   zero replays; spill off → one replay per preemption);
+//! * scenarios serving verified requests additionally re-prove the
+//!   empirical (ε, δ) coverage bound at the policy level.
+//!
+//! Dtype and attention axes are *semantic* (they change the streamed
+//! tokens), so the reference run keeps them as per-request options over
+//! an f32-sized ample pool — exactly the narrower-override invariant
+//! `tests/kv_quant.rs` pins. Everything else (batching, arrival timing,
+//! pool pressure, spill, prefix cache, sharding, worker count) must not
+//! move a single byte.
+//!
+//! Direct-topology scenarios run twice and must reproduce outcomes and
+//! scheduling counters exactly — this is what `EngineConfig::
+//! virtual_clock` buys: Poisson-arrival admission is a pure function of
+//! the tick count, so even preemption patterns replay bit-identically.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::distributions::{batch_arrivals, bursty_arrivals, poisson_arrivals};
+use super::scenario::{Arrival, Fault, OptionsAxis, PromptShape, Resources, Scenario, Topology};
+use crate::kvcache::{KvCache, KvDtype};
+use crate::model::{Model, ModelConfig, StepOut};
+use crate::server::{
+    Backend, EngineConfig, Event, GenOptions, Router, RouterConfig, SelectFn, Session,
+    SessionStats, StreamEvent,
+};
+use crate::util::Rng;
+
+/// Requests per scenario.
+const N_REQ: usize = 6;
+/// Tokens each request generates.
+const GEN_LEN: usize = 10;
+/// Engine seed shared by the reference and scenario runs (request
+/// streams are forked from it per request-seed tag).
+const ENGINE_SEED: u64 = 5;
+/// Model weight seed.
+const MODEL_SEED: u64 = 42;
+/// Paged-KV block granularity for both runs.
+const BLOCK_TOKENS: usize = 8;
+/// Prompt token planted to make [`PoisonBackend`] fail a step. Outside
+/// the `% 250` range normal prompts draw from, inside the tiny model's
+/// 256-token vocab — so the reference backend serves it fine.
+const POISON_TOKEN: u32 = 251;
+/// Position the poison token is planted at. Every prompt in the matrix
+/// is ≥ 16 tokens and generation starts at the prompt's end, so
+/// position 5 is a prefill-only position for *all* requests: the
+/// backend can never see a *generated* token there, which is what makes
+/// gating the fault on `(token, pos)` collision-free even if the model
+/// happens to sample token 251 during decode.
+const POISON_POS: usize = 5;
+/// Cancel-storm targets cancel once their stream reaches this length.
+const CANCEL_AT: usize = 3;
+/// Requests the cancel storm targets.
+const STORM_TARGETS: [usize; 3] = [1, 3, 5];
+/// Requests whose prompts carry the poison token under
+/// `Fault::BackendError`.
+const POISONED: [usize; 2] = [2, 4];
+
+// ───────────────────────── poison backend ─────────────────────────
+
+/// Backend wrapper that fails `step` whenever it is fed `poison` at
+/// position `POISON_POS` — deterministic mid-prefill backend errors
+/// for `Fault::BackendError`. With `poison` outside the prompt alphabet
+/// (e.g. `u32::MAX`) it is a transparent pass-through.
+pub struct PoisonBackend<B: Backend> {
+    inner: B,
+    poison: u32,
+}
+
+impl<B: Backend> PoisonBackend<B> {
+    pub fn new(inner: B, poison: u32) -> Self {
+        PoisonBackend { inner, poison }
+    }
+
+    /// Pass-through: never fails.
+    pub fn benign(inner: B) -> Self {
+        PoisonBackend { inner, poison: u32::MAX }
+    }
+}
+
+impl<B: Backend> Backend for PoisonBackend<B> {
+    fn config(&self) -> &ModelConfig {
+        self.inner.config()
+    }
+
+    fn step(
+        &self,
+        token: u32,
+        pos: usize,
+        cache: &mut KvCache,
+        select: Option<&mut SelectFn>,
+    ) -> Result<StepOut> {
+        if token == self.poison && pos == POISON_POS {
+            anyhow::bail!("injected fault: poison token {token} at pos {pos}");
+        }
+        self.inner.step(token, pos, cache, select)
+    }
+}
+
+// ───────────────────────── workload build ─────────────────────────
+
+/// How one request ended.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Finished; carries the full stream.
+    Completed(Vec<u32>),
+    /// Cancelled mid-stream; carries the prefix streamed before.
+    Cancelled(Vec<u32>),
+    /// Terminated by the engine (backend fault); carries the prefix.
+    Failed(Vec<u32>),
+    /// Load-shed / drain rejection before any streaming (router only).
+    Shed,
+}
+
+/// A scenario ground to concrete requests.
+struct Workload {
+    prompts: Vec<Vec<u32>>,
+    arrivals: Vec<f64>,
+    opts: Vec<GenOptions>,
+    /// Engine-wide dtype of the *scenario* pool (reference always f32).
+    pool_dtype: KvDtype,
+    storm: BTreeSet<usize>,
+    poisoned: BTreeSet<usize>,
+}
+
+fn prompt_tokens(scenario: &Scenario, i: usize) -> Vec<u32> {
+    let unique = |i: usize, len: usize| -> Vec<u32> {
+        (0..len as u32).map(|j| (j * 131 + i as u32 * 97 + 13) % 250).collect()
+    };
+    match scenario.prompt {
+        PromptShape::Unique => unique(i, 20 + 3 * i),
+        PromptShape::SharedPrefix => {
+            // Two full blocks of shared prefix + a per-request suffix.
+            let mut p: Vec<u32> = (0..(2 * BLOCK_TOKENS) as u32).map(|j| (j * 37 + 5) % 250).collect();
+            p.extend((0..(6 + i) as u32).map(|j| (j * 53 + i as u32 * 19 + 2) % 250));
+            p
+        }
+        PromptShape::Coherent => {
+            // Identical rows except the final token: maximal radix
+            // collisions and copy-on-write promotions.
+            let mut p: Vec<u32> = (0..23u32).map(|j| (j * 41 + 7) % 250).collect();
+            p.push(i as u32 % 250);
+            p
+        }
+    }
+}
+
+fn build_workload(scenario: &Scenario, base_seed: u64) -> Workload {
+    let seed = scenario.seed(base_seed);
+    let mut prompts: Vec<Vec<u32>> = (0..N_REQ).map(|i| prompt_tokens(scenario, i)).collect();
+    let poisoned: BTreeSet<usize> = if scenario.fault == Fault::BackendError {
+        for &i in &POISONED {
+            // Poison rides inside the prompt's first block: prefill
+            // hits it mid-chunk, and the (token, pos) pair can never
+            // collide with a decode step (see POISON_POS).
+            prompts[i][POISON_POS] = POISON_TOKEN;
+        }
+        POISONED.iter().copied().collect()
+    } else {
+        BTreeSet::new()
+    };
+    let arrivals = match scenario.arrival {
+        Arrival::Batch => batch_arrivals(N_REQ),
+        Arrival::Poisson => poisson_arrivals(150.0, N_REQ, seed ^ 0xA1),
+        Arrival::Burst => bursty_arrivals(150.0, N_REQ, 0.008, N_REQ / 2, seed ^ 0xB2),
+    };
+    let (eps, delta) = (0.25, 0.2);
+    let opt_for = |i: usize| -> GenOptions {
+        let base = GenOptions::new(GEN_LEN).seed(1000 + i as u64);
+        match scenario.options {
+            OptionsAxis::Dense => base.dense(),
+            OptionsAxis::Verified => base.verified(eps, delta),
+            OptionsAxis::VerifiedReuse => base.verified_reuse(eps, delta),
+            OptionsAxis::Int8 => base.kv_dtype(KvDtype::Int8),
+            OptionsAxis::Int4 => base.kv_dtype(KvDtype::Int4),
+            OptionsAxis::Mixed => match i % 3 {
+                0 => base, // inherit the pool's f32
+                1 => base.kv_dtype(KvDtype::Int8),
+                _ => base.kv_dtype(KvDtype::Int4),
+            },
+        }
+    };
+    let pool_dtype = match scenario.options {
+        OptionsAxis::Int8 => KvDtype::Int8,
+        OptionsAxis::Int4 => KvDtype::Int4,
+        _ => KvDtype::F32,
+    };
+    let storm = if scenario.fault == Fault::CancelStorm {
+        STORM_TARGETS.iter().copied().collect()
+    } else {
+        BTreeSet::new()
+    };
+    Workload {
+        prompts,
+        arrivals,
+        opts: (0..N_REQ).map(opt_for).collect(),
+        pool_dtype,
+        storm,
+        poisoned,
+    }
+}
+
+/// Pool capacity in bytes for `blocks` blocks at the scenario's pool
+/// dtype (a quantized pool packs more tokens into the same bytes, so
+/// over-commitment is defined in blocks, not bytes).
+fn cap_bytes(mcfg: &ModelConfig, dtype: KvDtype, blocks: usize) -> usize {
+    blocks * BLOCK_TOKENS * dtype.kv_bytes_per_token(mcfg)
+}
+
+/// Over-commitment level in blocks: `ForcePreempt` squeezes to the
+/// point where three active requests cannot coexist (preemption is
+/// guaranteed); plain over-commitment leaves room to sometimes squeak
+/// through.
+fn capacity_blocks(scenario: &Scenario) -> Option<usize> {
+    match (scenario.resources, scenario.fault) {
+        (Resources::Ample, _) => None,
+        (_, Fault::ForcePreempt) => Some(8),
+        (Resources::OverCommitted | Resources::SpillOn, _) => Some(12),
+    }
+}
+
+static SPILL_TAG: AtomicU64 = AtomicU64::new(0);
+
+fn fresh_spill_path(scenario: &Scenario) -> PathBuf {
+    let tag = SPILL_TAG.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "vattn_scenario_{}_{:x}_{}.spill",
+        std::process::id(),
+        scenario.code(),
+        tag
+    ))
+}
+
+fn cleanup_spill(path: &Path, shards: usize) {
+    let base = path.display().to_string();
+    let _ = std::fs::remove_file(path);
+    let _ = std::fs::remove_file(format!("{base}.prefix"));
+    for i in 0..shards {
+        let _ = std::fs::remove_file(format!("{base}.shard{i}"));
+        let _ = std::fs::remove_file(format!("{base}.shard{i}.prefix"));
+    }
+}
+
+fn scenario_engine_config(scenario: &Scenario, w: &Workload, spill: Option<&Path>) -> EngineConfig {
+    let mut b = EngineConfig::builder()
+        .max_batch(3)
+        .seed(ENGINE_SEED)
+        .workers(if scenario.topology == Topology::Direct { 4 } else { 2 })
+        .prefill_chunk(BLOCK_TOKENS)
+        .block_tokens(BLOCK_TOKENS)
+        .kv_dtype(w.pool_dtype)
+        .prefix_cache(true)
+        // Router shards own wall-clock tick threads; the virtual clock
+        // is for the deterministic direct loop.
+        .virtual_clock(scenario.topology == Topology::Direct);
+    if let Some(blocks) = capacity_blocks(scenario) {
+        b = b.kv_capacity_bytes(cap_bytes(&ModelConfig::tiny(), w.pool_dtype, blocks));
+    }
+    if let Some(p) = spill {
+        b = b.kv_spill(p);
+    }
+    b.build()
+}
+
+fn reference_engine_config() -> EngineConfig {
+    EngineConfig::builder()
+        .max_batch(N_REQ)
+        .seed(ENGINE_SEED)
+        .workers(1)
+        .prefill_chunk(BLOCK_TOKENS)
+        .block_tokens(BLOCK_TOKENS)
+        .virtual_clock(true)
+        .build()
+}
+
+// ───────────────────────── runners ─────────────────────────
+
+struct RunOut {
+    outcomes: BTreeMap<usize, Outcome>,
+    stats: SessionStats,
+}
+
+/// Drive one `Session::tick` loop to quiescence, applying the fault
+/// plan, asserting gapless streams / replay-consistent `Finished`
+/// records, and checking end-of-run quiescence.
+fn run_direct(w: &Workload, cfg: EngineConfig, poison: u32) -> Result<RunOut, String> {
+    let backend = PoisonBackend::new(Model::new(ModelConfig::tiny(), MODEL_SEED), poison);
+    let spill_on = cfg.kv_spill.is_some();
+    let mut session = Session::new(backend, cfg);
+    let mut ids = Vec::with_capacity(N_REQ);
+    for i in 0..N_REQ {
+        ids.push(session.submit(
+            crate::server::SubmitRequest::new(w.prompts[i].clone())
+                .arrival(w.arrivals[i])
+                .options(w.opts[i].clone()),
+        ));
+    }
+    let index_of: BTreeMap<_, _> = ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+
+    let mut streams: Vec<Vec<u32>> = vec![Vec::new(); N_REQ];
+    let mut outcomes: BTreeMap<usize, Outcome> = BTreeMap::new();
+    let mut rounds = 0usize;
+    while !session.is_idle() {
+        rounds += 1;
+        if rounds > 100_000 {
+            return Err("direct drive loop did not converge in 100k ticks".into());
+        }
+        let events = session.tick().map_err(|e| format!("tick failed: {e}"))?;
+        for ev in events {
+            match ev {
+                Event::Token { id, token, step, .. } => {
+                    let i = index_of[&id];
+                    if streams[i].len() != step {
+                        return Err(format!(
+                            "request {i}: token step {step} after {} streamed (gap)",
+                            streams[i].len()
+                        ));
+                    }
+                    streams[i].push(token);
+                }
+                Event::Finished { id, result, .. } => {
+                    let i = index_of[&id];
+                    if result.tokens != streams[i] {
+                        return Err(format!(
+                            "request {i}: Finished record diverged from its Token stream"
+                        ));
+                    }
+                    outcomes.insert(i, Outcome::Completed(streams[i].clone()));
+                }
+                Event::Rejected { id, reason, .. } => {
+                    let i = index_of[&id];
+                    if !w.poisoned.contains(&i) {
+                        return Err(format!("request {i} rejected without a fault plan: {reason}"));
+                    }
+                    outcomes.insert(i, Outcome::Failed(streams[i].clone()));
+                }
+                Event::Admitted { .. } | Event::Preempted { .. } => {}
+            }
+        }
+        // Cancel storm: fire once a target's stream reaches CANCEL_AT.
+        for &i in &w.storm {
+            if !outcomes.contains_key(&i)
+                && streams[i].len() >= CANCEL_AT
+                && session.cancel(ids[i]).is_ok()
+            {
+                outcomes.insert(i, Outcome::Cancelled(streams[i].clone()));
+            }
+        }
+    }
+    session.flush_prefix_cache().map_err(|e| format!("flush_prefix_cache: {e}"))?;
+    if !session.kv_quiescent() {
+        return Err(format!(
+            "pool/spill not quiescent after drain+flush: {} blocks in use, {:?} spill slots",
+            session.kv_blocks_in_use(),
+            session.spill_live_blocks()
+        ));
+    }
+    if session.prefix_blocks_held() != 0 {
+        return Err("prefix cache still holds blocks after flush".into());
+    }
+    let stats = session.stats();
+    check_replay_consistency(&stats, spill_on)?;
+    Ok(RunOut { outcomes, stats })
+}
+
+/// Drive the in-process sharded router: submit in id order (arrival
+/// gaps realized as wall sleeps), collect every request's stream on its
+/// own thread, apply the cancel storm from the collectors, then drain
+/// with `shutdown` and assert per-shard quiescence.
+fn run_router(
+    w: &Workload,
+    cfg: EngineConfig,
+    shards: usize,
+    poison: u32,
+) -> Result<RunOut, String> {
+    let backend = Arc::new(PoisonBackend::new(Model::new(ModelConfig::tiny(), MODEL_SEED), poison));
+    let spill_on = cfg.kv_spill.is_some();
+    let router = Router::new(backend, RouterConfig::new(cfg).shards(shards).queue_depth(64));
+
+    let mut outcomes: BTreeMap<usize, Outcome> = BTreeMap::new();
+    let results: Vec<Result<(usize, Outcome), String>> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(N_REQ);
+        let started = std::time::Instant::now();
+        for i in 0..N_REQ {
+            // Realize the arrival process as wall-clock submit gaps
+            // (the router has no arrival-time API; ordering is what
+            // the oracle relies on, not exact spacing).
+            let gap = w.arrivals[i] - started.elapsed().as_secs_f64();
+            if gap > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(gap.min(0.05)));
+            }
+            let (gid, rx) = router.submit(w.prompts[i].clone(), w.opts[i].clone());
+            let storm_target = w.storm.contains(&i);
+            let router = &router;
+            handles.push(scope.spawn(move || -> Result<(usize, Outcome), String> {
+                let mut stream: Vec<u32> = Vec::new();
+                let mut cancel_sent = false;
+                loop {
+                    let ev = rx
+                        .recv_timeout(std::time::Duration::from_secs(30))
+                        .map_err(|_| format!("request {i}: stream stalled or disconnected"))?;
+                    match ev {
+                        StreamEvent::Accepted { .. } => {}
+                        StreamEvent::Token { step, token, .. } => {
+                            if stream.len() != step {
+                                return Err(format!(
+                                    "request {i}: token step {step} after {} streamed (gap)",
+                                    stream.len()
+                                ));
+                            }
+                            stream.push(token);
+                            if storm_target && !cancel_sent && stream.len() >= CANCEL_AT {
+                                cancel_sent = true;
+                                router.cancel(gid);
+                            }
+                        }
+                        StreamEvent::Finished { result, .. } => {
+                            if result.tokens != stream {
+                                return Err(format!(
+                                    "request {i}: Finished record diverged from its Token stream"
+                                ));
+                            }
+                            return Ok((i, Outcome::Completed(stream)));
+                        }
+                        StreamEvent::Cancelled { .. } => return Ok((i, Outcome::Cancelled(stream))),
+                        StreamEvent::Failed { .. } => return Ok((i, Outcome::Failed(stream))),
+                        StreamEvent::Rejected { error, .. } => {
+                            let status = error.kind.http_status();
+                            if status == 429 || status == 503 {
+                                return Ok((i, Outcome::Shed));
+                            }
+                            return Err(format!(
+                                "request {i}: rejected with non-shed error {status}: {}",
+                                error.message
+                            ));
+                        }
+                    }
+                }
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("collector panicked")).collect()
+    });
+    for r in results {
+        let (i, outcome) = r?;
+        outcomes.insert(i, outcome);
+    }
+
+    let shard_stats = router.shutdown();
+    if shard_stats.len() != shards {
+        return Err(format!("expected {shards} shard reports, got {}", shard_stats.len()));
+    }
+    let mut merged = SessionStats::default();
+    for s in &shard_stats {
+        if s.outstanding != 0 || s.waiting != 0 || s.active != 0 {
+            return Err(format!("shard {} drained with work outstanding", s.shard));
+        }
+        if s.kv_blocks_in_use != 0 || s.prefix_blocks_held != 0 {
+            return Err(format!(
+                "shard {} leaked blocks after drain: {} in use, {} prefix-held",
+                s.shard, s.kv_blocks_in_use, s.prefix_blocks_held
+            ));
+        }
+        if s.spill_live_blocks.unwrap_or(0) != 0 {
+            return Err(format!(
+                "shard {} leaked {} spill slots after drain",
+                s.shard,
+                s.spill_live_blocks.unwrap_or(0)
+            ));
+        }
+        check_replay_consistency(&s.session, spill_on)
+            .map_err(|e| format!("shard {}: {e}", s.shard))?;
+        merged.preemptions += s.session.preemptions;
+        merged.preemption_replays += s.session.preemption_replays;
+        merged.prefix_hit_blocks += s.session.prefix_hit_blocks;
+        merged.spill_out_ops += s.session.spill_out_ops;
+        merged.swap_in_ops += s.session.swap_in_ops;
+    }
+    Ok(RunOut { outcomes, stats: merged })
+}
+
+/// Spill mode never replays (preemption is swap-out/swap-in); replay
+/// mode replays exactly once per preemption.
+fn check_replay_consistency(stats: &SessionStats, spill_on: bool) -> Result<(), String> {
+    if spill_on {
+        if stats.preemption_replays != 0 {
+            return Err(format!(
+                "{} compute replays with a spill store configured",
+                stats.preemption_replays
+            ));
+        }
+    } else if stats.preemption_replays != stats.preemptions {
+        return Err(format!(
+            "replays ({}) != preemptions ({}) without a spill store",
+            stats.preemption_replays, stats.preemptions
+        ));
+    }
+    Ok(())
+}
+
+// ───────────────────────── (ε, δ) coverage ─────────────────────────
+
+/// Policy-level empirical coverage re-proof (the `budget_coverage.rs`
+/// recipe at fuzz-matrix scale): over seeded trials, the Hoeffding
+/// denominator budget's sample must violate the ε bound in ≤ ~δ of
+/// trials. Returns the violation rate.
+pub fn empirical_coverage(eps: f64, delta: f64, trials: usize, seed: u64) -> f64 {
+    use crate::attention::{exact_num_den, weighted_num_den, Selection};
+    use crate::budget::{self, Bound, Verify};
+    use crate::policies::sink_window_indices;
+    use crate::tensor::{dot, Mat};
+
+    let (n, d) = (512usize, 16usize);
+    let mut meta = Rng::new(seed);
+    let mut violations = 0usize;
+    for t in 0..trials {
+        let mut rng = meta.fork(t as u64);
+        let k = Mat::randn(n, d, 1.0, &mut rng);
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+        let q: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 1.0) / (d as f32).sqrt()).collect();
+        let i_f = sink_window_indices(n, 16, 16);
+        let m_ref = i_f.iter().map(|&i| dot(k.row(i), &q)).fold(f32::NEG_INFINITY, f32::max);
+        let base = budget::draw_base_sample(n, &i_f, 0.1, &mut rng);
+        let stats = budget::estimate_stats(&k, &v, &q, &i_f, &base, m_ref);
+        let b = budget::budget_for(&stats, Verify::Denominator, eps, delta, Bound::Hoeffding)
+            .max(base.len())
+            .min(stats.n_s);
+        let dyn_idx = rng.sample_excluding(n, b, &i_f);
+        let sel = Selection::compose(i_f, dyn_idx, b as f32 / stats.n_s as f32);
+        let (_, d_hat) = weighted_num_den(&k, &v, &q, &sel, m_ref);
+        let (_, d_exact) = exact_num_den(&k, &v, &q, m_ref);
+        if ((d_hat - d_exact) / d_exact).abs() > eps {
+            violations += 1;
+        }
+    }
+    violations as f64 / trials as f64
+}
+
+// ───────────────────────── the oracle ─────────────────────────
+
+/// One scenario's oracle verdict.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    pub scenario: Scenario,
+    pub requests: usize,
+    pub completed: usize,
+    pub cancelled: usize,
+    pub failed: usize,
+    pub shed: usize,
+    pub preemptions: u64,
+    /// Present for verified scenarios: empirical (ε, δ) violation rate.
+    pub coverage_violation_rate: Option<f64>,
+}
+
+/// Run `scenario` through the differential oracle. `Ok` carries the
+/// outcome tallies; `Err` is the first property violation, prefixed
+/// with the scenario label.
+pub fn run_scenario(scenario: Scenario, base_seed: u64) -> Result<ScenarioReport, String> {
+    run_scenario_inner(scenario, base_seed)
+        .map_err(|e| format!("[{}] {e}", scenario.label()))
+}
+
+fn run_scenario_inner(scenario: Scenario, base_seed: u64) -> Result<ScenarioReport, String> {
+    let w = build_workload(&scenario, base_seed);
+
+    // Reference: benign backend, batch arrivals, no faults, ample f32
+    // pool, single worker, direct loop. Same prompts, same options.
+    let ref_arrivals = batch_arrivals(N_REQ);
+    let ref_run = {
+        let clean = Workload {
+            prompts: w.prompts.clone(),
+            arrivals: ref_arrivals.clone(),
+            opts: w.opts.clone(),
+            pool_dtype: KvDtype::F32,
+            storm: BTreeSet::new(),
+            poisoned: BTreeSet::new(),
+        };
+        run_direct(&clean, reference_engine_config(), u32::MAX)
+            .map_err(|e| format!("reference run: {e}"))?
+    };
+    for i in 0..N_REQ {
+        match ref_run.outcomes.get(&i) {
+            Some(Outcome::Completed(s)) if s.len() == GEN_LEN => {}
+            other => return Err(format!("reference request {i} did not complete: {other:?}")),
+        }
+    }
+
+    let poison = if scenario.fault == Fault::BackendError { POISON_TOKEN } else { u32::MAX };
+    let needs_spill = scenario.resources == Resources::SpillOn;
+    let shards = match scenario.topology {
+        Topology::Direct => 0,
+        Topology::Router { shards } => shards,
+    };
+
+    let run_once = || -> Result<RunOut, String> {
+        let spill_path = needs_spill.then(|| fresh_spill_path(&scenario));
+        let cfg = scenario_engine_config(&scenario, &w, spill_path.as_deref());
+        let out = match scenario.topology {
+            Topology::Direct => run_direct(&w, cfg, poison),
+            Topology::Router { shards } => run_router(&w, cfg, shards, poison),
+        };
+        if let Some(p) = spill_path {
+            cleanup_spill(&p, shards);
+        }
+        out
+    };
+
+    let run = run_once()?;
+    compare_to_reference(&w, &run, &ref_run)?;
+
+    // One over-committed session serving all six requests cannot avoid
+    // preempting; router shards may legitimately serialize instead
+    // (affinity can isolate requests), so the count assert is
+    // direct-only — shard runs still check replay consistency.
+    if scenario.fault == Fault::ForcePreempt
+        && scenario.topology == Topology::Direct
+        && run.stats.preemptions == 0
+    {
+        return Err("forced-preemption scenario ran without a single preemption".into());
+    }
+    if scenario.topology == Topology::Direct {
+        // Re-run: with the virtual clock, the whole schedule — not just
+        // the streams — must reproduce bit-identically.
+        let again = run_once()?;
+        if again.outcomes != run.outcomes {
+            return Err("direct scenario re-run changed request outcomes".into());
+        }
+        if (again.stats.preemptions, again.stats.preemption_replays)
+            != (run.stats.preemptions, run.stats.preemption_replays)
+        {
+            return Err(format!(
+                "direct scenario re-run changed scheduling counters: {:?} vs {:?}",
+                (again.stats.preemptions, again.stats.preemption_replays),
+                (run.stats.preemptions, run.stats.preemption_replays)
+            ));
+        }
+    }
+
+    let coverage = matches!(scenario.options, OptionsAxis::Verified | OptionsAxis::VerifiedReuse)
+        .then(|| empirical_coverage(0.2, 0.15, 12, scenario.seed(base_seed) ^ 0xC07E4A6E));
+
+    let mut report = ScenarioReport {
+        scenario,
+        requests: N_REQ,
+        completed: 0,
+        cancelled: 0,
+        failed: 0,
+        shed: 0,
+        preemptions: run.stats.preemptions,
+        coverage_violation_rate: coverage,
+    };
+    for outcome in run.outcomes.values() {
+        match outcome {
+            Outcome::Completed(_) => report.completed += 1,
+            Outcome::Cancelled(_) => report.cancelled += 1,
+            Outcome::Failed(_) => report.failed += 1,
+            Outcome::Shed => report.shed += 1,
+        }
+    }
+    if let Some(rate) = report.coverage_violation_rate {
+        if rate > 0.15 + 0.1 {
+            return Err(format!("(ε,δ) coverage violated: empirical rate {rate} > δ + slack"));
+        }
+    }
+    Ok(report)
+}
+
+/// The differential heart: every scenario outcome against the
+/// reference stream for the same request index.
+fn compare_to_reference(w: &Workload, run: &RunOut, reference: &RunOut) -> Result<(), String> {
+    for i in 0..N_REQ {
+        let ref_stream = match &reference.outcomes[&i] {
+            Outcome::Completed(s) => s,
+            _ => unreachable!("reference outcomes were checked complete"),
+        };
+        let outcome = run
+            .outcomes
+            .get(&i)
+            .ok_or_else(|| format!("request {i} has no terminal outcome"))?;
+        match outcome {
+            Outcome::Completed(s) => {
+                if s != ref_stream {
+                    return Err(format!(
+                        "request {i}: stream diverged from reference\n  got {s:?}\n  ref {ref_stream:?}"
+                    ));
+                }
+            }
+            Outcome::Cancelled(s) => {
+                if !w.storm.contains(&i) {
+                    return Err(format!("request {i} cancelled outside the storm set"));
+                }
+                if !ref_stream.starts_with(s) {
+                    return Err(format!("request {i}: cancelled stream is not a reference prefix"));
+                }
+            }
+            Outcome::Failed(s) => {
+                if !w.poisoned.contains(&i) {
+                    return Err(format!("request {i} failed outside the poison set"));
+                }
+                if !ref_stream.starts_with(s) {
+                    return Err(format!("request {i}: failed stream is not a reference prefix"));
+                }
+            }
+            Outcome::Shed => {
+                return Err(format!("request {i} shed under a drain-free scenario"));
+            }
+        }
+    }
+    Ok(())
+}

@@ -15,8 +15,14 @@
 //!   sampling wins.
 
 pub mod distributions;
+pub mod harness;
+pub mod scenario;
 pub mod tasks;
 pub mod traces;
 
-pub use distributions::{synthesize_head, HeadSample, ScoreProfile};
+pub use distributions::{
+    batch_arrivals, bursty_arrivals, poisson_arrivals, synthesize_head, HeadSample, ScoreProfile,
+};
+pub use harness::{run_scenario, PoisonBackend, ScenarioReport};
+pub use scenario::{axes_covered, matrix, sample, Scenario};
 pub use tasks::{Task, TaskInstance, TaskKind};

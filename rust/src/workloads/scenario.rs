@@ -1,0 +1,646 @@
+//! Scenario-generator DSL: serving scenarios as enumerable data.
+//!
+//! Borrowed from ruler's `enumo` workload compositors (Set / Append /
+//! Cross / Plug / Filter — SNIPPETS.md Snippet 2), specialized from
+//! strings-with-holes to typed serving-scenario templates: a
+//! [`Template`] is a scenario with a hole (`None`) per unfilled axis,
+//! and a [`Gen`] expression composes sets of templates into the cross
+//! products the fuzz matrix sweeps. Everything here is pure data — no
+//! wall clock, no global RNG. Randomness enters only through explicit
+//! u64 seeds ([`Scenario::seed`], [`sample`]), so the same matrix
+//! enumerates bit-identically on every platform and run.
+//!
+//! The six axes (ROADMAP item 5):
+//!
+//! | axis        | values                                                     |
+//! |-------------|------------------------------------------------------------|
+//! | arrival     | batch (t=0) / Poisson / bursty spike                       |
+//! | prompt      | unique / shared-prefix / adversarially-coherent            |
+//! | options     | dense / verified / verified-reuse / int8 / int4 / mixed    |
+//! | resources   | ample pool / over-committed pool / over-committed + spill  |
+//! | fault       | none / cancel storm / backend step errors / forced preempt |
+//! | topology    | direct `Session::tick` / router at shards {1, 4}           |
+//!
+//! `workloads::harness` turns a [`Scenario`] into a concrete workload
+//! and runs it through the differential oracle; this module only
+//! decides *what* to run.
+
+use crate::util::Rng;
+
+// ───────────────────────────── axes ─────────────────────────────
+
+/// When requests become visible to the scheduler.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Arrival {
+    /// Closed loop: everything at t = 0.
+    Batch,
+    /// Open loop: Poisson arrivals (seeded, virtual-clock replayed).
+    Poisson,
+    /// Poisson background plus a thundering-herd spike.
+    Burst,
+}
+
+/// How prompts relate to each other across the batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PromptShape {
+    /// Pairwise-unrelated prompts: no prefix sharing possible.
+    Unique,
+    /// A common prefix spanning whole blocks + per-request suffixes:
+    /// the prefix cache's intended diet.
+    SharedPrefix,
+    /// Adversarially coherent: prompts identical except the final
+    /// token, maximizing radix collisions and copy-on-write promotions.
+    Coherent,
+}
+
+/// Per-request `GenOptions` the scenario assigns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OptionsAxis {
+    Dense,
+    /// Verified sparse attention at a per-request (ε, δ) contract.
+    Verified,
+    /// Verified with cross-step heavy-hitter reuse.
+    VerifiedReuse,
+    /// Engine-wide int8 KV (pool sized at int8).
+    Int8,
+    /// Engine-wide bit-packed int4 KV.
+    Int4,
+    /// f32 pool with per-request narrower dtype overrides cycling
+    /// f32 / int8 / int4 across the batch.
+    Mixed,
+}
+
+/// KV memory regime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Resources {
+    /// Unbounded pool: no preemption possible.
+    Ample,
+    /// Pool capped below the batch's worst case: demand paging must
+    /// preempt (deterministic replay path).
+    OverCommitted,
+    /// Same cap with a file-backed cold tier: preemption is swap-out /
+    /// swap-in, never replay.
+    SpillOn,
+}
+
+/// Injected failure mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Fault {
+    None,
+    /// Cancel a fixed subset of requests mid-stream.
+    CancelStorm,
+    /// Poisoned prompt tokens make the backend error inside `step` for
+    /// a fixed subset of requests.
+    BackendError,
+    /// Pool capped so tightly that LIFO preemption is guaranteed.
+    ForcePreempt,
+}
+
+/// Where the requests are served.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Topology {
+    /// One `Session`, driven by a direct tick loop.
+    Direct,
+    /// The sharded router (in-process, own tick threads per shard).
+    Router { shards: usize },
+}
+
+/// Axis selector, for [`Gen::Plug`] and hole inspection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Axis {
+    Arrival,
+    Prompt,
+    Options,
+    Resources,
+    Fault,
+    Topology,
+}
+
+pub const AXES: [Axis; 6] =
+    [Axis::Arrival, Axis::Prompt, Axis::Options, Axis::Resources, Axis::Fault, Axis::Topology];
+
+// ─────────────────────── templates & scenarios ───────────────────────
+
+/// A scenario with holes: `None` axes are unfilled. The DSL composes
+/// templates; a fully-ground template becomes a [`Scenario`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Template {
+    pub arrival: Option<Arrival>,
+    pub prompt: Option<PromptShape>,
+    pub options: Option<OptionsAxis>,
+    pub resources: Option<Resources>,
+    pub fault: Option<Fault>,
+    pub topology: Option<Topology>,
+}
+
+impl Template {
+    pub fn new() -> Template {
+        Template::default()
+    }
+
+    pub fn arrival(mut self, v: Arrival) -> Self {
+        self.arrival = Some(v);
+        self
+    }
+
+    pub fn prompt(mut self, v: PromptShape) -> Self {
+        self.prompt = Some(v);
+        self
+    }
+
+    pub fn options(mut self, v: OptionsAxis) -> Self {
+        self.options = Some(v);
+        self
+    }
+
+    pub fn resources(mut self, v: Resources) -> Self {
+        self.resources = Some(v);
+        self
+    }
+
+    pub fn fault(mut self, v: Fault) -> Self {
+        self.fault = Some(v);
+        self
+    }
+
+    pub fn topology(mut self, v: Topology) -> Self {
+        self.topology = Some(v);
+        self
+    }
+
+    /// True when `axis` is unfilled.
+    pub fn has_hole(&self, axis: Axis) -> bool {
+        match axis {
+            Axis::Arrival => self.arrival.is_none(),
+            Axis::Prompt => self.prompt.is_none(),
+            Axis::Options => self.options.is_none(),
+            Axis::Resources => self.resources.is_none(),
+            Axis::Fault => self.fault.is_none(),
+            Axis::Topology => self.topology.is_none(),
+        }
+    }
+
+    /// Merge two templates whose filled axes are disjoint; `None` if
+    /// any axis is filled on both sides (even with equal values — the
+    /// compositors are responsible for keeping factors disjoint).
+    pub fn merge(&self, other: &Template) -> Option<Template> {
+        fn join<T: Copy>(a: Option<T>, b: Option<T>) -> Result<Option<T>, ()> {
+            match (a, b) {
+                (Some(_), Some(_)) => Err(()),
+                (Some(x), None) | (None, Some(x)) => Ok(Some(x)),
+                (None, None) => Ok(None),
+            }
+        }
+        Some(Template {
+            arrival: join(self.arrival, other.arrival).ok()?,
+            prompt: join(self.prompt, other.prompt).ok()?,
+            options: join(self.options, other.options).ok()?,
+            resources: join(self.resources, other.resources).ok()?,
+            fault: join(self.fault, other.fault).ok()?,
+            topology: join(self.topology, other.topology).ok()?,
+        })
+    }
+
+    /// Ground the template into a scenario; `None` while holes remain.
+    pub fn ground(&self) -> Option<Scenario> {
+        Some(Scenario {
+            arrival: self.arrival?,
+            prompt: self.prompt?,
+            options: self.options?,
+            resources: self.resources?,
+            fault: self.fault?,
+            topology: self.topology?,
+        })
+    }
+}
+
+/// One fully-ground serving scenario: a point in the 6-axis space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Scenario {
+    pub arrival: Arrival,
+    pub prompt: PromptShape,
+    pub options: OptionsAxis,
+    pub resources: Resources,
+    pub fault: Fault,
+    pub topology: Topology,
+}
+
+impl Scenario {
+    /// Small per-axis value codes (stable across enumeration order; do
+    /// not reorder existing variants without re-pinning seeds).
+    pub fn axis_codes(&self) -> [u64; 6] {
+        let arrival = match self.arrival {
+            Arrival::Batch => 0,
+            Arrival::Poisson => 1,
+            Arrival::Burst => 2,
+        };
+        let prompt = match self.prompt {
+            PromptShape::Unique => 0,
+            PromptShape::SharedPrefix => 1,
+            PromptShape::Coherent => 2,
+        };
+        let options = match self.options {
+            OptionsAxis::Dense => 0,
+            OptionsAxis::Verified => 1,
+            OptionsAxis::VerifiedReuse => 2,
+            OptionsAxis::Int8 => 3,
+            OptionsAxis::Int4 => 4,
+            OptionsAxis::Mixed => 5,
+        };
+        let resources = match self.resources {
+            Resources::Ample => 0,
+            Resources::OverCommitted => 1,
+            Resources::SpillOn => 2,
+        };
+        let fault = match self.fault {
+            Fault::None => 0,
+            Fault::CancelStorm => 1,
+            Fault::BackendError => 2,
+            Fault::ForcePreempt => 3,
+        };
+        let topology = match self.topology {
+            Topology::Direct => 0,
+            Topology::Router { shards } => 100 + shards as u64,
+        };
+        [arrival, prompt, options, resources, fault, topology]
+    }
+
+    /// Stable scalar code: a base-256 packing of the axis codes. Unique
+    /// per scenario, independent of enumeration order.
+    pub fn code(&self) -> u64 {
+        self.axis_codes().iter().fold(0u64, |acc, &c| (acc << 8) | (c & 0xFF))
+    }
+
+    /// Deterministic per-scenario seed: every random choice a scenario
+    /// makes (arrival gaps, storm targets, request seeds) forks from
+    /// this, so a scenario's workload is a pure function of
+    /// `(base_seed, scenario)`.
+    pub fn seed(&self, base_seed: u64) -> u64 {
+        base_seed ^ self.code().wrapping_mul(0x9E3779B97F4A7C15)
+    }
+
+    /// Compact display label, e.g. `poisson/shared/int8/spill/cancel/router4`.
+    pub fn label(&self) -> String {
+        let arrival = match self.arrival {
+            Arrival::Batch => "batch",
+            Arrival::Poisson => "poisson",
+            Arrival::Burst => "burst",
+        };
+        let prompt = match self.prompt {
+            PromptShape::Unique => "unique",
+            PromptShape::SharedPrefix => "shared",
+            PromptShape::Coherent => "coherent",
+        };
+        let options = match self.options {
+            OptionsAxis::Dense => "dense",
+            OptionsAxis::Verified => "verified",
+            OptionsAxis::VerifiedReuse => "reuse",
+            OptionsAxis::Int8 => "int8",
+            OptionsAxis::Int4 => "int4",
+            OptionsAxis::Mixed => "mixed",
+        };
+        let resources = match self.resources {
+            Resources::Ample => "ample",
+            Resources::OverCommitted => "overcommit",
+            Resources::SpillOn => "spill",
+        };
+        let fault = match self.fault {
+            Fault::None => "clean",
+            Fault::CancelStorm => "cancel",
+            Fault::BackendError => "bkerr",
+            Fault::ForcePreempt => "preempt",
+        };
+        let topology = match self.topology {
+            Topology::Direct => "direct".to_string(),
+            Topology::Router { shards } => format!("router{shards}"),
+        };
+        format!("{arrival}/{prompt}/{options}/{resources}/{fault}/{topology}")
+    }
+}
+
+// ───────────────────────── compositors ─────────────────────────
+
+/// Template predicates for [`Gen::Filter`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pred {
+    /// Drop combinations whose semantics are contradictory (currently:
+    /// forced preemption on an ample pool — nothing can force it).
+    Compatible,
+    /// Keep templates whose fault axis is filled with a real fault.
+    Faulty,
+    /// Keep templates with `Fault::None` (or the fault axis unfilled).
+    Clean,
+}
+
+impl Pred {
+    pub fn eval(&self, t: &Template) -> bool {
+        match self {
+            Pred::Compatible => {
+                !(t.fault == Some(Fault::ForcePreempt) && t.resources == Some(Resources::Ample))
+            }
+            Pred::Faulty => matches!(t.fault, Some(f) if f != Fault::None),
+            Pred::Clean => t.fault.is_none() || t.fault == Some(Fault::None),
+        }
+    }
+}
+
+/// The compositor language (ruler's enumo shapes, typed):
+///
+/// * `Set` — a literal list of templates;
+/// * `Append` — union of sub-generators;
+/// * `Cross` — pairwise [`Template::merge`] of two generators over
+///   disjoint axes (the workload cross product);
+/// * `Plug` — fill one named hole of every `base` template with each
+///   value the `fill` generator provides for that axis (templates
+///   without the hole pass through once, unchanged — enumo's
+///   "plug into terms containing the hole");
+/// * `Filter` — keep templates satisfying a [`Pred`].
+#[derive(Clone, Debug)]
+pub enum Gen {
+    Set(Vec<Template>),
+    Append(Vec<Gen>),
+    Cross(Box<Gen>, Box<Gen>),
+    Plug { base: Box<Gen>, hole: Axis, fill: Box<Gen> },
+    Filter(Box<Gen>, Pred),
+}
+
+impl Gen {
+    /// One-axis value set: the building block for `Cross`/`Plug`.
+    pub fn arrivals(vs: &[Arrival]) -> Gen {
+        Gen::Set(vs.iter().map(|&v| Template::new().arrival(v)).collect())
+    }
+
+    pub fn prompts(vs: &[PromptShape]) -> Gen {
+        Gen::Set(vs.iter().map(|&v| Template::new().prompt(v)).collect())
+    }
+
+    pub fn options(vs: &[OptionsAxis]) -> Gen {
+        Gen::Set(vs.iter().map(|&v| Template::new().options(v)).collect())
+    }
+
+    pub fn resources(vs: &[Resources]) -> Gen {
+        Gen::Set(vs.iter().map(|&v| Template::new().resources(v)).collect())
+    }
+
+    pub fn faults(vs: &[Fault]) -> Gen {
+        Gen::Set(vs.iter().map(|&v| Template::new().fault(v)).collect())
+    }
+
+    pub fn topologies(vs: &[Topology]) -> Gen {
+        Gen::Set(vs.iter().map(|&v| Template::new().topology(v)).collect())
+    }
+
+    pub fn cross(self, other: Gen) -> Gen {
+        Gen::Cross(Box::new(self), Box::new(other))
+    }
+
+    pub fn plug(self, hole: Axis, fill: Gen) -> Gen {
+        Gen::Plug { base: Box::new(self), hole, fill: Box::new(fill) }
+    }
+
+    pub fn filter(self, pred: Pred) -> Gen {
+        Gen::Filter(Box::new(self), pred)
+    }
+
+    /// Expand to the template list, in deterministic (structural) order.
+    pub fn expand(&self) -> Vec<Template> {
+        match self {
+            Gen::Set(ts) => ts.clone(),
+            Gen::Append(gs) => gs.iter().flat_map(|g| g.expand()).collect(),
+            Gen::Cross(a, b) => {
+                let (ta, tb) = (a.expand(), b.expand());
+                ta.iter().flat_map(|x| tb.iter().filter_map(move |y| x.merge(y))).collect()
+            }
+            Gen::Plug { base, hole, fill } => {
+                let fills: Vec<Template> = fill.expand();
+                base.expand()
+                    .into_iter()
+                    .flat_map(|t| -> Vec<Template> {
+                        if !t.has_hole(*hole) {
+                            return vec![t];
+                        }
+                        fills
+                            .iter()
+                            .filter(|f| !f.has_hole(*hole))
+                            .filter_map(|f| t.merge(f))
+                            .collect()
+                    })
+                    .collect()
+            }
+            Gen::Filter(g, pred) => g.expand().into_iter().filter(|t| pred.eval(t)).collect(),
+        }
+    }
+
+    /// Expand and ground; templates with remaining holes are an
+    /// authoring bug, so this panics on them.
+    pub fn scenarios(&self) -> Vec<Scenario> {
+        self.expand()
+            .iter()
+            .map(|t| t.ground().unwrap_or_else(|| panic!("template with holes: {t:?}")))
+            .collect()
+    }
+}
+
+// ───────────────────────── the matrix ─────────────────────────
+
+/// Topologies every scenario sweep covers.
+pub const TOPOLOGIES: [Topology; 3] =
+    [Topology::Direct, Topology::Router { shards: 1 }, Topology::Router { shards: 4 }];
+
+/// The canonical fuzz matrix, built *with* the DSL (so the compositors
+/// are load-bearing, not decorative):
+///
+/// * fault-free branch — the full 6-axis cross product with
+///   `Fault::None` plugged in: 3·3·6·3·3 = 486 scenarios;
+/// * faulty branch — every real fault crossed with a reduced slice of
+///   the other axes (batch arrivals, 2 prompt shapes, 3 option modes),
+///   filtered for compatibility: 3·2·3·3·3 − 18 = 144 scenarios.
+///
+/// Total: 630 distinct scenarios covering every value of every axis.
+pub fn matrix() -> Vec<Scenario> {
+    let all_arrivals = [Arrival::Batch, Arrival::Poisson, Arrival::Burst];
+    let all_prompts = [PromptShape::Unique, PromptShape::SharedPrefix, PromptShape::Coherent];
+    let all_options = [
+        OptionsAxis::Dense,
+        OptionsAxis::Verified,
+        OptionsAxis::VerifiedReuse,
+        OptionsAxis::Int8,
+        OptionsAxis::Int4,
+        OptionsAxis::Mixed,
+    ];
+    let all_resources = [Resources::Ample, Resources::OverCommitted, Resources::SpillOn];
+
+    let clean = Gen::arrivals(&all_arrivals)
+        .cross(Gen::prompts(&all_prompts))
+        .cross(Gen::options(&all_options))
+        .cross(Gen::resources(&all_resources))
+        .cross(Gen::topologies(&TOPOLOGIES))
+        .plug(Axis::Fault, Gen::faults(&[Fault::None]));
+
+    let faulty = Gen::faults(&[Fault::CancelStorm, Fault::BackendError, Fault::ForcePreempt])
+        .cross(Gen::arrivals(&[Arrival::Batch]))
+        .cross(Gen::prompts(&[PromptShape::Unique, PromptShape::SharedPrefix]))
+        .cross(Gen::options(&[OptionsAxis::Dense, OptionsAxis::Int8, OptionsAxis::Verified]))
+        .cross(Gen::resources(&all_resources))
+        .cross(Gen::topologies(&TOPOLOGIES))
+        .filter(Pred::Compatible);
+
+    Gen::Append(vec![clean, faulty]).scenarios()
+}
+
+/// Deterministic sample of `n` scenarios that still spans every axis
+/// value present in `all`: a seeded shuffle ordered so that scenarios
+/// contributing a not-yet-covered axis value are taken first, then the
+/// remainder fills up to `n`. Pure function of `(all, n, seed)` — the
+/// CI matrix is this with the pinned seed in `tests/scenario_matrix.rs`.
+pub fn sample(all: &[Scenario], n: usize, seed: u64) -> Vec<Scenario> {
+    use std::collections::HashSet;
+    let mut order: Vec<usize> = (0..all.len()).collect();
+    Rng::new(seed).shuffle(&mut order);
+
+    let mut covered: HashSet<(usize, u64)> = HashSet::new();
+    let mut picked: Vec<usize> = Vec::new();
+    let mut rest: Vec<usize> = Vec::new();
+    for &i in &order {
+        let codes = all[i].axis_codes();
+        let mut novel = false;
+        for (axis, &c) in codes.iter().enumerate() {
+            novel |= covered.insert((axis, c));
+        }
+        if novel {
+            picked.push(i);
+        } else {
+            rest.push(i);
+        }
+    }
+    picked.extend(rest);
+    picked.truncate(n.min(all.len()));
+    picked.into_iter().map(|i| all[i]).collect()
+}
+
+/// Count axes on which `scenarios` exercises ≥ 2 distinct values — the
+/// "spans all 6 axes" acceptance statistic.
+pub fn axes_covered(scenarios: &[Scenario]) -> usize {
+    use std::collections::HashSet;
+    let mut per_axis: [HashSet<u64>; 6] = Default::default();
+    for s in scenarios {
+        for (axis, &c) in s.axis_codes().iter().enumerate() {
+            per_axis[axis].insert(c);
+        }
+    }
+    per_axis.iter().filter(|vs| vs.len() >= 2).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn cross_is_a_cross_product() {
+        let g = Gen::arrivals(&[Arrival::Batch, Arrival::Poisson])
+            .cross(Gen::prompts(&[PromptShape::Unique, PromptShape::SharedPrefix]));
+        let ts = g.expand();
+        assert_eq!(ts.len(), 4);
+        let set: HashSet<_> = ts.iter().map(|t| (t.arrival.unwrap(), t.prompt.unwrap())).collect();
+        assert_eq!(set.len(), 4);
+    }
+
+    #[test]
+    fn merge_rejects_conflicts() {
+        let a = Template::new().arrival(Arrival::Batch);
+        let b = Template::new().arrival(Arrival::Poisson).prompt(PromptShape::Unique);
+        assert!(a.merge(&b).is_none(), "conflicting axis must not merge");
+        let c = Template::new().prompt(PromptShape::Coherent);
+        let m = a.merge(&c).unwrap();
+        assert_eq!(m.arrival, Some(Arrival::Batch));
+        assert_eq!(m.prompt, Some(PromptShape::Coherent));
+    }
+
+    #[test]
+    fn plug_fills_only_holes() {
+        let base = Gen::Set(vec![
+            Template::new().arrival(Arrival::Batch), // fault hole: plugged twice
+            Template::new().arrival(Arrival::Poisson).fault(Fault::None), // no hole: passes once
+        ]);
+        let g = base.plug(Axis::Fault, Gen::faults(&[Fault::CancelStorm, Fault::BackendError]));
+        let ts = g.expand();
+        assert_eq!(ts.len(), 3);
+        assert_eq!(ts.iter().filter(|t| t.arrival == Some(Arrival::Batch)).count(), 2);
+        assert!(ts.iter().any(|t| t.fault == Some(Fault::None)));
+    }
+
+    #[test]
+    fn filter_compatible_drops_forced_preempt_on_ample() {
+        let g = Gen::faults(&[Fault::ForcePreempt])
+            .cross(Gen::resources(&[Resources::Ample, Resources::OverCommitted]))
+            .filter(Pred::Compatible);
+        let ts = g.expand();
+        assert_eq!(ts.len(), 1);
+        assert_eq!(ts[0].resources, Some(Resources::OverCommitted));
+    }
+
+    #[test]
+    fn matrix_shape_and_coverage() {
+        let all = matrix();
+        assert_eq!(all.len(), 630, "486 clean + 144 faulty");
+        let set: HashSet<_> = all.iter().copied().collect();
+        assert_eq!(set.len(), all.len(), "matrix has duplicate scenarios");
+        assert_eq!(axes_covered(&all), 6);
+        // Every declared axis value appears somewhere.
+        let mut values: [HashSet<u64>; 6] = Default::default();
+        for s in &all {
+            for (axis, &c) in s.axis_codes().iter().enumerate() {
+                values[axis].insert(c);
+            }
+        }
+        assert_eq!(values.map(|v| v.len()), [3, 3, 6, 3, 4, 3]);
+        // The incompatible combo never appears.
+        assert!(!all
+            .iter()
+            .any(|s| s.fault == Fault::ForcePreempt && s.resources == Resources::Ample));
+    }
+
+    #[test]
+    fn codes_and_seeds_are_stable_and_distinct() {
+        let all = matrix();
+        let codes: HashSet<u64> = all.iter().map(|s| s.code()).collect();
+        assert_eq!(codes.len(), all.len(), "scenario codes collide");
+        let s = all[0];
+        assert_eq!(s.seed(7), s.seed(7));
+        assert_ne!(s.seed(7), s.seed(8));
+        assert_ne!(s.seed(7), all[1].seed(7));
+        // Pin one code so accidental variant reordering is caught.
+        let probe = Scenario {
+            arrival: Arrival::Poisson,
+            prompt: PromptShape::SharedPrefix,
+            options: OptionsAxis::Int8,
+            resources: Resources::SpillOn,
+            fault: Fault::None,
+            topology: Topology::Router { shards: 4 },
+        };
+        assert_eq!(probe.code(), 0x010103020068);
+        assert_eq!(probe.label(), "poisson/shared/int8/spill/clean/router4");
+    }
+
+    #[test]
+    fn sample_is_deterministic_and_spans_all_axes() {
+        let all = matrix();
+        let a = sample(&all, 44, 1234);
+        let b = sample(&all, 44, 1234);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 44);
+        let distinct: HashSet<_> = a.iter().copied().collect();
+        assert_eq!(distinct.len(), a.len(), "sample repeats a scenario");
+        assert_eq!(axes_covered(&a), 6, "sample must span all six axes");
+        // The coverage-first ordering guarantees every axis *value* too.
+        let mut values: [HashSet<u64>; 6] = Default::default();
+        for s in &a {
+            for (axis, &c) in s.axis_codes().iter().enumerate() {
+                values[axis].insert(c);
+            }
+        }
+        assert_eq!(values.map(|v| v.len()), [3, 3, 6, 3, 4, 3]);
+        assert_ne!(sample(&all, 44, 1234), sample(&all, 44, 99));
+    }
+}

@@ -346,6 +346,95 @@ fn wider_dtype_override_is_rejected_on_a_byte_capped_pool() {
 }
 
 #[test]
+fn mixed_dtype_batch_is_deterministic_and_accounts_bytes_per_dtype() {
+    // One session serving fp32, int8, and int4 requests concurrently
+    // (dtype cycles by submission index). Dtype is per-request cache
+    // state, so the mixed batch must (a) emit byte-identical streams at
+    // 1 and 4 workers, (b) reproduce each request's stream from an
+    // engine-wide run of its own dtype, and (c) charge each request its
+    // own row width — f32 4d, int8 d + 4, int4 ⌈d/2⌉ + 4 bytes per
+    // head-row — not a batch-blended rate.
+    let d = ModelConfig::tiny().d_head();
+    let prompts = shared_prefix_prompts(6, 20, 4);
+    let dtypes = [None, Some(KvDtype::Int8), Some(KvDtype::Int4)];
+    let gen = 6usize;
+    let opts_for = |i: usize| {
+        let o = GenOptions::new(gen).seed(500 + i as u64);
+        match dtypes[i % 3] {
+            Some(dt) => o.kv_dtype(dt),
+            None => o,
+        }
+    };
+    let run = |workers: usize| {
+        let mut s = Session::new(
+            Model::new(ModelConfig::tiny(), 42),
+            EngineConfig::builder().seed(1).workers(workers).build(),
+        );
+        let mut ids = Vec::new();
+        let mut streams: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+        let mut bytes: BTreeMap<u64, usize> = BTreeMap::new();
+        for (i, p) in prompts.iter().enumerate() {
+            let id = s.submit(SubmitRequest::new(p.clone()).options(opts_for(i)));
+            streams.insert(id, Vec::new());
+            ids.push(id);
+        }
+        while !s.is_idle() {
+            for ev in s.tick().expect("tick") {
+                match ev {
+                    Event::Token { id, token, step, .. } => {
+                        let st = streams.get_mut(&id).expect("token for known request");
+                        assert_eq!(st.len(), step, "streams must stay gapless");
+                        st.push(token);
+                    }
+                    Event::Finished { id, result, .. } => {
+                        assert_eq!(result.tokens, streams[&id]);
+                        bytes.insert(id, result.kv_bytes_written);
+                    }
+                    Event::Rejected { reason, .. } => panic!("unexpected rejection: {reason}"),
+                    _ => {}
+                }
+            }
+        }
+        ids.iter()
+            .map(|id| (streams[id].clone(), bytes[id]))
+            .collect::<Vec<(Vec<u32>, usize)>>()
+    };
+    let w1 = run(1);
+    let w4 = run(4);
+    assert_eq!(w1, w4, "mixed-dtype batch diverged across worker counts");
+    assert!(w1.iter().all(|(s, _)| s.len() == gen));
+
+    // (b) each stream matches the engine-wide run of its own dtype.
+    for (i, (stream, _)) in w1.iter().enumerate() {
+        let cfg = match dtypes[i % 3] {
+            Some(dt) => EngineConfig::builder().seed(1).kv_dtype(dt).build(),
+            None => EngineConfig::builder().seed(1).build(),
+        };
+        let (solo, _) = run_session(cfg, &prompts[i..i + 1], opts_for(i));
+        assert_eq!(
+            stream, &solo[0],
+            "request {i} diverged from its engine-wide dtype run in the mixed batch"
+        );
+    }
+
+    // (c) per-dtype write accounting: every request appends gen − 1
+    // decode rows at C · row_bytes(d) for a batch-constant C, so the
+    // byte ratio to the f32 request (index 0) must equal the row-width
+    // ratio exactly.
+    let f32_bytes = w1[0].1 as f64;
+    for (i, (_, b)) in w1.iter().enumerate() {
+        let dt = dtypes[i % 3].unwrap_or(KvDtype::F32);
+        let want = dt.row_bytes(d) as f64 / KvDtype::F32.row_bytes(d) as f64;
+        let got = *b as f64 / f32_bytes;
+        assert!(
+            (got - want).abs() < 1e-9,
+            "request {i} ({}) charged {got:.6}x the f32 bytes; row widths say {want:.6}x",
+            dt.name()
+        );
+    }
+}
+
+#[test]
 fn per_request_int8_override_matches_engine_wide_int8() {
     // The GenOptions override must be byte-equivalent to configuring
     // the whole engine at int8 — including when the override request

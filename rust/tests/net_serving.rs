@@ -4,7 +4,10 @@
 //! `Session::tick` run at shards {1,4} × workers {1,4} — (2) client
 //! disconnects cancel in-flight requests without leaking KV blocks or
 //! cold-tier spill slots, (3) bounded admission sheds with 429 instead
-//! of stalling, and (4) typed error → HTTP status mapping.
+//! of stalling, (4) typed error → HTTP status mapping, and (5) a
+//! mid-burst `Router::shutdown` drains every stream to a terminal
+//! event, leaves all shards quiescent, and persists the prefix radix so
+//! a warm restart on the same spill path replays identical streams.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -14,7 +17,8 @@ use std::time::{Duration, Instant};
 use vattn::model::{Model, ModelConfig};
 use vattn::server::http::read_response;
 use vattn::server::{
-    EngineConfig, Event, GenOptions, NetServer, RouterConfig, Session, SubmitRequest,
+    EngineConfig, Event, GenOptions, NetServer, Router, RouterConfig, Session, StreamEvent,
+    SubmitRequest,
 };
 use vattn::util::json::Json;
 
@@ -368,4 +372,148 @@ fn cancel_route_terminates_stream_and_stats_report_it() {
         .sum();
     assert_eq!(blocks, 0, "cancel must return the KV lease");
     server.shutdown();
+}
+
+// ─── drain under load: shutdown mid-burst, then warm restart ────────
+
+/// Drain one request's stream to its terminal event: the token vector
+/// on completion, the mapped HTTP status on rejection. Anything else
+/// (a stall, a cancel we never asked for, a backend failure) panics.
+fn drain_stream(rx: &std::sync::mpsc::Receiver<StreamEvent>) -> Result<Vec<u32>, u16> {
+    let mut toks = Vec::new();
+    loop {
+        match rx.recv_timeout(Duration::from_secs(60)).expect("stream event") {
+            StreamEvent::Accepted { .. } => {}
+            StreamEvent::Token { step, token, .. } => {
+                assert_eq!(toks.len(), step, "streams must stay gapless");
+                toks.push(token);
+            }
+            StreamEvent::Finished { result, .. } => {
+                assert_eq!(result.tokens, toks, "terminal record must replay the stream");
+                return Ok(toks);
+            }
+            StreamEvent::Rejected { error, .. } => return Err(error.kind.http_status()),
+            ev => panic!("unexpected stream event under drain: {ev:?}"),
+        }
+    }
+}
+
+#[test]
+fn shutdown_under_load_drains_clean_and_prefix_files_warm_start_a_restart() {
+    let mcfg = ModelConfig::tiny();
+    let shards = 2usize;
+    let spill = std::env::temp_dir()
+        .join(format!("vattn_net_drain_{}.spill", std::process::id()));
+    let shard_files: Vec<String> = (0..shards)
+        .flat_map(|i| {
+            [
+                format!("{}.shard{i}", spill.display()),
+                format!("{}.shard{i}.prefix", spill.display()),
+            ]
+        })
+        .collect();
+    for f in &shard_files {
+        let _ = std::fs::remove_file(f);
+    }
+
+    // Over-committed pool (12 blocks for a burst that wants far more),
+    // cold tier attached, prefix cache on, small per-shard queues: the
+    // burst below exercises queueing, preemption-to-spill, and shedding
+    // all at once — the states a drain must unwind.
+    let cfg = EngineConfig::builder()
+        .max_batch(2)
+        .block_tokens(4)
+        .prefix_cache(true)
+        .kv_capacity_bytes(12 * 4 * mcfg.kv_bytes_per_token())
+        .kv_spill(&spill)
+        .build();
+    let shared = prompt(8, 99); // two full blocks → shareable prefix
+    let tail_prompt = |i: u32| {
+        let mut p = shared.clone();
+        p.extend(prompt(4 + (i % 3) as usize, i));
+        p
+    };
+    let gen_len = 8usize;
+
+    let backend = Arc::new(Model::new(ModelConfig::tiny(), 42));
+    let router =
+        Router::new(backend.clone(), RouterConfig::new(cfg.clone()).shards(shards).queue_depth(3));
+
+    // Warm phase: 8 sequential requests populate the prefix radix and
+    // pin the reference streams for the restart comparison.
+    let mut warm_streams = Vec::new();
+    for i in 0..8u32 {
+        let (_, rx) = router.submit(tail_prompt(i), GenOptions::new(gen_len).seed(1000 + i as u64));
+        let toks = drain_stream(&rx).expect("sequential warm request must complete");
+        assert_eq!(toks.len(), gen_len);
+        warm_streams.push(toks);
+    }
+
+    // Burst phase: 16 concurrent submits, then shutdown while they are
+    // still queued/streaming. Every stream must resolve as exactly one
+    // of {completed, 429 queue-full, 503 shutting-down} — no stalls, no
+    // lost channels.
+    let burst: Vec<_> = (0..16u32)
+        .map(|i| router.submit(tail_prompt(i), GenOptions::new(gen_len).seed(2000 + i as u64)))
+        .collect();
+    let stats = router.shutdown();
+    let mut completed = 0u64;
+    let mut shed429 = 0u64;
+    let mut shed503 = 0u64;
+    for (_, rx) in &burst {
+        match drain_stream(rx) {
+            Ok(toks) => {
+                assert_eq!(toks.len(), gen_len, "a drained stream must be complete");
+                completed += 1;
+            }
+            Err(429) => shed429 += 1,
+            Err(503) => shed503 += 1,
+            Err(other) => panic!("drain produced status {other}"),
+        }
+    }
+    assert_eq!(completed + shed429 + shed503, 16, "every burst stream must resolve");
+    assert!(shed429 + shed503 > 0, "16-into-depth-3 under shutdown must shed somewhere");
+
+    // Post-drain quiescence, per shard: nothing outstanding, no leaked
+    // warm blocks, no orphaned spill slots, prefix radix flushed (its
+    // blocks persisted to disk, not held).
+    for s in &stats {
+        assert_eq!(s.outstanding, 0, "shard {} left requests outstanding", s.shard);
+        assert_eq!(s.waiting, 0, "shard {} left requests queued", s.shard);
+        assert_eq!(s.active, 0, "shard {} left requests active", s.shard);
+        assert_eq!(s.kv_blocks_in_use, 0, "shard {} leaked warm blocks", s.shard);
+        assert_eq!(s.prefix_blocks_held, 0, "shard {} still pins prefix blocks", s.shard);
+        assert_eq!(s.spill_live_blocks, Some(0), "shard {} orphaned spill slots", s.shard);
+    }
+    assert_eq!(stats.iter().map(|s| s.completed).sum::<u64>(), 8 + completed);
+
+    // The persisted per-shard prefix radix must exist on disk for at
+    // least one shard (the warm phase cached the shared prefix).
+    let prefix_files: Vec<&String> =
+        shard_files.iter().filter(|f| f.ends_with(".prefix")).collect();
+    assert!(
+        prefix_files.iter().any(|f| std::path::Path::new(f.as_str()).exists()),
+        "no shard persisted its prefix radix: {prefix_files:?}"
+    );
+
+    // Warm restart on the same spill path: the radix reloads, so the
+    // same requests must hit the prefix cache and stream the same bytes.
+    let restarted = Router::new(backend, RouterConfig::new(cfg).shards(shards).queue_depth(3));
+    for (i, want) in warm_streams.iter().enumerate() {
+        let (_, rx) =
+            restarted.submit(tail_prompt(i as u32), GenOptions::new(gen_len).seed(1000 + i as u64));
+        let toks = drain_stream(&rx).expect("restarted warm request must complete");
+        assert_eq!(&toks, want, "restart changed the stream for request {i}");
+    }
+    let restat = restarted.shutdown();
+    let hit_blocks: u64 = restat.iter().map(|s| s.session.prefix_hit_blocks).sum();
+    assert!(hit_blocks > 0, "restarted router never hit the reloaded prefix radix");
+    for s in &restat {
+        assert_eq!(s.kv_blocks_in_use, 0);
+        assert_eq!(s.spill_live_blocks, Some(0));
+    }
+
+    for f in &shard_files {
+        let _ = std::fs::remove_file(f);
+    }
 }

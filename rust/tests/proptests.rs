@@ -12,6 +12,7 @@ use vattn::server::{
     SubmitRequest,
 };
 use vattn::tensor::{rel_l2_error, Mat};
+use vattn::util::json::Json;
 use vattn::util::proptest::Prop;
 use vattn::util::Rng;
 
@@ -816,4 +817,148 @@ fn prop_top_indices_are_actually_top() {
             .fold(f32::NEG_INFINITY, f32::max);
         assert!(sel_min >= unsel_max - 1e-6, "sel_min {sel_min} < unsel_max {unsel_max}");
     });
+}
+
+// ---------------------------------------------------------------------
+// Json::parse under adversarial input. The parser fronts the network
+// server (`server::net`), so its failure mode on hostile bytes is a
+// serving concern, not a formatting one: it must error — never panic,
+// never mis-parse — and the depth cap must sit exactly where it claims.
+
+/// Structural equality (the enum deliberately doesn't derive PartialEq:
+/// production code should never compare trees; tests spell out that NaN
+/// payloads and key order are part of "equal").
+fn json_eq(a: &Json, b: &Json) -> bool {
+    match (a, b) {
+        (Json::Null, Json::Null) => true,
+        (Json::Bool(x), Json::Bool(y)) => x == y,
+        (Json::Num(x), Json::Num(y)) => x == y,
+        (Json::Str(x), Json::Str(y)) => x == y,
+        (Json::Arr(x), Json::Arr(y)) => {
+            x.len() == y.len() && x.iter().zip(y).all(|(a, b)| json_eq(a, b))
+        }
+        (Json::Obj(x), Json::Obj(y)) => {
+            x.len() == y.len()
+                && x.iter().zip(y).all(|((ka, va), (kb, vb))| ka == kb && json_eq(va, vb))
+        }
+        _ => false,
+    }
+}
+
+/// Random document over every writer-reachable shape: nasty strings
+/// (quotes, backslashes, control bytes, multi-byte UTF-8), negative /
+/// tiny / huge finite numbers, nested containers, empty containers.
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    let shapes = if depth == 0 { 4 } else { 6 };
+    match rng.below(shapes) {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Num(match rng.below(4) {
+            0 => rng.range(0, 2000) as f64 - 1000.0,
+            1 => rng.normal(),
+            2 => rng.normal() * 1e13,
+            _ => rng.normal() * 1e-13,
+        }),
+        3 => Json::Str(random_string(rng)),
+        4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => {
+            let n = rng.below(4);
+            let mut o = Json::obj();
+            for i in 0..n {
+                let key = format!("{}{i}", random_string(rng));
+                o = o.field(&key, random_json(rng, depth - 1));
+            }
+            o
+        }
+    }
+}
+
+fn random_string(rng: &mut Rng) -> String {
+    const ALPHABET: &[char] = &[
+        'a', 'Z', '0', ' ', '"', '\\', '\n', '\t', '\r', '\u{1}', '\u{1f}', '/', 'é', 'λ', '∞',
+        '語', '\u{10348}',
+    ];
+    (0..rng.below(12)).map(|_| ALPHABET[rng.below(ALPHABET.len())]).collect()
+}
+
+#[test]
+fn prop_json_parse_write_roundtrip_is_identity() {
+    Prop::new("json-roundtrip").cases(300).run(|rng| {
+        let doc = random_json(rng, 4);
+        let text = doc.to_string();
+        let back = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("writer output must reparse: {e}\n{text}"));
+        assert!(json_eq(&doc, &back), "round trip changed the tree:\n{text}");
+    });
+}
+
+#[test]
+fn prop_json_truncation_always_errors() {
+    // Every proper prefix of a container document is incomplete (the
+    // top-level bracket only closes at the last byte), so parse must
+    // reject all of them — and must do so without panicking.
+    Prop::new("json-truncation").cases(120).run(|rng| {
+        let doc = match rng.below(2) {
+            0 => Json::arr([random_json(rng, 3)]),
+            _ => Json::obj().field("k", random_json(rng, 3)),
+        };
+        let text = doc.to_string();
+        for cut in 1..text.len() {
+            if !text.is_char_boundary(cut) {
+                continue;
+            }
+            let prefix = &text[..cut];
+            assert!(
+                Json::parse(prefix).is_err(),
+                "truncated doc parsed at byte {cut}:\n{prefix}"
+            );
+        }
+    });
+}
+
+#[test]
+fn json_depth_cap_holds_exactly_at_the_cap() {
+    // The cap counts every value() frame: a scalar under k arrays sits
+    // at depth k + 1. 63 arrays + scalar = 64 frames — the documented
+    // cap — must parse; one more level must not.
+    let at_cap = "[".repeat(63) + "0" + &"]".repeat(63);
+    assert!(Json::parse(&at_cap).is_ok(), "depth 64 is within the cap");
+    let empty_at_cap = "[".repeat(64) + &"]".repeat(64);
+    assert!(Json::parse(&empty_at_cap).is_ok(), "64 nested arrays with no leaf are depth 64");
+    let over = "[".repeat(64) + "0" + &"]".repeat(64);
+    let err = Json::parse(&over).unwrap_err();
+    assert!(err.contains("deeper than 64"), "{err}");
+    let way_over = "[".repeat(65) + &"]".repeat(65);
+    assert!(Json::parse(&way_over).is_err());
+    // Depth is a high-water mark, not a running total: many siblings at
+    // a legal depth must not trip the cap.
+    let wide = format!("[{}]", vec!["[[0]]"; 100].join(","));
+    assert!(Json::parse(&wide).is_ok(), "siblings must not accumulate depth");
+}
+
+#[test]
+fn json_rejects_nan_literals_and_maps_overflow_to_null_on_write() {
+    // JSON has no NaN/Infinity. The literal spellings must all be
+    // rejected; an overflowing exponent parses as +inf (f64 semantics)
+    // but the writer maps every non-finite back to null, so non-finite
+    // values can never round-trip into a results file.
+    for bad in ["NaN", "nan", "Infinity", "-Infinity", "inf", "-inf", "+1", "-", "1e", "0x10"] {
+        assert!(Json::parse(bad).is_err(), "'{bad}' must not parse");
+    }
+    let overflow = Json::parse("1e999").expect("overflowing exponent is still a number token");
+    assert!(matches!(overflow, Json::Num(x) if x.is_infinite()));
+    assert_eq!(overflow.to_string(), "null");
+    assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+}
+
+#[test]
+fn json_duplicate_keys_keep_first_and_survive_reserialization() {
+    // The parser preserves duplicates in the tree; get() resolves to
+    // the first binding (stable under reserialization, so a consumer
+    // re-reading the written form sees the same value).
+    let doc = Json::parse("{\"a\": 1, \"b\": 2, \"a\": 3}").unwrap();
+    assert_eq!(doc.get("a").unwrap().as_f64(), Some(1.0));
+    let rewritten = Json::parse(&doc.to_string()).unwrap();
+    assert_eq!(rewritten.get("a").unwrap().as_f64(), Some(1.0));
+    assert_eq!(rewritten.get("b").unwrap().as_f64(), Some(2.0));
 }
