@@ -31,7 +31,12 @@
 //! streams byte-identical to the unconstrained spill-off baseline at
 //! workers {1, 4}, aggregate swap-in bytes equal to spill-out bytes,
 //! and a fresh session warm-starting from the persisted prefix store
-//! with a nonzero hit rate on the same prompts.
+//! with a nonzero hit rate on the same prompts. The same contended
+//! workload then re-runs with `--kv-prefetch` staging cold-tier reads
+//! on the spill-io thread: streams must stay byte-identical to both
+//! baselines while blocking swap-in reads collapse to ≤ 10% of the
+//! prefetch-off run's swap-ins (CI-gated via the `spill` JSON block's
+//! `prefetch_hit_rate` / `blocking_swap_in_ops` fields).
 //!
 //! Also runs the temporal heavy-hitter reuse scenarios: a 4-request
 //! 64-token-generation vAttention batch asserting reuse-on streams are
@@ -546,7 +551,7 @@ fn main() {
     };
     let spill_a = spill_file("a");
     let spill_b = spill_file("b");
-    let run_spill = |workers: usize, path: &std::path::Path| {
+    let run_spill = |workers: usize, path: &std::path::Path, prefetch: bool| {
         let cfg = EngineConfig::builder()
             .max_batch(16)
             .seed(1)
@@ -555,6 +560,7 @@ fn main() {
             .prefix_cache(true)
             .kv_capacity_bytes(quant_pool_bytes)
             .kv_spill(path)
+            .kv_prefetch(prefetch)
             .build();
         let mut session = Session::new(Model::new(bench_model(), 42), cfg);
         let mut streams: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
@@ -588,8 +594,8 @@ fn main() {
         assert!(streams.values().all(|s| s.len() == 24), "all 16 must complete under spill");
         (streams, stats, wall)
     };
-    let (sp1, sp_stats, sp_wall) = run_spill(1, &spill_a);
-    let (sp4, sp_stats4, _) = run_spill(4, &spill_b);
+    let (sp1, sp_stats, sp_wall) = run_spill(1, &spill_a, false);
+    let (sp4, sp_stats4, _) = run_spill(4, &spill_b, false);
     assert_eq!(sp1, sp4, "spill streams diverged between 1 and 4 workers");
     assert_eq!(sp1, unshared_streams, "the cold tier changed a token stream");
     assert!(sp_stats.preemptions > 0, "the planted pool must contend under spill");
@@ -657,7 +663,67 @@ fn main() {
         sp_stats.swap_in_bytes as f64 / (1u64 << 20) as f64,
     );
     println!("{}", PagingSummary::from(&sp_stats).render());
-    for p in [&spill_a, &spill_b] {
+
+    println!("\n== async spill prefetch: staged cold-tier reads overlap compute ==");
+    // The same over-committed workload with the prefetch pipeline on:
+    // the spill-io thread starts reading a queue-front victim's slots
+    // before a batch slot frees, so resume consumes staged buffers
+    // instead of issuing blocking reads. Prefetch only moves data —
+    // streams must stay byte-identical to the prefetch-off and
+    // spill-off baselines at 1 and 4 workers (fresh stores, both cold),
+    // with zero replays, a conserved prefetch ledger, and blocking
+    // swap-in reads at ≤ 10% of the prefetch-off run's swap-ins.
+    let spill_c = spill_file("c");
+    let spill_d = spill_file("d");
+    let (pf1, pf_stats, pf_wall) = run_spill(1, &spill_c, true);
+    let (pf4, pf_stats4, _) = run_spill(4, &spill_d, true);
+    assert_eq!(pf1, pf4, "prefetch streams diverged between 1 and 4 workers");
+    assert_eq!(pf1, sp1, "prefetch changed a token stream vs the prefetch-off run");
+    assert_eq!(pf1, unshared_streams, "prefetch changed a token stream vs the spill-off run");
+    assert!(pf_stats.preemptions > 0, "the planted pool must contend under prefetch");
+    assert_eq!(pf_stats.preemption_replays, 0, "prefetch mode must never replay");
+    assert_eq!(pf_stats4.preemption_replays, 0);
+    assert_eq!(
+        pf_stats.preemptions, sp_stats.preemptions,
+        "prefetch must not change the preemption schedule"
+    );
+    assert_eq!(
+        pf_stats.swap_in_bytes, pf_stats.spill_out_bytes,
+        "every spilled byte must be swapped back in exactly once under prefetch"
+    );
+    assert_eq!(pf_stats.swap_in_ops, pf_stats.spill_out_ops);
+    assert!(pf_stats.prefetch_issued_ops > 0, "the contended run must issue prefetches");
+    assert_eq!(
+        pf_stats.prefetch_hit_ops + pf_stats.prefetch_wasted_ops,
+        pf_stats.prefetch_issued_ops,
+        "issued prefetch blocks must be consumed or wasted, never dropped"
+    );
+    assert_eq!(
+        pf_stats.blocking_swap_in_ops + pf_stats.prefetch_hit_ops,
+        pf_stats.swap_in_ops,
+        "every swap-in is either staged or blocking"
+    );
+    assert!(
+        pf_stats.blocking_swap_in_ops * 10 <= sp_stats.swap_in_ops,
+        "blocking swap-ins under prefetch ({}) exceed 10% of the prefetch-off swap-ins ({})",
+        pf_stats.blocking_swap_in_ops,
+        sp_stats.swap_in_ops
+    );
+    let pf_paging = PagingSummary::from(&pf_stats);
+    let pf_hit_rate = pf_paging.prefetch_hit_rate();
+    let pf_overlap = pf_paging.swap_in_overlap_rate();
+    println!(
+        "prefetch on: {} issued / {} hit / {} wasted blocks (hit rate {pf_hit_rate:.2}); \
+         blocking swap-ins {} of {} ({:.0}% overlapped); wall {pf_wall:.2}s vs {sp_wall:.2}s off",
+        pf_stats.prefetch_issued_ops,
+        pf_stats.prefetch_hit_ops,
+        pf_stats.prefetch_wasted_ops,
+        pf_stats.blocking_swap_in_ops,
+        pf_stats.swap_in_ops,
+        pf_overlap * 100.0,
+    );
+    println!("{}", pf_paging.render());
+    for p in [&spill_a, &spill_b, &spill_c, &spill_d] {
         let mut prefix = p.clone().into_os_string();
         prefix.push(".prefix");
         let _ = std::fs::remove_file(p);
@@ -963,6 +1029,13 @@ fn main() {
         .map(|s| s.code())
         .collect::<std::collections::BTreeSet<_>>()
         .len();
+    // Distinct values on the resources axis: 4 once the spill+prefetch
+    // arm is enumerated (ample / overcommit / spill / prefetch).
+    let resource_axis_values = all_scenarios
+        .iter()
+        .map(|s| s.axis_codes()[3])
+        .collect::<std::collections::BTreeSet<_>>()
+        .len();
     let t_matrix = Instant::now();
     let mut matrix_failures: Vec<String> = Vec::new();
     let mut matrix_summary = ScenarioSummary::default();
@@ -1078,6 +1151,22 @@ fn main() {
                 .field("swap_in_ops", Json::num(sp_stats.swap_in_ops as f64))
                 .field("warm_start_prefix_blocks", Json::num(warm_held as f64))
                 .field("warm_start_prefix_hit_rate", Json::num(warm_hit_rate))
+                .field(
+                    "blocking_swap_in_ops",
+                    Json::num(pf_stats.blocking_swap_in_ops as f64),
+                )
+                .field(
+                    "prefetch_issued_ops",
+                    Json::num(pf_stats.prefetch_issued_ops as f64),
+                )
+                .field("prefetch_hit_ops", Json::num(pf_stats.prefetch_hit_ops as f64))
+                .field(
+                    "prefetch_wasted_ops",
+                    Json::num(pf_stats.prefetch_wasted_ops as f64),
+                )
+                .field("prefetch_hit_rate", Json::num(pf_hit_rate))
+                .field("swap_in_overlap_rate", Json::num(pf_overlap))
+                .field("prefetch_wall_s", Json::num(pf_wall))
                 .field("wall_s", Json::num(sp_wall)),
         )
         .field(
@@ -1139,6 +1228,7 @@ fn main() {
                 .field("failures", Json::num(matrix_summary.failures as f64))
                 .field("axes_covered", Json::num(matrix_axes as f64))
                 .field("distinct_combos", Json::num(distinct_combos as f64))
+                .field("resource_axis_values", Json::num(resource_axis_values as f64))
                 .field("requests", Json::num(matrix_summary.requests as f64))
                 .field("preemptions", Json::num(matrix_summary.preemptions as f64))
                 .field(

@@ -29,14 +29,16 @@
 //! silently ignored — see `docs/GUARANTEES.md` §8.
 
 pub mod paged;
+pub mod prefetch;
 pub mod prefix;
 pub mod spill;
 pub mod store;
 pub mod tiered;
 
 pub use paged::{BlockId, BlockPool, CowOutcome, PageError};
+pub use prefetch::PrefetchEngine;
 pub use prefix::{ChainKey, PrefixCache};
-pub use spill::{SpillSlot, SpillStats, SpillStore};
+pub use spill::{SlotReader, SpillSlot, SpillStats, SpillStore};
 pub use store::{BlockSnapshot, BlockStore, KvDtype, SlotRows};
 pub use tiered::{TierStats, TransferModel};
 

@@ -1,0 +1,249 @@
+//! [`PrefetchEngine`]: the cold tier's asynchronous swap-in pipeline
+//! (`--kv-prefetch`).
+//!
+//! PR 6 made preemption swap-out/swap-in instead of recompute replay,
+//! but every swap-in still ran synchronously inside the session's
+//! admission phase — a `pread` per block on the scheduler thread while
+//! the worker pool sat idle. This module overlaps that data movement
+//! with compute, SpecAttn-style: speculation may only *move* data,
+//! never change what is selected or sampled, so every determinism and
+//! (ε, δ) guarantee is untouched.
+//!
+//! The engine owns one dedicated IO thread (`vattn-spill-io`) and a
+//! pair of channels. The session *kicks* a job the moment a suspended
+//! request reaches the front window of the waiting queue — before any
+//! batch slot frees — handing over the request's [`SpillSlot`]s; the IO
+//! thread stages each block into a decoded [`BlockSnapshot`] buffer.
+//! When admission later resumes the request, [`PrefetchEngine::wait`]
+//! hands the staged buffers back — blocking only on whatever tail of
+//! the job is still in flight, which is how blocking swap-in reads on
+//! the scheduler thread drop to ~0 *deterministically* (the consume
+//! path never races: a kicked job is either consumed in full or
+//! invalidated, never half-used).
+//!
+//! Ownership discipline — the part every preempt/resume/cancel/drain
+//! path must respect:
+//!
+//! - The [`crate::kvcache::SpillStore`] stays the **only** owner of
+//!   slot lifecycle. The engine reads through a stat-free
+//!   [`SlotReader`] (dup'd fd) and never frees, writes, or recycles a
+//!   slot.
+//! - A job's slots must stay live until the job is consumed
+//!   ([`PrefetchEngine::wait`]) or invalidated
+//!   ([`PrefetchEngine::invalidate`]). Both paths are called *before*
+//!   the session frees the slots, so a staged read can race a recycle
+//!   only after its job id is already dead — the engine then discards
+//!   the result (torn bytes, garbage, or an IO error alike) without it
+//!   ever reaching a cache.
+//! - Staged bytes are decoded by the same code path as the blocking
+//!   read ([`crate::kvcache::spill`]'s shared record decoder), so a
+//!   resumed stream is byte-identical whether it consumed a prefetch,
+//!   fell back to blocking reads, or ran with prefetch disabled.
+
+use std::collections::{HashMap, HashSet};
+use std::io;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use super::spill::{SlotReader, SpillSlot};
+use super::store::BlockSnapshot;
+
+/// One staged read request: every cold-tier slot of one suspended
+/// request, in position order.
+struct Job {
+    id: u64,
+    slots: Vec<SpillSlot>,
+}
+
+/// The IO thread's answer: the staged snapshots, or the first error it
+/// hit (the session falls back to the blocking path on `Err`).
+struct Done {
+    id: u64,
+    result: io::Result<Vec<BlockSnapshot>>,
+}
+
+/// Owner of the `vattn-spill-io` thread. See the module docs for the
+/// lifecycle contract.
+pub struct PrefetchEngine {
+    /// `Some` until drop; taking it closes the channel and stops the
+    /// IO thread.
+    tx: Option<Sender<Job>>,
+    rx: Receiver<Done>,
+    worker: Option<JoinHandle<()>>,
+    next_id: u64,
+    /// Finished jobs not yet consumed (results of earlier kicks drained
+    /// while waiting on a later one).
+    completed: HashMap<u64, io::Result<Vec<BlockSnapshot>>>,
+    /// Jobs whose results must be discarded on arrival (cancelled or
+    /// unwound requests).
+    invalidated: HashSet<u64>,
+}
+
+impl PrefetchEngine {
+    /// Spawn the IO thread over `reader` (obtained from
+    /// `SpillStore::reader`).
+    pub fn new(reader: SlotReader) -> PrefetchEngine {
+        let (tx, job_rx) = channel::<Job>();
+        let (done_tx, rx) = channel::<Done>();
+        let worker = std::thread::Builder::new()
+            .name("vattn-spill-io".into())
+            .spawn(move || {
+                while let Ok(job) = job_rx.recv() {
+                    let result = job
+                        .slots
+                        .iter()
+                        .map(|&slot| reader.read(slot))
+                        .collect::<io::Result<Vec<_>>>();
+                    if done_tx.send(Done { id: job.id, result }).is_err() {
+                        break; // session gone; nothing left to stage for
+                    }
+                }
+            })
+            .expect("spawning vattn-spill-io");
+        PrefetchEngine {
+            tx: Some(tx),
+            rx,
+            worker: Some(worker),
+            next_id: 0,
+            completed: HashMap::new(),
+            invalidated: HashSet::new(),
+        }
+    }
+
+    /// Start staging `slots` and return the job id the session parks on
+    /// the suspended request. The slots must stay live until this job is
+    /// consumed or invalidated.
+    pub fn kick(&mut self, slots: &[SpillSlot]) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        let tx = self.tx.as_ref().expect("kick after drop");
+        if tx.send(Job { id, slots: slots.to_vec() }).is_err() {
+            // IO thread died (it never panics on IO errors, but be
+            // defensive): record the job as already-failed so `wait`
+            // falls back to the blocking path.
+            self.completed
+                .insert(id, Err(io::Error::new(io::ErrorKind::Other, "spill-io thread gone")));
+        }
+        id
+    }
+
+    /// Block until job `id` finishes and hand back its staged
+    /// snapshots. `None` means the staged read failed (or the job was
+    /// invalidated / the IO thread is gone) — the caller must fall back
+    /// to the synchronous path, which re-reads the same bytes, so the
+    /// outcome is identical either way. Bounded by one in-flight file
+    /// read per queued job ahead of this one.
+    pub fn wait(&mut self, id: u64) -> Option<Vec<BlockSnapshot>> {
+        if self.invalidated.contains(&id) {
+            // Stay in the invalidated set until the in-flight result
+            // arrives (a later wait's drain discards it).
+            return None;
+        }
+        loop {
+            if let Some(result) = self.completed.remove(&id) {
+                return result.ok();
+            }
+            let done = self.rx.recv().ok()?;
+            if self.invalidated.remove(&done.id) {
+                continue; // late result of a dead job: discard
+            }
+            self.completed.insert(done.id, done.result);
+        }
+    }
+
+    /// Mark job `id` dead: its result (whether already staged or still
+    /// in flight) will be discarded, never consumed. Called before the
+    /// session frees the job's slots, so recycled-slot reads can never
+    /// be mistaken for valid stages.
+    pub fn invalidate(&mut self, id: u64) {
+        if self.completed.remove(&id).is_none() {
+            self.invalidated.insert(id);
+        }
+    }
+}
+
+impl Drop for PrefetchEngine {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // closes the job channel; the thread exits
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::spill::SpillStore;
+    use crate::kvcache::store::{BlockStore, KvDtype};
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("vattn_prefetch_{}_{name}", std::process::id()))
+    }
+
+    fn filled(slots: usize, d: usize, rows: usize, dtype: KvDtype) -> BlockStore {
+        let mut st = BlockStore::new(slots, d, dtype);
+        for r in 0..rows {
+            for s in 0..slots {
+                let kr: Vec<f32> = (0..d).map(|c| (s * 100 + r * 10 + c) as f32 * 0.02).collect();
+                let vr: Vec<f32> = (0..d).map(|c| (s * 55 + r * 7 + c) as f32 * -0.01).collect();
+                st.append_row(s, &kr, &vr);
+            }
+        }
+        st
+    }
+
+    #[test]
+    fn staged_reads_match_blocking_reads_in_and_out_of_order() {
+        let path = tmp("staged_eq");
+        let (slots, d, bt) = (2, 4, 4);
+        let mut store = SpillStore::open(&path, bt, slots, d).unwrap();
+        let a = filled(slots, d, bt, KvDtype::F32);
+        let b = filled(slots, d, 3, KvDtype::Int8);
+        let (sa, sb) = (a.snapshot_rows(0, bt), b.snapshot_rows(0, 3));
+        let slot_a = store.write_block(&sa).unwrap();
+        let slot_b = store.write_block(&sb).unwrap();
+        let mut pf = PrefetchEngine::new(store.reader().unwrap());
+        let job_a = pf.kick(&[slot_a]);
+        let job_b = pf.kick(&[slot_b, slot_a]);
+        // Consume out of kick order: `wait` parks job_a's result while
+        // draining toward job_b.
+        let staged_b = pf.wait(job_b).expect("staged");
+        assert_eq!(staged_b.len(), 2);
+        let staged_a = pf.wait(job_a).expect("staged");
+        assert_eq!(staged_a.len(), 1);
+        let blocking_a = store.read_block(slot_a).unwrap();
+        let blocking_b = store.read_block(slot_b).unwrap();
+        for (staged, blocking) in [
+            (&staged_a[0], &blocking_a),
+            (&staged_b[0], &blocking_b),
+            (&staged_b[1], &blocking_a),
+        ] {
+            assert_eq!(staged.dtype, blocking.dtype);
+            assert_eq!(staged.tokens, blocking.tokens);
+            assert_eq!(staged.payload_bytes(), blocking.payload_bytes());
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn invalidated_jobs_are_never_consumed() {
+        let path = tmp("invalidate");
+        let (slots, d, bt) = (1, 4, 4);
+        let mut store = SpillStore::open(&path, bt, slots, d).unwrap();
+        let src = filled(slots, d, bt, KvDtype::F32);
+        let slot = store.write_block(&src.snapshot_rows(0, bt)).unwrap();
+        let mut pf = PrefetchEngine::new(store.reader().unwrap());
+        // Invalidate before the result is drained: wait() must refuse it
+        // whether the IO thread has finished or not.
+        let job = pf.kick(&[slot]);
+        pf.invalidate(job);
+        assert!(pf.wait(job).is_none(), "invalidated job must not be consumed");
+        // A fresh job on the same slot still works — invalidation is
+        // per-job, not per-slot.
+        let job2 = pf.kick(&[slot]);
+        assert_eq!(pf.wait(job2).expect("staged").len(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+}

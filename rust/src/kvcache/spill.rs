@@ -62,6 +62,12 @@ const PREFIX_VERSION: u32 = 1;
 pub struct SpillSlot(u32);
 
 /// Cold-tier traffic counters, charged in physical payload bytes.
+///
+/// `swap_in_bytes` / `swap_in_ops` count every restore regardless of
+/// path, so the conservation invariant `swap_in == spill_out` holds
+/// with prefetch on or off; `blocking_swap_in_ops` isolates the
+/// synchronous `read_exact_at` calls issued on the scheduler thread —
+/// the stalls the prefetch pipeline exists to eliminate.
 #[derive(Clone, Debug, Default)]
 pub struct SpillStats {
     /// Payload bytes written to the cold tier (swap-out).
@@ -70,8 +76,32 @@ pub struct SpillStats {
     pub spill_out_ops: usize,
     /// Payload bytes read back from the cold tier (swap-in).
     pub swap_in_bytes: usize,
-    /// Block-read operations.
+    /// Block-read operations (blocking and prefetched alike).
     pub swap_in_ops: usize,
+    /// Swap-in reads issued synchronously on the scheduler thread
+    /// ([`SpillStore::read_block`]); ~0 when prefetch keeps up.
+    pub blocking_swap_in_ops: usize,
+    /// Blocks handed to the prefetch pipeline (queue-front kicks).
+    pub prefetch_issued_ops: usize,
+    /// Prefetched blocks consumed at resume instead of a blocking read.
+    pub prefetch_hit_ops: usize,
+    /// Prefetched blocks discarded (cancel-while-prefetching, or the
+    /// staged read failed and resume fell back to the blocking path).
+    pub prefetch_wasted_ops: usize,
+    /// Payload bytes restored through the staged prefetch path.
+    pub prefetch_bytes: usize,
+}
+
+impl SpillStats {
+    /// Fraction of prefetch-issued blocks that were consumed at resume
+    /// (0 when the pipeline never ran).
+    pub fn prefetch_hit_rate(&self) -> f64 {
+        if self.prefetch_issued_ops == 0 {
+            0.0
+        } else {
+            self.prefetch_hit_ops as f64 / self.prefetch_issued_ops as f64
+        }
+    }
 }
 
 /// The file-backed cold tier. See the module docs for the layout.
@@ -230,6 +260,63 @@ fn decode_payload(
     Ok(BlockSnapshot { dtype, tokens, slots: out })
 }
 
+/// Read and decode one record from the region file with positional
+/// reads only — shared by the scheduler-thread [`SpillStore::read_block`]
+/// and the IO-thread [`SlotReader::read`], so the two paths are
+/// byte-identical by construction.
+fn read_slot_record(
+    file: &File,
+    slot: SpillSlot,
+    slot_bytes: usize,
+    block_tokens: usize,
+    slots: usize,
+    d: usize,
+) -> io::Result<BlockSnapshot> {
+    let base = slot.0 as u64 * slot_bytes as u64;
+    let mut header = [0u8; HEADER_BYTES];
+    file.read_exact_at(&mut header, base)?;
+    let mut rd = Rd::new(&header);
+    let dtype = decode_dtype(rd.u8()?)?;
+    let tokens = rd.u32()? as usize;
+    let rec_slots = rd.u32()? as usize;
+    if rec_slots != slots || tokens > block_tokens {
+        return Err(bad(format!(
+            "spill record geometry mismatch: {rec_slots} slots x {tokens} tokens \
+             vs store {slots} x {block_tokens}"
+        )));
+    }
+    let mut payload = vec![0u8; payload_len(dtype, tokens, rec_slots, d)];
+    file.read_exact_at(&mut payload, base + HEADER_BYTES as u64)?;
+    let mut rd = Rd::new(&payload);
+    let snap = decode_payload(&mut rd, dtype, tokens, rec_slots, d)?;
+    debug_assert!(rd.done());
+    Ok(snap)
+}
+
+/// Read-only handle to the region file for the prefetch IO thread
+/// ([`SpillStore::reader`]). Holds an independent `File` (dup'd fd), so
+/// its positional reads never interfere with the store's writes; it
+/// charges no stats and checks no liveness — the [`SpillStore`] remains
+/// the single owner of slot lifecycle, and the prefetch engine discards
+/// any read whose job was invalidated before consumption (so a read
+/// racing a slot recycle can surface garbage or an error, but never
+/// reach a cache).
+pub struct SlotReader {
+    file: File,
+    block_tokens: usize,
+    slots: usize,
+    d: usize,
+    slot_bytes: usize,
+}
+
+impl SlotReader {
+    /// Decode the record at `slot`, byte-identical to what
+    /// [`SpillStore::read_block`] would return for a live slot.
+    pub fn read(&self, slot: SpillSlot) -> io::Result<BlockSnapshot> {
+        read_slot_record(&self.file, slot, self.slot_bytes, self.block_tokens, self.slots, self.d)
+    }
+}
+
 impl SpillStore {
     /// Open (create/truncate) the block region file at `path` for the
     /// given cache geometry. The sibling `<path>.prefix` file — the
@@ -290,34 +377,56 @@ impl SpillStore {
         Ok(SpillSlot(id))
     }
 
-    /// Swap one block back in, byte-for-byte. The slot stays live (and
-    /// re-readable) until [`SpillStore::free`] releases it, so a failed
-    /// re-admission can retry. Charges [`SpillStats::swap_in_bytes`].
+    /// Swap one block back in, byte-for-byte, synchronously on the
+    /// calling thread. The slot stays live (and re-readable) until
+    /// [`SpillStore::free`] releases it, so a failed re-admission can
+    /// retry. Charges [`SpillStats::swap_in_bytes`] and counts the call
+    /// as a blocking read ([`SpillStats::blocking_swap_in_ops`]).
     pub fn read_block(&mut self, slot: SpillSlot) -> io::Result<BlockSnapshot> {
         let id = slot.0 as usize;
         assert!(self.live.get(id).copied().unwrap_or(false), "read of a dead spill slot");
-        let base = slot.0 as u64 * self.slot_bytes as u64;
-        let mut header = [0u8; HEADER_BYTES];
-        self.file.read_exact_at(&mut header, base)?;
-        let mut rd = Rd::new(&header);
-        let dtype = decode_dtype(rd.u8()?)?;
-        let tokens = rd.u32()? as usize;
-        let slots = rd.u32()? as usize;
-        if slots != self.slots || tokens > self.block_tokens {
-            return Err(bad(format!(
-                "spill record geometry mismatch: {slots} slots x {tokens} tokens \
-                 vs store {} x {}",
-                self.slots, self.block_tokens
-            )));
-        }
-        let mut payload = vec![0u8; payload_len(dtype, tokens, slots, self.d)];
-        self.file.read_exact_at(&mut payload, base + HEADER_BYTES as u64)?;
-        let mut rd = Rd::new(&payload);
-        let snap = decode_payload(&mut rd, dtype, tokens, slots, self.d)?;
-        debug_assert!(rd.done());
+        let snap =
+            read_slot_record(&self.file, slot, self.slot_bytes, self.block_tokens, self.slots, self.d)?;
         self.stats.swap_in_bytes += snap.payload_bytes();
         self.stats.swap_in_ops += 1;
+        self.stats.blocking_swap_in_ops += 1;
         Ok(snap)
+    }
+
+    /// Independent read handle over the region file for the prefetch IO
+    /// thread (dup'd fd via `try_clone`).
+    pub fn reader(&self) -> io::Result<SlotReader> {
+        Ok(SlotReader {
+            file: self.file.try_clone()?,
+            block_tokens: self.block_tokens,
+            slots: self.slots,
+            d: self.d,
+            slot_bytes: self.slot_bytes,
+        })
+    }
+
+    /// Charge one staged (prefetched) block restore: the payload moved
+    /// through the IO thread, so swap-in traffic is conserved
+    /// (`swap_in == spill_out` still holds) while
+    /// [`SpillStats::blocking_swap_in_ops`] stays untouched.
+    pub fn note_prefetched_swap_in(&mut self, bytes: usize) {
+        self.stats.swap_in_bytes += bytes;
+        self.stats.swap_in_ops += 1;
+        self.stats.prefetch_hit_ops += 1;
+        self.stats.prefetch_bytes += bytes;
+    }
+
+    /// Charge `blocks` handed to the prefetch pipeline at a queue-front
+    /// kick.
+    pub fn note_prefetch_issued(&mut self, blocks: usize) {
+        self.stats.prefetch_issued_ops += blocks;
+    }
+
+    /// Charge `blocks` whose staged reads will never be consumed
+    /// (cancelled request, or a failed staged read falling back to the
+    /// blocking path).
+    pub fn note_prefetch_wasted(&mut self, blocks: usize) {
+        self.stats.prefetch_wasted_ops += blocks;
     }
 
     /// Release a slot back to the free list. Panics on double-free.
@@ -583,6 +692,105 @@ mod tests {
         let slot = store.write_block(&src.snapshot_rows(0, 4)).unwrap();
         store.free(slot);
         store.free(slot);
+    }
+
+    #[test]
+    fn slot_reader_matches_blocking_read_and_charges_nothing() {
+        let path = tmp("reader_eq");
+        let (slots, d, bt) = (2, 8, 8);
+        let mut store = SpillStore::open(&path, bt, slots, d).unwrap();
+        let src = filled(slots, d, 5, KvDtype::Int8);
+        let snap = src.snapshot_rows(0, 5);
+        let slot = store.write_block(&snap).unwrap();
+        let reader = store.reader().unwrap();
+        let staged = reader.read(slot).unwrap();
+        assert_snap_eq(&snap, &staged);
+        // The reader is stat-free: swap-in traffic is only charged when
+        // the session actually consumes a restore.
+        assert_eq!(store.stats().swap_in_ops, 0);
+        assert_eq!(store.stats().blocking_swap_in_ops, 0);
+        let blocking = store.read_block(slot).unwrap();
+        assert_snap_eq(&staged, &blocking);
+        assert_eq!(store.stats().swap_in_ops, 1);
+        assert_eq!(store.stats().blocking_swap_in_ops, 1);
+        // A staged consume conserves swap-in traffic without counting
+        // as a blocking read.
+        store.note_prefetched_swap_in(staged.payload_bytes());
+        assert_eq!(store.stats().swap_in_ops, 2);
+        assert_eq!(store.stats().blocking_swap_in_ops, 1);
+        assert_eq!(store.stats().prefetch_hit_ops, 1);
+        assert_eq!(store.stats().prefetch_bytes, staged.payload_bytes());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Satellite audit: a restart with a *smaller* geometry must never
+    /// import a persisted prefix written for the larger one — the
+    /// header check covers every axis (block_tokens, slots, d), in both
+    /// directions.
+    #[test]
+    fn prefix_sidecar_is_rejected_on_any_smaller_reopen_geometry() {
+        let path = tmp("prefix_shrink");
+        let prefix_path = {
+            let mut os = path.as_os_str().to_os_string();
+            os.push(".prefix");
+            PathBuf::from(os)
+        };
+        let _ = std::fs::remove_file(&prefix_path);
+        let (slots, d, bt) = (3, 6, 8);
+        let store = SpillStore::open(&path, bt, slots, d).unwrap();
+        let src = filled(slots, d, bt, KvDtype::F32);
+        store.persist_prefix(&[(7, None, &src.snapshot_rows(0, bt))]).unwrap();
+        drop(store);
+        for (bt2, slots2, d2) in
+            [(bt / 2, slots, d), (bt, slots - 1, d), (bt, slots, d - 1), (bt - 1, slots - 1, d)]
+        {
+            let shrunk = SpillStore::open(&path, bt2, slots2, d2).unwrap();
+            assert!(
+                shrunk.load_prefix().unwrap().is_none(),
+                "smaller geometry ({bt2}, {slots2}, {d2}) must cold-start, not import"
+            );
+        }
+        // The matching geometry still imports after all those opens
+        // (each of which truncated the region file).
+        let same = SpillStore::open(&path, bt, slots, d).unwrap();
+        assert_eq!(same.load_prefix().unwrap().expect("matching geometry imports").len(), 1);
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&prefix_path);
+    }
+
+    /// Satellite audit: sidecar entries embed their snapshots inline and
+    /// never reference region-file offsets, so a truncated (or scribbled)
+    /// region can never corrupt a warm start.
+    #[test]
+    fn prefix_sidecar_is_self_contained_from_the_region_file() {
+        let path = tmp("prefix_selfcont");
+        let prefix_path = {
+            let mut os = path.as_os_str().to_os_string();
+            os.push(".prefix");
+            PathBuf::from(os)
+        };
+        let _ = std::fs::remove_file(&prefix_path);
+        let (slots, d, bt) = (2, 4, 4);
+        let mut store = SpillStore::open(&path, bt, slots, d).unwrap();
+        let src = filled(slots, d, bt, KvDtype::Int4);
+        let snap = src.snapshot_rows(0, bt);
+        // Populate the region so there is something to destroy.
+        let _slot = store.write_block(&snap).unwrap();
+        store.persist_prefix(&[(3, None, &snap)]).unwrap();
+        drop(store);
+        // Scribble over the whole region file out-of-band.
+        std::fs::write(&path, b"garbage").unwrap();
+        let store2 = SpillStore::open(&path, bt, slots, d).unwrap();
+        let loaded = store2.load_prefix().unwrap().expect("sidecar survives region loss");
+        assert_eq!(loaded.len(), 1);
+        assert_snap_eq(&loaded[0].2, &snap);
+        // A truncated *sidecar*, by contrast, is a hard error — never a
+        // silent partial import.
+        let bytes = std::fs::read(&prefix_path).unwrap();
+        std::fs::write(&prefix_path, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(store2.load_prefix().is_err(), "truncated sidecar must error");
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&prefix_path);
     }
 
     #[test]

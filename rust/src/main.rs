@@ -8,7 +8,7 @@
 //!         [--block-tokens T] [--kv-cap-mb M] [--kv-headroom H]
 //!         [--prefix-cache] [--open-loop] [--rate R]
 //!         [--reuse] [--reuse-max-age A] [--kv-quant int4|int8|f32]
-//!         [--kv-spill PATH]
+//!         [--kv-spill PATH] [--kv-prefetch] [--kv-prefetch-depth N]
 //!                                                         drive the streaming session on a trace
 //!   serve --listen ADDR [--shards N] [--shard-queue-depth D] [engine flags]
 //!                                                         network front-end: stream tokens over HTTP
@@ -43,6 +43,8 @@ const SERVE_KEYS: &[&str] = &[
     "reuse-max-age",
     "kv-quant",
     "kv-spill",
+    "kv-prefetch",
+    "kv-prefetch-depth",
     "listen",
     "shards",
     "shard-queue-depth",
@@ -96,6 +98,7 @@ fn main() {
             println!("  vattn serve --kv-quant int8 --kv-cap-mb 16    verified int8 KV (4x pool capacity)");
             println!("  vattn serve --kv-quant int4 --kv-cap-mb 16    verified bit-packed int4 KV (~7x pool capacity)");
             println!("  vattn serve --kv-spill /tmp/kv.spill --kv-cap-mb 8  spill-to-disk cold tier (no preemption replays)");
+            println!("  vattn serve --kv-spill /tmp/kv.spill --kv-prefetch  overlap swap-ins with compute (async staging)");
             println!("  vattn serve --listen 127.0.0.1:8044 --shards 4      HTTP front-end (sharded, streaming)");
         }
     }
@@ -196,6 +199,17 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     if let Some(path) = args.get("kv-spill") {
         builder = builder.kv_spill(path);
     }
+    // Async swap-in staging: overlap cold-tier reads with compute by
+    // kicking prefetches for suspended requests near the queue front.
+    // Token streams are byte-identical with it on or off; it only
+    // removes the blocking re-admission reads. Requires --kv-spill.
+    if args.has_flag("kv-prefetch") {
+        if args.get("kv-spill").is_none() {
+            anyhow::bail!("--kv-prefetch stages cold-tier reads and requires --kv-spill PATH");
+        }
+        builder = builder.kv_prefetch(true);
+    }
+    builder = builder.kv_prefetch_depth(args.get_usize("kv-prefetch-depth", 2));
 
     // Network front-end: shard the engine config across N tick-threaded
     // sessions behind an HTTP listener. Attention mode comes from each

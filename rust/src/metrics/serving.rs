@@ -199,6 +199,15 @@ pub struct PagingSummary {
     pub swap_in_bytes: usize,
     /// Swap-in block reads from the cold tier.
     pub swap_in_ops: usize,
+    /// Swap-in reads that blocked the scheduler thread (synchronous
+    /// `read_block` calls — the stall `--kv-prefetch` removes).
+    pub blocking_swap_in_ops: usize,
+    /// Cold-tier blocks handed to the async staging engine.
+    pub prefetch_issued_ops: usize,
+    /// Staged blocks consumed at resume (overlap that paid off).
+    pub prefetch_hit_ops: usize,
+    /// Staged blocks discarded (cancelled or failed before consume).
+    pub prefetch_wasted_ops: usize,
     /// High-water mark of resident KV blocks (shared blocks count once).
     pub peak_blocks_in_use: usize,
     /// Pool capacity in blocks (`None` = unbounded).
@@ -225,6 +234,10 @@ impl From<&SessionStats> for PagingSummary {
             spill_out_ops: s.spill_out_ops,
             swap_in_bytes: s.swap_in_bytes,
             swap_in_ops: s.swap_in_ops,
+            blocking_swap_in_ops: s.blocking_swap_in_ops,
+            prefetch_issued_ops: s.prefetch_issued_ops,
+            prefetch_hit_ops: s.prefetch_hit_ops,
+            prefetch_wasted_ops: s.prefetch_wasted_ops,
             peak_blocks_in_use: s.peak_blocks_in_use,
             capacity_blocks: s.capacity_blocks,
             cow_copies: s.cow_copies,
@@ -242,6 +255,26 @@ impl PagingSummary {
         crate::kvcache::store::compression_ratio(self.bytes_per_token_fp32, self.bytes_per_token)
     }
 
+    /// Fraction of staged blocks that were consumed (0.0 with prefetch
+    /// off or before any kick).
+    pub fn prefetch_hit_rate(&self) -> f64 {
+        if self.prefetch_issued_ops == 0 {
+            0.0
+        } else {
+            self.prefetch_hit_ops as f64 / self.prefetch_issued_ops as f64
+        }
+    }
+
+    /// Fraction of swap-ins that overlapped compute instead of blocking
+    /// the scheduler (1.0 = every restore came from a staged buffer).
+    pub fn swap_in_overlap_rate(&self) -> f64 {
+        if self.swap_in_ops == 0 {
+            0.0
+        } else {
+            1.0 - self.blocking_swap_in_ops as f64 / self.swap_in_ops as f64
+        }
+    }
+
     /// One-line table: KV paging counters for the run.
     pub fn render(&self) -> String {
         let mut t = Table::new(
@@ -252,6 +285,8 @@ impl PagingSummary {
                 "preemptions",
                 "replays",
                 "spill MiB out/in",
+                "prefetch hit/waste",
+                "overlap",
                 "peak blocks",
                 "capacity",
                 "cow",
@@ -270,6 +305,8 @@ impl PagingSummary {
                 f(self.spill_out_bytes as f64 / (1 << 20) as f64, 1),
                 f(self.swap_in_bytes as f64 / (1 << 20) as f64, 1)
             ),
+            format!("{}/{}", self.prefetch_hit_ops, self.prefetch_wasted_ops),
+            format!("{:.0}%", self.swap_in_overlap_rate() * 100.0),
             self.peak_blocks_in_use.to_string(),
             self.capacity_blocks.map_or("unbounded".to_string(), |c| c.to_string()),
             self.cow_copies.to_string(),
@@ -817,6 +854,11 @@ mod tests {
             spill_out_ops: 6,
             swap_in_bytes: 3 << 20,
             swap_in_ops: 6,
+            blocking_swap_in_ops: 0,
+            prefetch_issued_ops: 8,
+            prefetch_hit_ops: 6,
+            prefetch_wasted_ops: 2,
+            prefetch_bytes: 3 << 20,
             preemption_replays: 2,
             kv_dtype: KvDtype::Int8,
             bytes_per_token: 288,
@@ -828,6 +870,11 @@ mod tests {
         assert_eq!(s.spill_out_bytes, 3 << 20);
         assert_eq!(s.swap_in_ops, 6);
         assert_eq!(s.preemption_replays, 2);
+        assert!((s.prefetch_hit_rate() - 0.75).abs() < 1e-12, "6 of 8 staged blocks consumed");
+        assert!(
+            (s.swap_in_overlap_rate() - 1.0).abs() < 1e-12,
+            "0 blocking reads of 6 swap-ins = full overlap"
+        );
         assert!((s.compression_ratio() - 1024.0 / 288.0).abs() < 1e-12);
         assert!(s.compression_ratio() >= 3.5);
         let out = s.render();
@@ -835,12 +882,16 @@ mod tests {
         assert!(out.contains("75.0%"), "{out}");
         assert!(out.contains("60/80"));
         assert!(out.contains("3.0/3.0"), "spill out/in MiB column: {out}");
+        assert!(out.contains("6/2"), "prefetch hit/waste column: {out}");
+        assert!(out.contains("100%"), "overlap column: {out}");
         assert!(out.contains("128"));
         assert!(out.contains("int8"), "{out}");
         assert!(out.contains("3.56x"), "{out}");
         let unbounded = PagingSummary::from(&SessionStats::default());
         assert!(unbounded.render().contains("unbounded"));
         assert_eq!(unbounded.prefix_hit_rate, 0.0);
+        assert_eq!(unbounded.prefetch_hit_rate(), 0.0, "no kicks degrades to 0, not NaN");
+        assert_eq!(unbounded.swap_in_overlap_rate(), 0.0, "no swap-ins degrades to 0, not NaN");
         assert_eq!(unbounded.compression_ratio(), 1.0, "unpopulated bytes degrade to 1x");
         assert!(unbounded.render().contains("f32"));
     }

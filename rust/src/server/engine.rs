@@ -156,6 +156,22 @@ pub struct EngineConfig {
     /// process restarts. `None` = preemption falls back to deterministic
     /// replay (the original behavior).
     pub kv_spill: Option<std::path::PathBuf>,
+    /// Overlap cold-tier swap-in with compute (`vattn serve
+    /// --kv-prefetch`; requires `kv_spill`, ignored without it). A
+    /// dedicated `vattn-spill-io` thread starts reading a swap-out
+    /// victim's slots the moment its request reaches the front window
+    /// of the waiting queue — before a batch slot frees — into staged
+    /// snapshots; re-admission then consumes the staged buffers instead
+    /// of issuing blocking reads on the scheduler thread. Streams are
+    /// byte-identical prefetch on vs off at any worker count (the
+    /// staged path decodes the same bytes through the same code), so
+    /// this is purely a stall-removal knob.
+    pub kv_prefetch: bool,
+    /// How many waiting-queue entries from the front the prefetch kick
+    /// scans each tick. Depth 1 stages only the imminent re-admission;
+    /// deeper windows hide more IO behind compute at the cost of staged
+    /// buffers that may be wasted if a request is cancelled first.
+    pub kv_prefetch_depth: usize,
     /// Drive the session's event clock virtually instead of from the
     /// wall clock: each `tick` advances a fixed quantum, and an idle
     /// gap before the next queued arrival *jumps* the clock to that
@@ -184,6 +200,8 @@ impl Default for EngineConfig {
             max_seq_len: None,
             kv_dtype: KvDtype::F32,
             kv_spill: None,
+            kv_prefetch: false,
+            kv_prefetch_depth: 2,
             virtual_clock: false,
         }
     }
@@ -260,6 +278,16 @@ impl EngineConfigBuilder {
 
     pub fn kv_spill(mut self, v: impl Into<std::path::PathBuf>) -> Self {
         self.cfg.kv_spill = Some(v.into());
+        self
+    }
+
+    pub fn kv_prefetch(mut self, v: bool) -> Self {
+        self.cfg.kv_prefetch = v;
+        self
+    }
+
+    pub fn kv_prefetch_depth(mut self, v: usize) -> Self {
+        self.cfg.kv_prefetch_depth = v;
         self
     }
 
@@ -528,6 +556,8 @@ mod tests {
             .max_seq_len(4096)
             .kv_dtype(KvDtype::Int8)
             .kv_spill("/tmp/kv.spill")
+            .kv_prefetch(true)
+            .kv_prefetch_depth(3)
             .virtual_clock(true)
             .build();
         assert_eq!(cfg.max_batch, 7);
@@ -542,6 +572,8 @@ mod tests {
         assert_eq!(cfg.max_seq_len, Some(4096));
         assert_eq!(cfg.kv_dtype, KvDtype::Int8);
         assert_eq!(cfg.kv_spill.as_deref(), Some(std::path::Path::new("/tmp/kv.spill")));
+        assert!(cfg.kv_prefetch);
+        assert_eq!(cfg.kv_prefetch_depth, 3);
         assert!(cfg.virtual_clock);
     }
 

@@ -122,10 +122,12 @@ pub fn read_request<R: Read>(
         .transpose()?
         .unwrap_or(0);
     if content_len > MAX_BODY_BYTES {
-        return Err(io::Error::new(
-            io::ErrorKind::InvalidData,
-            format!("request body of {content_len} bytes exceeds {MAX_BODY_BYTES}"),
-        ));
+        // Reject before reserving a byte: `content_len` is untrusted
+        // client input, and sizing a buffer from it would let one
+        // request head commit the server to an arbitrary allocation.
+        // The typed payload lets the connection handler answer 413
+        // (the head parsed fine) instead of just dropping the socket.
+        return Err(io::Error::new(io::ErrorKind::InvalidData, BodyTooLarge { content_len }));
     }
     let mut body = buf[head_end + 4..].to_vec();
     while body.len() < content_len {
@@ -156,6 +158,28 @@ fn find_head_end(buf: &[u8]) -> Option<usize> {
     buf.windows(4).position(|w| w == b"\r\n\r\n")
 }
 
+/// Marker payload for a `Content-Length` beyond [`MAX_BODY_BYTES`]. The
+/// request head parsed fine, so unlike every other parse failure the
+/// handler can still send a response (`413 Payload Too Large`) before
+/// closing the connection.
+#[derive(Debug)]
+pub struct BodyTooLarge {
+    pub content_len: usize,
+}
+
+impl std::fmt::Display for BodyTooLarge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request body of {} bytes exceeds {MAX_BODY_BYTES}", self.content_len)
+    }
+}
+
+impl std::error::Error for BodyTooLarge {}
+
+/// True when `e` is [`read_request`]'s oversized-body rejection.
+pub fn is_body_too_large(e: &io::Error) -> bool {
+    e.get_ref().map_or(false, |inner| inner.is::<BodyTooLarge>())
+}
+
 /// Canonical reason phrase for the status codes this server emits.
 pub fn reason(status: u16) -> &'static str {
     match status {
@@ -163,6 +187,7 @@ pub fn reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        413 => "Payload Too Large",
         429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
@@ -403,9 +428,26 @@ mod tests {
 
     #[test]
     fn oversized_body_is_rejected_up_front() {
+        // One past the cap: rejected before any body byte is read (or
+        // allocated), with the typed payload the 413 path keys on.
         let raw = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
         let err = read_request(&mut Cursor::new(raw.as_bytes()), |_| true).unwrap_err();
         assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(is_body_too_large(&err), "oversized body must carry the 413 marker: {err}");
+        assert!(err.to_string().contains(&(MAX_BODY_BYTES + 1).to_string()), "{err}");
+        // Exactly at the cap: the head is accepted — the parse then
+        // fails only because this stream never delivers the body
+        // (UnexpectedEof, not the 413 marker).
+        let raw = format!("POST / HTTP/1.1\r\nContent-Length: {MAX_BODY_BYTES}\r\n\r\n");
+        let err = read_request(&mut Cursor::new(raw.as_bytes()), |_| true).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        assert!(!is_body_too_large(&err));
+        // A giant Content-Length must not have reserved memory up
+        // front: a ludicrous value parses (usize) and still rejects
+        // cleanly instead of aborting on allocation.
+        let raw = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", usize::MAX);
+        let err = read_request(&mut Cursor::new(raw.as_bytes()), |_| true).unwrap_err();
+        assert!(is_body_too_large(&err));
     }
 
     #[test]

@@ -163,9 +163,24 @@ fn handle_connection(stream: TcpStream, router: &Router, stop: &AtomicBool) -> i
     loop {
         let mut reader = &stream;
         let req =
-            match read_request(&mut reader, |partial| partial || !stop.load(Ordering::SeqCst))? {
-                Some(req) => req,
-                None => return Ok(()), // clean close or stopping while idle
+            match read_request(&mut reader, |partial| partial || !stop.load(Ordering::SeqCst)) {
+                Ok(Some(req)) => req,
+                Ok(None) => return Ok(()), // clean close or stopping while idle
+                Err(e) if crate::server::http::is_body_too_large(&e) => {
+                    // The head parsed fine, so the client can still be
+                    // told why before the socket closes (the unread
+                    // body bytes make keep-alive unsafe afterwards).
+                    let mut writer = &stream;
+                    let _ = error_response(
+                        &mut writer,
+                        413,
+                        "payload_too_large",
+                        &e.to_string(),
+                        false,
+                    );
+                    return Err(e);
+                }
+                Err(e) => return Err(e),
             };
         let close = req.wants_close();
         let mut writer = &stream;
@@ -396,6 +411,9 @@ fn shard_json(s: &ShardStats) -> Json {
                 .field("preemption_replays", Json::num(paging.preemption_replays as f64))
                 .field("spill_out_bytes", Json::num(paging.spill_out_bytes as f64))
                 .field("swap_in_bytes", Json::num(paging.swap_in_bytes as f64))
+                .field("blocking_swap_in_ops", Json::num(paging.blocking_swap_in_ops as f64))
+                .field("prefetch_hit_rate", Json::num(paging.prefetch_hit_rate()))
+                .field("swap_in_overlap_rate", Json::num(paging.swap_in_overlap_rate()))
                 .field("peak_blocks_in_use", Json::num(paging.peak_blocks_in_use as f64))
                 .field("kv_dtype", Json::str(paging.kv_dtype.name())),
         )

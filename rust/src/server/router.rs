@@ -493,20 +493,24 @@ fn shard_loop<B: Backend + Send + Sync + 'static>(
                 }
             }
             Command::Cancel { global, disconnect, reply } => {
-                let found = if let Some(rid) = by_global.remove(&global) {
-                    let ok = session.cancel(rid).is_ok();
-                    if let Some((gid, tx)) = subs.remove(&rid) {
-                        let _ = tx.send(StreamEvent::Cancelled { id: gid });
+                let found = match by_global.get(&global).copied() {
+                    Some(rid) => {
+                        let ok = session.cancel(rid).is_ok();
+                        if let Some((gid, tx)) = unregister(rid, subs, by_global, &outstanding) {
+                            let _ = tx.send(StreamEvent::Cancelled { id: gid });
+                            if disconnect {
+                                stats.disconnected += 1;
+                            } else {
+                                stats.cancelled += 1;
+                            }
+                        }
+                        ok
                     }
-                    if disconnect {
-                        stats.disconnected += 1;
-                    } else {
-                        stats.cancelled += 1;
-                    }
-                    outstanding.fetch_sub(1, Ordering::SeqCst);
-                    ok
-                } else {
-                    false
+                    // Unknown id, already terminal, or already
+                    // unregistered by a racing disconnect: no counter
+                    // adjustment — its slot was released exactly once
+                    // when the maps were emptied.
+                    None => false,
                 };
                 let _ = reply.send(found);
             }
@@ -583,11 +587,13 @@ fn shard_loop<B: Backend + Send + Sync + 'static>(
                 // Engine invariant violation: fail every subscriber
                 // loudly, then panic so shutdown()'s join surfaces it.
                 let info = ErrorInfo::new(ErrorKind::Page, format!("{e}"));
-                for (_, (gid, tx)) in subs.drain() {
-                    let _ = tx.send(StreamEvent::Failed { id: gid, error: info.clone() });
-                    outstanding.fetch_sub(1, Ordering::SeqCst);
+                let rids: Vec<RequestId> = subs.keys().copied().collect();
+                for rid in rids {
+                    if let Some((gid, tx)) = unregister(rid, &mut subs, &mut by_global, &outstanding)
+                    {
+                        let _ = tx.send(StreamEvent::Failed { id: gid, error: info.clone() });
+                    }
                 }
-                by_global.clear();
                 if let Some(reply) = drain_reply.take() {
                     let _ = reply.send(snapshot(&stats, &session));
                 }
@@ -612,6 +618,29 @@ fn snapshot<B: Backend + Send + Sync + 'static>(
     s
 }
 
+/// Release one registered request: remove its `subs`/`by_global` pair
+/// and decrement the router-visible `outstanding` counter, as a single
+/// structural operation. This is the ONLY place a *registered*
+/// request's counter slot is released (the submit-time reject paths
+/// decrement before registration, which is mutually exclusive with
+/// this by construction), so no interleaving of disconnect-detection,
+/// explicit cancel, and terminal events can decrement twice for one
+/// request — whichever path runs second finds the maps already empty
+/// and does nothing.
+fn unregister(
+    rid: RequestId,
+    subs: &mut HashMap<RequestId, (GlobalId, Sender<StreamEvent>)>,
+    by_global: &mut HashMap<GlobalId, RequestId>,
+    outstanding: &AtomicI64,
+) -> Option<(GlobalId, Sender<StreamEvent>)> {
+    let entry = subs.remove(&rid);
+    if let Some((gid, _)) = &entry {
+        by_global.remove(gid);
+        outstanding.fetch_sub(1, Ordering::SeqCst);
+    }
+    entry
+}
+
 fn dispatch<B: Backend + Send + Sync + 'static>(
     ev: Event,
     session: &mut Session<B>,
@@ -633,28 +662,22 @@ fn dispatch<B: Backend + Send + Sync + 'static>(
                 // Subscriber hung up without an explicit cancel:
                 // cancel now so the KV lease (and any cold-tier
                 // slots) return immediately.
-                if let Some((gid, _)) = subs.remove(&id) {
-                    by_global.remove(&gid);
+                if unregister(id, subs, by_global, outstanding).is_some() {
+                    stats.disconnected += 1;
                 }
                 let _ = session.cancel(id);
-                stats.disconnected += 1;
-                outstanding.fetch_sub(1, Ordering::SeqCst);
             }
         }
         Event::Finished { id, result, .. } => {
-            if let Some((gid, tx)) = subs.remove(&id) {
-                by_global.remove(&gid);
+            if let Some((gid, tx)) = unregister(id, subs, by_global, outstanding) {
                 let _ = tx.send(StreamEvent::Finished { id: gid, result });
                 stats.completed += 1;
-                outstanding.fetch_sub(1, Ordering::SeqCst);
             }
         }
         Event::Rejected { id, reason, .. } => {
-            if let Some((gid, tx)) = subs.remove(&id) {
-                by_global.remove(&gid);
+            if let Some((gid, tx)) = unregister(id, subs, by_global, outstanding) {
                 let _ = tx.send(StreamEvent::Failed { id: gid, error: ErrorInfo::from(&reason) });
                 stats.failed += 1;
-                outstanding.fetch_sub(1, Ordering::SeqCst);
             }
         }
     }
@@ -841,6 +864,83 @@ mod tests {
             std::thread::sleep(Duration::from_millis(2));
         }
         r.shutdown();
+    }
+
+    #[test]
+    fn disconnect_storm_settles_outstanding_to_exactly_zero() {
+        // A storm of client hang-ups racing explicit cancels and
+        // terminal events. The router-visible `outstanding` counters
+        // must return to exactly 0 — a double decrement on any
+        // disconnect/cancel/terminal interleaving would drive a counter
+        // negative and skew least-loaded routing for every later short
+        // prompt.
+        let cfg = EngineConfig::builder().max_batch(4).build();
+        let r = router(2, 64, cfg);
+        let total = 32u64;
+        for round in 0..4u32 {
+            let mut keep = Vec::new();
+            for i in 0..8u32 {
+                let (id, rx) =
+                    r.submit(prompt(16, round * 31 + i), GenOptions::new(24));
+                if i % 2 == 0 {
+                    // Hang up as soon as streaming starts...
+                    loop {
+                        match rx.recv().expect("event") {
+                            StreamEvent::Token { .. } => break,
+                            StreamEvent::Accepted { .. } => {}
+                            other => panic!("unexpected {other:?}"),
+                        }
+                    }
+                    drop(rx);
+                    // ...and half of those also race an explicit cancel
+                    // against the shard's own dead-subscriber sweep.
+                    if i % 4 == 0 {
+                        let _ = r.cancel(id);
+                    }
+                } else {
+                    keep.push(rx);
+                }
+            }
+            for rx in keep {
+                let (toks, term) = collect(&rx);
+                assert_eq!(toks.len(), 24);
+                assert!(matches!(term, Some(StreamEvent::Finished { .. })));
+            }
+        }
+        // Wait for every shard to notice its dead subscribers.
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        loop {
+            let counters: Vec<i64> =
+                r.shards.iter().map(|s| s.outstanding.load(Ordering::SeqCst)).collect();
+            let stats = r.shard_stats();
+            if counters.iter().all(|&c| c == 0)
+                && stats.iter().all(|s| s.outstanding == 0 && s.kv_blocks_in_use == 0)
+            {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "outstanding never settled: counters={counters:?}"
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // Exactly zero — not merely "eventually non-positive".
+        for (i, s) in r.shards.iter().enumerate() {
+            assert_eq!(s.outstanding.load(Ordering::SeqCst), 0, "shard {i} counter skewed");
+        }
+        let stats = r.shutdown();
+        // Every submission resolves exactly once across the terminal
+        // counters (a fast finisher may beat its client's hang-up, so
+        // the completed/disconnected split is racy — the total is not).
+        let resolved: u64 = stats
+            .iter()
+            .map(|s| s.completed + s.failed + s.cancelled + s.disconnected + s.shed + s.rejected)
+            .sum();
+        assert_eq!(resolved, total, "each request must resolve exactly once: {stats:?}");
+        assert!(
+            stats.iter().map(|s| s.cancelled + s.disconnected).sum::<u64>() > 0,
+            "the storm must actually exercise the disconnect path"
+        );
     }
 
     #[test]

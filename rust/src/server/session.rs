@@ -56,8 +56,8 @@ use super::engine::{AttentionMode, Backend, EngineConfig};
 use super::RequestResult;
 use crate::attention::Selection;
 use crate::kvcache::{
-    BlockId, BlockPool, CowOutcome, KvCache, KvDtype, PageError, PrefixCache, SpillSlot,
-    SpillStore, TierStats,
+    BlockId, BlockPool, CowOutcome, KvCache, KvDtype, PageError, PrefetchEngine, PrefixCache,
+    SpillSlot, SpillStore, TierStats,
 };
 use crate::model::{ModelConfig, Sampler, StepOut};
 use crate::policies::{
@@ -363,6 +363,20 @@ pub struct SessionStats {
     pub swap_in_bytes: usize,
     /// Swap-in block reads from the cold tier.
     pub swap_in_ops: usize,
+    /// Swap-in reads issued synchronously on the scheduler thread —
+    /// the stalls `--kv-prefetch` exists to remove (~0 with prefetch
+    /// on; equal to `swap_in_ops` with it off).
+    pub blocking_swap_in_ops: usize,
+    /// Blocks handed to the async prefetch pipeline at queue-front
+    /// kicks (0 without `--kv-prefetch`).
+    pub prefetch_issued_ops: usize,
+    /// Prefetched blocks consumed at resume instead of blocking reads.
+    pub prefetch_hit_ops: usize,
+    /// Prefetched blocks discarded (cancelled while staging, or the
+    /// staged read failed and resume fell back to blocking reads).
+    pub prefetch_wasted_ops: usize,
+    /// Payload bytes restored through the staged prefetch path.
+    pub prefetch_bytes: usize,
     /// Preemptions served by full recompute replay — the fallback when
     /// no spill store is configured. Always 0 with `--kv-spill`: every
     /// preemption is a swap-out there, never a replay.
@@ -391,6 +405,16 @@ impl SessionStats {
     /// (1.0 when storing f32, or before stats were populated).
     pub fn kv_compression_ratio(&self) -> f64 {
         crate::kvcache::store::compression_ratio(self.bytes_per_token_fp32, self.bytes_per_token)
+    }
+
+    /// Fraction of prefetch-issued blocks consumed at resume (0 when
+    /// the pipeline never ran).
+    pub fn prefetch_hit_rate(&self) -> f64 {
+        if self.prefetch_issued_ops == 0 {
+            0.0
+        } else {
+            self.prefetch_hit_ops as f64 / self.prefetch_issued_ops as f64
+        }
     }
 }
 
@@ -449,6 +473,11 @@ struct Suspended {
     decode_s: f64,
     density_sum: f64,
     density_n: usize,
+    /// In-flight staged read over `slots` (`--kv-prefetch`): set by the
+    /// queue-front kick, consumed by `resume`, invalidated by `cancel`.
+    /// The slots stay live until one of those happens, so the IO thread
+    /// can never stage a recycled slot into this request.
+    prefetch_job: Option<u64>,
 }
 
 /// One active request's serving state. Fully self-contained (cache,
@@ -524,6 +553,10 @@ pub struct Session<B: Backend> {
     /// becomes swap-out / swap-in instead of recompute replay, and the
     /// prefix radix persists across sessions via the sibling file.
     spill: Option<SpillStore>,
+    /// Async swap-in pipeline (`EngineConfig::kv_prefetch`; requires a
+    /// spill store): stages suspended requests' cold-tier blocks on the
+    /// `vattn-spill-io` thread while compute continues.
+    prefetch: Option<PrefetchEngine>,
     preemptions: u64,
     /// Preemptions that fell back to full recompute replay (non-spill
     /// mode only; always 0 when `spill` is set).
@@ -599,6 +632,14 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
                 }
             }
         }
+        // The prefetch pipeline reads through a dup'd fd, so it needs a
+        // store to clone from; without `--kv-spill` the flag is inert.
+        let prefetch = match (cfg.kv_prefetch, spill.as_ref()) {
+            (true, Some(store)) => Some(PrefetchEngine::new(
+                store.reader().unwrap_or_else(|e| panic!("cloning KV spill read fd: {e}")),
+            )),
+            _ => None,
+        };
         let seed_rng = Rng::new(cfg.seed);
         let vclock = cfg.virtual_clock.then_some(0.0);
         Session {
@@ -609,6 +650,7 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             blocks,
             prefix,
             spill,
+            prefetch,
             preemptions: 0,
             preemption_replays: 0,
             retired_reuse: ReuseStats::default(),
@@ -733,6 +775,11 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             spill_out_ops: self.spill.as_ref().map_or(0, |s| s.stats().spill_out_ops),
             swap_in_bytes: self.spill.as_ref().map_or(0, |s| s.stats().swap_in_bytes),
             swap_in_ops: self.spill.as_ref().map_or(0, |s| s.stats().swap_in_ops),
+            blocking_swap_in_ops: self.spill.as_ref().map_or(0, |s| s.stats().blocking_swap_in_ops),
+            prefetch_issued_ops: self.spill.as_ref().map_or(0, |s| s.stats().prefetch_issued_ops),
+            prefetch_hit_ops: self.spill.as_ref().map_or(0, |s| s.stats().prefetch_hit_ops),
+            prefetch_wasted_ops: self.spill.as_ref().map_or(0, |s| s.stats().prefetch_wasted_ops),
+            prefetch_bytes: self.spill.as_ref().map_or(0, |s| s.stats().prefetch_bytes),
             preemption_replays: self.preemption_replays,
             kv_dtype: self.cfg.kv_dtype,
             bytes_per_token: self.cfg.kv_dtype.kv_bytes_per_token(&self.mcfg),
@@ -789,8 +836,20 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             merge_reuse(&mut self.retired_reuse, &w.policies);
             // A suspended request owns cold-tier slots, not pool blocks.
             if let Some(sus) = w.suspended.take() {
+                // Cancel-while-prefetching unwind: kill the staged job
+                // *before* freeing its slots, so a read racing the
+                // recycle below is discarded instead of consumed.
+                if let Some(job) = sus.prefetch_job {
+                    self.prefetch
+                        .as_mut()
+                        .expect("prefetch job without a prefetch engine")
+                        .invalidate(job);
+                }
                 let store =
                     self.spill.as_mut().expect("suspended request without a spill store");
+                if sus.prefetch_job.is_some() {
+                    store.note_prefetch_wasted(sus.slots.len());
+                }
                 for slot in sus.slots {
                     store.free(slot);
                 }
@@ -827,6 +886,12 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
             *t += VIRTUAL_TICK_S;
         }
         let now = self.now_s();
+
+        // ── phase 0: queue-front prefetch kick — start staging the
+        // cold-tier blocks of suspended requests near the queue front
+        // *before* any batch slot frees, so the IO overlaps this tick's
+        // compute instead of stalling a later admission.
+        self.kick_prefetch();
 
         // ── phase 1: demand-paged block accounting (serial — workers
         // never touch the pool). May preempt on exhaustion.
@@ -941,12 +1006,15 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
                 // Exhausted even after eviction: preempt. Every active
                 // request owns ≥ 1 private block (the final prompt token
                 // is never shared), so each preemption makes progress.
-                let victim = self.active.len() - 1;
+                let victim = self.pick_victim();
                 let self_preempted = victim == i;
                 self.preempt(victim, events, now)?;
                 if self_preempted {
                     // `i` now indexes the next request (or the end).
                     continue 'requests;
+                }
+                if victim < i {
+                    i -= 1;
                 }
             }
         }
@@ -1012,6 +1080,61 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
         match self.prefix.as_mut() {
             Some(p) => p.evict_one(&mut self.blocks).map_err(EngineError::Page),
             None => Ok(false),
+        }
+    }
+
+    /// Deterministic preemption victim for pool exhaustion.
+    ///
+    /// Replay mode keeps the pure LIFO rule (most recently admitted).
+    /// Spill mode refines it with a dtype-aware policy: among the active
+    /// requests, prefer the narrowest KV dtype — int4, then int8, then
+    /// f32 — because at equal freed pool blocks a quantized victim moves
+    /// 4–7.5x fewer cold-tier bytes in each swap direction. Ties
+    /// (including the uniform-dtype common case) resolve to the highest
+    /// index, i.e. strict LIFO, so the policy is inert unless per-request
+    /// dtypes actually differ — and it is always deterministic, because
+    /// dtype is request state, not timing.
+    fn pick_victim(&self) -> usize {
+        let last = self.active.len() - 1;
+        if self.spill.is_none() {
+            return last;
+        }
+        fn width_rank(d: KvDtype) -> u8 {
+            match d {
+                KvDtype::Int4 => 0,
+                KvDtype::Int8 => 1,
+                KvDtype::F32 => 2,
+            }
+        }
+        let mut best = last;
+        for i in (0..self.active.len()).rev() {
+            if width_rank(self.active[i].cache.dtype())
+                < width_rank(self.active[best].cache.dtype())
+            {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Phase-0 worker: start staged cold-tier reads for suspended
+    /// requests inside the front window of the waiting queue (depth
+    /// `kv_prefetch_depth`), so their bytes are in host buffers before a
+    /// batch slot frees. Idempotent per suspension — a request is kicked
+    /// at most once while it waits (`prefetch_job` marks it), and the
+    /// job is consumed by [`Session::resume`] or invalidated by
+    /// [`Session::cancel`] before its slots are recycled.
+    fn kick_prefetch(&mut self) {
+        let Some(pf) = self.prefetch.as_mut() else { return };
+        let store = self.spill.as_mut().expect("prefetch without a spill store");
+        let depth = self.cfg.kv_prefetch_depth.max(1);
+        for w in self.waiting.iter_mut().take(depth) {
+            if let Some(sus) = w.suspended.as_mut() {
+                if sus.prefetch_job.is_none() && !sus.slots.is_empty() {
+                    sus.prefetch_job = Some(pf.kick(&sus.slots));
+                    store.note_prefetch_issued(sus.slots.len());
+                }
+            }
         }
     }
 
@@ -1108,8 +1231,24 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
                     decode_s: a.decode_s,
                     density_sum: a.density_sum,
                     density_n: a.density_n,
+                    prefetch_job: None,
                 }),
             });
+            // The victim is now at the queue front: if nothing is ahead
+            // of it, it is the very next admission candidate, so start
+            // staging its blocks immediately — the read overlaps the
+            // rest of this tick's compute instead of stalling resume.
+            if let (Some(pf), Some(front)) = (self.prefetch.as_mut(), self.waiting.front_mut()) {
+                if let Some(sus) = front.suspended.as_mut() {
+                    if sus.prefetch_job.is_none() && !sus.slots.is_empty() {
+                        sus.prefetch_job = Some(pf.kick(&sus.slots));
+                        self.spill
+                            .as_mut()
+                            .expect("prefetch without a spill store")
+                            .note_prefetch_issued(sus.slots.len());
+                    }
+                }
+            }
             return Ok(());
         }
         self.preemption_replays += 1;
@@ -1377,27 +1516,55 @@ impl<B: Backend + Send + Sync + 'static> Session<B> {
         lease: Vec<BlockId>,
         now: f64,
     ) -> Result<Active, EngineError> {
-        let sus = w.suspended.take().expect("resume of a non-suspended request");
+        let mut sus = w.suspended.take().expect("resume of a non-suspended request");
+        // Consume-or-fallback: if a queue-front kick staged this
+        // request's blocks, wait for that job — the overlap already
+        // happened, so the wait covers only whatever tail is still in
+        // flight — and load the staged snapshots. A miss (staged read
+        // failed, or the IO thread is gone) falls back to the blocking
+        // path below, which re-reads the same bytes through the same
+        // record decoder, so the resumed stream is byte-identical
+        // either way.
+        let had_job = sus.prefetch_job.is_some();
+        let staged = sus.prefetch_job.take().and_then(|job| {
+            self.prefetch.as_mut().expect("prefetch job without a prefetch engine").wait(job)
+        });
         let store = self.spill.as_mut().expect("suspended request without a spill store");
         let mut cache =
             KvCache::paged_dtype(&self.mcfg, self.cfg.block_tokens.max(1), lease, w.kv_dtype);
-        for &slot in &sus.slots {
-            match store.read_block(slot) {
-                Ok(snap) => cache.load_block(&snap),
-                Err(e) => {
-                    // Unreadable region file: unwind so nothing leaks —
-                    // every cold-tier slot (read ones stay live until
-                    // freed) and the fresh lease go back, then surface
-                    // the IO error as a backend failure.
-                    for &s in &sus.slots {
-                        store.free(s);
+        if let Some(snaps) = staged {
+            debug_assert_eq!(snaps.len(), sus.slots.len(), "staged job covers every slot");
+            for snap in &snaps {
+                // `load_block` cannot fail for a correctly-sized lease
+                // (the snapshots were decoded and geometry-checked by
+                // the IO thread), so this arm has no unwind path.
+                cache.load_block(snap);
+                store.note_prefetched_swap_in(snap.payload_bytes());
+            }
+        } else {
+            if had_job {
+                // The kick was charged as issued but its stage was
+                // never consumed.
+                store.note_prefetch_wasted(sus.slots.len());
+            }
+            for &slot in &sus.slots {
+                match store.read_block(slot) {
+                    Ok(snap) => cache.load_block(&snap),
+                    Err(e) => {
+                        // Unreadable region file: unwind so nothing leaks —
+                        // every cold-tier slot (read ones stay live until
+                        // freed) and the fresh lease go back, then surface
+                        // the IO error as a backend failure.
+                        for &s in &sus.slots {
+                            store.free(s);
+                        }
+                        let l = cache.release_blocks();
+                        self.blocks.free(l).map_err(EngineError::Page)?;
+                        // The request is terminating, not resuming: bank its
+                        // reuse counters like every other retirement path.
+                        merge_reuse(&mut self.retired_reuse, &w.policies);
+                        return Err(EngineError::Backend(e.into()));
                     }
-                    let l = cache.release_blocks();
-                    self.blocks.free(l).map_err(EngineError::Page)?;
-                    // The request is terminating, not resuming: bank its
-                    // reuse counters like every other retirement path.
-                    merge_reuse(&mut self.retired_reuse, &w.policies);
-                    return Err(EngineError::Backend(e.into()));
                 }
             }
         }
@@ -2162,6 +2329,174 @@ mod tests {
             .any(|e| matches!(e, Event::Finished { id, result, .. } if *id == a && result.tokens.len() == 20)));
         assert_eq!(s.kv_blocks_in_use(), 0);
         assert_eq!(s.spill_live_blocks(), Some(0));
+        rm_spill(&path);
+    }
+
+    #[test]
+    fn prefetch_overlaps_swap_in_and_streams_stay_byte_identical() {
+        // The async staging pipeline must be invisible in outputs: token
+        // streams identical across {no spill, spill, spill+prefetch},
+        // while the prefetch run retires every swap-in from staged
+        // buffers — zero blocking cold-tier reads on the scheduler
+        // thread (the queue-front kick fires at preemption, strictly
+        // before the resume that consumes it).
+        let mcfg = ModelConfig::tiny();
+        let free = EngineConfig::builder().max_batch(2).block_tokens(4).build();
+        let contended = |path: &std::path::Path, prefetch: bool| {
+            EngineConfig::builder()
+                .max_batch(2)
+                .block_tokens(4)
+                .kv_capacity_bytes(7 * 4 * mcfg.kv_bytes_per_token())
+                .kv_spill(path)
+                .kv_prefetch(prefetch)
+                .build()
+        };
+        let run = |cfg: EngineConfig| {
+            let mut s = tiny_session(cfg);
+            let a = s.submit(SubmitRequest::new(prompt(8, 1)).options(GenOptions::new(12)));
+            let b = s.submit(SubmitRequest::new(prompt(8, 2)).options(GenOptions::new(12)));
+            let mut streams: std::collections::BTreeMap<u64, Vec<u32>> = Default::default();
+            for ev in drain(&mut s) {
+                if let Event::Token { id, token, .. } = ev {
+                    streams.entry(id).or_default().push(token);
+                }
+            }
+            assert_eq!(s.kv_blocks_in_use(), 0);
+            ((streams[&a].clone(), streams[&b].clone()), s.stats(), s.spill_live_blocks())
+        };
+        let (free_streams, ..) = run(free);
+        let off_path = tmp_spill("prefetch-off");
+        let on_path = tmp_spill("prefetch-on");
+        let (off_streams, off_stats, off_live) = run(contended(&off_path, false));
+        let (on_streams, on_stats, on_live) = run(contended(&on_path, true));
+        assert!(on_stats.preemptions > 0, "7 < 10 worst-case blocks must force preemption");
+        assert_eq!(on_stats.preemption_replays, 0, "spill mode never replays compute");
+        assert_eq!(free_streams, off_streams);
+        assert_eq!(on_streams, free_streams, "prefetch must not change a single byte");
+        // Prefetch off: every swap-in is a blocking scheduler-thread
+        // read; nothing is ever issued to a staging engine.
+        assert_eq!(off_stats.blocking_swap_in_ops, off_stats.swap_in_ops);
+        assert_eq!(off_stats.prefetch_issued_ops, 0);
+        // Prefetch on: the queue-front kick stages every suspended
+        // request before its batch slot frees, so the blocking fallback
+        // never runs and every stage is consumed.
+        assert_eq!(on_stats.blocking_swap_in_ops, 0, "all swap-ins come from staged buffers");
+        assert!(on_stats.prefetch_issued_ops > 0);
+        assert_eq!(on_stats.prefetch_hit_ops, on_stats.prefetch_issued_ops);
+        assert_eq!(on_stats.prefetch_wasted_ops, 0);
+        assert!((on_stats.prefetch_hit_rate() - 1.0).abs() < 1e-12);
+        // Conservation: the staging path must not change swap totals.
+        assert_eq!(on_stats.swap_in_bytes, on_stats.spill_out_bytes);
+        assert_eq!(on_stats.swap_in_ops, on_stats.spill_out_ops);
+        assert_eq!(on_stats.prefetch_bytes, on_stats.swap_in_bytes);
+        assert_eq!(off_live, Some(0));
+        assert_eq!(on_live, Some(0), "no orphaned cold-tier blocks after the drain");
+        rm_spill(&off_path);
+        rm_spill(&on_path);
+    }
+
+    #[test]
+    fn cancelling_a_prefetching_request_invalidates_the_staged_job() {
+        // Cancel-while-prefetching unwind: the staged job is killed
+        // before its slots recycle, the stage is charged as waste, and
+        // neither tier leaks. Same deterministic geometry as
+        // `cancelling_a_suspended_request_frees_its_cold_tier_slots`.
+        let path = tmp_spill("prefetch-cancel");
+        let mcfg = ModelConfig::tiny();
+        let cfg = EngineConfig::builder()
+            .max_batch(2)
+            .block_tokens(4)
+            .kv_capacity_bytes(7 * 4 * mcfg.kv_bytes_per_token())
+            .kv_spill(&path)
+            .kv_prefetch(true)
+            .build();
+        let mut s = tiny_session(cfg);
+        let a = s.submit(SubmitRequest::new(prompt(8, 1)).options(GenOptions::new(20)));
+        let b = s.submit(SubmitRequest::new(prompt(8, 2)).options(GenOptions::new(20)));
+        let mut preempted = false;
+        while !(preempted && s.waiting_len() > 0) {
+            assert!(!s.is_idle(), "b must still be suspended when a finishes its growth");
+            for ev in s.tick().unwrap() {
+                if matches!(ev, Event::Preempted { id, .. } if id == b) {
+                    preempted = true;
+                }
+            }
+        }
+        let mid = s.stats();
+        assert!(
+            mid.prefetch_issued_ops > mid.prefetch_hit_ops,
+            "the live suspension's staged job must be kicked and still unconsumed"
+        );
+        s.cancel(b).expect("cancel suspended");
+        assert_eq!(
+            s.spill_live_blocks(),
+            Some(0),
+            "cancelling a prefetching request must free its cold-tier slots"
+        );
+        let st = s.stats();
+        assert!(st.prefetch_wasted_ops > 0, "the dead stage is charged as waste");
+        assert_eq!(
+            st.prefetch_hit_ops + st.prefetch_wasted_ops,
+            st.prefetch_issued_ops,
+            "every issued block is either consumed or charged as waste"
+        );
+        // `a` runs to completion untouched; nothing leaks in either tier.
+        let evs = drain(&mut s);
+        assert!(evs
+            .iter()
+            .any(|e| matches!(e, Event::Finished { id, result, .. } if *id == a && result.tokens.len() == 20)));
+        assert_eq!(s.kv_blocks_in_use(), 0);
+        assert_eq!(s.spill_live_blocks(), Some(0));
+        rm_spill(&path);
+    }
+
+    #[test]
+    fn spill_victim_policy_prefers_quantized_blocks_over_lifo() {
+        // Mixed-dtype batch under exhaustion: pure LIFO would evict `b`
+        // (most recently admitted, f32), but the dtype-aware spill
+        // policy picks `a` (int8) — the same freed pool blocks cost ~4x
+        // fewer cold-tier bytes per transfer. Streams stay
+        // byte-identical to the uncontended run, because *which* victim
+        // spills never leaks into token selection.
+        let path = tmp_spill("victim-dtype");
+        let mcfg = ModelConfig::tiny();
+        let contended = EngineConfig::builder()
+            .max_batch(2)
+            .block_tokens(4)
+            .kv_capacity_bytes(7 * 4 * mcfg.kv_bytes_per_token())
+            .kv_spill(&path)
+            .build();
+        let free = EngineConfig::builder().max_batch(2).block_tokens(4).build();
+        let run = |cfg: EngineConfig| {
+            let mut s = tiny_session(cfg);
+            let a = s.submit(
+                SubmitRequest::new(prompt(8, 1))
+                    .options(GenOptions::new(12).kv_dtype(KvDtype::Int8)),
+            );
+            let b = s.submit(SubmitRequest::new(prompt(8, 2)).options(GenOptions::new(12)));
+            let mut victims = Vec::new();
+            let mut streams: std::collections::BTreeMap<u64, Vec<u32>> = Default::default();
+            for ev in drain(&mut s) {
+                match ev {
+                    Event::Token { id, token, .. } => {
+                        streams.entry(id).or_default().push(token);
+                    }
+                    Event::Preempted { id, .. } => victims.push(id),
+                    _ => {}
+                }
+            }
+            assert_eq!(s.kv_blocks_in_use(), 0);
+            ((streams[&a].clone(), streams[&b].clone()), a, victims)
+        };
+        let (free_streams, _, no_preempts) = run(free);
+        assert!(no_preempts.is_empty());
+        let (spill_streams, a, victims) = run(contended);
+        assert!(!victims.is_empty(), "7 < 10 worst-case blocks must force preemption");
+        assert!(
+            victims.iter().all(|&v| v == a),
+            "the int8 request must always be the spill victim, not the LIFO pick"
+        );
+        assert_eq!(free_streams, spill_streams, "victim choice must not change a single byte");
         rm_spill(&path);
     }
 

@@ -236,7 +236,7 @@ fn capacity_blocks(scenario: &Scenario) -> Option<usize> {
     match (scenario.resources, scenario.fault) {
         (Resources::Ample, _) => None,
         (_, Fault::ForcePreempt) => Some(8),
-        (Resources::OverCommitted | Resources::SpillOn, _) => Some(12),
+        (Resources::OverCommitted | Resources::SpillOn | Resources::SpillPrefetch, _) => Some(12),
     }
 }
 
@@ -279,6 +279,9 @@ fn scenario_engine_config(scenario: &Scenario, w: &Workload, spill: Option<&Path
     }
     if let Some(p) = spill {
         b = b.kv_spill(p);
+        if scenario.resources == Resources::SpillPrefetch {
+            b = b.kv_prefetch(true);
+        }
     }
     b.build()
 }
@@ -606,7 +609,8 @@ fn run_scenario_inner(scenario: Scenario, base_seed: u64) -> Result<ScenarioRepo
     }
 
     let poison = if scenario.fault == Fault::BackendError { POISON_TOKEN } else { u32::MAX };
-    let needs_spill = scenario.resources == Resources::SpillOn;
+    let needs_spill =
+        matches!(scenario.resources, Resources::SpillOn | Resources::SpillPrefetch);
     let shards = match scenario.topology {
         Topology::Direct => 0,
         Topology::Router { shards } => shards,

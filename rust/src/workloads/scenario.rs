@@ -17,7 +17,7 @@
 //! | arrival     | batch (t=0) / Poisson / bursty spike                       |
 //! | prompt      | unique / shared-prefix / adversarially-coherent            |
 //! | options     | dense / verified / verified-reuse / int8 / int4 / mixed    |
-//! | resources   | ample pool / over-committed pool / over-committed + spill  |
+//! | resources   | ample / over-committed / + spill / + spill with prefetch   |
 //! | fault       | none / cancel storm / backend step errors / forced preempt |
 //! | topology    | direct `Session::tick` / router at shards {1, 4}           |
 //!
@@ -81,6 +81,10 @@ pub enum Resources {
     /// Same cap with a file-backed cold tier: preemption is swap-out /
     /// swap-in, never replay.
     SpillOn,
+    /// Cold tier plus the async prefetch pipeline: queue-front victims
+    /// are staged by the spill-io thread so resume consumes completed
+    /// reads instead of blocking on `read_exact_at`.
+    SpillPrefetch,
 }
 
 /// Injected failure mode.
@@ -251,6 +255,7 @@ impl Scenario {
             Resources::Ample => 0,
             Resources::OverCommitted => 1,
             Resources::SpillOn => 2,
+            Resources::SpillPrefetch => 3,
         };
         let fault = match self.fault {
             Fault::None => 0,
@@ -303,6 +308,7 @@ impl Scenario {
             Resources::Ample => "ample",
             Resources::OverCommitted => "overcommit",
             Resources::SpillOn => "spill",
+            Resources::SpillPrefetch => "prefetch",
         };
         let fault = match self.fault {
             Fault::None => "clean",
@@ -451,12 +457,12 @@ pub const TOPOLOGIES: [Topology; 3] =
 /// are load-bearing, not decorative):
 ///
 /// * fault-free branch — the full 6-axis cross product with
-///   `Fault::None` plugged in: 3·3·6·3·3 = 486 scenarios;
+///   `Fault::None` plugged in: 3·3·6·4·3 = 648 scenarios;
 /// * faulty branch — every real fault crossed with a reduced slice of
 ///   the other axes (batch arrivals, 2 prompt shapes, 3 option modes),
-///   filtered for compatibility: 3·2·3·3·3 − 18 = 144 scenarios.
+///   filtered for compatibility: 3·2·3·4·3 − 18 = 198 scenarios.
 ///
-/// Total: 630 distinct scenarios covering every value of every axis.
+/// Total: 846 distinct scenarios covering every value of every axis.
 pub fn matrix() -> Vec<Scenario> {
     let all_arrivals = [Arrival::Batch, Arrival::Poisson, Arrival::Burst];
     let all_prompts = [PromptShape::Unique, PromptShape::SharedPrefix, PromptShape::Coherent];
@@ -468,7 +474,12 @@ pub fn matrix() -> Vec<Scenario> {
         OptionsAxis::Int4,
         OptionsAxis::Mixed,
     ];
-    let all_resources = [Resources::Ample, Resources::OverCommitted, Resources::SpillOn];
+    let all_resources = [
+        Resources::Ample,
+        Resources::OverCommitted,
+        Resources::SpillOn,
+        Resources::SpillPrefetch,
+    ];
 
     let clean = Gen::arrivals(&all_arrivals)
         .cross(Gen::prompts(&all_prompts))
@@ -583,7 +594,7 @@ mod tests {
     #[test]
     fn matrix_shape_and_coverage() {
         let all = matrix();
-        assert_eq!(all.len(), 630, "486 clean + 144 faulty");
+        assert_eq!(all.len(), 846, "648 clean + 198 faulty");
         let set: HashSet<_> = all.iter().copied().collect();
         assert_eq!(set.len(), all.len(), "matrix has duplicate scenarios");
         assert_eq!(axes_covered(&all), 6);
@@ -594,7 +605,7 @@ mod tests {
                 values[axis].insert(c);
             }
         }
-        assert_eq!(values.map(|v| v.len()), [3, 3, 6, 3, 4, 3]);
+        assert_eq!(values.map(|v| v.len()), [3, 3, 6, 4, 4, 3]);
         // The incompatible combo never appears.
         assert!(!all
             .iter()
@@ -640,7 +651,7 @@ mod tests {
                 values[axis].insert(c);
             }
         }
-        assert_eq!(values.map(|v| v.len()), [3, 3, 6, 3, 4, 3]);
+        assert_eq!(values.map(|v| v.len()), [3, 3, 6, 4, 4, 3]);
         assert_ne!(sample(&all, 44, 1234), sample(&all, 44, 99));
     }
 }

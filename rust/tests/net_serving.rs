@@ -318,6 +318,39 @@ fn validation_errors_map_to_http_statuses() {
 }
 
 #[test]
+fn oversized_request_bodies_get_413_not_a_dropped_socket() {
+    use vattn::server::http::MAX_BODY_BYTES;
+    let server = start_server(EngineConfig::default(), 1, 8);
+    let addr = server.addr();
+
+    // A head whose Content-Length is one past the cap: the server must
+    // answer with a proper 413 — previously it just killed the socket,
+    // which a client cannot distinguish from a crash.
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let head = format!(
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n",
+        MAX_BODY_BYTES + 1
+    );
+    s.write_all(head.as_bytes()).unwrap();
+    let (status, _, body) = read_response(&mut s).expect("reject must still be an HTTP response");
+    assert_eq!(status, 413);
+    let parsed = Json::parse(&String::from_utf8_lossy(&body)).expect("error body");
+    let err = parsed.get("error").expect("error object");
+    assert_eq!(err.get("kind").and_then(Json::as_str), Some("payload_too_large"));
+    assert_eq!(err.get("retriable").and_then(Json::as_bool), Some(false));
+    // The connection closes after the reject (the unread body bytes
+    // make keep-alive unsafe): the next read is EOF.
+    let mut tail = [0u8; 16];
+    assert_eq!(s.read(&mut tail).unwrap_or(0), 0, "server must close after a 413");
+
+    // The listener stays healthy for fresh connections afterwards.
+    let (status, _, _) = request(addr, "GET", "/healthz", None);
+    assert_eq!(status, 200);
+    server.shutdown();
+}
+
+#[test]
 fn cancel_route_terminates_stream_and_stats_report_it() {
     let server = start_server(EngineConfig::default(), 2, 8);
     let addr = server.addr();

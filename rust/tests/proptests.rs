@@ -4,7 +4,7 @@
 
 use vattn::attention::{dense_sdpa, sparse_sdpa, Selection};
 use vattn::budget::{budget_denominator, budget_numerator, BaseStats, Bound};
-use vattn::kvcache::{BlockId, BlockPool, KvCache, PageError};
+use vattn::kvcache::{BlockId, BlockPool, KvCache, KvDtype, PageError};
 use vattn::model::{Model, ModelConfig};
 use vattn::policies::*;
 use vattn::server::{
@@ -530,6 +530,207 @@ fn prop_spill_mode_is_stream_invisible_and_leak_free() {
         assert_eq!(session.spill_live_blocks(), Some(0), "cancel leaked cold-tier slots");
         assert_eq!(session.kv_blocks_in_use(), 0, "cancel leaked pool blocks");
         let _ = std::fs::remove_file(&path);
+    });
+}
+
+#[test]
+fn prop_prefetch_pipeline_is_schedule_invisible_under_interleavings() {
+    // The async-prefetch contract, fuzzed: random interleavings of
+    // submit / tick / cancel drive three engines off one shared
+    // operation script — uncontended, contended + spill, and contended
+    // + spill + prefetch. Prefetch only moves data, so the spill run
+    // and the prefetch run must produce *identical* outcome maps
+    // (streams and cancel points alike); completed streams must match
+    // the uncontended reference byte-for-byte and cancelled ones must
+    // be prefixes of it. Both contended sessions must drain to zero
+    // pool blocks and zero live cold-tier slots, and the prefetch
+    // ledger must conserve: every issued block is eventually consumed
+    // or wasted, and every swap-in is either staged or blocking.
+    Prop::new("prefetch-schedule-invisible").cases(8).run(|rng| {
+        use std::collections::BTreeMap;
+        #[derive(Clone, Copy, Debug)]
+        enum Op {
+            Submit(usize),
+            Tick,
+            Cancel(usize),
+        }
+        type Outcomes = BTreeMap<usize, (bool, Vec<u32>)>;
+
+        let mcfg = ModelConfig::tiny();
+        let bt = 4usize;
+        // Worst case per request is 8 blocks (19 + 11 tokens): every
+        // request is admissible alone, but two together can contend.
+        let cap_blocks = rng.range(8, 12);
+        let engine_seed = rng.next_u64();
+        let n_req = rng.range(3, 6);
+        let reqs: Vec<(Vec<u32>, GenOptions)> = (0..n_req)
+            .map(|i| {
+                let plen = rng.range(4, 20);
+                let glen = rng.range(4, 12);
+                // Mixed per-request dtypes exercise the dtype-aware
+                // victim policy under prefetch.
+                let opts = match i % 3 {
+                    0 => GenOptions::new(glen),
+                    1 => GenOptions::new(glen).kv_dtype(KvDtype::Int8),
+                    _ => GenOptions::new(glen).kv_dtype(KvDtype::Int4),
+                };
+                ((0..plen as u32).map(|t| (t * 11 + 5) % 250).collect(), opts)
+            })
+            .collect();
+
+        // One script drives every engine: submits in request order with
+        // tick gaps, a tick tail, then cancels spliced in at random
+        // points after their target's submit.
+        let mut script: Vec<Op> = Vec::new();
+        for i in 0..n_req {
+            script.push(Op::Submit(i));
+            for _ in 0..rng.below(3) {
+                script.push(Op::Tick);
+            }
+        }
+        for _ in 0..rng.range(2, 12) {
+            script.push(Op::Tick);
+        }
+        for i in 0..n_req {
+            if rng.below(3) == 0 {
+                let submit_at = script
+                    .iter()
+                    .position(|op| matches!(op, Op::Submit(j) if *j == i))
+                    .unwrap();
+                let at = rng.range(submit_at + 1, script.len() + 1);
+                script.insert(at, Op::Cancel(i));
+            }
+        }
+
+        let drive = |mut session: Session<Model>, script: &[Op]| -> (Outcomes, Session<Model>) {
+            let mut ids: Vec<Option<u64>> = vec![None; n_req];
+            let mut streams: Vec<Vec<u32>> = vec![Vec::new(); n_req];
+            let mut outcomes: Outcomes = BTreeMap::new();
+            let pump = |session: &mut Session<Model>,
+                        ids: &[Option<u64>],
+                        streams: &mut [Vec<u32>],
+                        outcomes: &mut Outcomes| {
+                for ev in session.tick().expect("tick") {
+                    match ev {
+                        Event::Token { id, token, step, .. } => {
+                            let i = ids.iter().position(|&x| x == Some(id)).expect("known id");
+                            assert_eq!(streams[i].len(), step, "gapless stream across swap-in");
+                            streams[i].push(token);
+                        }
+                        Event::Finished { id, .. } => {
+                            let i = ids.iter().position(|&x| x == Some(id)).expect("known id");
+                            outcomes.insert(i, (false, streams[i].clone()));
+                        }
+                        _ => {}
+                    }
+                }
+            };
+            for op in script {
+                match *op {
+                    Op::Submit(i) => {
+                        let (prompt, opts) = &reqs[i];
+                        ids[i] = Some(
+                            session
+                                .submit(SubmitRequest::new(prompt.clone()).options(opts.clone())),
+                        );
+                    }
+                    Op::Tick => pump(&mut session, &ids, &mut streams, &mut outcomes),
+                    Op::Cancel(i) => {
+                        // The target may have finished already (the
+                        // script is progress-agnostic); cancel only if
+                        // it is still live.
+                        if !outcomes.contains_key(&i) {
+                            session
+                                .cancel(ids[i].expect("cancel after submit"))
+                                .expect("cancelling a live request must succeed");
+                            outcomes.insert(i, (true, streams[i].clone()));
+                        }
+                    }
+                }
+            }
+            let mut rounds = 0usize;
+            while !session.is_idle() {
+                rounds += 1;
+                assert!(rounds <= 100_000, "drain did not converge");
+                pump(&mut session, &ids, &mut streams, &mut outcomes);
+            }
+            (outcomes, session)
+        };
+
+        // Uncontended reference with the cancels stripped: full streams
+        // to diff every other run against.
+        let full_script: Vec<Op> =
+            script.iter().copied().filter(|op| !matches!(op, Op::Cancel(_))).collect();
+        let free_cfg =
+            EngineConfig::builder().max_batch(3).seed(engine_seed).block_tokens(bt).build();
+        let (reference, _) =
+            drive(Session::new(Model::new(mcfg.clone(), 42), free_cfg), &full_script);
+        for i in 0..n_req {
+            assert!(matches!(reference.get(&i), Some((false, _))), "reference must complete");
+        }
+
+        let spill_cfg = |prefetch: bool, tag: &str| {
+            let path = std::env::temp_dir().join(format!(
+                "vattn-prop-prefetch-{}-{engine_seed:x}-{tag}.spill",
+                std::process::id()
+            ));
+            let _ = std::fs::remove_file(&path);
+            let cfg = EngineConfig::builder()
+                .max_batch(3)
+                .seed(engine_seed)
+                .block_tokens(bt)
+                .kv_capacity_bytes(cap_blocks * bt * mcfg.kv_bytes_per_token())
+                .kv_spill(&path)
+                .kv_prefetch(prefetch)
+                .build();
+            (cfg, path)
+        };
+        let (off_cfg, off_path) = spill_cfg(false, "off");
+        let (off_out, off_sess) =
+            drive(Session::new(Model::new(mcfg.clone(), 42), off_cfg), &script);
+        let (on_cfg, on_path) = spill_cfg(true, "on");
+        let (on_out, on_sess) = drive(Session::new(Model::new(mcfg.clone(), 42), on_cfg), &script);
+
+        assert_eq!(off_out, on_out, "prefetch changed an outcome or a cancel point");
+        for (i, (cancelled, stream)) in &on_out {
+            let (_, full) = &reference[i];
+            if *cancelled {
+                assert!(
+                    full.starts_with(stream),
+                    "request {i}: cancelled stream is not a reference prefix"
+                );
+            } else {
+                assert_eq!(stream, full, "request {i}: stream diverged from reference");
+            }
+        }
+
+        for (name, sess) in [("off", &off_sess), ("on", &on_sess)] {
+            let stats = sess.stats();
+            assert_eq!(stats.preemption_replays, 0, "[{name}] spill mode must never replay");
+            assert_eq!(stats.swap_in_bytes, stats.spill_out_bytes, "[{name}] unbalanced bytes");
+            assert_eq!(stats.swap_in_ops, stats.spill_out_ops, "[{name}] unbalanced ops");
+            assert_eq!(sess.spill_live_blocks(), Some(0), "[{name}] orphaned cold-tier slots");
+            assert_eq!(sess.kv_blocks_in_use(), 0, "[{name}] leaked pool blocks");
+            assert_eq!(
+                stats.prefetch_hit_ops + stats.prefetch_wasted_ops,
+                stats.prefetch_issued_ops,
+                "[{name}] issued prefetch blocks neither consumed nor wasted"
+            );
+            assert_eq!(
+                stats.blocking_swap_in_ops + stats.prefetch_hit_ops,
+                stats.swap_in_ops,
+                "[{name}] swap-ins neither staged nor blocking"
+            );
+        }
+        let (off_stats, on_stats) = (off_sess.stats(), on_sess.stats());
+        assert_eq!(
+            off_stats.preemptions, on_stats.preemptions,
+            "prefetch changed the preemption schedule"
+        );
+        assert_eq!(off_stats.spill_out_ops, on_stats.spill_out_ops);
+        assert_eq!(off_stats.prefetch_issued_ops, 0, "prefetch-off engine issued prefetches");
+        let _ = std::fs::remove_file(&off_path);
+        let _ = std::fs::remove_file(&on_path);
     });
 }
 

@@ -5,7 +5,7 @@
 //! produce byte-identical streams against the reference configuration,
 //! quiescent pools and spill slots after drain+flush, replay counters
 //! consistent with its spill mode, and (for verified scenarios) an
-//! empirical (ε, δ) coverage rate within bound. The full 630-scenario
+//! empirical (ε, δ) coverage rate within bound. The full 846-scenario
 //! sweep runs in `bench_engine` and lands in BENCH_engine.json's
 //! CI-checked `"scenario_matrix"` block.
 
